@@ -1,0 +1,157 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full system on real
+//! threads — 10 groups x 3 replicas on an in-process transport mesh,
+//! closed-loop clients, leaders committing through the **AOT-compiled
+//! XLA batch engine** (JAX/Pallas `commit_batch` artifacts), and the
+//! latency report computed by the XLA quantile artifact. This proves all
+//! three layers compose: Rust coordinator (L3) → XLA executable (L2) →
+//! Pallas kernels (L1), with Python nowhere on the request path.
+//!
+//!     make artifacts && cargo run --release --example e2e_cluster
+//!
+//! Env knobs: WBAM_E2E_SECS (default 10), WBAM_E2E_CLIENTS (default 40),
+//! WBAM_E2E_DEST (default 3), WBAM_E2E_BACKEND=xla|native.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use wbam::client::{Client, ClientCfg};
+use wbam::coordinator::{Cluster, DeliverFn};
+use wbam::protocols::wbcast::{WbConfig, WbNode};
+use wbam::protocols::Node;
+use wbam::runtime::{spawn_engine, QuantileEngine, XlaBackend};
+use wbam::stats::Histogram;
+use wbam::types::{MsgId, Pid, Topology, Ts};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let secs = env_u64("WBAM_E2E_SECS", 10);
+    let n_clients = env_u64("WBAM_E2E_CLIENTS", 40) as u32;
+    let dest_groups = env_u64("WBAM_E2E_DEST", 3) as usize;
+    let backend = std::env::var("WBAM_E2E_BACKEND").unwrap_or_else(|_| "xla".into());
+
+    let topo = Topology::new(10, 1);
+    println!(
+        "e2e cluster: {} groups x {} replicas + {} clients (dest={}, backend={}, {}s)",
+        topo.num_groups(),
+        topo.group_size(),
+        n_clients,
+        dest_groups,
+        backend,
+        secs
+    );
+
+    // the XLA engine service thread (shared by all leaders)
+    let engine = if backend == "xla" {
+        Some(spawn_engine(wbam::runtime::engine::artifacts_dir())?)
+    } else {
+        None
+    };
+
+    let wb = WbConfig {
+        hb_interval: 50_000_000, // 50 ms heartbeats
+        batch_threshold: 8,      // engine path: amortise PJRT round trips
+        batch_flush_after: 500_000, // …but never hold commits > 0.5 ms
+        ..WbConfig::default()
+    };
+
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            let node = match &engine {
+                Some(h) => WbNode::with_backend(p, topo.clone(), wb, Box::new(XlaBackend::new(h.clone()))),
+                None => WbNode::new(p, topo.clone(), wb),
+            };
+            nodes.push(Box::new(node));
+        }
+    }
+    for c in 0..n_clients {
+        let pid = Pid(topo.first_client_pid().0 + c);
+        let cfg = ClientCfg { dest_groups, resend_after: 2_000_000_000, ..Default::default() };
+        nodes.push(Box::new(Client::new(pid, topo.clone(), cfg, 0xE2E + c as u64)));
+    }
+
+    // delivery accounting: first delivery per (message, group)
+    #[derive(Default)]
+    struct Acct {
+        first: HashMap<(MsgId, u32), u64>,
+        count: u64,
+    }
+    let acct = Arc::new(Mutex::new(Acct::default()));
+    let acct2 = Arc::clone(&acct);
+    let topo2 = topo.clone();
+    let cb: Arc<Mutex<DeliverFn>> = Arc::new(Mutex::new(Box::new(move |pid: Pid, m: MsgId, _gts: Ts, t: u64| {
+        let mut a = acct2.lock().unwrap();
+        a.count += 1;
+        if let Some(g) = topo2.group_of(pid) {
+            a.first.entry((m, g.0)).or_insert(t);
+        }
+    })));
+
+    let t0 = Instant::now();
+    let cluster = Cluster::launch(nodes, Some(cb));
+    std::thread::sleep(Duration::from_secs(secs));
+    let nodes = cluster.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- harvest ----
+    let mut h = Histogram::new();
+    let mut completed = 0u64;
+    let mut samples: Vec<u64> = Vec::new();
+    for n in &nodes {
+        let any: &dyn Node = &**n;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            completed += c.completed.len() as u64;
+            for s in &c.completed {
+                let lat = s.done_at - s.sent_at;
+                h.record(lat.max(1));
+                samples.push(lat);
+            }
+        }
+    }
+    let mut commits = 0u64;
+    let mut delivered = 0u64;
+    let mut recoveries = 0u64;
+    for n in &nodes {
+        let any: &dyn Node = &**n;
+        if let Some(w) = (any as &dyn std::any::Any).downcast_ref::<WbNode>() {
+            commits += w.stats.committed;
+            delivered += w.stats.delivered;
+            recoveries += w.stats.recoveries_started;
+        }
+    }
+    let a = acct.lock().unwrap();
+
+    println!("\n== results ({wall:.1}s wall) ==");
+    println!("completed multicasts:    {completed} ({:.0}/s)", completed as f64 / wall);
+    println!("deliveries (all nodes):  {} (callback: {})", delivered, a.count);
+    println!("leader commits:          {commits}");
+    println!("unexpected recoveries:   {recoveries}");
+    println!(
+        "client latency:          mean {:.3} ms  p50 {:.3}  p99 {:.3}  max {:.3}",
+        h.mean() / 1e6,
+        h.p50() as f64 / 1e6,
+        h.p99() as f64 / 1e6,
+        h.max() as f64 / 1e6
+    );
+
+    // latency quantiles through the second XLA artifact
+    if !samples.is_empty() {
+        let q = QuantileEngine::load(&wbam::runtime::engine::artifacts_dir())?;
+        let qs = q.quantiles(&samples)?;
+        println!(
+            "XLA quantile artifact:   p50 {:.3} ms  p90 {:.3}  p95 {:.3}  p99 {:.3}",
+            qs[0] / 1e6,
+            qs[1] / 1e6,
+            qs[2] / 1e6,
+            qs[3] / 1e6
+        );
+    }
+
+    assert!(completed > 0, "no progress");
+    assert_eq!(recoveries, 0, "leaders were wrongly suspected");
+    println!("\ne2e OK — all three layers composed (rust L3 → XLA L2 → Pallas L1)");
+    Ok(())
+}

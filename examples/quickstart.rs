@@ -1,0 +1,40 @@
+//! Quickstart: three replicated groups, a handful of multicasts, and the
+//! resulting total order — everything the paper's abstract promises in
+//! ~60 lines of user code.
+//!
+//!     cargo run --release --example quickstart
+
+use wbam::harness::{build_world, Net, Proto, RunCfg};
+use wbam::invariants;
+use wbam::sim::MS;
+use wbam::types::Pid;
+
+fn main() {
+    // 3 groups x 3 replicas (f = 1), 2 clients multicasting to 2 random
+    // groups each, LAN-like network
+    let mut cfg = RunCfg::new(Proto::WbCast, 3, 2, 2, Net::Theory { delta: MS });
+    cfg.max_requests = Some(5);
+    cfg.record_full = true;
+
+    let mut world = build_world(&cfg);
+    world.run_to_quiescence(1_000_000);
+
+    // machine-checked: Validity, Integrity, Ordering, Termination
+    invariants::assert_correct(&world.trace);
+
+    println!("WbCast quickstart — 3 groups x 3 replicas, 10 multicasts\n");
+    println!("deliveries at each group leader (global-timestamp order):");
+    for pid in [Pid(0), Pid(3), Pid(6)] {
+        let seq: Vec<String> = world
+            .trace
+            .deliveries
+            .iter()
+            .filter(|d| d.pid == pid)
+            .map(|d| format!("{:?}@{:?}", d.m, d.gts))
+            .collect();
+        println!("  {pid:?}: {}", seq.join(" → "));
+    }
+    println!("\nmean first-delivery latency: {:.2} ms (3δ with δ = 1 ms)", world.trace.mean_latency() / 1e6);
+    println!("protocol messages sent:      {}", world.trace.sends);
+    println!("safety + termination checks: OK");
+}

@@ -1,0 +1,80 @@
+"""AOT driver: lower the L2 computations to HLO **text** artifacts.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402  (needs x64 flag first)
+
+#: batch-size variants compiled for the Rust engine (it pads to the next)
+BATCH_SIZES = (16, 64, 256)
+#: destination-group lanes (>= max groups; the paper deploys 10)
+G_LANES = 16
+#: pending-frontier slots (power of two, padded by the engine)
+P_SLOTS = 256
+#: latency sample buffer for the quantile artifact
+N_SAMPLES = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_commit_batch(b: int) -> str:
+    i64 = jnp.int64
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.commit_batch_tuple).lower(
+        spec((b, G_LANES), i64),
+        spec((b, G_LANES), i64),
+        spec((P_SLOTS,), i64),
+        spec((P_SLOTS,), i64),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_quantiles() -> str:
+    lowered = jax.jit(model.latency_quantiles).lower(
+        jax.ShapeDtypeStruct((N_SAMPLES,), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in BATCH_SIZES:
+        path = os.path.join(args.out_dir, f"commit_batch_b{b}.hlo.txt")
+        text = lower_commit_batch(b)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(args.out_dir, "quantiles.hlo.txt")
+    text = lower_quantiles()
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

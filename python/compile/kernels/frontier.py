@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: delivery-frontier reduction.
+
+Computes the masked minimum over the pending (PROPOSED/ACCEPTED) local
+timestamps — the frontier of Fig. 4 line 21: a committed message m' is
+deliverable iff every pending m'' has ``LocalTS[m''] > GlobalTS[m']``,
+i.e. iff ``GlobalTS[m'] < min(pending)``.
+
+The kernel tiles the pending vector and reduces block-minima through an
+accumulator in the output ref (grid iterations run sequentially on TPU,
+which makes the read-modify-write safe; interpret mode preserves the
+semantics on CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import POS_INF
+
+BLOCK_P = 256
+
+
+def _frontier_kernel(pending_ref, pmask_ref, o_ref):
+    i = pl.program_id(0)
+    p = pending_ref[...]
+    m = pmask_ref[...]
+    block_min = jnp.min(jnp.where(m != 0, p, POS_INF))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = block_min
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[0] = jnp.minimum(o_ref[0], block_min)
+
+
+def frontier_pallas(pending, pmask, *, interpret=True):
+    """[P] int64 x [P] int64(0/1) -> [1] int64 masked min."""
+    (p,) = pending.shape
+    block_p = min(BLOCK_P, p)
+    assert p % block_p == 0, f"pending {p} not a multiple of block {block_p}"
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int64),
+        interpret=interpret,
+    )(pending, pmask)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: batched global-timestamp resolution.
+
+Computes, for a batch of B messages over (up to) G destination groups, the
+masked lexicographic maximum of encoded local timestamps — Fig. 4 line 19
+(``GlobalTS[m] = max { Lts(g) | g in dest(m) }``) vectorised over the
+commit batch of the Rust leader hot path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the [B, G] timestamp matrix
+is tiled over the batch dimension with BlockSpec so each block fits VMEM;
+the reduction is a vector-lane max, no MXU involvement. On CPU PJRT we
+must lower with ``interpret=True`` (real TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# batch rows per block: VMEM-friendly tile (8 KiB per block at G = 16)
+BLOCK_B = 64
+
+
+def _gts_kernel(lts_ref, mask_ref, o_ref):
+    lts = lts_ref[...]
+    mask = mask_ref[...]
+    masked = jnp.where(mask != 0, lts, NEG_INF)
+    o_ref[...] = jnp.max(masked, axis=1)
+
+
+def gts_pallas(lts, mask, *, interpret=True):
+    """[B, G] int64 x [B, G] int64(0/1) -> [B] int64 masked row max."""
+    b, g = lts.shape
+    block_b = min(BLOCK_B, b)
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _gts_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int64),
+        interpret=interpret,
+    )(lts, mask)

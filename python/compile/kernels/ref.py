@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness
+baseline; pytest checks kernel == ref on randomized shapes/values).
+
+Timestamps are lexicographic pairs (t, g) encoded into a single int64 lane
+as ``t << 8 | g`` (g < 256), which preserves the order — see
+``rust/src/types/mod.rs::Ts::encode``.
+"""
+
+import jax.numpy as jnp
+
+# sentinel bounds: encodings are non-negative, < 2**62
+NEG_INF = -(2**62)  # plain ints: Pallas kernels cannot capture traced consts
+POS_INF = 2**62
+
+
+def gts_ref(lts, mask):
+    """Global timestamps: per-row masked max (Fig. 4 line 19).
+
+    lts:  [B, G] int64 encoded local timestamps
+    mask: [B, G] int64 0/1 destination mask
+    returns [B] int64 (NEG_INF where the row mask is empty)
+    """
+    masked = jnp.where(mask != 0, lts, NEG_INF)
+    return jnp.max(masked, axis=1)
+
+
+def frontier_ref(pending, pmask):
+    """Delivery frontier: masked min over pending local timestamps
+    (Fig. 4 line 21: a committed message delivers only below this).
+
+    pending: [P] int64; pmask: [P] int64 0/1
+    returns scalar int64 (POS_INF when nothing is pending)
+    """
+    masked = jnp.where(pmask != 0, pending, POS_INF)
+    return jnp.min(masked)
+
+
+def commit_batch_ref(lts, mask, pending, pmask):
+    """Reference for the full L2 ``commit_batch`` computation."""
+    gts = gts_ref(lts, mask)
+    pmin = frontier_ref(pending, pmask)
+    deliverable = (gts < pmin).astype(jnp.int64)
+    return gts, deliverable, pmin.reshape((1,))

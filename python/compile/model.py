@@ -1,0 +1,57 @@
+"""L2 — the JAX compute graph invoked from the Rust leader hot path.
+
+``commit_batch`` fuses the two Pallas kernels into the batched commit
+computation of the WbCast leader (Fig. 4 lines 19+21):
+
+    gts[b]         = masked lex-max of local timestamps      (kernels.gts)
+    pending_min    = masked min over pending local timestamps (kernels.frontier)
+    deliverable[b] = gts[b] < pending_min
+
+All lanes are int64 (timestamps encoded ``t << 8 | g``; masks 0/1). The
+ordering constraint *among* the committed batch (deliver in gts order) is
+enforced by the Rust coordinator, which sorts by the returned gts.
+
+``latency_quantiles`` is the metrics computation used by the stats
+pipeline: per-quantile latency estimates over a sample buffer.
+
+Python runs only at build time: ``compile.aot`` lowers these functions to
+HLO text once; the Rust runtime loads and executes the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.frontier import frontier_pallas
+from .kernels.gts import gts_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+#: quantiles reported by the stats pipeline (artifact bakes them in)
+QUANTILES = (0.5, 0.9, 0.95, 0.99)
+
+
+def commit_batch(lts, mask, pending, pmask):
+    """Batched commit: global timestamps + deliverability flags.
+
+    lts:     [B, G] int64 — encoded local timestamps per message x group
+    mask:    [B, G] int64 — 1 where group g is a destination of message b
+    pending: [P]    int64 — encoded local timestamps of PROPOSED/ACCEPTED
+    pmask:   [P]    int64 — 1 for live pending slots
+
+    Returns (gts [B] int64, deliverable [B] int64, pending_min [1] int64).
+    """
+    gts = gts_pallas(lts, mask)
+    pmin = frontier_pallas(pending, pmask)
+    deliverable = (gts < pmin[0]).astype(jnp.int64)
+    return gts, deliverable, pmin
+
+
+def latency_quantiles(samples):
+    """Latency quantile sketch: [N] float32 ns -> [len(QUANTILES)] float32."""
+    qs = jnp.asarray(QUANTILES, dtype=jnp.float32)
+    return (jnp.quantile(samples, qs).astype(jnp.float32),)
+
+
+def commit_batch_tuple(lts, mask, pending, pmask):
+    """Tuple-returning wrapper for AOT export (single-output convention)."""
+    return commit_batch(lts, mask, pending, pmask)

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes and adversarial values with hypothesis. This is the core
+correctness signal for the compute layer the Rust engine executes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.frontier import frontier_pallas
+from compile.kernels.gts import gts_pallas
+from compile.kernels.ref import NEG_INF, POS_INF, frontier_ref, gts_ref
+
+MAX_ENC = 2**40  # encoded timestamps stay far below the sentinels
+
+
+def enc(t, g):
+    return (t << 8) | g
+
+
+# ---------- deterministic cases ----------
+
+
+def test_gts_matches_hand_computed():
+    lts = jnp.array([[enc(1, 0), enc(1, 1)], [enc(5, 0), enc(3, 1)]], dtype=jnp.int64)
+    mask = jnp.ones((2, 2), dtype=jnp.int64)
+    out = gts_pallas(lts, mask)
+    # row 0: (1,g1) > (1,g0); row 1: (5,g0) > (3,g1)
+    np.testing.assert_array_equal(np.asarray(out), [enc(1, 1), enc(5, 0)])
+
+
+def test_gts_mask_excludes_groups():
+    lts = jnp.array([[enc(9, 0), enc(1, 1)]], dtype=jnp.int64)
+    mask = jnp.array([[0, 1]], dtype=jnp.int64)
+    out = gts_pallas(lts, mask)
+    np.testing.assert_array_equal(np.asarray(out), [enc(1, 1)])
+
+
+def test_gts_empty_row_is_neg_inf():
+    lts = jnp.zeros((1, 4), dtype=jnp.int64)
+    mask = jnp.zeros((1, 4), dtype=jnp.int64)
+    out = gts_pallas(lts, mask)
+    assert int(out[0]) == int(NEG_INF)
+
+
+def test_frontier_empty_is_pos_inf():
+    p = jnp.zeros((256,), dtype=jnp.int64)
+    m = jnp.zeros((256,), dtype=jnp.int64)
+    out = frontier_pallas(p, m)
+    assert int(out[0]) == int(POS_INF)
+
+
+def test_frontier_multi_block_accumulates():
+    # min lives in the second block: exercises the grid accumulator
+    p = np.full(512, enc(100, 0), dtype=np.int64)
+    p[300] = enc(2, 3)
+    m = np.ones(512, dtype=np.int64)
+    out = frontier_pallas(jnp.asarray(p), jnp.asarray(m))
+    assert int(out[0]) == enc(2, 3)
+
+
+# ---------- hypothesis sweeps ----------
+
+
+@st.composite
+def gts_case(draw):
+    b = draw(st.sampled_from([1, 2, 4, 8, 16, 64]))
+    g = draw(st.integers(min_value=1, max_value=16))
+    lts = draw(
+        st.lists(
+            st.lists(st.integers(min_value=0, max_value=MAX_ENC), min_size=g, max_size=g),
+            min_size=b,
+            max_size=b,
+        )
+    )
+    mask = draw(
+        st.lists(st.lists(st.integers(0, 1), min_size=g, max_size=g), min_size=b, max_size=b)
+    )
+    return np.array(lts, dtype=np.int64), np.array(mask, dtype=np.int64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(gts_case())
+def test_gts_kernel_equals_ref(case):
+    lts, mask = case
+    got = gts_pallas(jnp.asarray(lts), jnp.asarray(mask))
+    want = gts_ref(jnp.asarray(lts), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@st.composite
+def frontier_case(draw):
+    p_len = draw(st.sampled_from([1, 2, 8, 256, 512]))
+    vals = draw(
+        st.lists(st.integers(min_value=0, max_value=MAX_ENC), min_size=p_len, max_size=p_len)
+    )
+    mask = draw(st.lists(st.integers(0, 1), min_size=p_len, max_size=p_len))
+    return np.array(vals, dtype=np.int64), np.array(mask, dtype=np.int64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(frontier_case())
+def test_frontier_kernel_equals_ref(case):
+    vals, mask = case
+    got = frontier_pallas(jnp.asarray(vals), jnp.asarray(mask))
+    want = frontier_ref(jnp.asarray(vals), jnp.asarray(mask))
+    assert int(got[0]) == int(want)
+
+
+def test_gts_rejects_unaligned_batch():
+    # batch not a multiple of the block: explicit error, not silence
+    lts = jnp.zeros((65, 4), dtype=jnp.int64)
+    mask = jnp.ones((65, 4), dtype=jnp.int64)
+    with pytest.raises(AssertionError):
+        gts_pallas(lts, mask)

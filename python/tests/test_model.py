@@ -1,0 +1,97 @@
+"""L2 correctness: the fused commit_batch graph vs the oracle, plus the
+quantile metrics computation and artifact shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels.ref import commit_batch_ref
+
+B, G, P = 16, 16, 256
+
+
+def mk(lts_rows, pending_vals):
+    lts = np.zeros((B, G), dtype=np.int64)
+    mask = np.zeros((B, G), dtype=np.int64)
+    for i, row in enumerate(lts_rows):
+        for j, v in enumerate(row):
+            lts[i, j] = v
+            mask[i, j] = 1
+    pending = np.zeros(P, dtype=np.int64)
+    pmask = np.zeros(P, dtype=np.int64)
+    for i, v in enumerate(pending_vals):
+        pending[i] = v
+        pmask[i] = 1
+    return map(jnp.asarray, (lts, mask, pending, pmask))
+
+
+def test_commit_batch_deliverable_logic():
+    # msg0 gts=5 deliverable (pending min 7); msg1 gts=9 blocked
+    lts, mask, pending, pmask = mk([[5], [9]], [7, 8])
+    gts, deliv, pmin = model.commit_batch(lts, mask, pending, pmask)
+    assert int(gts[0]) == 5 and int(gts[1]) == 9
+    assert int(deliv[0]) == 1 and int(deliv[1]) == 0
+    assert int(pmin[0]) == 7
+
+
+def test_commit_batch_empty_pending_delivers_all():
+    lts, mask, pending, pmask = mk([[5], [9]], [])
+    _, deliv, _ = model.commit_batch(lts, mask, pending, pmask)
+    assert int(deliv[0]) == 1 and int(deliv[1]) == 1
+
+
+@st.composite
+def batch_case(draw):
+    lts = draw(
+        st.lists(
+            st.lists(st.integers(1, 2**40), min_size=G, max_size=G), min_size=B, max_size=B
+        )
+    )
+    mask = draw(st.lists(st.lists(st.integers(0, 1), min_size=G, max_size=G), min_size=B, max_size=B))
+    pending = draw(st.lists(st.integers(1, 2**40), min_size=P, max_size=P))
+    pmask = draw(st.lists(st.integers(0, 1), min_size=P, max_size=P))
+    return tuple(
+        jnp.asarray(np.array(x, dtype=np.int64)) for x in (lts, mask, pending, pmask)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(batch_case())
+def test_commit_batch_equals_ref(case):
+    got = model.commit_batch(*case)
+    want = commit_batch_ref(*case)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_quantiles_monotone_and_bounded():
+    rng = np.random.default_rng(0)
+    samples = jnp.asarray(rng.exponential(1e6, size=1024).astype(np.float32))
+    (qs,) = model.latency_quantiles(samples)
+    qs = np.asarray(qs)
+    assert qs.shape == (len(model.QUANTILES),)
+    assert np.all(np.diff(qs) >= 0), "quantiles must be monotone"
+    assert qs[0] >= float(np.min(np.asarray(samples)))
+    assert qs[-1] <= float(np.max(np.asarray(samples)))
+
+
+def test_quantiles_exact_on_known_distribution():
+    samples = jnp.asarray(np.arange(1024, dtype=np.float32))
+    (qs,) = model.latency_quantiles(samples)
+    # 50th percentile of 0..1023 is ~511.5
+    assert abs(float(qs[0]) - 511.5) < 1.0
+    assert abs(float(qs[3]) - 1012.8) < 2.0
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile import aot
+
+    text = aot.lower_commit_batch(16)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    tq = aot.lower_quantiles()
+    assert "HloModule" in tq

@@ -1,0 +1,74 @@
+//! Batch commit engine microbenchmark (EXPERIMENTS.md §Perf, L2/L1).
+//!
+//! Measures the XLA (AOT JAX/Pallas) `commit_batch` executable against
+//! the native Rust path across batch sizes, plus the engine-service
+//! round-trip cost the coordinator pays per flush. This locates the
+//! break-even batch size for offloading the leader's commit computation.
+
+use std::time::Instant;
+use wbam::runtime::{commit_batch_native, spawn_engine, BatchReq, CommitBatchEngine};
+use wbam::types::{Gid, MsgId, Ts};
+use wbam::util::Rng;
+
+fn mk_batch(rng: &mut Rng, n: usize, groups: usize) -> (Vec<BatchReq>, Vec<Ts>) {
+    let reqs = (0..n)
+        .map(|i| BatchReq {
+            m: MsgId::new(1, i as u32),
+            lts: (0..groups).map(|g| Ts::new(rng.range(1, 1 << 30), Gid(g as u32))).collect(),
+        })
+        .collect();
+    let pending = (0..64).map(|_| Ts::new(rng.range(1, 1 << 30), Gid(rng.below(10) as u32))).collect();
+    (reqs, pending)
+}
+
+fn bench<F: FnMut()>(iters: u32, mut f: F) -> f64 {
+    // warm-up
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    let dir = wbam::runtime::engine::artifacts_dir();
+    let eng = CommitBatchEngine::load(&dir).expect("run `make artifacts`");
+    let svc = spawn_engine(dir).expect("engine service");
+    let mut rng = Rng::new(0xBE);
+
+    println!("== batch commit engine: XLA vs native (4 dest groups, 64 pending) ==\n");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>12} {:>12}",
+        "batch", "native ns/op", "xla ns/op", "svc ns/op", "xla ns/msg", "native ns/msg"
+    );
+    for &b in &[1usize, 4, 8, 16, 32, 64, 128, 256] {
+        let (reqs, pending) = mk_batch(&mut rng, b, 4);
+        let native = bench(200, || {
+            let out = commit_batch_native(&reqs, &pending);
+            std::hint::black_box(out);
+        });
+        let xla = bench(100, || {
+            let out = eng.commit_batch(&reqs, &pending).unwrap();
+            std::hint::black_box(out);
+        });
+        let svc_t = bench(100, || {
+            let out = svc.commit_batch(reqs.clone(), pending.clone()).unwrap();
+            std::hint::black_box(out);
+        });
+        println!(
+            "{:>6} {:>14.0} {:>14.0} {:>14.0} {:>12.0} {:>13.0}",
+            b,
+            native,
+            xla,
+            svc_t,
+            xla / b as f64,
+            native / b as f64
+        );
+    }
+    svc.shutdown();
+    println!("\n(see EXPERIMENTS.md §Perf for interpretation: the XLA path pays a fixed");
+    println!(" PJRT dispatch cost amortised by batching; the native path is the default.)");
+}

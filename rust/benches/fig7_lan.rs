@@ -1,0 +1,51 @@
+//! Fig. 7 / Fig. 9 (extended): LAN latency–throughput curves.
+//!
+//! Paper setup: 10 groups x 3 replicas on CloudLab (≈0.1 ms RTT), a
+//! varying number of closed-loop clients multicasting 20-byte messages
+//! to a fixed number of destination groups; 3 protocols: FT-Skeen,
+//! FastCast, WbCast. We regenerate the same series on the calibrated
+//! LAN simulator. Absolute numbers differ from the paper's testbed; the
+//! *shape* — WbCast wins on both axes, FastCast ≈ FT-Skeen in LAN (its
+//! parallel paths cost extra messages) — is the reproduction target.
+//!
+//! `cargo bench --bench fig7_lan` (set WBAM_BENCH_FULL=1 for the full
+//! client sweep and the Fig. 9 destination-group set).
+
+use wbam::harness::{run, Net, Proto, RunCfg};
+use wbam::sim::MS;
+
+fn main() {
+    let full = std::env::var("WBAM_BENCH_FULL").is_ok();
+    let dests: &[usize] = if full { &[1, 2, 3, 4, 5, 6, 7, 8, 10] } else { &[1, 4, 7] };
+    let clients: &[usize] =
+        if full { &[50, 100, 200, 400, 700, 1000, 1500, 2000] } else { &[50, 200, 600, 1000] };
+
+    println!("== Fig. 7{} — LAN (0.1 ms RTT), 10 groups x 3 replicas ==", if full { "+9" } else { "" });
+    for &d in dests {
+        println!("\n-- {d} destination group(s) --");
+        let mut at1000 = Vec::new();
+        for proto in Proto::EVAL {
+            for &c in clients {
+                let mut cfg = RunCfg::new(proto, 10, c, d, Net::Lan);
+                cfg.duration = 400 * MS;
+                cfg.warmup_frac = 0.25;
+                cfg.seed = 7;
+                let r = run(&cfg);
+                println!("{}", r.row());
+                if c == 1000 || (!clients.contains(&1000) && c == *clients.last().unwrap()) {
+                    at1000.push((proto, r.mean_lat_ms, r.throughput));
+                }
+            }
+        }
+        // headline comparison at the 1000-client mark (paper: WbCast
+        // outperforms FastCast 1.2-3.5x, 2.15x on average)
+        let wb = at1000.iter().find(|x| x.0 == Proto::WbCast).unwrap();
+        let fc = at1000.iter().find(|x| x.0 == Proto::FastCast).unwrap();
+        println!(
+            ">> dest={d} @{} clients: WbCast vs FastCast — latency {:.2}x lower, throughput {:.2}x higher",
+            clients.last().unwrap(),
+            fc.1 / wb.1,
+            wb.2 / fc.2
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig. 8 / Fig. 10 (extended): WAN latency–throughput curves.
+//!
+//! Paper setup: 10 groups replicated across 3 GCP data centres (Oregon,
+//! N. Virginia, England; RTTs 60/75/130 ms), each group with one replica
+//! per DC. The δ-dominated regime makes the message-delay counts of §V
+//! directly visible: WbCast (3δ) < FastCast (4δ) < FT-Skeen (6δ); the
+//! paper reports a ~2x average win over FastCast at 8000 clients.
+//!
+//! `cargo bench --bench fig8_wan` (WBAM_BENCH_FULL=1 for the full sweep).
+
+use wbam::harness::{run, Net, Proto, RunCfg};
+use wbam::sim::MS;
+
+fn main() {
+    let full = std::env::var("WBAM_BENCH_FULL").is_ok();
+    let dests: &[usize] = if full { &[1, 2, 3, 4, 5, 6, 7, 8, 10] } else { &[1, 4, 7] };
+    let clients: &[usize] = if full { &[500, 1000, 2000, 4000, 6000, 8000] } else { &[500, 2000, 8000] };
+
+    println!("== Fig. 8{} — WAN (GCP 3-DC, 60/75/130 ms RTT), 10 groups ==", if full { "+10" } else { "" });
+    for &d in dests {
+        println!("\n-- {d} destination group(s) --");
+        let mut last = Vec::new();
+        for proto in Proto::EVAL {
+            for &c in clients {
+                let mut cfg = RunCfg::new(proto, 10, c, d, Net::Wan);
+                cfg.duration = 3_000 * MS;
+                cfg.warmup_frac = 0.3;
+                cfg.seed = 8;
+                let r = run(&cfg);
+                println!("{}", r.row());
+                if c == *clients.last().unwrap() {
+                    last.push((proto, r.mean_lat_ms, r.throughput));
+                }
+            }
+        }
+        let wb = last.iter().find(|x| x.0 == Proto::WbCast).unwrap();
+        let fc = last.iter().find(|x| x.0 == Proto::FastCast).unwrap();
+        println!(
+            ">> dest={d} @{} clients: WbCast vs FastCast — latency {:.2}x lower, throughput {:.2}x higher",
+            clients.last().unwrap(),
+            fc.1 / wb.1,
+            wb.2 / fc.2
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! §V latency theory (T-lat): measure collision-free and failure-free
+//! latencies of all four protocols in the constant-δ, zero-CPU setting
+//! and compare against Theorems 3–5 and the paper's table:
+//!
+//!   protocol   CFL   FFL          (paper)
+//!   Skeen      2δ    4δ
+//!   WbCast     3δ    5δ           ← the headline result
+//!   FastCast   4δ    8δ
+//!   FT-Skeen   6δ    12δ
+//!
+//! The collision-free number is a solo multicast (Theorem 3). The
+//! failure-free number is found by an adversarial search over the Fig. 2
+//! convoy scenario: group g1's clock is pumped by warm-up traffic so
+//! that m's global timestamp is high; a conflicting m' is multicast at
+//! offset `o` over a link that reaches g0's leader in ~0 (its other
+//! paths take exactly δ); we report m's worst delivery latency over the
+//! offset grid — Theorem 4 says it approaches C + CFL.
+//!
+//! Also regenerates the Fig. 5 message-flow count for WbCast.
+
+use wbam::harness::{run, Net, Proto, RunCfg, ScriptedClient};
+use wbam::invariants;
+use wbam::protocols::fastcast::FastCastNode;
+use wbam::protocols::ftskeen::FtSkeenNode;
+use wbam::protocols::skeen::SkeenNode;
+use wbam::protocols::wbcast::{WbConfig, WbNode};
+use wbam::protocols::Node;
+use wbam::sim::{delay::AdversarialDelay, CpuCost, SimConfig, World, MS};
+use wbam::types::{Gid, GidSet, MsgId, Pid, Topology};
+
+const D: u64 = MS; // δ = 1 ms
+
+fn proto_nodes(proto: Proto, topo: &Topology) -> Vec<Box<dyn Node>> {
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            match proto {
+                Proto::Skeen => nodes.push(Box::new(SkeenNode::new(p, topo.clone()))),
+                Proto::FtSkeen => nodes.push(Box::new(FtSkeenNode::new(p, topo.clone()))),
+                Proto::FastCast => nodes.push(Box::new(FastCastNode::new(p, topo.clone()))),
+                Proto::WbCast => nodes.push(Box::new(WbNode::new(p, topo.clone(), WbConfig::default()))),
+            }
+        }
+    }
+    nodes
+}
+
+/// Measure m's delivery latency (max over groups of first delivery) in
+/// the convoy scenario with the conflicting m' multicast at offset `o`.
+fn convoy_latency(proto: Proto, o: u64) -> u64 {
+    let f = if proto == Proto::Skeen { 0 } else { 1 };
+    let topo = Topology::new(2, f);
+    let leader_g0 = topo.initial_leader(Gid(0));
+    let mut nodes = proto_nodes(proto, &topo);
+
+    let warm_pid = topo.first_client_pid();
+    let m_pid = Pid(warm_pid.0 + 1);
+    let m2_pid = Pid(warm_pid.0 + 2);
+    // warm-up: 10 single-group messages pump g1's clock (delivered long
+    // before t0 = 100δ)
+    let warm: Vec<(u64, GidSet)> = (0..10).map(|i| (i * D, GidSet::single(Gid(1)))).collect();
+    let t0 = 100 * D;
+    let both = GidSet::from_iter([Gid(0), Gid(1)]);
+    nodes.push(Box::new(ScriptedClient::new(warm_pid, topo.clone(), warm)));
+    nodes.push(Box::new(ScriptedClient::new(m_pid, topo.clone(), vec![(t0, both)])));
+    nodes.push(Box::new(ScriptedClient::new(m2_pid, topo.clone(), vec![(t0 + o, both)])));
+
+    // m' reaches g0's leader in ~0; every other link takes exactly δ
+    let delay = AdversarialDelay::new(D).set(m2_pid, leader_g0, 1);
+    let mut world = World::new(
+        topo,
+        nodes,
+        SimConfig { delay: Box::new(delay), cpu: CpuCost::zero(), seed: 0, record_full: true },
+    );
+    world.run_to_quiescence(10_000_000);
+    invariants::assert_safe(&world.trace);
+
+    let m = MsgId::new(m_pid.0, 1);
+    let first_in = |g: Gid| {
+        world
+            .trace
+            .deliveries
+            .iter()
+            .filter(|d| d.m == m && world.trace.topo().group_of(d.pid) == Some(g))
+            .map(|d| d.time)
+            .min()
+    };
+    let g0 = first_in(Gid(0)).unwrap_or_else(|| panic!("{}: m not delivered in g0", proto.name()));
+    let g1 = first_in(Gid(1)).unwrap_or_else(|| panic!("{}: m not delivered in g1", proto.name()));
+    g0.max(g1) - t0
+}
+
+fn main() {
+    println!("== T-lat: §V latency table (δ = 1 ms, constant delay, zero CPU) ==\n");
+    println!(
+        "{:<10} {:>8} {:>8}   {:>8} {:>8}   {}",
+        "protocol", "CFL", "paper", "FFL", "paper", "(FFL = worst over convoy offsets, Thm. 4)"
+    );
+
+    let expect = [
+        (Proto::Skeen, 2.0, 4.0),
+        (Proto::WbCast, 3.0, 5.0),
+        (Proto::FastCast, 4.0, 8.0),
+        (Proto::FtSkeen, 6.0, 12.0),
+    ];
+    let mut ok = true;
+    for (proto, cfl_paper, ffl_paper) in expect {
+        // collision-free: solo multicast (Theorem 3)
+        let mut cfg = RunCfg::new(proto, 2, 1, 2, Net::Theory { delta: D });
+        cfg.max_requests = Some(1);
+        let r = run(&cfg);
+        let cfl = r.mean_lat_ms;
+
+        // failure-free: adversarial offset search around the clock-update
+        // latency C = FFL - CFL (Theorem 4)
+        let c_delta = (ffl_paper - cfl_paper) as u64;
+        let mut worst = 0u64;
+        let mut at = 0u64;
+        for step in 0..=(8 * c_delta) {
+            let o = step * D / 8;
+            let lat = convoy_latency(proto, o);
+            if lat > worst {
+                worst = lat;
+                at = o;
+            }
+        }
+        let ffl = worst as f64 / D as f64;
+        let pass = (cfl - cfl_paper).abs() < 0.02 && (ffl_paper - ffl) < 0.2 && ffl <= ffl_paper + 0.02;
+        ok &= pass;
+        println!(
+            "{:<10} {:>7.2}δ {:>7.0}δ   {:>7.2}δ {:>7.0}δ   worst offset {:.2}δ {}",
+            proto.name(),
+            cfl,
+            cfl_paper,
+            ffl,
+            ffl_paper,
+            at as f64 / D as f64,
+            if pass { "✓" } else { "✗ MISMATCH" }
+        );
+    }
+
+    // Fig. 5: WbCast collision-free message flow (2 groups, f = 1)
+    let mut cfg = RunCfg::new(Proto::WbCast, 2, 1, 2, Net::Theory { delta: D });
+    cfg.max_requests = Some(1);
+    cfg.record_full = true;
+    let mut world = wbam::harness::build_world(&cfg);
+    world.run_to_quiescence(100_000);
+    println!("\nFig. 5 flow (WbCast, 2 groups, solo message): {} protocol messages", world.trace.sends);
+
+    println!("\n{}", if ok { "T-lat: all rows match the paper ✓" } else { "T-lat: MISMATCH ✗" });
+    std::process::exit(if ok { 0 } else { 1 });
+}

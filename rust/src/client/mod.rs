@@ -1,0 +1,272 @@
+//! Closed-loop multicast clients (the paper's workload: §VI, "client
+//! processes ... initiate multicasts of 20-byte messages in a closed
+//! loop").
+//!
+//! Each client keeps one request in flight: it multicasts a message to a
+//! random set of `dest_groups` destination groups, waits until it has
+//! received a `Delivered` notification from every destination group (the
+//! partially-delivered point of §II), then immediately issues the next
+//! request. Clients also implement the *message recovery* rule of §IV:
+//! they retransmit `MULTICAST(m)` on a timer until the first delivery.
+
+use crate::protocols::{Action, Node, TimerKind};
+use crate::types::{Gid, GidSet, MsgId, MsgMeta, Pid, Topology, Wire};
+#[cfg(test)]
+use crate::types::Ts;
+use crate::util::Rng;
+
+/// Client configuration.
+#[derive(Clone, Debug)]
+pub struct ClientCfg {
+    /// number of destination groups per multicast
+    pub dest_groups: usize,
+    /// payload size (paper: 20 bytes)
+    pub payload: usize,
+    /// stop after this many completed requests (None: run until the
+    /// simulation horizon)
+    pub max_requests: Option<u32>,
+    /// retransmission interval for message recovery (0 disables)
+    pub resend_after: u64,
+    /// optional think time between requests (0 = pure closed loop)
+    pub think_ns: u64,
+}
+
+impl Default for ClientCfg {
+    fn default() -> Self {
+        ClientCfg { dest_groups: 1, payload: 20, max_requests: None, resend_after: 0, think_ns: 0 }
+    }
+}
+
+struct Pending {
+    id: MsgId,
+    dest: GidSet,
+    acked: GidSet,
+    sent_at: u64,
+}
+
+/// Latency sample recorded by a client: (request id, multicast time,
+/// completion time).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub id: MsgId,
+    pub sent_at: u64,
+    pub done_at: u64,
+}
+
+/// A closed-loop client node.
+pub struct Client {
+    pid: Pid,
+    topo: Topology,
+    cfg: ClientCfg,
+    rng: Rng,
+    /// current leader guess per group (updated from Delivered senders)
+    cur_leader: Vec<Pid>,
+    seq: u32,
+    pending: Option<Pending>,
+    pub completed: Vec<Sample>,
+}
+
+impl Client {
+    pub fn new(pid: Pid, topo: Topology, cfg: ClientCfg, seed: u64) -> Self {
+        assert!(cfg.dest_groups >= 1 && cfg.dest_groups <= topo.num_groups());
+        let cur_leader = topo.gids().map(|g| topo.initial_leader(g)).collect();
+        Client { pid, topo, cfg, rng: Rng::new(seed), cur_leader, seq: 0, pending: None, completed: Vec::new() }
+    }
+
+    fn next_request(&mut self, now: u64) -> Vec<Action> {
+        if let Some(max) = self.cfg.max_requests {
+            if self.seq >= max {
+                return vec![];
+            }
+        }
+        self.seq += 1;
+        let id = MsgId::new(self.pid.0, self.seq);
+        let gidxs = self.rng.sample_indices(self.topo.num_groups(), self.cfg.dest_groups);
+        let dest = GidSet::from_iter(gidxs.into_iter().map(|i| Gid(i as u32)));
+        let meta = MsgMeta::new(id, dest, vec![0u8; self.cfg.payload]);
+        self.pending = Some(Pending { id, dest, acked: GidSet::EMPTY, sent_at: now });
+        let mut acts = self.multicast_to_leaders(&meta);
+        if self.cfg.resend_after > 0 {
+            acts.push(Action::Timer(TimerKind::ClientResend(id), self.cfg.resend_after));
+        }
+        acts
+    }
+
+    fn multicast_to_leaders(&self, meta: &MsgMeta) -> Vec<Action> {
+        meta.dest
+            .iter()
+            .map(|g| Action::Send(self.cur_leader[g.0 as usize], Wire::Multicast { meta: meta.clone() }))
+            .collect()
+    }
+}
+
+impl Node for Client {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn on_start(&mut self, now: u64) -> Vec<Action> {
+        self.next_request(now)
+    }
+
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
+        let Wire::Delivered { m, g, gts: _ } = wire else { return vec![] };
+        // the sender delivered in g — use it as the leader guess for g
+        if (g.0 as usize) < self.cur_leader.len() && self.topo.is_member(from, g) {
+            self.cur_leader[g.0 as usize] = from;
+        }
+        let Some(p) = &mut self.pending else { return vec![] };
+        if p.id != m || !p.dest.contains(g) {
+            return vec![]; // stale or duplicate notification
+        }
+        p.acked.insert(g);
+        if p.acked != p.dest {
+            return vec![];
+        }
+        let sample = Sample { id: p.id, sent_at: p.sent_at, done_at: now };
+        self.completed.push(sample);
+        self.pending = None;
+        if self.cfg.think_ns > 0 {
+            vec![Action::Timer(TimerKind::ClientNext, self.cfg.think_ns)]
+        } else {
+            self.next_request(now)
+        }
+    }
+
+    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action> {
+        match timer {
+            TimerKind::ClientNext => self.next_request(now),
+            TimerKind::ClientResend(m) => {
+                let Some(p) = &self.pending else { return vec![] };
+                if p.id != m {
+                    return vec![]; // request already completed
+                }
+                // message recovery (§IV): retransmit to current leader
+                // guesses, and also to all members of not-yet-acked groups
+                // in case our leader guess is stale.
+                let meta = MsgMeta::new(p.id, p.dest, vec![0u8; self.cfg.payload]);
+                let mut acts = self.multicast_to_leaders(&meta);
+                for g in p.dest.iter() {
+                    if !p.acked.contains(g) {
+                        for &mem in self.topo.members(g) {
+                            if mem != self.cur_leader[g.0 as usize] {
+                                acts.push(Action::Send(mem, Wire::Multicast { meta: meta.clone() }));
+                            }
+                        }
+                    }
+                }
+                acts.push(Action::Timer(TimerKind::ClientResend(m), self.cfg.resend_after));
+                acts
+            }
+            _ => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Client {
+        let topo = Topology::new(4, 1);
+        Client::new(Pid(100), topo, ClientCfg { dest_groups: 2, resend_after: 1000, ..Default::default() }, 7)
+    }
+
+    #[test]
+    fn first_request_targets_initial_leaders() {
+        let mut c = mk();
+        let acts = c.on_start(0);
+        let sends: Vec<_> = acts.iter().filter(|a| matches!(a, Action::Send(..))).collect();
+        assert_eq!(sends.len(), 2);
+        for a in &acts {
+            if let Action::Send(to, Wire::Multicast { meta }) = a {
+                assert_eq!(meta.id, MsgId::new(100, 1));
+                assert_eq!(meta.dest.len(), 2);
+                assert_eq!(meta.payload.len(), 20);
+                // initial leaders are the first member of each group
+                assert_eq!(to.0 % 3, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn completes_only_after_all_groups_ack() {
+        let mut c = mk();
+        let acts = c.on_start(0);
+        let dest: Vec<Gid> = match &acts[0] {
+            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+            _ => panic!(),
+        };
+        let m = MsgId::new(100, 1);
+        let leader0 = c.topo.initial_leader(dest[0]);
+        let out = c.on_wire(leader0, Wire::Delivered { m, g: dest[0], gts: Ts::new(1, dest[0]) }, 50);
+        assert!(out.is_empty());
+        assert!(c.completed.is_empty());
+        let leader1 = c.topo.initial_leader(dest[1]);
+        let out = c.on_wire(leader1, Wire::Delivered { m, g: dest[1], gts: Ts::new(1, dest[0]) }, 80);
+        assert_eq!(c.completed.len(), 1);
+        assert_eq!(c.completed[0].done_at, 80);
+        // closed loop: next request fired immediately
+        assert!(out.iter().any(|a| matches!(a, Action::Send(_, Wire::Multicast { .. }))));
+    }
+
+    #[test]
+    fn duplicate_and_stale_notifications_ignored() {
+        let mut c = mk();
+        let acts = c.on_start(0);
+        let dest: Vec<Gid> = match &acts[0] {
+            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+            _ => panic!(),
+        };
+        let m = MsgId::new(100, 1);
+        let l0 = c.topo.initial_leader(dest[0]);
+        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 10);
+        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 11);
+        assert!(c.completed.is_empty());
+        // notification for a different message id
+        c.on_wire(l0, Wire::Delivered { m: MsgId::new(100, 99), g: dest[1], gts: Ts::BOT }, 12);
+        assert!(c.completed.is_empty());
+    }
+
+    #[test]
+    fn resend_timer_retransmits_to_unacked_group_members() {
+        let mut c = mk();
+        let acts = c.on_start(0);
+        let dest: Vec<Gid> = match &acts[0] {
+            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+            _ => panic!(),
+        };
+        let m = MsgId::new(100, 1);
+        let l0 = c.topo.initial_leader(dest[0]);
+        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 10);
+        let acts = c.on_timer(TimerKind::ClientResend(m), 1000);
+        // resends to 2 leader guesses + the 2 non-leader members of the
+        // unacked group, + re-arms the timer
+        let sends = acts.iter().filter(|a| matches!(a, Action::Send(..))).count();
+        assert_eq!(sends, 4);
+        assert!(acts.iter().any(|a| matches!(a, Action::Timer(TimerKind::ClientResend(_), _))));
+    }
+
+    #[test]
+    fn max_requests_stops_the_loop() {
+        let topo = Topology::new(1, 0);
+        let mut c =
+            Client::new(Pid(10), topo.clone(), ClientCfg { dest_groups: 1, max_requests: Some(1), ..Default::default() }, 1);
+        c.on_start(0);
+        let out = c.on_wire(Pid(0), Wire::Delivered { m: MsgId::new(10, 1), g: Gid(0), gts: Ts::BOT }, 5);
+        assert!(out.is_empty());
+        assert_eq!(c.completed.len(), 1);
+    }
+
+    #[test]
+    fn leader_cache_updates_from_notification_sender() {
+        let mut c = mk();
+        c.on_start(0);
+        // a different member of group 0 replies -> becomes the leader guess
+        c.on_wire(Pid(2), Wire::Delivered { m: MsgId::new(100, 999), g: Gid(0), gts: Ts::BOT }, 5);
+        assert_eq!(c.cur_leader[0], Pid(2));
+        // a non-member cannot claim leadership of group 0
+        c.on_wire(Pid(5), Wire::Delivered { m: MsgId::new(100, 999), g: Gid(0), gts: Ts::BOT }, 6);
+        assert_eq!(c.cur_leader[0], Pid(2));
+    }
+}

@@ -1,0 +1,516 @@
+//! Hand-rolled binary wire codec (the offline build has no serde).
+//!
+//! Layout: little-endian fixed-width integers, length-prefixed sequences.
+//! Every [`Wire`] value round-trips through [`encode`] / [`decode`]; the
+//! TCP transport frames each message as `u32 length ++ bytes`.
+
+use crate::types::wire::{MsgState, PaxosMsg, RsmCmd};
+use crate::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts, Wire};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CodecError {
+    #[error("unexpected end of buffer at offset {0}")]
+    Eof(usize),
+    #[error("bad discriminant {value} for {what}")]
+    BadTag { what: &'static str, value: u8 },
+    #[error("trailing {0} bytes after message")]
+    Trailing(usize),
+}
+
+pub type Result<T> = std::result::Result<T, CodecError>;
+
+/// Byte-buffer writer.
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::with_capacity(64) }
+    }
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    #[inline]
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Byte-buffer reader.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    #[inline]
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(CodecError::Eof(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    #[inline]
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            Err(CodecError::Trailing(self.buf.len() - self.pos))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+// ---------- field codecs ----------
+
+fn put_ts(e: &mut Enc, ts: Ts) {
+    e.u64(ts.t);
+    e.u32(ts.g.0);
+}
+fn get_ts(d: &mut Dec) -> Result<Ts> {
+    Ok(Ts { t: d.u64()?, g: Gid(d.u32()?) })
+}
+fn put_ballot(e: &mut Enc, b: Ballot) {
+    e.u32(b.n);
+    e.u32(b.p.0);
+}
+fn get_ballot(d: &mut Dec) -> Result<Ballot> {
+    Ok(Ballot { n: d.u32()?, p: Pid(d.u32()?) })
+}
+fn put_meta(e: &mut Enc, m: &MsgMeta) {
+    e.u64(m.id.0);
+    e.u64(m.dest.0);
+    e.bytes(&m.payload);
+}
+fn get_meta(d: &mut Dec) -> Result<MsgMeta> {
+    Ok(MsgMeta { id: MsgId(d.u64()?), dest: GidSet(d.u64()?), payload: d.bytes()?.into() })
+}
+fn put_phase(e: &mut Enc, p: Phase) {
+    e.u8(match p {
+        Phase::Start => 0,
+        Phase::Proposed => 1,
+        Phase::Accepted => 2,
+        Phase::Committed => 3,
+    });
+}
+fn get_phase(d: &mut Dec) -> Result<Phase> {
+    Ok(match d.u8()? {
+        0 => Phase::Start,
+        1 => Phase::Proposed,
+        2 => Phase::Accepted,
+        3 => Phase::Committed,
+        v => return Err(CodecError::BadTag { what: "Phase", value: v }),
+    })
+}
+fn put_state(e: &mut Enc, s: &MsgState) {
+    put_meta(e, &s.meta);
+    put_phase(e, s.phase);
+    put_ts(e, s.lts);
+    put_ts(e, s.gts);
+}
+fn get_state(d: &mut Dec) -> Result<MsgState> {
+    Ok(MsgState { meta: get_meta(d)?, phase: get_phase(d)?, lts: get_ts(d)?, gts: get_ts(d)? })
+}
+fn put_cmd(e: &mut Enc, c: &RsmCmd) {
+    match c {
+        RsmCmd::AssignLts { meta, lts } => {
+            e.u8(0);
+            put_meta(e, meta);
+            put_ts(e, *lts);
+        }
+        RsmCmd::Commit { m, gts } => {
+            e.u8(1);
+            e.u64(m.0);
+            put_ts(e, *gts);
+        }
+    }
+}
+fn get_cmd(d: &mut Dec) -> Result<RsmCmd> {
+    Ok(match d.u8()? {
+        0 => RsmCmd::AssignLts { meta: get_meta(d)?, lts: get_ts(d)? },
+        1 => RsmCmd::Commit { m: MsgId(d.u64()?), gts: get_ts(d)? },
+        v => return Err(CodecError::BadTag { what: "RsmCmd", value: v }),
+    })
+}
+fn put_paxos(e: &mut Enc, m: &PaxosMsg) {
+    match m {
+        PaxosMsg::P1a { bal } => {
+            e.u8(0);
+            put_ballot(e, *bal);
+        }
+        PaxosMsg::P1b { bal, log } => {
+            e.u8(1);
+            put_ballot(e, *bal);
+            e.u32(log.len() as u32);
+            for (slot, b, cmd) in log {
+                e.u64(*slot);
+                put_ballot(e, *b);
+                put_cmd(e, cmd);
+            }
+        }
+        PaxosMsg::P2a { bal, slot, cmd } => {
+            e.u8(2);
+            put_ballot(e, *bal);
+            e.u64(*slot);
+            put_cmd(e, cmd);
+        }
+        PaxosMsg::P2b { bal, slot } => {
+            e.u8(3);
+            put_ballot(e, *bal);
+            e.u64(*slot);
+        }
+        PaxosMsg::Learn { slot, cmd } => {
+            e.u8(4);
+            e.u64(*slot);
+            put_cmd(e, cmd);
+        }
+    }
+}
+fn get_paxos(d: &mut Dec) -> Result<PaxosMsg> {
+    Ok(match d.u8()? {
+        0 => PaxosMsg::P1a { bal: get_ballot(d)? },
+        1 => {
+            let bal = get_ballot(d)?;
+            let n = d.u32()? as usize;
+            let mut log = Vec::with_capacity(n);
+            for _ in 0..n {
+                log.push((d.u64()?, get_ballot(d)?, get_cmd(d)?));
+            }
+            PaxosMsg::P1b { bal, log }
+        }
+        2 => PaxosMsg::P2a { bal: get_ballot(d)?, slot: d.u64()?, cmd: get_cmd(d)? },
+        3 => PaxosMsg::P2b { bal: get_ballot(d)?, slot: d.u64()? },
+        4 => PaxosMsg::Learn { slot: d.u64()?, cmd: get_cmd(d)? },
+        v => return Err(CodecError::BadTag { what: "PaxosMsg", value: v }),
+    })
+}
+
+// ---------- top-level ----------
+
+/// Serialize a wire message to bytes.
+pub fn encode(w: &Wire) -> Vec<u8> {
+    let mut e = Enc::new();
+    match w {
+        Wire::Multicast { meta } => {
+            e.u8(0);
+            put_meta(&mut e, meta);
+        }
+        Wire::Delivered { m, g, gts } => {
+            e.u8(1);
+            e.u64(m.0);
+            e.u32(g.0);
+            put_ts(&mut e, *gts);
+        }
+        Wire::Propose { m, g, lts } => {
+            e.u8(2);
+            e.u64(m.0);
+            e.u32(g.0);
+            put_ts(&mut e, *lts);
+        }
+        Wire::Accept { meta, g, bal, lts } => {
+            e.u8(3);
+            put_meta(&mut e, meta);
+            e.u32(g.0);
+            put_ballot(&mut e, *bal);
+            put_ts(&mut e, *lts);
+        }
+        Wire::AcceptAck { m, g, bals } => {
+            e.u8(4);
+            e.u64(m.0);
+            e.u32(g.0);
+            e.u32(bals.len() as u32);
+            for (g, b) in bals {
+                e.u32(g.0);
+                put_ballot(&mut e, *b);
+            }
+        }
+        Wire::Deliver { m, bal, lts, gts } => {
+            e.u8(5);
+            e.u64(m.0);
+            put_ballot(&mut e, *bal);
+            put_ts(&mut e, *lts);
+            put_ts(&mut e, *gts);
+        }
+        Wire::NewLeader { bal } => {
+            e.u8(6);
+            put_ballot(&mut e, *bal);
+        }
+        Wire::NewLeaderAck { bal, cbal, clock, state } => {
+            e.u8(7);
+            put_ballot(&mut e, *bal);
+            put_ballot(&mut e, *cbal);
+            e.u64(*clock);
+            e.u32(state.len() as u32);
+            for s in state {
+                put_state(&mut e, s);
+            }
+        }
+        Wire::NewState { bal, clock, state } => {
+            e.u8(8);
+            put_ballot(&mut e, *bal);
+            e.u64(*clock);
+            e.u32(state.len() as u32);
+            for s in state {
+                put_state(&mut e, s);
+            }
+        }
+        Wire::NewStateAck { bal } => {
+            e.u8(9);
+            put_ballot(&mut e, *bal);
+        }
+        Wire::Confirm { m, g } => {
+            e.u8(10);
+            e.u64(m.0);
+            e.u32(g.0);
+        }
+        Wire::Paxos { g, msg } => {
+            e.u8(11);
+            e.u32(g.0);
+            put_paxos(&mut e, msg);
+        }
+        Wire::Heartbeat { bal } => {
+            e.u8(12);
+            put_ballot(&mut e, *bal);
+        }
+        Wire::GcReport { max_gts } => {
+            e.u8(13);
+            put_ts(&mut e, *max_gts);
+        }
+    }
+    e.buf
+}
+
+/// Deserialize a wire message; checks the buffer is fully consumed.
+pub fn decode(buf: &[u8]) -> Result<Wire> {
+    let mut d = Dec::new(buf);
+    let w = match d.u8()? {
+        0 => Wire::Multicast { meta: get_meta(&mut d)? },
+        1 => Wire::Delivered { m: MsgId(d.u64()?), g: Gid(d.u32()?), gts: get_ts(&mut d)? },
+        2 => Wire::Propose { m: MsgId(d.u64()?), g: Gid(d.u32()?), lts: get_ts(&mut d)? },
+        3 => Wire::Accept {
+            meta: get_meta(&mut d)?,
+            g: Gid(d.u32()?),
+            bal: get_ballot(&mut d)?,
+            lts: get_ts(&mut d)?,
+        },
+        4 => {
+            let m = MsgId(d.u64()?);
+            let g = Gid(d.u32()?);
+            let n = d.u32()? as usize;
+            let mut bals = Vec::with_capacity(n);
+            for _ in 0..n {
+                bals.push((Gid(d.u32()?), get_ballot(&mut d)?));
+            }
+            Wire::AcceptAck { m, g, bals }
+        }
+        5 => Wire::Deliver {
+            m: MsgId(d.u64()?),
+            bal: get_ballot(&mut d)?,
+            lts: get_ts(&mut d)?,
+            gts: get_ts(&mut d)?,
+        },
+        6 => Wire::NewLeader { bal: get_ballot(&mut d)? },
+        7 => {
+            let bal = get_ballot(&mut d)?;
+            let cbal = get_ballot(&mut d)?;
+            let clock = d.u64()?;
+            let n = d.u32()? as usize;
+            let mut state = Vec::with_capacity(n);
+            for _ in 0..n {
+                state.push(get_state(&mut d)?);
+            }
+            Wire::NewLeaderAck { bal, cbal, clock, state }
+        }
+        8 => {
+            let bal = get_ballot(&mut d)?;
+            let clock = d.u64()?;
+            let n = d.u32()? as usize;
+            let mut state = Vec::with_capacity(n);
+            for _ in 0..n {
+                state.push(get_state(&mut d)?);
+            }
+            Wire::NewState { bal, clock, state }
+        }
+        9 => Wire::NewStateAck { bal: get_ballot(&mut d)? },
+        10 => Wire::Confirm { m: MsgId(d.u64()?), g: Gid(d.u32()?) },
+        11 => Wire::Paxos { g: Gid(d.u32()?), msg: get_paxos(&mut d)? },
+        12 => Wire::Heartbeat { bal: get_ballot(&mut d)? },
+        13 => Wire::GcReport { max_gts: get_ts(&mut d)? },
+        v => return Err(CodecError::BadTag { what: "Wire", value: v }),
+    };
+    d.finish()?;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn rand_ts(r: &mut Rng) -> Ts {
+        if r.chance(0.1) {
+            Ts::BOT
+        } else {
+            Ts::new(r.range(1, 1 << 40), Gid(r.below(64) as u32))
+        }
+    }
+    fn rand_ballot(r: &mut Rng) -> Ballot {
+        if r.chance(0.1) {
+            Ballot::BOT
+        } else {
+            Ballot::new(r.range(1, 1000) as u32, Pid(r.below(100) as u32))
+        }
+    }
+    fn rand_meta(r: &mut Rng) -> MsgMeta {
+        let n = r.below(40) as usize;
+        MsgMeta {
+            id: MsgId(r.next_u64()),
+            dest: GidSet(r.next_u64() & 0x3FF),
+            payload: (0..n).map(|_| r.below(256) as u8).collect::<Vec<u8>>().into(),
+        }
+    }
+    fn rand_state(r: &mut Rng) -> MsgState {
+        MsgState {
+            meta: rand_meta(r),
+            phase: *r.choose(&[Phase::Start, Phase::Proposed, Phase::Accepted, Phase::Committed]),
+            lts: rand_ts(r),
+            gts: rand_ts(r),
+        }
+    }
+    fn rand_cmd(r: &mut Rng) -> RsmCmd {
+        if r.chance(0.5) {
+            RsmCmd::AssignLts { meta: rand_meta(r), lts: rand_ts(r) }
+        } else {
+            RsmCmd::Commit { m: MsgId(r.next_u64()), gts: rand_ts(r) }
+        }
+    }
+
+    fn rand_wire(r: &mut Rng) -> Wire {
+        match r.below(14) {
+            0 => Wire::Multicast { meta: rand_meta(r) },
+            1 => Wire::Delivered { m: MsgId(r.next_u64()), g: Gid(r.below(64) as u32), gts: rand_ts(r) },
+            2 => Wire::Propose { m: MsgId(r.next_u64()), g: Gid(r.below(64) as u32), lts: rand_ts(r) },
+            3 => Wire::Accept { meta: rand_meta(r), g: Gid(r.below(64) as u32), bal: rand_ballot(r), lts: rand_ts(r) },
+            4 => {
+                let n = r.below(8) as usize;
+                Wire::AcceptAck {
+                    m: MsgId(r.next_u64()),
+                    g: Gid(r.below(64) as u32),
+                    bals: (0..n).map(|i| (Gid(i as u32), rand_ballot(r))).collect(),
+                }
+            }
+            5 => Wire::Deliver { m: MsgId(r.next_u64()), bal: rand_ballot(r), lts: rand_ts(r), gts: rand_ts(r) },
+            6 => Wire::NewLeader { bal: rand_ballot(r) },
+            7 => {
+                let n = r.below(5) as usize;
+                Wire::NewLeaderAck {
+                    bal: rand_ballot(r),
+                    cbal: rand_ballot(r),
+                    clock: r.next_u64(),
+                    state: (0..n).map(|_| rand_state(r)).collect(),
+                }
+            }
+            8 => {
+                let n = r.below(5) as usize;
+                Wire::NewState { bal: rand_ballot(r), clock: r.next_u64(), state: (0..n).map(|_| rand_state(r)).collect() }
+            }
+            9 => Wire::NewStateAck { bal: rand_ballot(r) },
+            10 => Wire::Confirm { m: MsgId(r.next_u64()), g: Gid(r.below(64) as u32) },
+            11 => {
+                let msg = match r.below(5) {
+                    0 => PaxosMsg::P1a { bal: rand_ballot(r) },
+                    1 => {
+                        let n = r.below(4) as usize;
+                        PaxosMsg::P1b {
+                            bal: rand_ballot(r),
+                            log: (0..n).map(|i| (i as u64, rand_ballot(r), rand_cmd(r))).collect(),
+                        }
+                    }
+                    2 => PaxosMsg::P2a { bal: rand_ballot(r), slot: r.next_u64(), cmd: rand_cmd(r) },
+                    3 => PaxosMsg::P2b { bal: rand_ballot(r), slot: r.next_u64() },
+                    _ => PaxosMsg::Learn { slot: r.next_u64(), cmd: rand_cmd(r) },
+                };
+                Wire::Paxos { g: Gid(r.below(64) as u32), msg }
+            }
+            12 => Wire::Heartbeat { bal: rand_ballot(r) },
+            _ => Wire::GcReport { max_gts: rand_ts(r) },
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_messages() {
+        prop::check(500, |r| {
+            let w = rand_wire(r);
+            let bytes = encode(&w);
+            let w2 = decode(&bytes).expect("decode");
+            assert_eq!(w, w2);
+        });
+    }
+
+    #[test]
+    fn decode_rejects_truncated() {
+        prop::check(200, |r| {
+            let w = rand_wire(r);
+            let bytes = encode(&w);
+            if bytes.len() > 1 {
+                let cut = r.range(1, bytes.len() as u64 - 1) as usize;
+                // Truncation must never panic; it may error or (rarely for
+                // length-prefixed payloads) still parse a prefix — but the
+                // full-consumption check makes that impossible here.
+                assert!(decode(&bytes[..cut]).is_err());
+            }
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_tag() {
+        assert!(decode(&[200]).is_err());
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage() {
+        let w = Wire::NewStateAck { bal: Ballot::new(3, Pid(1)) };
+        let mut bytes = encode(&w);
+        bytes.push(0);
+        assert!(matches!(decode(&bytes), Err(CodecError::Trailing(1))));
+    }
+}

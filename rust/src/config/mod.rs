@@ -1,0 +1,203 @@
+//! Configuration: a minimal INI/TOML-subset parser plus a CLI argument
+//! helper (the offline image has no serde/clap). Used by the `wbam`
+//! launcher binary and the examples.
+//!
+//! Accepted file syntax:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = value          # integers, floats, bools, strings
+//! name = "quoted ok"
+//! ```
+
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("line {0}: malformed entry: {1}")]
+    Malformed(usize, String),
+    #[error("missing key: {0}")]
+    Missing(String),
+    #[error("key {0}: cannot parse {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+/// Parsed config: `section.key -> value` (top-level keys have no prefix).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(idx) => &raw[..idx],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(ConfigError::Malformed(i + 1, raw.to_string()));
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ConfigError::Malformed(i + 1, raw.to_string()));
+            }
+            let mut val = line[eq + 1..].trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::BadValue(path.into(), e.to_string(), "readable file"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::BadValue(key.into(), v.into(), "u64")),
+        }
+    }
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        Ok(self.u64(key, default as u64)? as usize)
+    }
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::BadValue(key.into(), v.into(), "f64")),
+        }
+    }
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(ConfigError::BadValue(key.into(), v.into(), "bool")),
+        }
+    }
+}
+
+/// Tiny CLI helper: `--key value`, `--flag`, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn u64_opt(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn usize_opt(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_quotes() {
+        let cfg = Config::parse(
+            r#"
+            # top comment
+            workers = 4
+            [net]
+            kind = "wan"          # inline comment
+            delta_us = 1000
+            [wb]
+            gc = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.usize("workers", 0).unwrap(), 4);
+        assert_eq!(cfg.str("net.kind", ""), "wan");
+        assert_eq!(cfg.u64("net.delta_us", 0).unwrap(), 1000);
+        assert!(cfg.bool("wb.gc", false).unwrap());
+        assert_eq!(cfg.u64("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn bad_typed_values_error() {
+        let cfg = Config::parse("x = abc").unwrap();
+        assert!(cfg.u64("x", 0).is_err());
+        assert!(cfg.bool("x", false).is_err());
+    }
+
+    #[test]
+    fn args_forms() {
+        let a = Args::parse(
+            ["bench", "--clients", "100", "--net=wan", "--verbose", "--groups", "10"].map(String::from),
+        );
+        assert_eq!(a.positional, vec!["bench"]);
+        assert_eq!(a.u64_opt("clients", 0), 100);
+        assert_eq!(a.str_opt("net", ""), "wan");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_opt("groups", 0), 10);
+        assert_eq!(a.u64_opt("absent", 9), 9);
+    }
+}

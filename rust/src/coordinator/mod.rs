@@ -1,0 +1,248 @@
+//! Coordinator runtime: drives the same [`Node`] state machines that run
+//! under the simulator on *real threads* over a [`Transport`]
+//! (in-process or TCP). One `NodeRuntime` per process; the leader's
+//! commit path can offload batched global-timestamp resolution to the
+//! XLA engine service ([`crate::runtime::service`]).
+//!
+//! Event loop: poll the transport with a timeout bounded by the next
+//! armed timer; dispatch wires/timers into the node; apply the resulting
+//! actions (sends → transport, timers → local heap, deliveries → the
+//! registered callback).
+
+use crate::net::{Incoming, Transport};
+use crate::protocols::{Action, Node, TimerKind};
+use crate::types::{MsgId, Pid, Ts};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Delivery callback: `(pid, message, gts, elapsed_ns)`.
+pub type DeliverFn = Box<dyn FnMut(Pid, MsgId, Ts, u64) + Send>;
+
+/// Runs one protocol node over a transport until stopped.
+pub struct NodeRuntime<T: Transport> {
+    node: Box<dyn Node>,
+    transport: T,
+    timers: BinaryHeap<Reverse<(u64, u64, TimerKind)>>,
+    timer_seq: u64,
+    epoch: Instant,
+    on_deliver: Option<DeliverFn>,
+    /// statistics
+    pub wires_in: u64,
+    pub wires_out: u64,
+    pub delivered: u64,
+}
+
+impl<T: Transport> NodeRuntime<T> {
+    pub fn new(node: Box<dyn Node>, transport: T) -> Self {
+        NodeRuntime {
+            node,
+            transport,
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            epoch: Instant::now(),
+            on_deliver: None,
+            wires_in: 0,
+            wires_out: 0,
+            delivered: 0,
+        }
+    }
+
+    pub fn on_deliver(&mut self, f: DeliverFn) {
+        self.on_deliver = Some(f);
+    }
+
+    fn now(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn apply(&mut self, acts: Vec<Action>) {
+        let now = self.now();
+        for a in acts {
+            match a {
+                Action::Send(to, wire) => {
+                    self.wires_out += 1;
+                    if to == self.node.pid() {
+                        // self-send: loop straight back through the node
+                        let acts = self.node.on_wire(to, wire, now);
+                        self.apply(acts);
+                    } else {
+                        self.transport.send(to, &wire);
+                    }
+                }
+                Action::Deliver(m, gts) => {
+                    self.delivered += 1;
+                    if let Some(f) = &mut self.on_deliver {
+                        f(self.node.pid(), m, gts, now);
+                    }
+                }
+                Action::Timer(kind, after) => {
+                    self.timer_seq += 1;
+                    self.timers.push(Reverse((now + after, self.timer_seq, kind)));
+                }
+            }
+        }
+    }
+
+    /// Run until `stop` is raised. Returns the node back for inspection.
+    pub fn run(mut self, stop: Arc<AtomicBool>) -> Box<dyn Node> {
+        let acts = self.node.on_start(self.now());
+        self.apply(acts);
+        while !stop.load(Ordering::Relaxed) {
+            // fire due timers
+            let now = self.now();
+            while let Some(Reverse((t, _, _))) = self.timers.peek() {
+                if *t > now {
+                    break;
+                }
+                let Reverse((_, _, kind)) = self.timers.pop().unwrap();
+                let acts = self.node.on_timer(kind, now);
+                self.apply(acts);
+            }
+            // poll bounded by the next timer (or a coarse idle tick)
+            let next = self.timers.peek().map(|Reverse((t, _, _))| *t);
+            let wait = match next {
+                Some(t) => Duration::from_nanos(t.saturating_sub(self.now()).min(50_000_000)),
+                None => Duration::from_millis(50),
+            };
+            match self.transport.recv_timeout(wait) {
+                Some(Incoming::Wire(from, wire)) => {
+                    self.wires_in += 1;
+                    let now = self.now();
+                    let acts = self.node.on_wire(from, wire, now);
+                    self.apply(acts);
+                }
+                Some(Incoming::Closed) => break,
+                None => {}
+            }
+        }
+        self.node
+    }
+}
+
+/// Convenience: spawn a runtime on its own thread; returns a join handle
+/// yielding the node when stopped.
+pub fn spawn<T: Transport + 'static>(
+    node: Box<dyn Node>,
+    transport: T,
+    stop: Arc<AtomicBool>,
+    on_deliver: Option<DeliverFn>,
+) -> std::thread::JoinHandle<Box<dyn Node>> {
+    let name = format!("wbam-node-{}", node.pid().0);
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let mut rt = NodeRuntime::new(node, transport);
+            if let Some(f) = on_deliver {
+                rt.on_deliver(f);
+            }
+            rt.run(stop)
+        })
+        .expect("spawn node thread")
+}
+
+/// A whole in-process cluster: group members + clients on threads.
+pub struct Cluster {
+    pub stop: Arc<AtomicBool>,
+    pub handles: Vec<std::thread::JoinHandle<Box<dyn Node>>>,
+}
+
+impl Cluster {
+    /// Launch `nodes` over a fresh in-proc mesh. `on_deliver` is invoked
+    /// for every local delivery on any node.
+    pub fn launch(nodes: Vec<Box<dyn Node>>, on_deliver: Option<Arc<std::sync::Mutex<DeliverFn>>>) -> Cluster {
+        let mesh = crate::net::InProcMesh::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        // register all endpoints before starting any node so early sends
+        // have somewhere to go
+        let endpoints: Vec<_> = nodes.iter().map(|n| mesh.endpoint(n.pid())).collect();
+        let mut handles = Vec::new();
+        for (node, ep) in nodes.into_iter().zip(endpoints) {
+            let cb: Option<DeliverFn> = on_deliver.as_ref().map(|f| {
+                let f = Arc::clone(f);
+                Box::new(move |pid: Pid, m: MsgId, gts: Ts, t: u64| {
+                    (f.lock().unwrap())(pid, m, gts, t);
+                }) as DeliverFn
+            });
+            handles.push(spawn(node, ep, Arc::clone(&stop), cb));
+        }
+        Cluster { stop, handles }
+    }
+
+    /// Stop all node threads and collect the nodes.
+    pub fn shutdown(self) -> Vec<Box<dyn Node>> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{Client, ClientCfg};
+    use crate::protocols::wbcast::{WbConfig, WbNode};
+    use crate::types::Topology;
+    use std::sync::Mutex;
+
+    #[test]
+    fn inproc_cluster_runs_wbcast_end_to_end() {
+        let topo = Topology::new(2, 1);
+        let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+        let wb = WbConfig { hb_interval: 20_000_000, ..WbConfig::default() };
+        for g in topo.gids() {
+            for &p in topo.members(g) {
+                nodes.push(Box::new(WbNode::new(p, topo.clone(), wb)));
+            }
+        }
+        for c in 0..4u32 {
+            let pid = Pid(topo.first_client_pid().0 + c);
+            let cfg = ClientCfg {
+                dest_groups: 2,
+                max_requests: Some(25),
+                resend_after: 200_000_000,
+                ..Default::default()
+            };
+            nodes.push(Box::new(Client::new(pid, topo.clone(), cfg, 77 + c as u64)));
+        }
+        let deliveries = Arc::new(Mutex::new(Vec::<(Pid, MsgId, Ts)>::new()));
+        let dv = Arc::clone(&deliveries);
+        let cb: Arc<Mutex<DeliverFn>> = Arc::new(Mutex::new(Box::new(move |pid, m, gts, _t| {
+            dv.lock().unwrap().push((pid, m, gts));
+        })));
+        let cluster = Cluster::launch(nodes, Some(cb));
+
+        // wait until all 100 requests completed at every member (6 nodes
+        // x 100 deliveries), with a deadline
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let n = deliveries.lock().unwrap().len();
+            if n >= 600 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "timeout: {n}/600 deliveries");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let nodes = cluster.shutdown();
+
+        // per-pid gts must be strictly increasing (Ordering)
+        let dels = deliveries.lock().unwrap();
+        let mut per_pid: std::collections::HashMap<Pid, Vec<Ts>> = Default::default();
+        for &(pid, _m, gts) in dels.iter() {
+            per_pid.entry(pid).or_default().push(gts);
+        }
+        for (pid, seq) in &per_pid {
+            for w in seq.windows(2) {
+                assert!(w[0] < w[1], "{pid:?} delivered out of order");
+            }
+        }
+        // clients completed their quotas
+        for n in nodes {
+            let any: &dyn Node = &*n;
+            if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+                assert_eq!(c.completed.len(), 25);
+            }
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! Experiment harness: builds a simulated deployment for any protocol,
+//! runs a workload, and summarises the metrics the paper's figures plot.
+//! Shared by `cargo bench` drivers, the examples and the integration
+//! tests.
+
+use crate::client::{Client, ClientCfg};
+use crate::protocols::fastcast::FastCastNode;
+use crate::protocols::ftskeen::FtSkeenNode;
+use crate::protocols::skeen::SkeenNode;
+use crate::protocols::wbcast::{WbConfig, WbNode};
+use crate::protocols::Node;
+use crate::sim::{ConstDelay, CpuCost, DelayModel, LanDelay, SimConfig, Trace, WanDelay, World, MS};
+use crate::stats::Histogram;
+use crate::types::{Pid, Topology};
+
+/// Protocol under test.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Proto {
+    /// unreplicated Skeen (Fig. 1; requires f = 0)
+    Skeen,
+    /// Skeen over black-box Paxos (6δ / 12δ)
+    FtSkeen,
+    /// FastCast (4δ / 8δ)
+    FastCast,
+    /// the paper's white-box protocol (3δ / 5δ)
+    WbCast,
+}
+
+impl Proto {
+    pub const ALL: [Proto; 4] = [Proto::Skeen, Proto::FtSkeen, Proto::FastCast, Proto::WbCast];
+    /// The three replicated protocols of the paper's evaluation (§VI).
+    pub const EVAL: [Proto; 3] = [Proto::FtSkeen, Proto::FastCast, Proto::WbCast];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Proto::Skeen => "Skeen",
+            Proto::FtSkeen => "FT-Skeen",
+            Proto::FastCast => "FastCast",
+            Proto::WbCast => "WbCast",
+        }
+    }
+}
+
+/// Network model selector (paper testbeds).
+#[derive(Clone, Copy, Debug)]
+pub enum Net {
+    /// constant δ, zero CPU cost — §V theory setting
+    Theory { delta: u64 },
+    /// CloudLab-like LAN (≈0.1 ms RTT) with server CPU cost
+    Lan,
+    /// GCP 3-DC WAN (60/75/130 ms RTTs); group member i → site i
+    Wan,
+}
+
+/// One experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub proto: Proto,
+    pub groups: usize,
+    pub f: usize,
+    pub clients: usize,
+    /// destination groups per multicast
+    pub dest_groups: usize,
+    pub net: Net,
+    pub seed: u64,
+    /// per-client request cap (None: run until `duration`)
+    pub max_requests: Option<u32>,
+    /// total virtual time to simulate (used when max_requests is None)
+    pub duration: u64,
+    /// fraction of `duration` discarded as warm-up
+    pub warmup_frac: f64,
+    /// record the full delivery trace (needed for safety checking)
+    pub record_full: bool,
+    /// WbCast liveness tunables (heartbeats etc.)
+    pub wb: WbConfig,
+    /// client retransmission interval (0: disabled)
+    pub resend_after: u64,
+}
+
+impl RunCfg {
+    pub fn new(proto: Proto, groups: usize, clients: usize, dest_groups: usize, net: Net) -> Self {
+        RunCfg {
+            proto,
+            groups,
+            f: if proto == Proto::Skeen { 0 } else { 1 },
+            clients,
+            dest_groups,
+            net,
+            seed: 42,
+            max_requests: None,
+            duration: 10_000 * MS,
+            warmup_frac: 0.2,
+            record_full: false,
+            wb: WbConfig::default(),
+            resend_after: 0,
+        }
+    }
+}
+
+/// Summary of one run — a row of a paper figure.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub proto: Proto,
+    pub clients: usize,
+    pub dest_groups: usize,
+    /// mean first-delivery latency, ms
+    pub mean_lat_ms: f64,
+    pub p50_lat_ms: f64,
+    pub p99_lat_ms: f64,
+    pub max_lat_ms: f64,
+    /// completed multicasts per second in the measurement window
+    pub throughput: f64,
+    /// protocol messages sent per completed multicast
+    pub msgs_per_multicast: f64,
+    pub completed: usize,
+}
+
+impl RunResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<9} clients={:<5} dest={:<2} lat(ms) mean={:<8.3} p50={:<8.3} p99={:<8.3} thru={:<10.0} msgs/mc={:<6.1}",
+            self.proto.name(),
+            self.clients,
+            self.dest_groups,
+            self.mean_lat_ms,
+            self.p50_lat_ms,
+            self.p99_lat_ms,
+            self.throughput,
+            self.msgs_per_multicast
+        )
+    }
+}
+
+fn delay_model(net: Net, topo: &Topology) -> (Box<dyn DelayModel>, CpuCost) {
+    match net {
+        Net::Theory { delta } => (Box::new(ConstDelay(delta)), CpuCost::zero()),
+        Net::Lan => (Box::new(LanDelay::cloudlab()), CpuCost::lan_server()),
+        Net::Wan => {
+            let gsize = topo.group_size();
+            let members = topo.num_members() as u32;
+            // each group has one replica per data centre (§VI); clients
+            // are spread across the three sites round-robin
+            let site_of = move |p: Pid| {
+                if p.0 < members {
+                    (p.0 as usize) % gsize % 3
+                } else {
+                    (p.0 - members) as usize % 3
+                }
+            };
+            (Box::new(WanDelay::gcp3(site_of)), CpuCost::lan_server())
+        }
+    }
+}
+
+/// Construct the simulated deployment for `cfg`.
+pub fn build_world(cfg: &RunCfg) -> World {
+    let topo = Topology::new(cfg.groups, cfg.f);
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            match cfg.proto {
+                Proto::Skeen => nodes.push(Box::new(SkeenNode::new(p, topo.clone()))),
+                Proto::FtSkeen => nodes.push(Box::new(FtSkeenNode::new(p, topo.clone()))),
+                Proto::FastCast => nodes.push(Box::new(FastCastNode::new(p, topo.clone()))),
+                Proto::WbCast => nodes.push(Box::new(WbNode::new(p, topo.clone(), cfg.wb))),
+            }
+        }
+    }
+    for c in 0..cfg.clients {
+        let pid = Pid(topo.first_client_pid().0 + c as u32);
+        let ccfg = ClientCfg {
+            dest_groups: cfg.dest_groups,
+            max_requests: cfg.max_requests,
+            resend_after: cfg.resend_after,
+            ..Default::default()
+        };
+        nodes.push(Box::new(Client::new(pid, topo.clone(), ccfg, cfg.seed ^ ((c as u64) << 13) ^ 0x5EED)));
+    }
+    let (delay, cpu) = delay_model(cfg.net, &topo);
+    World::new(topo, nodes, SimConfig { delay, cpu, seed: cfg.seed, record_full: cfg.record_full })
+}
+
+/// Run `cfg` and summarise. With `max_requests` set the run goes to
+/// quiescence; otherwise it simulates `duration` and measures after the
+/// warm-up window.
+pub fn run(cfg: &RunCfg) -> RunResult {
+    let mut world = build_world(cfg);
+    let (from, to) = if cfg.max_requests.is_some() {
+        world.run_to_quiescence(u64::MAX);
+        (0, world.now().max(1))
+    } else {
+        world.run_until(cfg.duration);
+        ((cfg.duration as f64 * cfg.warmup_frac) as u64, cfg.duration)
+    };
+    summarize(cfg, &world.trace, from, to)
+}
+
+/// Build a RunResult from a trace over the window `[from, to)`.
+pub fn summarize(cfg: &RunCfg, trace: &Trace, from: u64, to: u64) -> RunResult {
+    let mut h = Histogram::new();
+    for &l in &trace.latencies {
+        h.record(l.max(1));
+    }
+    let completed = trace.completions.iter().filter(|&&t| t >= from && t < to).count();
+    let thru = completed as f64 / ((to - from) as f64 / 1e9);
+    let total_done = trace.completions.len().max(1);
+    RunResult {
+        proto: cfg.proto,
+        clients: cfg.clients,
+        dest_groups: cfg.dest_groups,
+        mean_lat_ms: h.mean() / 1e6,
+        p50_lat_ms: h.p50() as f64 / 1e6,
+        p99_lat_ms: h.p99() as f64 / 1e6,
+        max_lat_ms: h.max() as f64 / 1e6,
+        throughput: thru,
+        msgs_per_multicast: trace.sends as f64 / total_done as f64,
+        completed,
+    }
+}
+
+/// A client that multicasts a fixed script of messages at exact virtual
+/// times — used by the latency-theory bench to construct the adversarial
+/// §V scenarios (e.g. Fig. 2's convoy timing).
+pub struct ScriptedClient {
+    pid: Pid,
+    topo: Topology,
+    /// (send time, destination groups) in increasing time order
+    script: Vec<(u64, crate::types::GidSet)>,
+    next: usize,
+    seq: u32,
+}
+
+impl ScriptedClient {
+    pub fn new(pid: Pid, topo: Topology, script: Vec<(u64, crate::types::GidSet)>) -> Self {
+        ScriptedClient { pid, topo, script, next: 0, seq: 0 }
+    }
+
+    fn fire_due(&mut self, now: u64) -> Vec<crate::protocols::Action> {
+        use crate::protocols::{Action, TimerKind};
+        use crate::types::{MsgId, MsgMeta, Wire};
+        let mut acts = Vec::new();
+        while self.next < self.script.len() && self.script[self.next].0 <= now {
+            let (_, dest) = self.script[self.next];
+            self.next += 1;
+            self.seq += 1;
+            let meta = MsgMeta::new(MsgId::new(self.pid.0, self.seq), dest, vec![0u8; 20]);
+            for g in dest.iter() {
+                acts.push(Action::Send(self.topo.initial_leader(g), Wire::Multicast { meta: meta.clone() }));
+            }
+        }
+        if self.next < self.script.len() {
+            acts.push(Action::Timer(TimerKind::ClientNext, self.script[self.next].0 - now));
+        }
+        acts
+    }
+}
+
+impl crate::protocols::Node for ScriptedClient {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+    fn on_start(&mut self, now: u64) -> Vec<crate::protocols::Action> {
+        self.fire_due(now)
+    }
+    fn on_wire(&mut self, _f: Pid, _w: crate::types::Wire, _n: u64) -> Vec<crate::protocols::Action> {
+        vec![]
+    }
+    fn on_timer(&mut self, _t: crate::protocols::TimerKind, now: u64) -> Vec<crate::protocols::Action> {
+        self.fire_due(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::invariants;
+
+    #[test]
+    fn theory_latencies_match_table_1() {
+        // solo message per protocol: commit latency = collision-free
+        // latency (Theorem 3): Skeen 2δ, WbCast 3δ, FastCast 4δ, FT-Skeen 6δ
+        let delta = MS;
+        let expect = [(Proto::Skeen, 2.0), (Proto::WbCast, 3.0), (Proto::FastCast, 4.0), (Proto::FtSkeen, 6.0)];
+        for (proto, d) in expect {
+            let mut cfg = RunCfg::new(proto, 2, 1, 2, Net::Theory { delta });
+            cfg.max_requests = Some(1);
+            cfg.record_full = true;
+            let r = run(&cfg);
+            assert_eq!(r.completed, 1);
+            assert!(
+                (r.mean_lat_ms - d).abs() < 1e-6,
+                "{}: expected {d}δ, got {} ms",
+                proto.name(),
+                r.mean_lat_ms
+            );
+        }
+    }
+
+    #[test]
+    fn all_protocols_safe_under_lan_contention() {
+        for proto in Proto::EVAL {
+            let mut cfg = RunCfg::new(proto, 3, 8, 2, Net::Lan);
+            cfg.max_requests = Some(20);
+            cfg.record_full = true;
+            let mut w = build_world(&cfg);
+            w.run_to_quiescence(50_000_000);
+            invariants::assert_correct(&w.trace);
+            assert_eq!(w.trace.completions.len(), 160, "{}", proto.name());
+        }
+    }
+
+    #[test]
+    fn skeen_safe_with_singleton_groups() {
+        let mut cfg = RunCfg::new(Proto::Skeen, 4, 6, 2, Net::Lan);
+        cfg.max_requests = Some(25);
+        cfg.record_full = true;
+        let mut w = build_world(&cfg);
+        w.run_to_quiescence(10_000_000);
+        invariants::assert_correct(&w.trace);
+        assert_eq!(w.trace.completions.len(), 150);
+    }
+
+    #[test]
+    fn wbcast_beats_fastcast_beats_ftskeen_on_wan_latency() {
+        let mut rows = Vec::new();
+        for proto in Proto::EVAL {
+            let mut cfg = RunCfg::new(proto, 3, 20, 2, Net::Wan);
+            cfg.max_requests = Some(10);
+            let r = run(&cfg);
+            rows.push((proto, r.mean_lat_ms));
+        }
+        let wb = rows.iter().find(|r| r.0 == Proto::WbCast).unwrap().1;
+        let fc = rows.iter().find(|r| r.0 == Proto::FastCast).unwrap().1;
+        let ft = rows.iter().find(|r| r.0 == Proto::FtSkeen).unwrap().1;
+        assert!(wb < fc, "WbCast {wb} !< FastCast {fc}");
+        assert!(fc < ft, "FastCast {fc} !< FT-Skeen {ft}");
+    }
+
+    #[test]
+    fn throughput_window_measurement() {
+        let mut cfg = RunCfg::new(Proto::WbCast, 2, 50, 1, Net::Lan);
+        cfg.duration = 2_000 * MS;
+        let r = run(&cfg);
+        assert!(r.throughput > 1000.0, "throughput {}", r.throughput);
+        assert!(r.mean_lat_ms < 10.0, "latency {}", r.mean_lat_ms);
+    }
+}

@@ -1,0 +1,342 @@
+//! Runtime checker for the paper's correctness properties (§II) and the
+//! observable consequences of Invariants 3–4 (Fig. 6), evaluated over a
+//! full run trace:
+//!
+//! * **Agreement / uniqueness** (Invariants 3b, 4): every process that
+//!   delivers a message observes the same global timestamp, and no two
+//!   messages share one.
+//! * **Integrity**: no process delivers a message twice.
+//! * **Validity**: only multicast messages are delivered, only at their
+//!   destination groups.
+//! * **Ordering**: per process, deliveries are strictly increasing in
+//!   global timestamp, and each process's delivered set is downward-closed
+//!   within the messages addressed to its group that were delivered
+//!   anywhere. (Together with agreement + uniqueness this is equivalent to
+//!   the existence of the total order ≺ of §II.)
+//! * **Termination** (quiescent, crash-aware): every multicast message is
+//!   delivered by a quorum of correct processes in every destination
+//!   group.
+
+use crate::sim::Trace;
+use crate::types::{MsgId, Pid, Ts};
+use std::collections::{HashMap, HashSet};
+
+/// A violation found in a trace.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.rule, self.detail)
+    }
+}
+
+/// Check safety properties over a (full-resolution) trace.
+/// Returns all violations found; empty = clean run.
+pub fn check_safety(trace: &Trace) -> Vec<Violation> {
+    assert!(trace.record_full, "safety checking needs record_full = true");
+    let mut v = Vec::new();
+    let topo = trace.topo().clone();
+
+    // --- agreement + uniqueness of global timestamps ---
+    let mut gts_of: HashMap<MsgId, Ts> = HashMap::new();
+    let mut msg_of: HashMap<Ts, MsgId> = HashMap::new();
+    for d in &trace.deliveries {
+        match gts_of.get(&d.m) {
+            None => {
+                gts_of.insert(d.m, d.gts);
+                if let Some(other) = msg_of.insert(d.gts, d.m) {
+                    if other != d.m {
+                        v.push(Violation {
+                            rule: "gts-unique",
+                            detail: format!("{:?} and {:?} both delivered with gts {:?}", other, d.m, d.gts),
+                        });
+                    }
+                }
+            }
+            Some(&g) if g != d.gts => v.push(Violation {
+                rule: "gts-agreement",
+                detail: format!("{:?} delivered with gts {:?} at {:?} but {:?} elsewhere", d.m, d.gts, d.pid, g),
+            }),
+            _ => {}
+        }
+    }
+
+    // --- integrity + validity ---
+    let mut seen: HashSet<(Pid, MsgId)> = HashSet::new();
+    for d in &trace.deliveries {
+        if !seen.insert((d.pid, d.m)) {
+            v.push(Violation { rule: "integrity", detail: format!("{:?} delivered {:?} twice", d.pid, d.m) });
+        }
+        match trace.multicasts.get(&d.m) {
+            None => v.push(Violation {
+                rule: "validity",
+                detail: format!("{:?} delivered never-multicast {:?}", d.pid, d.m),
+            }),
+            Some((_, dest)) => {
+                let Some(g) = topo.group_of(d.pid) else {
+                    v.push(Violation {
+                        rule: "validity",
+                        detail: format!("non-member {:?} delivered {:?}", d.pid, d.m),
+                    });
+                    continue;
+                };
+                if !dest.contains(g) {
+                    v.push(Violation {
+                        rule: "validity",
+                        detail: format!("{:?} in {:?} delivered {:?} not addressed to it", d.pid, g, d.m),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- ordering: strictly increasing gts per process ---
+    let mut per_pid: HashMap<Pid, Vec<(u64, MsgId, Ts)>> = HashMap::new();
+    for d in &trace.deliveries {
+        per_pid.entry(d.pid).or_default().push((d.time, d.m, d.gts));
+    }
+    for (pid, seq) in &per_pid {
+        for w in seq.windows(2) {
+            if w[1].2 <= w[0].2 {
+                v.push(Violation {
+                    rule: "ordering-monotone",
+                    detail: format!(
+                        "{:?} delivered {:?} (gts {:?}) after {:?} (gts {:?})",
+                        pid, w[1].1, w[1].2, w[0].1, w[0].2
+                    ),
+                });
+            }
+        }
+    }
+
+    // --- ordering: downward-closedness of each process's delivered set ---
+    // For pid p in group g: among messages addressed to g that were
+    // delivered anywhere (thus have a gts), p's delivered set must be a
+    // prefix under gts order.
+    let mut addressed: HashMap<u32, Vec<(Ts, MsgId)>> = HashMap::new(); // gid -> [(gts, m)]
+    for (&m, &(_t, dest)) in &trace.multicasts {
+        if let Some(&gts) = gts_of.get(&m) {
+            for g in dest.iter() {
+                addressed.entry(g.0).or_default().push((gts, m));
+            }
+        }
+    }
+    for v_ in addressed.values_mut() {
+        v_.sort_unstable();
+    }
+    for (pid, seq) in &per_pid {
+        let Some(g) = topo.group_of(*pid) else { continue };
+        let Some(all) = addressed.get(&g.0) else { continue };
+        let delivered: HashSet<MsgId> = seq.iter().map(|&(_, m, _)| m).collect();
+        let max_gts = seq.iter().map(|&(_, _, gts)| gts).max().unwrap_or(Ts::BOT);
+        for &(gts, m) in all.iter() {
+            if gts >= max_gts {
+                break;
+            }
+            if !delivered.contains(&m) {
+                v.push(Violation {
+                    rule: "ordering-gap",
+                    detail: format!(
+                        "{:?} skipped {:?} (gts {:?}) but delivered up to gts {:?}",
+                        pid, m, gts, max_gts
+                    ),
+                });
+            }
+        }
+    }
+
+    v
+}
+
+/// Check Termination over a quiescent trace: every multicast message must
+/// be delivered by a quorum of *correct* (non-crashed) processes in every
+/// destination group. Messages multicast by crashed clients are exempt
+/// unless delivered somewhere (§II Termination).
+pub fn check_termination(trace: &Trace) -> Vec<Violation> {
+    assert!(trace.record_full);
+    let mut v = Vec::new();
+    let topo = trace.topo().clone();
+    let crashed: HashSet<Pid> = trace.crashes.iter().map(|&(_, p)| p).collect();
+
+    let mut delivered_at: HashMap<MsgId, HashSet<Pid>> = HashMap::new();
+    for d in &trace.deliveries {
+        delivered_at.entry(d.m).or_default().insert(d.pid);
+    }
+
+    for (&m, &(_t, dest)) in &trace.multicasts {
+        let delivered_somewhere = delivered_at.contains_key(&m);
+        let sender_crashed = crashed.contains(&Pid(m.client()));
+        if sender_crashed && !delivered_somewhere {
+            continue;
+        }
+        for g in dest.iter() {
+            let correct_delivered = topo
+                .members(g)
+                .iter()
+                .filter(|p| !crashed.contains(p) && delivered_at.get(&m).is_some_and(|s| s.contains(p)))
+                .count();
+            if correct_delivered < topo.quorum() {
+                v.push(Violation {
+                    rule: "termination",
+                    detail: format!(
+                        "{:?} delivered by only {}/{} correct processes in {:?}",
+                        m,
+                        correct_delivered,
+                        topo.quorum(),
+                        g
+                    ),
+                });
+            }
+        }
+    }
+    v
+}
+
+/// Assert a clean trace; pretty-panic otherwise (test helper).
+pub fn assert_safe(trace: &Trace) {
+    let vs = check_safety(trace);
+    if !vs.is_empty() {
+        let head: Vec<String> = vs.iter().take(10).map(|v| v.to_string()).collect();
+        panic!("{} safety violations:\n{}", vs.len(), head.join("\n"));
+    }
+}
+
+/// Assert safety + termination (quiescent runs).
+pub fn assert_correct(trace: &Trace) {
+    assert_safe(trace);
+    let vs = check_termination(trace);
+    if !vs.is_empty() {
+        let head: Vec<String> = vs.iter().take(10).map(|v| v.to_string()).collect();
+        panic!("{} termination violations:\n{}", vs.len(), head.join("\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Gid, GidSet, Topology};
+
+    fn base_trace() -> Trace {
+        Trace::new(Topology::new(2, 0), true)
+    }
+
+    #[test]
+    fn clean_trace_passes() {
+        let mut tr = base_trace();
+        let m1 = MsgId::new(9, 1);
+        let m2 = MsgId::new(9, 2);
+        let both = GidSet::from_iter([Gid(0), Gid(1)]);
+        tr.on_multicast(0, m1, both);
+        tr.on_multicast(0, m2, both);
+        for pid in [Pid(0), Pid(1)] {
+            tr.on_deliver(10, pid, m1, Ts::new(1, Gid(0)));
+            tr.on_deliver(20, pid, m2, Ts::new(2, Gid(0)));
+        }
+        assert!(check_safety(&tr).is_empty());
+        assert!(check_termination(&tr).is_empty());
+    }
+
+    #[test]
+    fn detects_gts_disagreement() {
+        let mut tr = base_trace();
+        let m = MsgId::new(9, 1);
+        tr.on_multicast(0, m, GidSet::from_iter([Gid(0), Gid(1)]));
+        tr.on_deliver(10, Pid(0), m, Ts::new(1, Gid(0)));
+        tr.on_deliver(10, Pid(1), m, Ts::new(2, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "gts-agreement"), "{vs:?}");
+    }
+
+    #[test]
+    fn detects_duplicate_gts() {
+        let mut tr = base_trace();
+        let m1 = MsgId::new(9, 1);
+        let m2 = MsgId::new(9, 2);
+        tr.on_multicast(0, m1, GidSet::single(Gid(0)));
+        tr.on_multicast(0, m2, GidSet::single(Gid(0)));
+        tr.on_deliver(10, Pid(0), m1, Ts::new(1, Gid(0)));
+        tr.on_deliver(20, Pid(0), m2, Ts::new(1, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "gts-unique"), "{vs:?}");
+    }
+
+    #[test]
+    fn detects_double_delivery() {
+        let mut tr = base_trace();
+        let m = MsgId::new(9, 1);
+        tr.on_multicast(0, m, GidSet::single(Gid(0)));
+        tr.on_deliver(10, Pid(0), m, Ts::new(1, Gid(0)));
+        tr.on_deliver(20, Pid(0), m, Ts::new(1, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "integrity"), "{vs:?}");
+    }
+
+    #[test]
+    fn detects_unknown_or_misaddressed_delivery() {
+        let mut tr = base_trace();
+        let m = MsgId::new(9, 1);
+        tr.on_deliver(10, Pid(0), m, Ts::new(1, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "validity"), "{vs:?}");
+
+        let mut tr = base_trace();
+        tr.on_multicast(0, m, GidSet::single(Gid(1)));
+        tr.on_deliver(10, Pid(0), m, Ts::new(1, Gid(1)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "validity"), "{vs:?}");
+    }
+
+    #[test]
+    fn detects_order_inversion_and_gap() {
+        let mut tr = base_trace();
+        let m1 = MsgId::new(9, 1);
+        let m2 = MsgId::new(9, 2);
+        let g0 = GidSet::single(Gid(0));
+        tr.on_multicast(0, m1, g0);
+        tr.on_multicast(0, m2, g0);
+        // p0 delivers both out of order
+        tr.on_deliver(10, Pid(0), m2, Ts::new(2, Gid(0)));
+        tr.on_deliver(20, Pid(0), m1, Ts::new(1, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "ordering-monotone"), "{vs:?}");
+
+        // p0 delivers only m2 while m1 (lower gts) was delivered at p1...
+        let mut tr = Trace::new(Topology::new(1, 1), true);
+        tr.on_multicast(0, m1, g0);
+        tr.on_multicast(0, m2, g0);
+        tr.on_deliver(10, Pid(1), m1, Ts::new(1, Gid(0)));
+        tr.on_deliver(10, Pid(1), m2, Ts::new(2, Gid(0)));
+        tr.on_deliver(10, Pid(0), m2, Ts::new(2, Gid(0)));
+        let vs = check_safety(&tr);
+        assert!(vs.iter().any(|v| v.rule == "ordering-gap"), "{vs:?}");
+    }
+
+    #[test]
+    fn termination_requires_quorum_in_each_group() {
+        let topo = Topology::new(2, 1); // quorum = 2
+        let mut tr = Trace::new(topo, true);
+        let m = MsgId::new(9, 1);
+        tr.on_multicast(0, m, GidSet::from_iter([Gid(0), Gid(1)]));
+        tr.on_deliver(10, Pid(0), m, Ts::new(1, Gid(0)));
+        tr.on_deliver(10, Pid(1), m, Ts::new(1, Gid(0)));
+        // group 1: only one member delivered
+        tr.on_deliver(10, Pid(3), m, Ts::new(1, Gid(0)));
+        let vs = check_termination(&tr);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, "termination");
+    }
+
+    #[test]
+    fn crashed_sender_without_delivery_is_exempt() {
+        let topo = Topology::new(1, 1);
+        let mut tr = Trace::new(topo, true);
+        let m = MsgId::new(9, 1);
+        tr.on_multicast(0, m, GidSet::single(Gid(0)));
+        tr.on_crash(5, Pid(9)); // client 9 crashed
+        assert!(check_termination(&tr).is_empty());
+    }
+}

@@ -1,0 +1,49 @@
+//! # wbam — White-Box Atomic Multicast
+//!
+//! A from-scratch reproduction of *"White-Box Atomic Multicast (Extended
+//! Version)"* (Gotsman, Lefort, Chockler; 2019): a genuine atomic multicast
+//! protocol with collision-free latency 3δ and failure-free latency 5δ,
+//! obtained by weaving Skeen's timestamp protocol across groups together
+//! with a Paxos-style quorum replication within each group.
+//!
+//! The crate contains:
+//!
+//! * [`protocols`] — event-driven state machines for the paper's protocol
+//!   (`wbcast`) and all baselines it is evaluated against: unreplicated
+//!   Skeen (`skeen`), fault-tolerant Skeen over black-box Paxos
+//!   (`ftskeen`), and FastCast (`fastcast`).
+//! * [`sim`] — a deterministic discrete-event simulator (virtual time,
+//!   configurable delay models, crash/partition injection) used to
+//!   regenerate every figure of the paper's evaluation and to validate the
+//!   latency theorems of §V.
+//! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and the
+//!   group runtime that drive the same state machines on actual threads.
+//! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
+//!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
+//!   resolution + delivery-frontier check) and executes it from the leader
+//!   hot path; a bit-exact native fallback lives alongside it.
+//! * [`paxos`], [`lss`] — substrates: multi-Paxos (for the black-box
+//!   baselines) and an Ω-style leader selection service.
+//! * [`client`], [`stats`], [`harness`] — closed-loop workload generator,
+//!   metrics, and the experiment drivers behind `cargo bench`.
+//! * [`invariants`] — a runtime checker for the paper's correctness
+//!   properties (Validity, Integrity, Ordering) and key Invariants 1–5,
+//!   wired into the randomized tests.
+
+pub mod client;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod invariants;
+pub mod lss;
+pub mod net;
+pub mod paxos;
+pub mod protocols;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod types;
+pub mod util;
+
+pub use types::{Ballot, Gid, GidSet, MsgId, Pid, Topology, Ts};

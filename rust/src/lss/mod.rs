@@ -1,0 +1,113 @@
+//! Leader-selection service (LSS, §IV).
+//!
+//! The paper assumes each group is equipped with an LSS that eventually
+//! nominates the same correct member as leader to the whole group
+//! (Invariant 6) — implementable in a partially-synchronous system from
+//! heartbeat timeouts [Aguilera+ DISC'01, Larrea+ SRDS'00].
+//!
+//! This module provides the Ω-style detector used by the runtimes: the
+//! leader emits heartbeats; followers suspect it after a *rank-staggered*
+//! timeout, which makes the lowest-ranked correct member the first to
+//! nominate itself and prevents duelling candidates. The same logic is
+//! embedded in [`crate::protocols::wbcast`]'s `LssTick` handling; this
+//! standalone version serves the coordinator runtime and the tests.
+
+use crate::types::Pid;
+
+/// Failure-detector state for one group member.
+#[derive(Clone, Debug)]
+pub struct FailureDetector {
+    /// position of this process within its group (0 = initial leader)
+    rank: u64,
+    /// base heartbeat interval (ns)
+    hb_interval: u64,
+    /// multiplier: suspicion after `hb_interval * mult * (1 + rank)`
+    mult: u64,
+    last_heard: u64,
+    suspects: bool,
+}
+
+impl FailureDetector {
+    pub fn new(rank: u64, hb_interval: u64, mult: u64) -> Self {
+        FailureDetector { rank, hb_interval, mult, last_heard: 0, suspects: false }
+    }
+
+    /// Record life-sign from the current leader (heartbeat or any
+    /// protocol message it sent).
+    pub fn heard(&mut self, now: u64) {
+        self.last_heard = now;
+        self.suspects = false;
+    }
+
+    /// The suspicion timeout for this member.
+    pub fn timeout(&self) -> u64 {
+        self.hb_interval * self.mult * (1 + self.rank)
+    }
+
+    /// Check the leader's health at `now`; returns true on the *edge*
+    /// where this member starts suspecting (nomination trigger).
+    pub fn check(&mut self, now: u64) -> bool {
+        if self.suspects {
+            return false;
+        }
+        if now.saturating_sub(self.last_heard) > self.timeout() {
+            self.suspects = true;
+            return true;
+        }
+        false
+    }
+
+    pub fn suspects(&self) -> bool {
+        self.suspects
+    }
+
+    /// Deterministic next-candidate rule: the member ranked immediately
+    /// after the failed leader in the group ring.
+    pub fn next_candidate(members: &[Pid], failed: Pid) -> Pid {
+        let i = members.iter().position(|&p| p == failed).unwrap_or(0);
+        members[(i + 1) % members.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suspects_only_after_timeout() {
+        let mut fd = FailureDetector::new(0, 100, 4);
+        fd.heard(1000);
+        assert!(!fd.check(1000 + 400));
+        assert!(fd.check(1000 + 401));
+        // edge-triggered: only fires once
+        assert!(!fd.check(1000 + 500));
+        assert!(fd.suspects());
+    }
+
+    #[test]
+    fn heartbeat_resets_suspicion() {
+        let mut fd = FailureDetector::new(0, 100, 4);
+        fd.heard(0);
+        assert!(fd.check(401));
+        fd.heard(500);
+        assert!(!fd.suspects());
+        assert!(!fd.check(700));
+        assert!(fd.check(902));
+    }
+
+    #[test]
+    fn ranks_stagger_timeouts() {
+        let fd0 = FailureDetector::new(0, 100, 4);
+        let fd1 = FailureDetector::new(1, 100, 4);
+        let fd2 = FailureDetector::new(2, 100, 4);
+        assert!(fd0.timeout() < fd1.timeout());
+        assert!(fd1.timeout() < fd2.timeout());
+    }
+
+    #[test]
+    fn ring_candidate_selection() {
+        let members = [Pid(3), Pid(4), Pid(5)];
+        assert_eq!(FailureDetector::next_candidate(&members, Pid(3)), Pid(4));
+        assert_eq!(FailureDetector::next_candidate(&members, Pid(5)), Pid(3));
+    }
+}

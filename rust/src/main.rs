@@ -1,0 +1,194 @@
+//! `wbam` — launcher CLI for the white-box atomic multicast framework.
+//!
+//! ```text
+//! wbam sim   --proto wbcast|fastcast|ftskeen|skeen --groups 10 --clients 500
+//!            --dest 3 --net lan|wan|theory [--delta-us 1000] [--duration-ms 5000]
+//!            [--seed 42]                       # simulated deployment
+//! wbam table                                   # §V latency table (T-lat)
+//! wbam serve --pid 0 --config cluster.toml     # TCP group member
+//! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100
+//! wbam engine-check                            # load + self-test XLA artifacts
+//! ```
+//!
+//! The cluster config file lists the deployment:
+//!
+//! ```toml
+//! [cluster]
+//! groups = 2
+//! f = 1
+//! [addrs]
+//! p0 = "127.0.0.1:7000"   # one per process (members then clients)
+//! ...
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use wbam::client::{Client, ClientCfg};
+use wbam::config::{Args, Config};
+use wbam::coordinator::NodeRuntime;
+use wbam::harness::{run, Net, Proto, RunCfg};
+use wbam::net::TcpTransport;
+use wbam::protocols::wbcast::{WbConfig, WbNode};
+use wbam::protocols::Node;
+use wbam::runtime::{spawn_engine, XlaBackend};
+use wbam::sim::MS;
+use wbam::types::{Pid, Topology};
+
+fn parse_proto(s: &str) -> Result<Proto> {
+    Ok(match s {
+        "skeen" => Proto::Skeen,
+        "ftskeen" | "ft-skeen" => Proto::FtSkeen,
+        "fastcast" => Proto::FastCast,
+        "wbcast" | "wb" => Proto::WbCast,
+        _ => bail!("unknown protocol {s:?} (skeen|ftskeen|fastcast|wbcast)"),
+    })
+}
+
+fn parse_net(a: &Args) -> Result<Net> {
+    Ok(match a.str_opt("net", "lan").as_str() {
+        "lan" => Net::Lan,
+        "wan" => Net::Wan,
+        "theory" => Net::Theory { delta: a.u64_opt("delta-us", 1000) * 1000 },
+        s => bail!("unknown net {s:?} (lan|wan|theory)"),
+    })
+}
+
+fn cmd_sim(a: &Args) -> Result<()> {
+    let proto = parse_proto(&a.str_opt("proto", "wbcast"))?;
+    let mut cfg = RunCfg::new(
+        proto,
+        a.usize_opt("groups", 10),
+        a.usize_opt("clients", 100),
+        a.usize_opt("dest", 2),
+        parse_net(a)?,
+    );
+    cfg.seed = a.u64_opt("seed", 42);
+    cfg.duration = a.u64_opt("duration-ms", 5_000) * MS;
+    let r = run(&cfg);
+    println!("{}", r.row());
+    Ok(())
+}
+
+fn cmd_table(_a: &Args) -> Result<()> {
+    println!("§V latency table (δ = 1 ms, constant-delay network, zero CPU cost)");
+    println!("{:<10} {:>14} {:>14}  (paper: CFL / FFL)", "protocol", "collision-free", "measured-solo");
+    for (proto, cfl, ffl) in
+        [(Proto::Skeen, 2, 4), (Proto::WbCast, 3, 5), (Proto::FastCast, 4, 8), (Proto::FtSkeen, 6, 12)]
+    {
+        let mut cfg = RunCfg::new(proto, 2, 1, 2, Net::Theory { delta: MS });
+        cfg.max_requests = Some(1);
+        let r = run(&cfg);
+        println!("{:<10} {:>13}δ {:>13.1}δ  (paper: {}δ / {}δ)", proto.name(), cfl, r.mean_lat_ms, cfl, ffl);
+    }
+    Ok(())
+}
+
+fn load_cluster(a: &Args) -> Result<(Topology, HashMap<Pid, std::net::SocketAddr>)> {
+    let path = a.opt("config").context("--config required")?;
+    let cfg = Config::load(path)?;
+    let groups = cfg.usize("cluster.groups", 2)?;
+    let f = cfg.usize("cluster.f", 1)?;
+    let topo = Topology::new(groups, f);
+    let mut addrs = HashMap::new();
+    let mut i = 0u32;
+    while let Some(addr) = cfg.get(&format!("addrs.p{i}")) {
+        addrs.insert(Pid(i), addr.parse().with_context(|| format!("addrs.p{i}"))?);
+        i += 1;
+    }
+    if (addrs.len() as u32) < topo.num_members() as u32 {
+        bail!("config lists {} addresses; {} group members required", addrs.len(), topo.num_members());
+    }
+    Ok((topo, addrs))
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let (topo, addrs) = load_cluster(a)?;
+    let pid = Pid(a.u64_opt("pid", 0) as u32);
+    if topo.group_of(pid).is_none() {
+        bail!("{pid:?} is not a group member");
+    }
+    let mut wb = WbConfig::with_failures(5 * MS);
+    wb.batch_threshold = a.usize_opt("batch", 1);
+    wb.batch_flush_after = a.u64_opt("flush-us", 200) * 1000;
+    let node: Box<dyn Node> = if a.flag("xla") {
+        let handle = spawn_engine(wbam::runtime::engine::artifacts_dir())?;
+        Box::new(WbNode::with_backend(pid, topo.clone(), wb, Box::new(XlaBackend::new(handle))))
+    } else {
+        Box::new(WbNode::new(pid, topo.clone(), wb))
+    };
+    let transport = TcpTransport::bind(pid, addrs)?;
+    println!("serving {pid:?} (group {:?})", topo.group_of(pid).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut rt = NodeRuntime::new(node, transport);
+    rt.on_deliver(Box::new(|pid, m, gts, _| {
+        log::info!("{pid:?} deliver {m:?} gts {gts:?}");
+    }));
+    rt.run(stop);
+    Ok(())
+}
+
+fn cmd_client(a: &Args) -> Result<()> {
+    let (topo, addrs) = load_cluster(a)?;
+    let pid = Pid(a.u64_opt("pid", topo.first_client_pid().0 as u64) as u32);
+    let requests = a.u64_opt("requests", 100) as u32;
+    let ccfg = ClientCfg {
+        dest_groups: a.usize_opt("dest", 1),
+        max_requests: Some(requests),
+        resend_after: 2_000 * MS,
+        ..Default::default()
+    };
+    let node = Box::new(Client::new(pid, topo, ccfg, a.u64_opt("seed", 7)));
+    let transport = TcpTransport::bind(pid, addrs)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let rt = NodeRuntime::new(node, transport);
+    let handle = std::thread::spawn(move || rt.run(stop2));
+    // the closed loop finishes when `requests` complete; give it a bounded
+    // wall-clock window, then stop and report what we got
+    let timeout = std::time::Duration::from_secs(a.u64_opt("timeout-s", 30));
+    std::thread::sleep(timeout);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let node = handle.join().expect("client thread");
+    let any: &dyn Node = &*node;
+    if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+        println!("completed {} requests", c.completed.len());
+        if !c.completed.is_empty() {
+            let mean = c.completed.iter().map(|s| (s.done_at - s.sent_at) as f64).sum::<f64>()
+                / c.completed.len() as f64;
+            println!("mean latency: {:.3} ms", mean / 1e6);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_engine_check(_a: &Args) -> Result<()> {
+    use wbam::runtime::{BatchReq, CommitBatchEngine};
+    use wbam::types::{Gid, MsgId, Ts};
+    let dir = wbam::runtime::engine::artifacts_dir();
+    let eng = CommitBatchEngine::load(&dir)?;
+    println!("platform: {}", eng.platform());
+    let reqs =
+        vec![BatchReq { m: MsgId::new(1, 1), lts: vec![Ts::new(3, Gid(0)), Ts::new(5, Gid(1))] }];
+    let out = eng.commit_batch(&reqs, &[Ts::new(9, Gid(2))])?;
+    anyhow::ensure!(out[0].gts == Ts::new(5, Gid(1)) && out[0].deliverable, "self-test failed");
+    println!("commit_batch self-test OK ({} variants loaded)", 3);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("sim") => cmd_sim(&args),
+        Some("table") => cmd_table(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("engine-check") => cmd_engine_check(&args),
+        _ => {
+            eprintln!("usage: wbam <sim|table|serve|client|engine-check> [--options]");
+            eprintln!("see `rust/src/main.rs` docs for details");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Real transports for the coordinator runtime (the request path never
+//! touches Python): an in-process channel mesh for single-machine
+//! deployments and tests, and a TCP transport (std::net; the offline
+//! image has no tokio — one reader thread per peer connection).
+//!
+//! Both preserve the protocol's channel assumptions: reliable FIFO
+//! per-link delivery.
+
+use crate::codec;
+use crate::types::{Pid, Wire};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Incoming event at a node.
+#[derive(Debug)]
+pub enum Incoming {
+    Wire(Pid, Wire),
+    /// transport shut down
+    Closed,
+}
+
+/// Node-side handle: send to any peer, receive own traffic.
+pub trait Transport: Send {
+    fn send(&mut self, to: Pid, wire: &Wire);
+    /// Blocking receive with timeout; `None` on timeout.
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming>;
+}
+
+// ---------------- in-process mesh ----------------
+
+/// Registry mapping pids to channel senders (shared by all endpoints).
+#[derive(Clone, Default)]
+pub struct InProcMesh {
+    inner: Arc<Mutex<HashMap<Pid, Sender<(Pid, Wire)>>>>,
+}
+
+impl InProcMesh {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create the endpoint for `pid`.
+    pub fn endpoint(&self, pid: Pid) -> InProcTransport {
+        let (tx, rx) = mpsc::channel();
+        self.inner.lock().unwrap().insert(pid, tx);
+        InProcTransport { pid, mesh: self.clone(), rx }
+    }
+
+    /// Disconnect `pid` (crash simulation: its queue drops).
+    pub fn disconnect(&self, pid: Pid) {
+        self.inner.lock().unwrap().remove(&pid);
+    }
+}
+
+pub struct InProcTransport {
+    pid: Pid,
+    mesh: InProcMesh,
+    rx: Receiver<(Pid, Wire)>,
+}
+
+impl Transport for InProcTransport {
+    fn send(&mut self, to: Pid, wire: &Wire) {
+        let guard = self.mesh.inner.lock().unwrap();
+        if let Some(tx) = guard.get(&to) {
+            let _ = tx.send((self.pid, wire.clone())); // dead peer: drop
+        }
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
+        match self.rx.recv_timeout(d) {
+            Ok((from, wire)) => Some(Incoming::Wire(from, wire)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
+        }
+    }
+}
+
+// ---------------- TCP ----------------
+
+/// TCP transport: every node listens on `addrs[pid]`; outgoing
+/// connections are cached; each accepted connection gets a reader thread
+/// that forwards framed messages (u32-LE length ++ codec bytes) into the
+/// node's queue. The first frame on a connection is a hello carrying the
+/// sender pid.
+pub struct TcpTransport {
+    pid: Pid,
+    addrs: Arc<HashMap<Pid, SocketAddr>>,
+    conns: HashMap<Pid, BufWriter<TcpStream>>,
+    rx: Receiver<(Pid, Wire)>,
+    _listener_thread: std::thread::JoinHandle<()>,
+}
+
+fn write_frame(w: &mut impl Write, bytes: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 64 << 20 {
+        return Err(std::io::Error::other("frame too large"));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+impl TcpTransport {
+    pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addrs[&pid])?;
+        let (tx, rx) = mpsc::channel::<(Pid, Wire)>();
+        let accept_tx = tx.clone();
+        let listener_thread = std::thread::Builder::new()
+            .name(format!("wbam-listen-{}", pid.0))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { break };
+                    let tx = accept_tx.clone();
+                    std::thread::spawn(move || {
+                        let mut r = BufReader::new(stream);
+                        // hello frame: 4-byte sender pid
+                        let Ok(hello) = read_frame(&mut r) else { return };
+                        if hello.len() != 4 {
+                            return;
+                        }
+                        let from = Pid(u32::from_le_bytes(hello.try_into().unwrap()));
+                        loop {
+                            match read_frame(&mut r) {
+                                Ok(bytes) => match codec::decode(&bytes) {
+                                    Ok(wire) => {
+                                        if tx.send((from, wire)).is_err() {
+                                            return;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        log::warn!("bad frame from {from:?}: {e}");
+                                        return;
+                                    }
+                                },
+                                Err(_) => return, // peer closed
+                            }
+                        }
+                    });
+                }
+            })?;
+        Ok(TcpTransport { pid, addrs: Arc::new(addrs), conns: HashMap::new(), rx, _listener_thread: listener_thread })
+    }
+
+    fn conn(&mut self, to: Pid) -> Option<&mut BufWriter<TcpStream>> {
+        if !self.conns.contains_key(&to) {
+            let addr = *self.addrs.get(&to)?;
+            let stream = TcpStream::connect(addr).ok()?;
+            stream.set_nodelay(true).ok();
+            let mut w = BufWriter::new(stream);
+            write_frame(&mut w, &self.pid.0.to_le_bytes()).ok()?;
+            self.conns.insert(to, w);
+        }
+        self.conns.get_mut(&to)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, to: Pid, wire: &Wire) {
+        let bytes = codec::encode(wire);
+        let ok = match self.conn(to) {
+            Some(w) => write_frame(w, &bytes).is_ok(),
+            None => false,
+        };
+        if !ok {
+            self.conns.remove(&to); // reconnect next time
+        }
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
+        match self.rx.recv_timeout(d) {
+            Ok((from, wire)) => Some(Incoming::Wire(from, wire)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Ballot, GidSet, MsgId, MsgMeta};
+
+    fn mcast(id: u64) -> Wire {
+        Wire::Multicast { meta: MsgMeta::new(MsgId(id), GidSet::single(crate::types::Gid(0)), vec![1, 2, 3]) }
+    }
+
+    #[test]
+    fn inproc_roundtrip_and_fifo() {
+        let mesh = InProcMesh::new();
+        let mut a = mesh.endpoint(Pid(1));
+        let mut b = mesh.endpoint(Pid(2));
+        for i in 0..10 {
+            a.send(Pid(2), &mcast(i));
+        }
+        for i in 0..10 {
+            match b.recv_timeout(Duration::from_secs(1)) {
+                Some(Incoming::Wire(from, Wire::Multicast { meta })) => {
+                    assert_eq!(from, Pid(1));
+                    assert_eq!(meta.id, MsgId(i));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(b.recv_timeout(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn inproc_send_to_unknown_is_dropped() {
+        let mesh = InProcMesh::new();
+        let mut a = mesh.endpoint(Pid(1));
+        a.send(Pid(99), &mcast(1)); // no panic
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_fifo() {
+        let base = 42000 + (std::process::id() % 1000) as u16;
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", base).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", base + 1).parse().unwrap());
+        let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
+        for i in 0..50 {
+            a.send(Pid(2), &mcast(i));
+        }
+        for i in 0..50 {
+            match b.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, Wire::Multicast { meta })) => {
+                    assert_eq!(from, Pid(1));
+                    assert_eq!(meta.id, MsgId(i));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // bidirectional: b replies
+        b.send(Pid(1), &Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Wire::Heartbeat { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Multi-Paxos substrate used as the *black-box consensus* by the
+//! FT-Skeen and FastCast baselines (§IV "a straightforward way ... is to
+//! use state-machine replication ... based on a consensus protocol such
+//! as Paxos").
+//!
+//! Scope: the steady-state phase-2 path with a stable, deployment-time
+//! leader (ballot `(1, leader(g))`) — exactly what the paper's baseline
+//! evaluation exercises (the recovery experiment, Fig. 11, concerns only
+//! the white-box protocol; see DESIGN.md §Substitutions). Commands are
+//! decided by a quorum of `P2b`s at the leader and disseminated to
+//! followers with `Learn`; every replica applies the log in slot order.
+
+use crate::protocols::Action;
+use crate::types::wire::{PaxosMsg, RsmCmd};
+use crate::types::{Ballot, Gid, Pid, Topology, Wire};
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// Per-group multi-Paxos instance embedded in a baseline protocol node.
+pub struct Paxos {
+    pid: Pid,
+    gid: Gid,
+    members: Vec<Pid>,
+    quorum: usize,
+    bal: Ballot,
+    is_leader: bool,
+    /// acceptor state: accepted (ballot, cmd) per slot
+    accepted: BTreeMap<u64, (Ballot, RsmCmd)>,
+    /// leader: next slot to assign
+    next_slot: u64,
+    /// leader: P2b tallies
+    acks: HashMap<u64, HashSet<Pid>>,
+    /// decided commands
+    chosen: BTreeMap<u64, RsmCmd>,
+    /// next slot to hand to the application (apply cursor)
+    apply_at: u64,
+    /// count of decided-but-unapplied gaps is implicit in `chosen`
+    pub stats_proposed: u64,
+}
+
+impl Paxos {
+    pub fn new(pid: Pid, topo: &Topology, gid: Gid) -> Self {
+        let members = topo.members(gid).to_vec();
+        let leader = topo.initial_leader(gid);
+        Paxos {
+            pid,
+            gid,
+            quorum: topo.quorum(),
+            members,
+            bal: Ballot::new(1, leader),
+            is_leader: pid == leader,
+            accepted: BTreeMap::new(),
+            next_slot: 0,
+            acks: HashMap::new(),
+            chosen: BTreeMap::new(),
+            apply_at: 0,
+            stats_proposed: 0,
+        }
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.is_leader
+    }
+    pub fn ballot(&self) -> Ballot {
+        self.bal
+    }
+
+    /// Leader: replicate `cmd` in the next log slot. The leader accepts
+    /// its own proposal locally (no self-message).
+    pub fn propose(&mut self, cmd: RsmCmd, acts: &mut Vec<Action>) {
+        assert!(self.is_leader, "only the leader proposes");
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.stats_proposed += 1;
+        self.accepted.insert(slot, (self.bal, cmd.clone()));
+        self.acks.entry(slot).or_default().insert(self.pid);
+        let msg = Wire::Paxos { g: self.gid, msg: PaxosMsg::P2a { bal: self.bal, slot, cmd } };
+        for &p in &self.members {
+            if p != self.pid {
+                acts.push(Action::Send(p, msg.clone()));
+            }
+        }
+    }
+
+    /// Handle a Paxos message; newly applicable commands (in slot order)
+    /// are appended to `out`.
+    pub fn on_msg(&mut self, from: Pid, msg: PaxosMsg, acts: &mut Vec<Action>, out: &mut Vec<RsmCmd>) {
+        match msg {
+            PaxosMsg::P2a { bal, slot, cmd } => {
+                if bal < self.bal {
+                    return; // stale proposer
+                }
+                self.bal = bal;
+                self.accepted.insert(slot, (bal, cmd));
+                acts.push(Action::Send(from, Wire::Paxos { g: self.gid, msg: PaxosMsg::P2b { bal, slot } }));
+            }
+            PaxosMsg::P2b { bal, slot } => {
+                if !self.is_leader || bal != self.bal || self.chosen.contains_key(&slot) {
+                    return;
+                }
+                let tally = self.acks.entry(slot).or_default();
+                tally.insert(from);
+                if tally.len() >= self.quorum {
+                    self.acks.remove(&slot);
+                    let cmd = self.accepted.get(&slot).expect("leader accepted own P2a").1.clone();
+                    self.chosen.insert(slot, cmd.clone());
+                    let learn = Wire::Paxos { g: self.gid, msg: PaxosMsg::Learn { slot, cmd } };
+                    for &p in &self.members {
+                        if p != self.pid {
+                            acts.push(Action::Send(p, learn.clone()));
+                        }
+                    }
+                    self.drain(out);
+                }
+            }
+            PaxosMsg::Learn { slot, cmd } => {
+                if self.is_leader {
+                    return; // leader already chose
+                }
+                self.chosen.insert(slot, cmd);
+                self.drain(out);
+            }
+            // phase-1 messages are out of scope for the baselines (stable
+            // pre-agreed leader); see the module docs
+            PaxosMsg::P1a { .. } | PaxosMsg::P1b { .. } => {}
+        }
+    }
+
+    /// Pop decided commands in contiguous slot order.
+    fn drain(&mut self, out: &mut Vec<RsmCmd>) {
+        while let Some(cmd) = self.chosen.get(&self.apply_at) {
+            out.push(cmd.clone());
+            self.apply_at += 1;
+        }
+    }
+
+    /// Decided-but-not-yet-applicable commands (waiting for a log gap).
+    pub fn backlog(&self) -> usize {
+        self.chosen.len() - self.chosen.keys().take_while(|&&s| s < self.apply_at).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{GidSet, MsgId, MsgMeta, Ts};
+
+    fn cmd(n: u32) -> RsmCmd {
+        RsmCmd::Commit { m: MsgId::new(1, n), gts: Ts::new(n as u64, Gid(0)) }
+    }
+
+    fn pump(nodes: &mut [Paxos], acts: Vec<Action>, out: &mut Vec<Vec<RsmCmd>>) {
+        // tiny synchronous network: deliver sends until quiescent
+        let mut queue: Vec<(Pid, Pid, Wire)> = acts
+            .into_iter()
+            .filter_map(|a| if let Action::Send(to, w) = a { Some((Pid(99), to, w)) } else { None })
+            .collect();
+        // fix sender for the initial batch: the leader is node 0
+        for q in &mut queue {
+            q.0 = Pid(0);
+        }
+        while let Some((from, to, w)) = queue.pop() {
+            let Wire::Paxos { msg, .. } = w else { continue };
+            let idx = to.0 as usize;
+            let mut acts = Vec::new();
+            let mut decided = Vec::new();
+            nodes[idx].on_msg(from, msg, &mut acts, &mut decided);
+            out[idx].extend(decided);
+            for a in acts {
+                if let Action::Send(to2, w2) = a {
+                    queue.push((to, to2, w2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn commands_decided_in_slot_order_at_all_replicas() {
+        let topo = Topology::new(1, 1);
+        let mut nodes: Vec<Paxos> = (0..3).map(|i| Paxos::new(Pid(i), &topo, Gid(0))).collect();
+        let mut out: Vec<Vec<RsmCmd>> = vec![vec![], vec![], vec![]];
+        for n in 0..5 {
+            let mut acts = Vec::new();
+            nodes[0].propose(cmd(n), &mut acts);
+            pump(&mut nodes, acts, &mut out);
+        }
+        for o in &out {
+            assert_eq!(o.len(), 5);
+            for (i, c) in o.iter().enumerate() {
+                assert_eq!(*c, cmd(i as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn stale_ballot_p2a_rejected() {
+        let topo = Topology::new(1, 1);
+        let mut n = Paxos::new(Pid(1), &topo, Gid(0));
+        let mut acts = Vec::new();
+        let mut out = Vec::new();
+        let stale = Ballot::new(0, Pid(0));
+        n.on_msg(
+            Pid(0),
+            PaxosMsg::P2a {
+                bal: stale,
+                slot: 0,
+                cmd: RsmCmd::AssignLts { meta: MsgMeta::new(MsgId::new(1, 1), GidSet::single(Gid(0)), vec![]), lts: Ts::BOT },
+            },
+            &mut acts,
+            &mut out,
+        );
+        assert!(acts.is_empty(), "must not ack a stale ballot");
+    }
+
+    #[test]
+    fn learn_applies_with_gaps_buffered() {
+        let topo = Topology::new(1, 1);
+        let mut n = Paxos::new(Pid(1), &topo, Gid(0));
+        let mut acts = Vec::new();
+        let mut out = Vec::new();
+        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 1, cmd: cmd(1) }, &mut acts, &mut out);
+        assert!(out.is_empty(), "slot 0 missing: nothing applicable");
+        assert_eq!(n.backlog(), 1);
+        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 0, cmd: cmd(0) }, &mut acts, &mut out);
+        assert_eq!(out, vec![cmd(0), cmd(1)]);
+    }
+
+    #[test]
+    fn quorum_required_before_choose() {
+        let topo = Topology::new(1, 2); // 5 members, quorum 3
+        let mut leader = Paxos::new(Pid(0), &topo, Gid(0));
+        let mut acts = Vec::new();
+        leader.propose(cmd(0), &mut acts);
+        // leader's own acceptance comes through its self-addressed P2a
+        let mut out = Vec::new();
+        leader.on_msg(Pid(0), PaxosMsg::P2a { bal: leader.ballot(), slot: 0, cmd: cmd(0) }, &mut acts, &mut out);
+        let b = leader.ballot();
+        leader.on_msg(Pid(0), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
+        leader.on_msg(Pid(1), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
+        assert!(out.is_empty(), "2 < quorum of 3");
+        leader.on_msg(Pid(2), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
+        assert_eq!(out, vec![cmd(0)]);
+    }
+}

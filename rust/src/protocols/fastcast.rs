@@ -1,0 +1,420 @@
+//! FastCast (Coelho, Schiper, Pedone; DSN'17) — the state-of-the-art
+//! baseline the paper compares against (§VI).
+//!
+//! FastCast optimises FT-Skeen with *speculative execution* while still
+//! using consensus as a black box: upon MULTICAST the group leader issues
+//! a local timestamp from its clock and starts consensus#1 to persist it,
+//! but *immediately* sends the timestamp to the other destination leaders
+//! without waiting. Leaders act speculatively on received timestamps —
+//! compute the global timestamp as the maximum and start consensus#2
+//! persisting it — and exchange CONFIRM messages once consensus#1
+//! decides. By the time the confirmations arrive, consensus#2 has
+//! typically also decided, so the message commits at once.
+//!
+//! Latency: commit = max(consensus#2, CONFIRM exchange) completes 4δ
+//! after multicast; the clock advance persists with consensus#2, so the
+//! clock-update latency is also 4δ → collision-free 4δ, failure-free 8δ.
+//!
+//! Scope: steady-state path with the deployment-time leader (like
+//! [`crate::protocols::ftskeen`]); the paper's recovery experiment
+//! exercises only the white-box protocol.
+
+use crate::paxos::Paxos;
+use crate::protocols::{Action, Node, TimerKind};
+use crate::types::wire::RsmCmd;
+use crate::types::{Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+struct Entry {
+    meta: MsgMeta,
+    phase: Phase,
+    lts: Ts,
+    gts: Ts,
+    delivered: bool,
+    /// consensus#2 applied (gts persisted)
+    commit_applied: bool,
+    /// destination groups whose consensus#1 is confirmed
+    confirms: GidSet,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FcStats {
+    pub committed: u64,
+    pub delivered: u64,
+    pub consensus_instances: u64,
+    pub speculative_commits: u64,
+}
+
+/// One FastCast replica.
+pub struct FastCastNode {
+    pid: Pid,
+    gid: Gid,
+    topo: Topology,
+    paxos: Paxos,
+
+    // ---- replicated state ----
+    clock: u64,
+    entries: HashMap<MsgId, Entry>,
+    pending: BTreeSet<(Ts, MsgId)>,
+    committed: BTreeSet<(Ts, MsgId)>,
+
+    // ---- leader-only speculation state ----
+    /// eager local-timestamp counter (persisted clock ∨ last assignment)
+    next_assign: u64,
+    proposals: HashMap<MsgId, HashMap<Gid, Ts>>,
+    submitted: HashSet<MsgId>,
+    commit_submitted: HashSet<MsgId>,
+    /// follower: highest gts delivered on the leader's order
+    max_follower_gts: Ts,
+
+    pub stats: FcStats,
+}
+
+impl FastCastNode {
+    pub fn new(pid: Pid, topo: Topology) -> Self {
+        let gid = topo.group_of(pid).expect("FastCastNode must be a group member");
+        FastCastNode {
+            pid,
+            gid,
+            paxos: Paxos::new(pid, &topo, gid),
+            topo,
+            clock: 0,
+            entries: HashMap::new(),
+            pending: BTreeSet::new(),
+            committed: BTreeSet::new(),
+            next_assign: 0,
+            proposals: HashMap::new(),
+            submitted: HashSet::new(),
+            commit_submitted: HashSet::new(),
+            max_follower_gts: Ts::BOT,
+            stats: FcStats::default(),
+        }
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.paxos.is_leader()
+    }
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+    pub fn phase_of(&self, m: MsgId) -> Phase {
+        self.entries.get(&m).map(|e| e.phase).unwrap_or(Phase::Start)
+    }
+
+    fn entry(&mut self, meta: &MsgMeta) -> &mut Entry {
+        self.entries.entry(meta.id).or_insert_with(|| Entry {
+            meta: meta.clone(),
+            phase: Phase::Start,
+            lts: Ts::BOT,
+            gts: Ts::BOT,
+            delivered: false,
+            commit_applied: false,
+            confirms: GidSet::EMPTY,
+        })
+    }
+
+    fn apply(&mut self, cmd: RsmCmd, acts: &mut Vec<Action>) {
+        match cmd {
+            // persist the speculatively chosen local timestamp
+            RsmCmd::AssignLts { meta, lts } => {
+                let gid = self.gid;
+                let is_leader = self.is_leader();
+                let m = meta.id;
+                let dest = meta.dest;
+                let e = self.entry(&meta);
+                if e.phase != Phase::Start {
+                    return; // duplicate
+                }
+                e.phase = Phase::Proposed;
+                e.lts = lts;
+                // at the leader the (lts, m) pair is already in `pending`
+                // from speculation time; BTreeSet insert is idempotent
+                self.pending.insert((lts, m));
+                self.clock = self.clock.max(lts.time());
+                if is_leader {
+                    // consensus#1 decided: confirm to the other leaders
+                    for g in dest.iter() {
+                        if g != gid {
+                            acts.push(Action::Send(self.topo.initial_leader(g), Wire::Confirm { m, g: gid }));
+                        }
+                    }
+                    self.on_confirm(m, gid, acts);
+                }
+            }
+            // persist the speculative global timestamp + clock advance
+            RsmCmd::Commit { m, gts } => {
+                let Some(e) = self.entries.get_mut(&m) else { return };
+                if e.commit_applied {
+                    return;
+                }
+                e.commit_applied = true;
+                e.gts = gts;
+                self.clock = self.clock.max(gts.time());
+                // the in-memory assignment counter catches up with the
+                // *persisted* clock only here — this is what gives
+                // FastCast its 4δ clock-update latency (C in Thm. 4)
+                self.next_assign = self.next_assign.max(self.clock);
+                self.try_finalize(m, acts);
+            }
+        }
+    }
+
+    /// Commit point: consensus#2 applied ∧ consensus#1 confirmed by every
+    /// destination group (followers see confirmations implicitly — the
+    /// leader only Learns a Commit after it committed itself, so log
+    /// order suffices for them).
+    fn try_finalize(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+        let is_leader = self.paxos.is_leader();
+        let Some(e) = self.entries.get_mut(&m) else { return };
+        if e.phase == Phase::Committed || !e.commit_applied {
+            return;
+        }
+        if is_leader && e.confirms != e.meta.dest {
+            return;
+        }
+        e.phase = Phase::Committed;
+        let (lts, gts) = (e.lts, e.gts);
+        self.pending.remove(&(lts, m));
+        if is_leader {
+            self.committed.insert((gts, m)); // followers deliver on DELIVER
+        }
+        self.stats.committed += 1;
+        self.try_deliver(acts);
+    }
+
+    fn on_confirm(&mut self, m: MsgId, g: Gid, acts: &mut Vec<Action>) {
+        let Some(e) = self.entries.get_mut(&m) else { return };
+        e.confirms.insert(g);
+        self.try_finalize(m, acts);
+    }
+
+    /// Leader-side ordered delivery. The frontier (`pending`) includes
+    /// messages from *speculation* time — an in-flight assignment may
+    /// still undercut a committed global timestamp (the convoy, §III).
+    /// Followers are leader-driven: they deliver on `DELIVER` messages in
+    /// FIFO order, which also gives them the projection of the total
+    /// order (their own log-apply order could invert gts order when a
+    /// speculative Commit lands in an earlier slot than a conflicting
+    /// AssignLts).
+    fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+        if !self.paxos.is_leader() {
+            return;
+        }
+        loop {
+            let Some(&(gts, m)) = self.committed.iter().next() else { break };
+            if let Some(&(frontier, _)) = self.pending.iter().next() {
+                if frontier <= gts {
+                    break;
+                }
+            }
+            self.committed.remove(&(gts, m));
+            let e = self.entries.get_mut(&m).unwrap();
+            e.delivered = true;
+            let lts = e.lts;
+            self.stats.delivered += 1;
+            acts.push(Action::Deliver(m, gts));
+            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            let bal = self.paxos.ballot();
+            for &p in self.topo.members(self.gid) {
+                if p != self.pid {
+                    acts.push(Action::Send(p, Wire::Deliver { m, bal, lts, gts }));
+                }
+            }
+        }
+    }
+
+    /// Follower: deliver in the order the leader decided.
+    fn on_deliver(&mut self, m: MsgId, gts: Ts, acts: &mut Vec<Action>) {
+        if self.max_follower_gts >= gts {
+            return; // duplicate
+        }
+        self.max_follower_gts = gts;
+        if let Some(e) = self.entries.get_mut(&m) {
+            e.delivered = true;
+        }
+        self.stats.delivered += 1;
+        acts.push(Action::Deliver(m, gts));
+    }
+
+    /// Leader: speculative commit — start consensus#2 as soon as all
+    /// local timestamps are known, without waiting for consensus#1.
+    fn try_speculative_commit(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+        if self.commit_submitted.contains(&m) {
+            return;
+        }
+        let Some(props) = self.proposals.get(&m) else { return };
+        let Some(e) = self.entries.get(&m) else { return };
+        if !e.meta.dest.iter().all(|g| props.contains_key(&g)) {
+            return;
+        }
+        let gts = e.meta.dest.iter().map(|g| props[&g]).max().unwrap();
+        self.commit_submitted.insert(m);
+        self.stats.consensus_instances += 1;
+        self.stats.speculative_commits += 1;
+        self.paxos.propose(RsmCmd::Commit { m, gts }, acts);
+    }
+}
+
+impl Node for FastCastNode {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn on_start(&mut self, _now: u64) -> Vec<Action> {
+        vec![]
+    }
+
+    fn on_wire(&mut self, from: Pid, wire: Wire, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        match wire {
+            Wire::Multicast { meta } => {
+                if !self.is_leader() {
+                    return acts;
+                }
+                debug_assert!(meta.dest.contains(self.gid), "genuineness: not a destination");
+                if let Some(e) = self.entries.get(&meta.id) {
+                    if e.delivered {
+                        acts.push(Action::Send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts }));
+                    }
+                    return acts;
+                }
+                if !self.submitted.insert(meta.id) {
+                    return acts;
+                }
+                // speculatively issue the local timestamp from the
+                // in-memory counter (unique; ≥ persisted clock)
+                self.next_assign = self.next_assign.max(self.clock) + 1;
+                let lts = Ts::new(self.next_assign, self.gid);
+                let m = meta.id;
+                {
+                    // record meta + speculative timestamp so (a) the
+                    // speculative commit can fire before consensus#1
+                    // applies and (b) the delivery frontier covers
+                    // in-flight assignments
+                    let e = self.entry(&meta);
+                    e.lts = lts;
+                }
+                self.pending.insert((lts, m));
+                // start consensus#1 ...
+                self.stats.consensus_instances += 1;
+                self.paxos.propose(RsmCmd::AssignLts { meta: meta.clone(), lts }, &mut acts);
+                // ... and send PROPOSE to the other leaders immediately
+                for g in meta.dest.iter() {
+                    if g != self.gid {
+                        acts.push(Action::Send(self.topo.initial_leader(g), Wire::Propose { m, g: self.gid, lts }));
+                    }
+                }
+                self.proposals.entry(m).or_default().insert(self.gid, lts);
+                self.try_speculative_commit(m, &mut acts);
+            }
+            Wire::Propose { m, g, lts } => {
+                if !self.is_leader() {
+                    return acts;
+                }
+                // speculative: act on the unconfirmed remote timestamp
+                self.proposals.entry(m).or_default().insert(g, lts);
+                self.try_speculative_commit(m, &mut acts);
+            }
+            Wire::Confirm { m, g } => {
+                if !self.is_leader() {
+                    return acts;
+                }
+                self.on_confirm(m, g, &mut acts);
+            }
+            Wire::Deliver { m, gts, .. } => {
+                if !self.is_leader() {
+                    self.on_deliver(m, gts, &mut acts);
+                }
+            }
+            Wire::Paxos { g, msg } => {
+                debug_assert_eq!(g, self.gid);
+                let mut decided = Vec::new();
+                self.paxos.on_msg(from, msg, &mut acts, &mut decided);
+                for cmd in decided {
+                    self.apply(cmd, &mut acts);
+                }
+            }
+            _ => {}
+        }
+        acts
+    }
+
+    fn on_timer(&mut self, _timer: TimerKind, _now: u64) -> Vec<Action> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{Client, ClientCfg};
+    use crate::invariants;
+    use crate::sim::{CpuCost, SimConfig, World};
+    use crate::types::Topology;
+
+    const D: u64 = 1_000_000;
+
+    fn world(k: usize, f: usize, n_clients: usize, dest_groups: usize, max_req: u32, seed: u64) -> World {
+        let topo = Topology::new(k, f);
+        let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+        for g in topo.gids() {
+            for &p in topo.members(g) {
+                nodes.push(Box::new(FastCastNode::new(p, topo.clone())));
+            }
+        }
+        for c in 0..n_clients {
+            let pid = Pid(topo.first_client_pid().0 + c as u32);
+            let cfg = ClientCfg { dest_groups, max_requests: Some(max_req), ..Default::default() };
+            nodes.push(Box::new(Client::new(pid, topo.clone(), cfg, seed ^ (c as u64 + 1))));
+        }
+        World::new(
+            topo,
+            nodes,
+            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true },
+        )
+    }
+
+    #[test]
+    fn solo_message_commits_in_4_delta() {
+        let mut w = world(2, 1, 1, 2, 1, 1);
+        w.run_to_quiescence(100_000);
+        invariants::assert_correct(&w.trace);
+        // consensus#2 and the CONFIRM exchange overlap: commit at 4δ
+        assert_eq!(w.trace.latencies, vec![4 * D, 4 * D]);
+    }
+
+    #[test]
+    fn single_group_is_3_delta() {
+        // no remote confirms needed; consensus#1 (2δ) then consensus#2
+        // overlapped 1δ behind it
+        let mut w = world(1, 1, 1, 1, 1, 2);
+        w.run_to_quiescence(100_000);
+        invariants::assert_correct(&w.trace);
+        assert_eq!(w.trace.latencies, vec![3 * D]);
+    }
+
+    #[test]
+    fn concurrent_messages_totally_ordered() {
+        let mut w = world(3, 1, 4, 2, 30, 0xFC);
+        w.run_to_quiescence(4_000_000);
+        invariants::assert_correct(&w.trace);
+        assert_eq!(w.trace.completions.len(), 120);
+    }
+
+    #[test]
+    fn speculation_happens() {
+        let mut w = world(2, 1, 2, 2, 10, 3);
+        w.run_to_quiescence(1_000_000);
+        invariants::assert_correct(&w.trace);
+        let l0 = w.node_as::<FastCastNode>(Pid(0));
+        assert!(l0.stats.speculative_commits > 0);
+    }
+
+    #[test]
+    fn followers_converge() {
+        let mut w = world(2, 1, 3, 2, 20, 5);
+        w.run_to_quiescence(3_000_000);
+        invariants::assert_correct(&w.trace);
+        assert_eq!(w.trace.delivered_count, 60 * 6);
+    }
+}

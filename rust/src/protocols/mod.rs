@@ -1,0 +1,78 @@
+//! Protocol state machines.
+//!
+//! Every protocol (and the workload client) is an event-driven, pure,
+//! deterministic [`Node`]: it consumes wire messages and timer firings and
+//! emits [`Action`]s. No I/O happens inside a node — the same state machine
+//! runs unchanged under the discrete-event simulator ([`crate::sim`]), the
+//! in-process thread runtime and the TCP runtime ([`crate::net`],
+//! [`crate::coordinator`]).
+//!
+//! * [`skeen`] — folklore Skeen's protocol among singleton reliable
+//!   groups (paper Fig. 1); collision-free 2δ, failure-free 4δ.
+//! * [`ftskeen`] — Skeen's state machine replicated per group with
+//!   black-box Paxos (§IV "straightforward way"); 6δ / 12δ.
+//! * [`fastcast`] — FastCast (Coelho et al., DSN'17), speculative
+//!   black-box consensus; 4δ / 8δ.
+//! * [`wbcast`] — **the paper's white-box protocol** (Fig. 4); 3δ / 5δ.
+
+pub mod fastcast;
+pub mod ftskeen;
+pub mod skeen;
+pub mod wbcast;
+
+use crate::types::{MsgId, Pid, Ts, Wire};
+
+/// Timer kinds a node may arm. Timers are never cancelled; handlers must
+/// check state and ignore stale firings.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum TimerKind {
+    /// Client: resend MULTICAST if no delivery notification yet (message
+    /// recovery, §IV).
+    ClientResend(MsgId),
+    /// Client: closed-loop pacing / next request.
+    ClientNext,
+    /// Leader: re-examine a possibly stuck message (retry(m), Fig. 4
+    /// line 32).
+    Retry(MsgId),
+    /// Leader: send heartbeats to group + followers check leader health.
+    LssTick,
+    /// Leader candidate: time out on acquiring a quorum of responses and
+    /// restart recovery with a higher ballot.
+    RecoveryTimeout(u32),
+    /// Coordinator: flush the batched commit engine.
+    BatchFlush,
+}
+
+/// Effects emitted by a node transition.
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// Send a wire message to another process (or to self).
+    Send(Pid, Wire),
+    /// Deliver application message `m` locally (the `deliver(m)` event of
+    /// §II). `gts` is its final global timestamp.
+    Deliver(MsgId, Ts),
+    /// Arm a timer to fire after `after_ns`.
+    Timer(TimerKind, u64),
+}
+
+/// An event-driven protocol participant.
+pub trait Node: Send + std::any::Any {
+    fn pid(&self) -> Pid;
+    /// Called once at start-of-world; typically arms timers / kicks off
+    /// client workload.
+    fn on_start(&mut self, now: u64) -> Vec<Action>;
+    /// Handle a wire message from `from`.
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action>;
+    /// Handle a timer firing.
+    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action>;
+    /// Crash notification (used by some harness nodes for bookkeeping;
+    /// crashed nodes simply stop receiving events).
+    fn on_crash(&mut self, _now: u64) {}
+}
+
+/// Convenience: send one message to many recipients.
+pub fn send_all<'a, I: IntoIterator<Item = &'a Pid>>(acts: &mut Vec<Action>, to: I, wire: Wire) {
+    for &p in to {
+        acts.push(Action::Send(p, wire.clone()));
+    }
+}

@@ -1,0 +1,708 @@
+//! **WbCast — the paper's white-box atomic multicast protocol (Fig. 4).**
+//!
+//! Each group of `2f + 1` processes has a leader and followers (passive
+//! replication). To multicast `m`, the leaders of `dest(m)` assign local
+//! timestamps and replicate them — together with the speculative clock
+//! advance — in a *single* Paxos-like round trip between all destination
+//! leaders and quorums of followers in all destination groups
+//! (`ACCEPT` / `ACCEPT_ACK`). Global timestamps are replicated off the
+//! critical path in `DELIVER` messages. Collision-free latency 3δ
+//! (MULTICAST, ACCEPT, ACCEPT_ACK), failure-free 5δ; followers deliver
+//! one δ later.
+//!
+//! Leader recovery (`NEWLEADER` / `NEW_STATE`, Fig. 4 lines 35–66) lives
+//! in [`recovery`]; it recovers *all* messages at once, Zab/VR-style,
+//! because each delivery decision only makes sense in the context of the
+//! leader's previous decisions.
+
+pub mod recovery;
+
+use crate::protocols::{Action, Node, TimerKind};
+use crate::types::{Ballot, Gid, MsgId, MsgMeta, Phase, Pid, Status, Topology, Ts, Wire};
+use crate::util::{FxHashMap, FxHashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+/// Tunables for liveness plumbing (timers); zero values disable a timer.
+#[derive(Clone, Copy, Debug)]
+pub struct WbConfig {
+    /// leader heartbeat period; follower suspicion timeout is
+    /// `hb_interval * hb_suspect_mult * (1 + rank)` — ranks stagger
+    /// candidates so that a single stable leader emerges (Invariant 6)
+    pub hb_interval: u64,
+    pub hb_suspect_mult: u64,
+    /// leader retry timer for stuck PROPOSED/ACCEPTED messages
+    pub retry_after: u64,
+    /// recovery restart timeout (candidate stuck without quorum)
+    pub recovery_timeout: u64,
+    /// garbage-collect delivered entries below the group-wide watermark
+    pub gc: bool,
+    /// commit-batch size: quorum-complete messages are staged and
+    /// committed through the batch backend once this many accumulate
+    /// (1 = commit immediately; >1 enables the XLA batch engine path)
+    pub batch_threshold: usize,
+    /// flush a non-empty stage after this long even if below threshold
+    pub batch_flush_after: u64,
+}
+
+impl Default for WbConfig {
+    fn default() -> Self {
+        WbConfig {
+            hb_interval: 0, // disabled: failure-free benches
+            hb_suspect_mult: 8,
+            retry_after: 0,
+            recovery_timeout: 0,
+            gc: false,
+            batch_threshold: 1,
+            batch_flush_after: 0,
+        }
+    }
+}
+
+impl WbConfig {
+    /// Timers sized for a given network δ (used when crashes may occur).
+    pub fn with_failures(delta: u64) -> Self {
+        WbConfig {
+            hb_interval: 2 * delta,
+            hb_suspect_mult: 8,
+            retry_after: 20 * delta,
+            recovery_timeout: 40 * delta,
+            gc: true,
+            batch_threshold: 1,
+            batch_flush_after: 0,
+        }
+    }
+}
+
+/// Per-message state at a process.
+pub(crate) struct Entry {
+    pub meta: MsgMeta,
+    pub phase: Phase,
+    pub lts: Ts,
+    pub gts: Ts,
+    pub delivered: bool,
+    /// staged in the commit-batch buffer (quorum complete, not yet flushed)
+    pub staged: bool,
+    /// ACCEPT messages received, per destination group: (ballot, lts)
+    pub accepts: FxHashMap<Gid, (Ballot, Ts)>,
+    /// leader: ACCEPT_ACK tally keyed by the ballot vector
+    pub acks: FxHashMap<Vec<(Gid, Ballot)>, FxHashMap<Gid, FxHashSet<Pid>>>,
+}
+
+impl Entry {
+    fn new(meta: MsgMeta) -> Self {
+        Entry {
+            meta,
+            phase: Phase::Start,
+            lts: Ts::BOT,
+            gts: Ts::BOT,
+            delivered: false,
+            staged: false,
+            accepts: Default::default(),
+            acks: Default::default(),
+        }
+    }
+}
+
+/// Counters exposed for stats / tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WbStats {
+    pub committed: u64,
+    pub delivered: u64,
+    pub recoveries_started: u64,
+    pub recoveries_completed: u64,
+    pub retries: u64,
+    pub gc_dropped: u64,
+}
+
+/// One WbCast process (Fig. 3 variables + plumbing).
+pub struct WbNode {
+    pub(crate) pid: Pid,
+    pub(crate) gid: Gid,
+    pub(crate) topo: Topology,
+    pub(crate) cfg: WbConfig,
+
+    // --- Fig. 3 state ---
+    pub(crate) clock: u64,
+    pub(crate) status: Status,
+    pub(crate) cballot: Ballot,
+    pub(crate) ballot: Ballot,
+    pub(crate) entries: FxHashMap<MsgId, Entry>,
+    pub(crate) cur_leader: Vec<Pid>,
+    pub(crate) max_delivered_gts: Ts,
+
+    // --- derived indices (performance; see DESIGN.md §Perf) ---
+    /// (lts, m) of messages in PROPOSED/ACCEPTED — the delivery frontier
+    pub(crate) pending: BTreeSet<(Ts, MsgId)>,
+    /// (gts, m) committed and not yet delivered
+    pub(crate) committed: BTreeSet<(Ts, MsgId)>,
+    /// (gts -> m) delivered, for post-recovery DELIVER resends
+    pub(crate) delivered_log: BTreeMap<Ts, MsgId>,
+
+    // --- recovery bookkeeping (see recovery.rs) ---
+    pub(crate) nl_acks: HashMap<Pid, recovery::NlAck>,
+    pub(crate) ns_acks: HashSet<Pid>,
+
+    // --- batched commit engine (DESIGN.md L2/L1 integration) ---
+    pub(crate) backend: Box<dyn crate::runtime::CommitBackend>,
+    pub(crate) ready: Vec<crate::runtime::BatchReq>,
+
+    // --- liveness plumbing ---
+    pub(crate) last_hb: u64,
+    /// per-follower max delivered gts (leader, for the GC watermark)
+    pub(crate) gc_reports: HashMap<Pid, Ts>,
+    /// per-client delivered-sequence watermark (duplicate detection after GC)
+    pub(crate) gc_client_seq: HashMap<u32, u32>,
+
+    /// virtual time at which this node last completed recovery and
+    /// became leader (0 = initial leader / never)
+    pub leader_since: u64,
+
+    pub stats: WbStats,
+}
+
+impl WbNode {
+    pub fn new(pid: Pid, topo: Topology, cfg: WbConfig) -> Self {
+        Self::with_backend(pid, topo, cfg, Box::new(crate::runtime::NativeBackend))
+    }
+
+    /// Construct with an explicit commit backend (e.g. the XLA engine
+    /// service handle; see [`crate::runtime::service`]).
+    pub fn with_backend(
+        pid: Pid,
+        topo: Topology,
+        cfg: WbConfig,
+        backend: Box<dyn crate::runtime::CommitBackend>,
+    ) -> Self {
+        let gid = topo.group_of(pid).expect("WbNode must be a group member");
+        let is_initial_leader = topo.initial_leader(gid) == pid;
+        // Ballot (1, initial leader) is pre-agreed at deployment time:
+        // every member starts with cballot = ballot = (1, leader(g)).
+        let b0 = Ballot::new(1, topo.initial_leader(gid));
+        let cur_leader = topo.gids().map(|g| topo.initial_leader(g)).collect();
+        WbNode {
+            pid,
+            gid,
+            topo,
+            cfg,
+            clock: 0,
+            status: if is_initial_leader { Status::Leader } else { Status::Follower },
+            cballot: b0,
+            ballot: b0,
+            entries: Default::default(),
+            cur_leader,
+            max_delivered_gts: Ts::BOT,
+            pending: BTreeSet::new(),
+            committed: BTreeSet::new(),
+            delivered_log: BTreeMap::new(),
+            nl_acks: HashMap::new(),
+            ns_acks: HashSet::new(),
+            backend,
+            ready: Vec::new(),
+            last_hb: 0,
+            gc_reports: HashMap::new(),
+            gc_client_seq: HashMap::new(),
+            leader_since: 0,
+            stats: WbStats::default(),
+        }
+    }
+
+    /// Diagnostic dump (probe binaries / debugging).
+    pub fn debug_dump(&self, tag: &str) {
+        println!(
+            "{tag}: status={:?} cballot={:?} clock={} entries={} pending={} committed={} ready={} max_dgts={:?}",
+            self.status, self.cballot, self.clock, self.entries.len(), self.pending.len(),
+            self.committed.len(), self.ready.len(), self.max_delivered_gts
+        );
+        for (i, &(lts, m)) in self.pending.iter().take(3).enumerate() {
+            if let Some(e) = self.entries.get(&m) {
+                let acc: Vec<String> = e.meta.dest.iter().map(|g| match e.accepts.get(&g) {
+                    Some(&(b, t)) => format!("{g:?}:{b:?}@{t:?}"),
+                    None => format!("{g:?}:∅"),
+                }).collect();
+                println!("  pending[{i}] {m:?} lts={lts:?} phase={:?} staged={} dest={:?} accepts=[{}] acks={}",
+                    e.phase, e.staged, e.meta.dest, acc.join(" "), e.acks.len());
+            }
+        }
+        if let Some(&(gts, m)) = self.committed.iter().next() {
+            println!("  committed.first {m:?} gts={gts:?}");
+        }
+    }
+
+    // ---------- inspection (tests, harness) ----------
+    pub fn status(&self) -> Status {
+        self.status
+    }
+    pub fn cballot(&self) -> Ballot {
+        self.cballot
+    }
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+    pub fn phase_of(&self, m: MsgId) -> Phase {
+        self.entries.get(&m).map(|e| e.phase).unwrap_or(Phase::Start)
+    }
+    pub fn gts_of(&self, m: MsgId) -> Option<Ts> {
+        self.entries.get(&m).filter(|e| e.phase == Phase::Committed).map(|e| e.gts)
+    }
+    pub fn is_leader(&self) -> bool {
+        self.status == Status::Leader
+    }
+    /// All committed messages with their global timestamps (probes).
+    pub fn committed_view(&self) -> Vec<(MsgId, Ts)> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.phase == Phase::Committed)
+            .map(|(&m, e)| (m, e.gts))
+            .collect()
+    }
+    /// The local timestamp this process holds for `m`, if any (probes).
+    pub fn lts_view(&self, m: MsgId) -> Option<Ts> {
+        self.entries.get(&m).filter(|e| e.phase != Phase::Start && !e.lts.is_bot()).map(|e| e.lts)
+    }
+    pub(crate) fn rank(&self) -> u64 {
+        self.topo.members(self.gid).iter().position(|&p| p == self.pid).unwrap() as u64
+    }
+    pub(crate) fn group(&self) -> &[Pid] {
+        self.topo.members(self.gid)
+    }
+    pub(crate) fn quorum(&self) -> usize {
+        self.topo.quorum()
+    }
+
+    /// `m` was delivered and garbage-collected: clients multicast
+    /// sequentially (closed loop), so a sequence number strictly below the
+    /// client's delivered watermark implies `m` completed at *every*
+    /// destination group. The entry with `seq == watermark` is always
+    /// retained (see [`WbNode::trim_below`]), so anything below the
+    /// watermark is safe to drop and ignore.
+    pub(crate) fn below_gc_watermark(&self, m: MsgId) -> bool {
+        self.gc_client_seq.get(&m.client()).is_some_and(|&wm| m.seq() < wm)
+    }
+
+    /// Sorted ballot vector for the current accept set of `m`.
+    fn ballot_vector(e: &Entry) -> Vec<(Gid, Ballot)> {
+        let mut v: Vec<(Gid, Ballot)> = e.accepts.iter().map(|(&g, &(b, _))| (g, b)).collect();
+        v.sort_unstable_by_key(|&(g, _)| g);
+        v
+    }
+
+    // ---------- Fig. 4 line 3: MULTICAST at the leader ----------
+    fn on_multicast(&mut self, meta: MsgMeta, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        let mid = meta.id;
+        if self.status != Status::Leader {
+            return acts; // pre: status = LEADER
+        }
+        debug_assert!(meta.dest.contains(self.gid), "genuineness: not a destination");
+        // GC'd duplicate: strictly below the client watermark the message
+        // was delivered everywhere (clients are sequential); never
+        // re-propose — that would mint a second global timestamp.
+        if self.below_gc_watermark(meta.id) {
+            acts.push(Action::Send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: Ts::BOT }));
+            return acts;
+        }
+        let e = self.entries.entry(meta.id).or_insert_with(|| Entry::new(meta.clone()));
+        if e.meta.dest.is_empty() {
+            e.meta = meta; // entry pre-created by a remote ACCEPT
+        }
+        let fresh = e.phase == Phase::Start;
+        if fresh {
+            // lines 5-8: fresh proposal
+            self.clock += 1;
+            let lts = Ts::new(self.clock, self.gid);
+            e.phase = Phase::Proposed;
+            e.lts = lts;
+            self.pending.insert((lts, e.meta.id));
+        } else if e.delivered {
+            // duplicate of a delivered message: re-notify the client (its
+            // notification may have been lost to a crash) — and still
+            // resend the ACCEPT below, so other destination groups stuck
+            // on m can finish (§IV message recovery: "groups that have
+            // already processed m will just resend the corresponding
+            // protocol messages")
+            acts.push(Action::Send(Pid(e.meta.id.client()), Wire::Delivered { m: e.meta.id, g: self.gid, gts: e.gts }));
+        }
+        // (re)send ACCEPT with the locally stored data (Invariant 1: one
+        // local timestamp per ballot)
+        let wire = Wire::Accept { meta: e.meta.clone(), g: self.gid, bal: self.cballot, lts: e.lts };
+        let mut targets = Vec::new();
+        for g in e.meta.dest.iter() {
+            targets.extend_from_slice(self.topo.members(g));
+        }
+        for to in targets {
+            acts.push(Action::Send(to, wire.clone()));
+        }
+        // arm the retry chain only on the first proposal: on_retry re-arms
+        // itself, so one chain per message suffices (duplicates arming
+        // more would multiply timers)
+        if fresh && self.cfg.retry_after > 0 {
+            acts.push(Action::Timer(TimerKind::Retry(mid), self.cfg.retry_after));
+        }
+        acts
+    }
+
+    // ---------- Fig. 4 line 10: ACCEPT at a destination process ----------
+    fn on_accept(&mut self, meta: MsgMeta, g: Gid, bal: Ballot, lts: Ts, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        let mid = meta.id;
+        if self.status == Status::Recovering {
+            return acts; // pre: status ∈ {FOLLOWER, LEADER}
+        }
+        // learn the remote leader for retries
+        if (g.0 as usize) < self.cur_leader.len() && g != self.gid {
+            self.cur_leader[g.0 as usize] = bal.leader();
+        }
+        if self.below_gc_watermark(meta.id) {
+            return acts; // stale ACCEPT for a collected message
+        }
+        let e = self.entries.entry(meta.id).or_insert_with(|| Entry::new(meta.clone()));
+        if e.meta.dest.is_empty() {
+            e.meta = meta;
+        }
+        // store the latest proposal from this group (a re-proposal after a
+        // remote leader change replaces the stale one)
+        e.accepts.insert(g, (bal, lts));
+        let _ = mid;
+        self.try_accept_ack(mid, &mut acts);
+        acts
+    }
+
+    /// Fire line 10's body once ACCEPTs from all destination leaders are
+    /// present and our own group's ballot matches `cballot`. Re-checked
+    /// whenever `cballot` changes (recovery completion).
+    pub(crate) fn try_accept_ack(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+        let Some(e) = self.entries.get_mut(&m) else { return };
+        if e.meta.dest.is_empty() {
+            return;
+        }
+        if !e.meta.dest.iter().all(|g| e.accepts.contains_key(&g)) {
+            return;
+        }
+        let Some(&(own_bal, own_lts)) = e.accepts.get(&self.gid) else { return };
+        if own_bal != self.cballot {
+            return; // pre: cballot = Bal(g0)
+        }
+        // lines 12-13: adopt the local timestamp (first time only)
+        if e.phase <= Phase::Proposed {
+            if e.phase == Phase::Proposed {
+                self.pending.remove(&(e.lts, m));
+            }
+            e.phase = Phase::Accepted;
+            e.lts = own_lts;
+            self.pending.insert((own_lts, m));
+        }
+        // line 14: speculative clock advance to the would-be global ts
+        let gts = e.accepts.values().map(|&(_, l)| l).max().unwrap();
+        self.clock = self.clock.max(gts.time());
+        // line 16: acknowledge to every proposing leader
+        let bals = Self::ballot_vector(e);
+        let leaders: Vec<Pid> = bals.iter().map(|&(_, b)| b.leader()).collect();
+        let wire = Wire::AcceptAck { m, g: self.gid, bals };
+        for to in leaders {
+            acts.push(Action::Send(to, wire.clone()));
+        }
+    }
+
+    // ---------- Fig. 4 line 17: ACCEPT_ACK at the leader ----------
+    fn on_accept_ack(&mut self, m: MsgId, g: Gid, bals: Vec<(Gid, Ballot)>, from: Pid, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.status != Status::Leader {
+            return acts;
+        }
+        let quorum = self.quorum();
+        let Some(e) = self.entries.get_mut(&m) else { return acts };
+        if e.phase == Phase::Committed {
+            return acts;
+        }
+        // avoid cloning the ballot-vector key when the tally row exists
+        // (every ack after the first; §Perf iteration 3)
+        if !e.acks.contains_key(&bals) {
+            e.acks.insert(bals.clone(), Default::default());
+        }
+        e.acks.get_mut(&bals).unwrap().entry(g).or_default().insert(from);
+        // pre: quorum in each destination group with matching ballot
+        // vectors, including myself, and matching previously received
+        // ACCEPTs (our accept set must equal the ack vector)
+        let tally = &e.acks[&bals];
+        let have_quorums = e.meta.dest.iter().all(|g| tally.get(&g).map(|s| s.len()).unwrap_or(0) >= quorum);
+        if !have_quorums {
+            return acts;
+        }
+        let own_ok = bals.iter().any(|&(g, b)| g == self.gid && b == self.cballot);
+        if !own_ok {
+            return acts; // stale vector from a previous leadership
+        }
+        let accepts_match = bals.len() == e.meta.dest.len()
+            && bals.iter().all(|&(g, b)| e.accepts.get(&g).map(|&(ab, _)| ab == b).unwrap_or(false));
+        if !accepts_match {
+            return acts;
+        }
+        if e.staged {
+            return acts; // already in the commit batch
+        }
+        // lines 19-20: stage the commit; the global timestamp is resolved
+        // by the batch backend (native or the AOT XLA engine). The entry
+        // stays in `pending` until the flush applies, so the delivery
+        // frontier remains exact.
+        e.staged = true;
+        let lts_set: Vec<Ts> = bals.iter().map(|&(g, _)| e.accepts[&g].1).collect();
+        self.ready.push(crate::runtime::BatchReq { m, lts: lts_set });
+        if self.ready.len() >= self.cfg.batch_threshold {
+            self.flush_commits(&mut acts);
+        } else if self.cfg.batch_flush_after > 0 && self.ready.len() == 1 {
+            acts.push(Action::Timer(TimerKind::BatchFlush, self.cfg.batch_flush_after));
+        }
+        acts
+    }
+
+    /// Resolve global timestamps for the staged batch through the commit
+    /// backend, apply the commits, and deliver whatever is unblocked.
+    pub(crate) fn flush_commits(&mut self, acts: &mut Vec<Action>) {
+        if self.ready.is_empty() {
+            return;
+        }
+        let reqs = std::mem::take(&mut self.ready);
+        // remove the batch from the frontier first: its members must not
+        // block themselves
+        for r in &reqs {
+            if let Some(e) = self.entries.get(&r.m) {
+                self.pending.remove(&(e.lts, r.m));
+            }
+        }
+        // the backend only needs the smallest pending timestamps (min)
+        let pending_snapshot: Vec<Ts> =
+            self.pending.iter().take(crate::runtime::engine::P_SLOTS).map(|&(lts, _)| lts).collect();
+        let outs = self.backend.commit_batch(&reqs, &pending_snapshot);
+        for out in outs {
+            let Some(e) = self.entries.get_mut(&out.m) else { continue };
+            if e.phase == Phase::Committed {
+                continue;
+            }
+            e.phase = Phase::Committed;
+            e.staged = false;
+            e.gts = out.gts;
+            self.committed.insert((out.gts, out.m));
+            self.stats.committed += 1;
+        }
+        self.try_deliver(acts);
+    }
+
+    // ---------- Fig. 4 line 21: ordered delivery at the leader ----------
+    pub(crate) fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+        loop {
+            let Some(&(gts, m)) = self.committed.iter().next() else { break };
+            if let Some(&(frontier, _)) = self.pending.iter().next() {
+                if frontier <= gts {
+                    break; // an in-flight message may still undercut gts
+                }
+            }
+            self.committed.remove(&(gts, m));
+            self.deliver_one(m, gts, acts, true);
+        }
+    }
+
+    /// Mark `m` delivered at this process and replicate the decision to
+    /// the followers (`DELIVER`, line 23). `notify`: send the client
+    /// notification (suppressed for post-recovery resends).
+    pub(crate) fn deliver_one(&mut self, m: MsgId, gts: Ts, acts: &mut Vec<Action>, notify: bool) {
+        let e = self.entries.get_mut(&m).expect("deliver_one: unknown entry");
+        debug_assert_eq!(e.phase, Phase::Committed);
+        let lts = e.lts;
+        if !e.delivered {
+            e.delivered = true;
+            self.delivered_log.insert(gts, m);
+            if gts > self.max_delivered_gts {
+                self.max_delivered_gts = gts;
+                acts.push(Action::Deliver(m, gts));
+                self.stats.delivered += 1;
+            }
+            let c = m.client();
+            let seq = self.gc_client_seq.entry(c).or_insert(0);
+            *seq = (*seq).max(m.seq());
+        }
+        if notify {
+            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+        }
+        for &p in self.group() {
+            if p != self.pid {
+                acts.push(Action::Send(p, Wire::Deliver { m, bal: self.cballot, lts, gts }));
+            }
+        }
+    }
+
+    // ---------- Fig. 4 line 24: DELIVER at a follower ----------
+    fn on_deliver(&mut self, m: MsgId, b: Ballot, lts: Ts, gts: Ts, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        // pre: status ∈ {FOLLOWER, LEADER} ∧ cballot = b ∧ max_delivered_gts < gts
+        if self.status == Status::Recovering || self.cballot != b || self.max_delivered_gts >= gts {
+            return acts;
+        }
+        let e = self.entries.entry(m).or_insert_with(|| Entry::new(MsgMeta::new(m, crate::types::GidSet::EMPTY, vec![])));
+        // lines 26-31
+        if e.phase == Phase::Proposed || e.phase == Phase::Accepted {
+            self.pending.remove(&(e.lts, m));
+        }
+        if e.phase == Phase::Committed && !e.delivered {
+            self.committed.remove(&(e.gts, m));
+        }
+        e.phase = Phase::Committed;
+        e.lts = lts;
+        e.gts = gts;
+        e.delivered = true;
+        self.clock = self.clock.max(gts.time());
+        self.max_delivered_gts = gts;
+        self.delivered_log.insert(gts, m);
+        let c = m.client();
+        let seq = self.gc_client_seq.entry(c).or_insert(0);
+        *seq = (*seq).max(m.seq());
+        self.stats.delivered += 1;
+        acts.push(Action::Deliver(m, gts));
+        acts
+    }
+
+    // ---------- Fig. 4 line 32: retry (message recovery) ----------
+    fn on_retry(&mut self, m: MsgId, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.status != Status::Leader {
+            return acts;
+        }
+        let Some(e) = self.entries.get(&m) else { return acts };
+        if e.phase != Phase::Proposed && e.phase != Phase::Accepted {
+            return acts;
+        }
+        self.stats.retries += 1;
+        let wire = Wire::Multicast { meta: e.meta.clone() };
+        let dests: Vec<Pid> = e.meta.dest.iter().map(|g| self.cur_leader[g.0 as usize]).collect();
+        for to in dests {
+            acts.push(Action::Send(to, wire.clone()));
+        }
+        acts.push(Action::Timer(TimerKind::Retry(m), self.cfg.retry_after));
+        acts
+    }
+
+    // ---------- GC (§VI) ----------
+    /// Leader: recompute the group-wide delivered watermark from follower
+    /// reports; everything at or below it has been delivered by *every*
+    /// group member, so (a) its entry can never be needed again — every
+    /// member's clock and `max_delivered_gts` already exceed it — and
+    /// (b) duplicates are caught by the per-client sequence watermark.
+    fn gc_sweep(&mut self) -> Option<Ts> {
+        if !self.cfg.gc || self.status != Status::Leader {
+            return None;
+        }
+        let mut wm = self.max_delivered_gts;
+        for &p in self.group() {
+            if p == self.pid {
+                continue;
+            }
+            wm = wm.min(self.gc_reports.get(&p).copied().unwrap_or(Ts::BOT));
+        }
+        if wm.is_bot() {
+            return None;
+        }
+        self.trim_below(wm);
+        Some(wm)
+    }
+
+    /// Drop delivered entries with gts ≤ `wm` (leader after a sweep,
+    /// followers on the leader's watermark announcement). Each client's
+    /// *latest* delivered message is always retained: remote groups may
+    /// still need its local timestamp / ACCEPT resend to finish their own
+    /// commit — only once a *later* message of the same client is
+    /// delivered is the previous one globally complete.
+    pub(crate) fn trim_below(&mut self, wm: Ts) {
+        let drop: Vec<(Ts, MsgId)> = self
+            .delivered_log
+            .range(..=wm)
+            .filter(|&(_, &m)| self.gc_client_seq.get(&m.client()).is_some_and(|&s| m.seq() < s))
+            .map(|(&g, &m)| (g, m))
+            .collect();
+        for (g, m) in drop {
+            self.delivered_log.remove(&g);
+            self.entries.remove(&m);
+            self.stats.gc_dropped += 1;
+        }
+    }
+}
+
+impl Node for WbNode {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn on_start(&mut self, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.cfg.hb_interval > 0 {
+            acts.push(Action::Timer(TimerKind::LssTick, self.cfg.hb_interval));
+        }
+        acts
+    }
+
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
+        match wire {
+            Wire::Multicast { meta } => self.on_multicast(meta, now),
+            Wire::Accept { meta, g, bal, lts } => {
+                if g == self.gid && bal.leader() == from {
+                    self.last_hb = now; // own leader is alive
+                }
+                self.on_accept(meta, g, bal, lts, now)
+            }
+            Wire::AcceptAck { m, g, bals } => self.on_accept_ack(m, g, bals, from, now),
+            Wire::Deliver { m, bal, lts, gts } => {
+                if bal.leader() == from {
+                    self.last_hb = now;
+                }
+                self.on_deliver(m, bal, lts, gts, now)
+            }
+            Wire::NewLeader { bal } => self.on_new_leader(bal, from, now),
+            Wire::NewLeaderAck { bal, cbal, clock, state } => self.on_new_leader_ack(bal, cbal, clock, state, from, now),
+            Wire::NewState { bal, clock, state } => self.on_new_state(bal, clock, state, from, now),
+            Wire::NewStateAck { bal } => self.on_new_state_ack(bal, from, now),
+            Wire::Heartbeat { bal } => {
+                if bal >= self.cballot && self.topo.is_member(from, self.gid) {
+                    self.last_hb = now;
+                }
+                vec![]
+            }
+            Wire::GcReport { max_gts } => {
+                let mut acts = Vec::new();
+                if !self.topo.is_member(from, self.gid) {
+                    return acts;
+                }
+                if self.status == Status::Leader {
+                    // follower report: update watermark, sweep, announce
+                    self.gc_reports.insert(from, max_gts);
+                    if let Some(wm) = self.gc_sweep() {
+                        for &p in self.group() {
+                            if p != self.pid {
+                                acts.push(Action::Send(p, Wire::GcReport { max_gts: wm }));
+                            }
+                        }
+                    }
+                } else if from == self.cballot.leader() {
+                    // leader's group-wide watermark announcement
+                    self.trim_below(max_gts);
+                }
+                acts
+            }
+            _ => vec![],
+        }
+    }
+
+    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action> {
+        match timer {
+            TimerKind::Retry(m) => self.on_retry(m, now),
+            TimerKind::LssTick => self.on_lss_tick(now),
+            TimerKind::RecoveryTimeout(n) => self.on_recovery_timeout(n, now),
+            TimerKind::BatchFlush => {
+                let mut acts = Vec::new();
+                self.flush_commits(&mut acts);
+                acts
+            }
+            _ => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

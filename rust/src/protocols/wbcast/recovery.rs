@@ -1,0 +1,312 @@
+//! WbCast leader recovery (Fig. 4 lines 35–66) and the leader-selection
+//! plumbing (heartbeats, suspicion, recovery restart).
+//!
+//! Recovery is Zab/VR-style: because the leader takes delivery decisions
+//! unilaterally, a new leader must (1) adopt a state computed from a
+//! quorum of `NEWLEADER_ACK`s — keeping any COMMITTED message, and any
+//! message ACCEPTED by a reporter of the *maximal* `cballot` (Paxos'
+//! value-selection rule, preserving Invariant 2) — and (2) push that
+//! state to a quorum of followers (`NEW_STATE` / `NEWSTATE_ACK`,
+//! preserving Invariant 5) *before* resuming normal operation.
+
+use super::{Entry, WbNode};
+use crate::protocols::{Action, TimerKind};
+use crate::types::wire::MsgState;
+use crate::types::{Ballot, MsgId, Phase, Pid, Status, Ts, Wire};
+use std::collections::HashMap;
+
+/// Contents of a NEWLEADER_ACK, kept per reporter.
+pub(crate) struct NlAck {
+    pub cbal: Ballot,
+    pub clock: u64,
+    pub state: Vec<MsgState>,
+}
+
+impl WbNode {
+    /// Snapshot of every non-START message (sent in NEWLEADER_ACK).
+    fn snapshot(&self) -> Vec<MsgState> {
+        self.entries
+            .values()
+            .filter(|e| e.phase != Phase::Start)
+            .map(|e| MsgState { meta: e.meta.clone(), phase: e.phase, lts: e.lts, gts: e.gts })
+            .collect()
+    }
+
+    /// Fig. 4 line 35: start a new candidacy.
+    pub(crate) fn recover(&mut self, _now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        let n = self.ballot.n.max(self.cballot.n) + 1;
+        let b = Ballot::new(n, self.pid);
+        self.stats.recoveries_started += 1;
+        // our own NEWLEADER (self-send) moves us to RECOVERING
+        for &p in self.group() {
+            acts.push(Action::Send(p, Wire::NewLeader { bal: b }));
+        }
+        if self.cfg.recovery_timeout > 0 {
+            acts.push(Action::Timer(TimerKind::RecoveryTimeout(n), self.cfg.recovery_timeout));
+        }
+        acts
+    }
+
+    /// Fig. 4 line 37: vote for a prospective leader.
+    pub(crate) fn on_new_leader(&mut self, b: Ballot, from: Pid, now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if !self.topo.is_member(from, self.gid) || b <= self.ballot {
+            return acts; // pre: b > ballot
+        }
+        self.ballot = b;
+        self.status = Status::Recovering;
+        self.nl_acks.clear();
+        self.ns_acks.clear();
+        self.last_hb = now; // give the candidate time before suspecting it
+        acts.push(Action::Send(
+            from,
+            Wire::NewLeaderAck { bal: b, cbal: self.cballot, clock: self.clock, state: self.snapshot() },
+        ));
+        acts
+    }
+
+    /// Fig. 4 line 42: collect votes; on quorum, compute the initial state.
+    pub(crate) fn on_new_leader_ack(
+        &mut self,
+        b: Ballot,
+        cbal: Ballot,
+        clock: u64,
+        state: Vec<MsgState>,
+        from: Pid,
+        now: u64,
+    ) -> Vec<Action> {
+        let mut acts = Vec::new();
+        // pre: status = RECOVERING ∧ ballot = b; `cballot < b` excludes
+        // duplicate computation after the state was already adopted
+        if self.status != Status::Recovering || self.ballot != b || b.leader() != self.pid || self.cballot >= b {
+            return acts;
+        }
+        self.nl_acks.insert(from, NlAck { cbal, clock, state });
+        if self.nl_acks.len() < self.quorum() {
+            return acts;
+        }
+
+        // ---- lines 44-55: compute the new state ----
+        let b0 = self.nl_acks.values().map(|a| a.cbal).max().unwrap();
+        // phase/lts/gts triple per message
+        let mut merged: HashMap<MsgId, MsgState> = HashMap::new();
+        for ack in self.nl_acks.values() {
+            for s in &ack.state {
+                // line 47: COMMITTED anywhere wins outright
+                if s.phase == Phase::Committed {
+                    let slot = merged.entry(s.meta.id).or_insert_with(|| s.clone());
+                    if slot.phase != Phase::Committed {
+                        *slot = s.clone();
+                    } else if slot.meta.dest.is_empty() {
+                        slot.meta = s.meta.clone();
+                    }
+                }
+            }
+        }
+        for ack in self.nl_acks.values().filter(|a| a.cbal == b0) {
+            for s in &ack.state {
+                // line 51: ACCEPTED at the maximal cballot survives
+                if s.phase == Phase::Accepted {
+                    merged.entry(s.meta.id).or_insert_with(|| s.clone());
+                }
+                // PROPOSED entries are dropped: they were never replicated
+                // and will be resurrected by message recovery if needed
+            }
+        }
+        // line 54: recover the clock
+        let new_clock = self.nl_acks.values().map(|a| a.clock).max().unwrap();
+
+        self.adopt(&merged.values().cloned().collect::<Vec<_>>(), new_clock);
+        self.cballot = b; // line 55
+        let state_out: Vec<MsgState> = self.snapshot();
+        self.ns_acks.clear();
+        self.ns_acks.insert(self.pid);
+        for &p in self.group() {
+            if p != self.pid {
+                acts.push(Action::Send(p, Wire::NewState { bal: b, clock: new_clock, state: state_out.clone() }));
+            }
+        }
+        self.nl_acks.clear();
+        self.maybe_finish_recovery(&mut acts, now);
+        acts
+    }
+
+    /// Replace protocol state with `state` (recovered or pushed by the new
+    /// leader), rebuilding the derived indices. Own delivery history
+    /// (`delivered_log`, `max_delivered_gts`) is preserved — it is local
+    /// knowledge about the `deliver(m)` events this process already
+    /// emitted, not replicated state.
+    fn adopt(&mut self, state: &[MsgState], clock: u64) {
+        self.clock = clock;
+        self.pending.clear();
+        self.committed.clear();
+        self.ready.clear(); // staged commits are invalidated by the new state
+        let mut entries: crate::util::FxHashMap<MsgId, Entry> = Default::default();
+        for s in state {
+            let mut e = Entry::new(s.meta.clone());
+            e.phase = s.phase;
+            e.lts = s.lts;
+            e.gts = s.gts;
+            match s.phase {
+                Phase::Accepted => {
+                    self.pending.insert((s.lts, s.meta.id));
+                }
+                Phase::Committed => {
+                    e.delivered = self.delivered_log.contains_key(&s.gts);
+                    if !e.delivered {
+                        self.committed.insert((s.gts, s.meta.id));
+                    }
+                }
+                _ => {}
+            }
+            // keep remote accept proposals from the old entry: the remote
+            // leaders' ballots are unaffected by our group's change
+            if let Some(old) = self.entries.get(&s.meta.id) {
+                e.accepts = old.accepts.clone();
+                e.accepts.remove(&self.gid); // our own proposal is stale
+            }
+            entries.insert(s.meta.id, e);
+        }
+        self.entries = entries;
+    }
+
+    /// Fig. 4 line 57: follower adopts the new leader's state.
+    pub(crate) fn on_new_state(&mut self, b: Ballot, clock: u64, state: Vec<MsgState>, from: Pid, now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.status != Status::Recovering || self.ballot != b {
+            return acts;
+        }
+        self.adopt(&state, clock);
+        self.status = Status::Follower;
+        self.cballot = b;
+        self.cur_leader[self.gid.0 as usize] = b.leader();
+        self.last_hb = now;
+        acts.push(Action::Send(from, Wire::NewStateAck { bal: b }));
+        acts
+    }
+
+    /// Fig. 4 line 63: with a quorum in sync, resume normal operation.
+    pub(crate) fn on_new_state_ack(&mut self, b: Ballot, from: Pid, now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.status != Status::Recovering || self.ballot != b || self.cballot != b {
+            return acts;
+        }
+        self.ns_acks.insert(from);
+        self.maybe_finish_recovery(&mut acts, now);
+        acts
+    }
+
+    fn maybe_finish_recovery(&mut self, acts: &mut Vec<Action>, now: u64) {
+        if self.status != Status::Recovering || self.cballot != self.ballot || self.ns_acks.len() < self.quorum() {
+            return;
+        }
+        // line 65: become leader
+        self.status = Status::Leader;
+        self.cur_leader[self.gid.0 as usize] = self.pid;
+        self.stats.recoveries_completed += 1;
+        self.leader_since = now;
+        self.last_hb = now;
+
+        // lines 66-68: re-deliver all committed messages "starting from
+        // the beginning" — followers deduplicate via max_delivered_gts
+        let resend: Vec<(Ts, MsgId)> = self.delivered_log.iter().map(|(&g, &m)| (g, m)).collect();
+        for (gts, m) in resend {
+            let e = &self.entries[&m];
+            let (lts, bal) = (e.lts, self.cballot);
+            for &p in self.group() {
+                if p != self.pid {
+                    acts.push(Action::Send(p, Wire::Deliver { m, bal, lts, gts }));
+                }
+            }
+            // re-notify the client: its notification may have died with
+            // the old leader (clients deduplicate)
+            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+        }
+        // deliver whatever is now unblocked (line 66 delivery condition)
+        self.try_deliver(acts);
+
+        // resume stuck messages (§IV message recovery): retry every
+        // still-pending (ACCEPTED) message through the MULTICAST path,
+        // which re-sends ACCEPTs with our new ballot
+        let stuck: Vec<MsgId> = self.pending.iter().map(|&(_, m)| m).collect();
+        for m in stuck {
+            let mut a = self.on_retry_now(m);
+            acts.append(&mut a);
+        }
+        // announce ourselves
+        for &p in self.group() {
+            if p != self.pid {
+                acts.push(Action::Send(p, Wire::Heartbeat { bal: self.cballot }));
+            }
+        }
+    }
+
+    /// retry(m) without the leader-status guard (we just became leader)
+    fn on_retry_now(&mut self, m: MsgId) -> Vec<Action> {
+        let mut acts = Vec::new();
+        let Some(e) = self.entries.get(&m) else { return acts };
+        if e.phase != Phase::Proposed && e.phase != Phase::Accepted {
+            return acts;
+        }
+        self.stats.retries += 1;
+        let wire = Wire::Multicast { meta: e.meta.clone() };
+        let dests: Vec<Pid> = e.meta.dest.iter().map(|g| self.cur_leader[g.0 as usize]).collect();
+        for to in dests {
+            acts.push(Action::Send(to, wire.clone()));
+        }
+        if self.cfg.retry_after > 0 {
+            acts.push(Action::Timer(TimerKind::Retry(m), self.cfg.retry_after));
+        }
+        acts
+    }
+
+    // ---------- leader-selection service (Ω-style, §IV "LSS") ----------
+
+    /// Periodic tick: leaders emit heartbeats (and run GC); followers
+    /// check leader health with rank-staggered timeouts so a single
+    /// stable candidate emerges (Invariant 6).
+    pub(crate) fn on_lss_tick(&mut self, now: u64) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.cfg.hb_interval == 0 {
+            return acts;
+        }
+        acts.push(Action::Timer(TimerKind::LssTick, self.cfg.hb_interval));
+        match self.status {
+            Status::Leader => {
+                for &p in self.group() {
+                    if p != self.pid {
+                        acts.push(Action::Send(p, Wire::Heartbeat { bal: self.cballot }));
+                    }
+                }
+            }
+            Status::Follower | Status::Recovering => {
+                // candidates track their own progress via RecoveryTimeout
+                if self.status == Status::Recovering && self.ballot.leader() == self.pid {
+                    return acts;
+                }
+                if self.cfg.gc && self.status == Status::Follower && !self.max_delivered_gts.is_bot() {
+                    let leader = self.cballot.leader();
+                    if leader != self.pid {
+                        acts.push(Action::Send(leader, Wire::GcReport { max_gts: self.max_delivered_gts }));
+                    }
+                }
+                let timeout = self.cfg.hb_interval * self.cfg.hb_suspect_mult * (1 + self.rank());
+                if now.saturating_sub(self.last_hb) > timeout {
+                    let mut a = self.recover(now);
+                    acts.append(&mut a);
+                }
+            }
+        }
+        acts
+    }
+
+    /// A candidacy that stalls (no quorum of NEWLEADER_ACK/NEWSTATE_ACK)
+    /// restarts with a higher ballot.
+    pub(crate) fn on_recovery_timeout(&mut self, n: u32, now: u64) -> Vec<Action> {
+        if self.status == Status::Recovering && self.ballot.n == n && self.ballot.leader() == self.pid {
+            return self.recover(now);
+        }
+        vec![]
+    }
+}

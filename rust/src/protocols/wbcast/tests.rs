@@ -1,0 +1,306 @@
+//! WbCast unit + small-world integration tests (driven through the
+//! deterministic simulator).
+
+use super::*;
+use crate::client::{Client, ClientCfg};
+use crate::invariants;
+use crate::protocols::Node;
+use crate::sim::{CpuCost, SimConfig, World};
+use crate::types::{GidSet, MsgId, MsgMeta, Topology};
+
+const D: u64 = 1_000_000; // δ = 1 ms
+
+fn world(k: usize, f: usize, n_clients: usize, dest_groups: usize, wb: WbConfig, client: ClientCfg, seed: u64) -> World {
+    let topo = Topology::new(k, f);
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            nodes.push(Box::new(WbNode::new(p, topo.clone(), wb)));
+        }
+    }
+    for c in 0..n_clients {
+        let pid = Pid(topo.first_client_pid().0 + c as u32);
+        let cfg = ClientCfg { dest_groups, ..client.clone() };
+        nodes.push(Box::new(Client::new(pid, topo.clone(), cfg, seed ^ (c as u64 + 1))));
+    }
+    World::new(
+        topo,
+        nodes,
+        SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true },
+    )
+}
+
+#[test]
+fn solo_message_commits_in_3_delta() {
+    // 2 groups, f=1, one client, one request: leaders deliver at exactly 3δ
+    let mut w = world(2, 1, 1, 2, WbConfig::default(), ClientCfg { max_requests: Some(1), ..Default::default() }, 1);
+    w.run_to_quiescence(10_000);
+    invariants::assert_correct(&w.trace);
+    // first delivery in each group at 3δ (MULTICAST, ACCEPT, ACCEPT_ACK)
+    assert_eq!(w.trace.latencies, vec![3 * D, 3 * D]);
+    // followers deliver at 4δ: all 6 members delivered
+    assert_eq!(w.trace.delivered_count, 6);
+    let max_t = w.trace.deliveries.iter().map(|d| d.time).max().unwrap();
+    assert_eq!(max_t, 4 * D);
+}
+
+#[test]
+fn single_group_message_follows_paxos_flow() {
+    let mut w = world(1, 1, 1, 1, WbConfig::default(), ClientCfg { max_requests: Some(1), ..Default::default() }, 2);
+    w.run_to_quiescence(10_000);
+    invariants::assert_correct(&w.trace);
+    assert_eq!(w.trace.latencies, vec![3 * D]);
+}
+
+#[test]
+fn leader_state_after_commit() {
+    let mut w = world(2, 1, 1, 2, WbConfig::default(), ClientCfg { max_requests: Some(1), ..Default::default() }, 3);
+    w.run_to_quiescence(10_000);
+    let m = MsgId::new(w.trace.topo().first_client_pid().0, 1);
+    for g in [Gid(0), Gid(1)] {
+        let leader = w.trace.topo().initial_leader(g);
+        let n = w.node_as::<WbNode>(leader);
+        assert_eq!(n.phase_of(m), Phase::Committed);
+        assert!(n.is_leader());
+        let gts = n.gts_of(m).unwrap();
+        // clock advanced past the global timestamp (Fig. 4 line 14)
+        assert!(n.clock() >= gts.time());
+        assert_eq!(n.stats.committed, 1);
+        assert_eq!(n.stats.delivered, 1);
+    }
+    // followers also delivered and committed via DELIVER
+    let f1 = w.node_as::<WbNode>(Pid(1));
+    assert_eq!(f1.phase_of(m), Phase::Committed);
+    assert_eq!(f1.stats.delivered, 1);
+}
+
+#[test]
+fn concurrent_conflicting_messages_totally_ordered() {
+    // 4 clients × 50 requests to overlapping pairs of 3 groups
+    let mut w = world(
+        3,
+        1,
+        4,
+        2,
+        WbConfig::default(),
+        ClientCfg { max_requests: Some(50), ..Default::default() },
+        0xAB,
+    );
+    w.run_to_quiescence(2_000_000);
+    invariants::assert_correct(&w.trace);
+    assert_eq!(w.trace.completions.len(), 200);
+}
+
+#[test]
+fn client_retransmission_does_not_double_deliver() {
+    // resend interval shorter than the 3δ commit latency forces duplicate
+    // MULTICASTs while the first attempt is still in flight
+    let mut w = world(
+        2,
+        1,
+        2,
+        2,
+        WbConfig::default(),
+        ClientCfg { max_requests: Some(20), resend_after: 2 * D, ..Default::default() },
+        7,
+    );
+    w.run_to_quiescence(4_000_000);
+    invariants::assert_correct(&w.trace);
+    assert_eq!(w.trace.completions.len(), 40);
+}
+
+#[test]
+fn gts_is_max_of_local_timestamps() {
+    let mut w = world(2, 1, 1, 2, WbConfig::default(), ClientCfg { max_requests: Some(1), ..Default::default() }, 4);
+    w.run_to_quiescence(10_000);
+    let m = MsgId::new(w.trace.topo().first_client_pid().0, 1);
+    let l0 = w.node_as::<WbNode>(Pid(0));
+    let l1 = w.node_as::<WbNode>(Pid(3));
+    let gts0 = l0.gts_of(m).unwrap();
+    let gts1 = l1.gts_of(m).unwrap();
+    assert_eq!(gts0, gts1, "groups agree on gts (Invariant 3b)");
+    // both groups proposed (1, g): max is (1, g1)
+    assert_eq!(gts0, Ts::new(1, Gid(1)));
+}
+
+// ---------- recovery ----------
+
+fn crash_world(seed: u64) -> (World, Pid) {
+    // 2 groups, f=1; crash the leader of group 0 mid-run
+    let wb = WbConfig::with_failures(D);
+    let client = ClientCfg { max_requests: Some(30), resend_after: 30 * D, ..Default::default() };
+    let w = world(2, 1, 3, 2, wb, client, seed);
+    (w, Pid(0))
+}
+
+#[test]
+fn leader_crash_recovers_and_terminates() {
+    let (mut w, leader) = crash_world(11);
+    w.crash_at(leader, 5 * D); // mid-protocol for the first wave
+    w.run_until(3_000 * D);
+    invariants::assert_safe(&w.trace);
+    // a new leader took over in group 0
+    let candidates: Vec<Pid> = vec![Pid(1), Pid(2)];
+    let new_leader = candidates.iter().find(|&&p| w.node_as::<WbNode>(p).is_leader());
+    assert!(new_leader.is_some(), "no new leader in group 0");
+    let nl = w.node_as::<WbNode>(*new_leader.unwrap());
+    assert!(nl.cballot() > Ballot::new(1, Pid(0)));
+    assert!(nl.stats.recoveries_completed >= 1);
+    // all 90 requests eventually complete despite the crash
+    assert_eq!(w.trace.completions.len(), 90, "incomplete: {}", w.trace.incomplete());
+    // termination among correct processes
+    let vs = invariants::check_termination(&w.trace);
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn crash_during_recovery_elects_next_candidate() {
+    // f = 2 (5-member groups) so that two crashes in group 0 stay within
+    // the fault bound: the leader p0 and then the first candidate p1.
+    let wb = WbConfig::with_failures(D);
+    let client = ClientCfg { max_requests: Some(30), resend_after: 30 * D, ..Default::default() };
+    let mut w = world(2, 2, 3, 2, wb, client, 13);
+    w.crash_at(Pid(0), 5 * D);
+    // the first candidate (rank 1 = Pid(1)) crashes just as it would be
+    // taking over
+    w.crash_at(Pid(1), 40 * D);
+    w.run_until(5_000 * D);
+    invariants::assert_safe(&w.trace);
+    let survivor_leader = [Pid(2), Pid(3), Pid(4)].iter().find(|&&p| w.node_as::<WbNode>(p).is_leader());
+    assert!(survivor_leader.is_some(), "a surviving member of group 0 must take over");
+    assert_eq!(w.trace.completions.len(), 90, "incomplete: {}", w.trace.incomplete());
+    let vs = invariants::check_termination(&w.trace);
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn deposed_leader_cannot_commit() {
+    // Crash nothing, but force a recovery in group 0 by directly injecting
+    // a NEWLEADER from Pid(1): the old leader is deposed; the system keeps
+    // processing (new messages go through the new leader after clients
+    // learn it from Delivered senders).
+    let wb = WbConfig::with_failures(D);
+    let client = ClientCfg { max_requests: Some(20), resend_after: 30 * D, ..Default::default() };
+    let mut w = world(2, 1, 2, 2, wb, client, 17);
+    // run a bit, then depose
+    w.run_until(10 * D);
+    let b = Ballot::new(2, Pid(1));
+    let acts = {
+        let n1 = w.node_mut(Pid(1));
+        let n1 = (n1 as &mut dyn std::any::Any).downcast_mut::<WbNode>().unwrap();
+        n1.recover(10 * D)
+    };
+    // inject the candidate's NEWLEADER messages by hand
+    for a in acts {
+        if let crate::protocols::Action::Send(to, wire) = a {
+            let out = w.node_mut(to).on_wire(Pid(1), wire, 10 * D);
+            for a2 in out {
+                if let crate::protocols::Action::Send(to2, wire2) = a2 {
+                    let out2 = w.node_mut(to2).on_wire(to, wire2, 10 * D);
+                    for a3 in out2 {
+                        if let crate::protocols::Action::Send(to3, wire3) = a3 {
+                            w.node_mut(to3).on_wire(to2, wire3, 10 * D);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(w.node_as::<WbNode>(Pid(1)).cballot(), b);
+    // keep running: safety must hold throughout
+    w.run_until(3_000 * D);
+    invariants::assert_safe(&w.trace);
+    assert_eq!(w.trace.completions.len(), 40, "incomplete: {}", w.trace.incomplete());
+}
+
+#[test]
+fn gc_trims_delivered_entries() {
+    let wb = WbConfig { gc: true, hb_interval: 2 * D, ..WbConfig::with_failures(D) };
+    let client = ClientCfg { max_requests: Some(50), resend_after: 50 * D, ..Default::default() };
+    let mut w = world(1, 1, 2, 1, wb, client, 23);
+    w.run_until(3_000 * D);
+    invariants::assert_safe(&w.trace);
+    assert_eq!(w.trace.completions.len(), 100);
+    let leader = w.node_as::<WbNode>(Pid(0));
+    assert!(leader.stats.gc_dropped > 0, "GC never ran");
+    assert!(leader.entries.len() < 100, "entries not trimmed: {}", leader.entries.len());
+    // duplicate MULTICAST of a GC'd message re-acks the client
+    let m = MsgId::new(w.trace.topo().first_client_pid().0, 1);
+    let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
+    let acts = {
+        let n = w.node_mut(Pid(0));
+        let n = (n as &mut dyn std::any::Any).downcast_mut::<WbNode>().unwrap();
+        assert_eq!(n.phase_of(m), Phase::Start, "entry should be GC'd");
+        n.on_multicast(meta, 0)
+    };
+    assert!(
+        acts.iter().any(|a| matches!(a, Action::Send(_, Wire::Delivered { .. }))),
+        "GC'd duplicate must re-ack: {acts:?}"
+    );
+}
+
+#[test]
+fn stale_ballot_accept_ack_is_ignored() {
+    let topo = Topology::new(1, 1);
+    let mut n = WbNode::new(Pid(0), topo.clone(), WbConfig::default());
+    let m = MsgId::new(9, 1);
+    let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
+    n.on_multicast(meta.clone(), 0);
+    // ack with a ballot vector from a previous leadership
+    let stale = vec![(Gid(0), Ballot::new(0, Pid(0)))];
+    let acts = n.on_accept_ack(m, Gid(0), stale, Pid(1), 0);
+    assert!(acts.is_empty());
+    assert_eq!(n.phase_of(m), Phase::Proposed);
+}
+
+#[test]
+fn accept_from_recovering_process_is_deferred() {
+    let topo = Topology::new(1, 1);
+    let mut n = WbNode::new(Pid(1), topo.clone(), WbConfig::default());
+    n.status = Status::Recovering;
+    let m = MsgId::new(9, 1);
+    let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
+    let acts = n.on_accept(meta, Gid(0), Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), 0);
+    assert!(acts.is_empty(), "recovering process must not ack");
+}
+
+#[test]
+fn deliver_requires_matching_cballot() {
+    let topo = Topology::new(1, 1);
+    let mut n = WbNode::new(Pid(1), topo.clone(), WbConfig::default());
+    let m = MsgId::new(9, 1);
+    // DELIVER from a ballot we have not synchronised with
+    let acts = n.on_deliver(m, Ballot::new(9, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
+    assert!(acts.is_empty());
+    assert_eq!(n.phase_of(m), Phase::Start);
+    // matching ballot works
+    let acts = n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
+    assert!(acts.iter().any(|a| matches!(a, Action::Deliver(..))));
+    // duplicate (same gts) is dropped by max_delivered_gts
+    let acts = n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
+    assert!(acts.is_empty());
+}
+
+#[test]
+fn follower_ignores_multicast() {
+    let topo = Topology::new(1, 1);
+    let mut n = WbNode::new(Pid(1), topo.clone(), WbConfig::default()); // follower
+    let m = MsgId::new(9, 1);
+    let acts = n.on_multicast(MsgMeta::new(m, GidSet::single(Gid(0)), vec![]), 0);
+    assert!(acts.is_empty());
+    assert_eq!(n.phase_of(m), Phase::Start);
+}
+
+#[test]
+fn heartbeats_keep_followers_from_recovering() {
+    let wb = WbConfig::with_failures(D);
+    let mut w = world(1, 1, 1, 1, wb, ClientCfg { max_requests: Some(5), ..Default::default() }, 31);
+    w.run_until(2_000 * D);
+    // no crash: ballot must still be the initial one everywhere
+    for p in [Pid(0), Pid(1), Pid(2)] {
+        let n = w.node_as::<WbNode>(p);
+        assert_eq!(n.cballot(), Ballot::new(1, Pid(0)), "{p:?} moved ballots without failures");
+        assert_eq!(n.stats.recoveries_started, 0);
+    }
+    invariants::assert_correct(&w.trace);
+}

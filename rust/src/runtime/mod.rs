@@ -1,0 +1,41 @@
+//! Runtime bridge: load and execute the AOT-compiled JAX/Pallas
+//! computations from the Rust hot path via the PJRT C API (`xla` crate).
+//!
+//! * [`engine`] — the XLA batch commit engine (`commit_batch_b*.hlo.txt`)
+//!   and the latency-quantile computation (`quantiles.hlo.txt`).
+//! * [`native`] — a bit-exact pure-Rust fallback, used for single-message
+//!   operation and as the differential-testing oracle for the engine.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2
+//! graph once; everything here consumes HLO *text* (the interchange
+//! format that survives the jax≥0.5 ↔ xla_extension 0.5.1 proto
+//! mismatch — see `python/compile/aot.py`).
+
+pub mod engine;
+pub mod native;
+pub mod service;
+
+pub use engine::{CommitBatchEngine, QuantileEngine};
+pub use native::commit_batch_native;
+pub use service::{spawn_engine, CommitBackend, EngineHandle, NativeBackend, XlaBackend};
+
+use crate::types::{MsgId, Ts};
+
+/// One message in a commit batch: its per-destination-group local
+/// timestamps (already collected from ACCEPT_ACK quorums).
+#[derive(Clone, Debug)]
+pub struct BatchReq {
+    pub m: MsgId,
+    pub lts: Vec<Ts>,
+}
+
+/// Engine verdict for one message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchOut {
+    pub m: MsgId,
+    /// final global timestamp (max of local timestamps)
+    pub gts: Ts,
+    /// `gts < min(pending)` — deliverable once prior committed messages
+    /// are delivered (the coordinator enforces gts order)
+    pub deliverable: bool,
+}

@@ -1,0 +1,65 @@
+//! Pure-Rust fallback for the batch commit computation — bit-exact with
+//! the XLA engine (differential-tested in `rust/tests/engine.rs`) and
+//! used when batches are tiny or the artifacts are absent.
+
+use super::{BatchOut, BatchReq};
+use crate::types::Ts;
+
+/// Compute global timestamps + deliverability for a batch, given the
+/// current pending (PROPOSED/ACCEPTED) local timestamps.
+pub fn commit_batch_native(reqs: &[BatchReq], pending: &[Ts]) -> Vec<BatchOut> {
+    let pmin = pending.iter().copied().min();
+    reqs.iter()
+        .map(|r| {
+            let gts = r.lts.iter().copied().max().expect("empty lts set");
+            let deliverable = match pmin {
+                None => true,
+                Some(p) => gts < p,
+            };
+            BatchOut { m: r.m, gts, deliverable }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Gid, MsgId};
+
+    fn ts(t: u64, g: u32) -> Ts {
+        Ts::new(t, Gid(g))
+    }
+
+    #[test]
+    fn gts_is_lex_max() {
+        let out = commit_batch_native(
+            &[BatchReq { m: MsgId::new(1, 1), lts: vec![ts(5, 0), ts(3, 1)] }],
+            &[],
+        );
+        assert_eq!(out[0].gts, ts(5, 0));
+        assert!(out[0].deliverable);
+    }
+
+    #[test]
+    fn pending_blocks_delivery() {
+        let out = commit_batch_native(
+            &[
+                BatchReq { m: MsgId::new(1, 1), lts: vec![ts(5, 0)] },
+                BatchReq { m: MsgId::new(1, 2), lts: vec![ts(9, 0)] },
+            ],
+            &[ts(7, 1), ts(8, 0)],
+        );
+        assert!(out[0].deliverable, "5 < 7");
+        assert!(!out[1].deliverable, "9 > 7");
+    }
+
+    #[test]
+    fn lex_order_tiebreak_on_group() {
+        let out = commit_batch_native(
+            &[BatchReq { m: MsgId::new(1, 1), lts: vec![ts(5, 0), ts(5, 3)] }],
+            &[ts(5, 4)],
+        );
+        assert_eq!(out[0].gts, ts(5, 3));
+        assert!(out[0].deliverable, "(5,3) < (5,4)");
+    }
+}

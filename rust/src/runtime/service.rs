@@ -1,0 +1,112 @@
+//! Engine service thread: the `xla` crate's PJRT handles are raw
+//! pointers (!Send), so a single dedicated thread owns the
+//! [`CommitBatchEngine`] and serves commit batches over channels. The
+//! [`EngineHandle`] is cheap to clone and `Send`, so protocol nodes and
+//! coordinator threads can all submit work.
+
+use super::{BatchOut, BatchReq, CommitBatchEngine};
+use crate::types::Ts;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+enum Req {
+    Commit { reqs: Vec<BatchReq>, pending: Vec<Ts>, reply: mpsc::Sender<Result<Vec<BatchOut>, String>> },
+    Shutdown,
+}
+
+/// Client side of the engine service.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+impl EngineHandle {
+    /// Synchronous batched commit through the XLA engine.
+    pub fn commit_batch(&self, reqs: Vec<BatchReq>, pending: Vec<Ts>) -> Result<Vec<BatchOut>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Req::Commit { reqs, pending, reply }).map_err(|e| e.to_string())?;
+        rx.recv().map_err(|e| e.to_string())?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+/// Spawn the engine thread; fails fast if the artifacts are missing.
+pub fn spawn_engine(dir: PathBuf) -> Result<EngineHandle> {
+    // load on the caller thread first to surface errors synchronously…
+    // (PJRT handles are !Send, so we must re-load inside the thread)
+    drop(CommitBatchEngine::load(&dir)?);
+    let (tx, rx) = mpsc::channel::<Req>();
+    std::thread::Builder::new()
+        .name("wbam-xla-engine".into())
+        .spawn(move || {
+            let engine = match CommitBatchEngine::load(&dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    log::error!("engine thread failed to load artifacts: {e}");
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Commit { reqs, pending, reply } => {
+                        let out = engine.commit_batch(&reqs, &pending).map_err(|e| e.to_string());
+                        let _ = reply.send(out);
+                    }
+                    Req::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn engine thread");
+    Ok(EngineHandle { tx })
+}
+
+/// The commit backend abstraction protocol nodes call at commit time.
+pub trait CommitBackend: Send {
+    fn commit_batch(&mut self, reqs: &[BatchReq], pending: &[Ts]) -> Vec<BatchOut>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (default).
+pub struct NativeBackend;
+
+impl CommitBackend for NativeBackend {
+    fn commit_batch(&mut self, reqs: &[BatchReq], pending: &[Ts]) -> Vec<BatchOut> {
+        super::native::commit_batch_native(reqs, pending)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// XLA backend: routes through the engine service thread. Falls back to
+/// the native path on engine errors (availability over offload).
+pub struct XlaBackend {
+    handle: EngineHandle,
+    pub fallbacks: u64,
+}
+
+impl XlaBackend {
+    pub fn new(handle: EngineHandle) -> Self {
+        XlaBackend { handle, fallbacks: 0 }
+    }
+}
+
+impl CommitBackend for XlaBackend {
+    fn commit_batch(&mut self, reqs: &[BatchReq], pending: &[Ts]) -> Vec<BatchOut> {
+        match self.handle.commit_batch(reqs.to_vec(), pending.to_vec()) {
+            Ok(out) => out,
+            Err(e) => {
+                log::warn!("XLA engine error ({e}); native fallback");
+                self.fallbacks += 1;
+                super::native::commit_batch_native(reqs, pending)
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,169 @@
+//! Network delay models for the discrete-event simulator.
+//!
+//! All delays are one-way, in nanoseconds. Models are calibrated to the
+//! paper's two testbeds:
+//!
+//! * LAN (CloudLab): ~0.1 ms RTT → 50 µs one-way, small exponential jitter.
+//! * WAN (GCP, 3 data centres): RTTs Oregon↔Virginia 60 ms,
+//!   Virginia↔England 75 ms, Oregon↔England 130 ms.
+
+use crate::types::Pid;
+use crate::util::Rng;
+
+pub const MS: u64 = 1_000_000;
+pub const US: u64 = 1_000;
+
+/// One-way message delay between two processes.
+pub trait DelayModel: Send {
+    fn sample(&self, rng: &mut Rng, from: Pid, to: Pid) -> u64;
+    /// Upper bound δ on failure-free delay (for theory checks / LSS
+    /// timeouts). Jittered models return their ~p99.9 bound.
+    fn delta(&self) -> u64;
+}
+
+/// Constant delay δ for every link — the §V theory setting.
+#[derive(Clone, Copy, Debug)]
+pub struct ConstDelay(pub u64);
+
+impl DelayModel for ConstDelay {
+    fn sample(&self, _rng: &mut Rng, _from: Pid, _to: Pid) -> u64 {
+        self.0
+    }
+    fn delta(&self) -> u64 {
+        self.0
+    }
+}
+
+/// LAN: base one-way delay + exponential jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct LanDelay {
+    pub base: u64,
+    pub jitter_mean: u64,
+}
+
+impl LanDelay {
+    /// Paper's CloudLab network: ~0.1 ms RTT.
+    pub fn cloudlab() -> Self {
+        LanDelay { base: 50 * US, jitter_mean: 5 * US }
+    }
+}
+
+impl DelayModel for LanDelay {
+    fn sample(&self, rng: &mut Rng, _from: Pid, _to: Pid) -> u64 {
+        self.base + rng.exp(self.jitter_mean as f64) as u64
+    }
+    fn delta(&self) -> u64 {
+        self.base + 7 * self.jitter_mean // ~p99.9 of exp jitter
+    }
+}
+
+/// WAN over `k` sites with an explicit one-way delay matrix.
+/// `site_of` maps a process to its data centre.
+#[derive(Clone)]
+pub struct WanDelay {
+    /// one-way delays between sites, ns; `oneway[a][b]`.
+    pub oneway: Vec<Vec<u64>>,
+    pub site_of: std::sync::Arc<dyn Fn(Pid) -> usize + Send + Sync>,
+    pub jitter_mean: u64,
+}
+
+impl WanDelay {
+    /// Paper's GCP deployment: R1=Oregon, R2=N.Virginia, R3=England;
+    /// RTTs 60/75/130 ms. Same-site delay ~0.25 ms one-way.
+    pub fn gcp3(site_of: impl Fn(Pid) -> usize + Send + Sync + 'static) -> Self {
+        let same = 250 * US;
+        let ow = |rtt_ms: u64| rtt_ms * MS / 2;
+        WanDelay {
+            oneway: vec![
+                vec![same, ow(60), ow(130)],
+                vec![ow(60), same, ow(75)],
+                vec![ow(130), ow(75), same],
+            ],
+            site_of: std::sync::Arc::new(site_of),
+            jitter_mean: 500 * US,
+        }
+    }
+}
+
+impl DelayModel for WanDelay {
+    fn sample(&self, rng: &mut Rng, from: Pid, to: Pid) -> u64 {
+        let a = (self.site_of)(from);
+        let b = (self.site_of)(to);
+        self.oneway[a][b] + rng.exp(self.jitter_mean as f64) as u64
+    }
+    fn delta(&self) -> u64 {
+        let max = self.oneway.iter().flatten().copied().max().unwrap_or(0);
+        max + 7 * self.jitter_mean
+    }
+}
+
+/// Constant δ with per-link overrides — used to construct the
+/// adversarial worst-case timings of the §V failure-free-latency
+/// analysis (e.g. Fig. 2's convoy scenario, where one MULTICAST travels
+/// in ~0 while the others take exactly δ).
+pub struct AdversarialDelay {
+    pub base: u64,
+    pub overrides: std::collections::HashMap<(Pid, Pid), u64>,
+}
+
+impl AdversarialDelay {
+    pub fn new(base: u64) -> Self {
+        AdversarialDelay { base, overrides: Default::default() }
+    }
+    pub fn set(mut self, from: Pid, to: Pid, d: u64) -> Self {
+        self.overrides.insert((from, to), d);
+        self
+    }
+}
+
+impl DelayModel for AdversarialDelay {
+    fn sample(&self, _rng: &mut Rng, from: Pid, to: Pid) -> u64 {
+        self.overrides.get(&(from, to)).copied().unwrap_or(self.base)
+    }
+    fn delta(&self) -> u64 {
+        self.base.max(self.overrides.values().copied().max().unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_overrides_links() {
+        let d = AdversarialDelay::new(1000).set(Pid(5), Pid(0), 1);
+        let mut r = Rng::new(0);
+        assert_eq!(d.sample(&mut r, Pid(5), Pid(0)), 1);
+        assert_eq!(d.sample(&mut r, Pid(0), Pid(5)), 1000);
+        assert_eq!(d.delta(), 1000);
+    }
+
+    #[test]
+    fn const_delay_is_constant() {
+        let d = ConstDelay(10 * MS);
+        let mut r = Rng::new(1);
+        assert_eq!(d.sample(&mut r, Pid(0), Pid(1)), 10 * MS);
+        assert_eq!(d.delta(), 10 * MS);
+    }
+
+    #[test]
+    fn lan_jitter_bounded_below_by_base() {
+        let d = LanDelay::cloudlab();
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            assert!(d.sample(&mut r, Pid(0), Pid(1)) >= d.base);
+        }
+    }
+
+    #[test]
+    fn wan_matrix_symmetric_sites() {
+        let d = WanDelay::gcp3(|p| p.0 as usize % 3);
+        let mut r = Rng::new(3);
+        // Oregon -> England one-way is at least 65ms
+        let s = d.sample(&mut r, Pid(0), Pid(2));
+        assert!(s >= 65 * MS, "{s}");
+        // same site is sub-ms plus jitter
+        let s = d.sample(&mut r, Pid(0), Pid(3));
+        assert!(s < 10 * MS);
+    }
+}

@@ -1,0 +1,481 @@
+//! Deterministic discrete-event simulator.
+//!
+//! Runs a set of [`Node`] state machines over a virtual network with a
+//! pluggable [`DelayModel`], a per-process CPU cost model (single-threaded
+//! servers with a busy-until queue, which produces the saturation knees of
+//! the paper's throughput figures), FIFO reliable channels, and crash
+//! injection. Every run is a pure function of `(nodes, config, seed)`.
+
+pub mod delay;
+pub mod trace;
+
+pub use delay::{ConstDelay, DelayModel, LanDelay, WanDelay, MS, US};
+pub use trace::{DeliveryEv, Trace};
+
+use crate::protocols::{Action, Node, TimerKind};
+use crate::types::{Pid, Topology, Wire};
+use crate::util::{FxHashMap, Rng};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Per-event CPU cost model. `zero()` gives the idealised §V setting where
+/// local steps are instantaneous.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuCost {
+    /// fixed cost of handling any message/timer
+    pub recv_ns: u64,
+    /// additional cost per payload byte
+    pub per_byte_ns: u64,
+    /// cost per emitted message
+    pub send_ns: u64,
+    /// extra cost for handling a black-box consensus message (log slot
+    /// bookkeeping, command (de)serialisation, RSM apply machinery) —
+    /// the "overhead introduced by its parallel execution paths" the
+    /// paper measures for FastCast/FT-Skeen in the CPU-bound LAN runs
+    /// (§VI); calibrated in EXPERIMENTS.md §Calibration
+    pub paxos_extra_ns: u64,
+}
+
+impl CpuCost {
+    pub fn zero() -> Self {
+        CpuCost { recv_ns: 0, per_byte_ns: 0, send_ns: 0, paxos_extra_ns: 0 }
+    }
+    /// Calibrated to a libevent-style C server on a 10-core Xeon:
+    /// a few µs of syscall + protocol work per message, with consensus
+    /// messages paying the black-box machinery on top (see
+    /// EXPERIMENTS.md §Calibration).
+    pub fn lan_server() -> Self {
+        CpuCost { recv_ns: 1_500, per_byte_ns: 2, send_ns: 1_000, paxos_extra_ns: 12_000 }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    Arrival { from: Pid, wire: Wire },
+    Timer(TimerKind),
+    Crash,
+    /// wake a busy process to work through its backlog queue
+    Drain,
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    time: u64,
+    seq: u64,
+    to: Pid,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        (self.time, self.seq) == (other.time, other.seq)
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Simulator configuration.
+pub struct SimConfig {
+    pub delay: Box<dyn DelayModel>,
+    pub cpu: CpuCost,
+    pub seed: u64,
+    /// record full delivery trace (correctness checks)
+    pub record_full: bool,
+}
+
+impl SimConfig {
+    pub fn theory(delta: u64) -> Self {
+        SimConfig { delay: Box::new(ConstDelay(delta)), cpu: CpuCost::zero(), seed: 0, record_full: true }
+    }
+}
+
+/// The virtual world: nodes + network + clock.
+pub struct World {
+    nodes: Vec<Box<dyn Node>>,
+    pid_index: FxHashMap<Pid, usize>,
+    heap: BinaryHeap<Reverse<Event>>,
+    now: u64,
+    seq: u64,
+    rng: Rng,
+    delay: Box<dyn DelayModel>,
+    cpu: CpuCost,
+    busy_until: Vec<u64>,
+    crashed: Vec<bool>,
+    /// per-process backlog of events that arrived while busy (FIFO);
+    /// drained one per `Drain` wake-up — keeps saturation O(1) per event
+    backlog: Vec<std::collections::VecDeque<EventKind>>,
+    drain_scheduled: Vec<bool>,
+    /// last scheduled arrival per (from, to): reliable FIFO channels
+    fifo_last: FxHashMap<(Pid, Pid), u64>,
+    /// per-node count of received protocol messages (genuineness checks)
+    pub arrivals: FxHashMap<Pid, u64>,
+    pub trace: Trace,
+    started: bool,
+    /// debug: print every handled event (env `WBAM_SIM_LOG=1`)
+    pub log_events: bool,
+}
+
+impl World {
+    pub fn new(topo: Topology, nodes: Vec<Box<dyn Node>>, cfg: SimConfig) -> Self {
+        let pid_index = nodes.iter().enumerate().map(|(i, n)| (n.pid(), i)).collect();
+        let n = nodes.len();
+        World {
+            pid_index,
+            nodes,
+            heap: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            rng: Rng::new(cfg.seed),
+            delay: cfg.delay,
+            cpu: cfg.cpu,
+            busy_until: vec![0; n],
+            crashed: vec![false; n],
+            backlog: vec![Default::default(); n],
+            drain_scheduled: vec![false; n],
+            fifo_last: Default::default(),
+            arrivals: Default::default(),
+            trace: Trace::new(topo, cfg.record_full),
+            started: false,
+            log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn delta(&self) -> u64 {
+        self.delay.delta()
+    }
+
+    fn push(&mut self, time: u64, to: Pid, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time, seq: self.seq, to, kind }));
+    }
+
+    /// Schedule a crash of `pid` at virtual time `time`.
+    pub fn crash_at(&mut self, pid: Pid, time: u64) {
+        self.push(time, pid, EventKind::Crash);
+    }
+
+    fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        for i in 0..self.nodes.len() {
+            let pid = self.nodes[i].pid();
+            let acts = self.nodes[i].on_start(0);
+            self.apply(pid, 0, acts);
+        }
+    }
+
+    fn apply(&mut self, pid: Pid, done_at: u64, acts: Vec<Action>) {
+        for a in acts {
+            match a {
+                Action::Send(to, wire) => {
+                    self.trace.sends += 1;
+                    self.trace.send_bytes += wire.size() as u64;
+                    if let Wire::Multicast { meta } = &wire {
+                        self.trace.on_multicast(done_at, meta.id, meta.dest);
+                    }
+                    let arr = if to == pid {
+                        done_at // self-sends are local
+                    } else {
+                        done_at + self.delay.sample(&mut self.rng, pid, to)
+                    };
+                    // reliable FIFO channel: never reorder within a link
+                    let key = (pid, to);
+                    let last = self.fifo_last.get(&key).copied().unwrap_or(0);
+                    let arr = arr.max(last);
+                    self.fifo_last.insert(key, arr);
+                    self.push(arr, to, EventKind::Arrival { from: pid, wire });
+                }
+                Action::Deliver(m, gts) => {
+                    self.trace.on_deliver(done_at, pid, m, gts);
+                }
+                Action::Timer(kind, after) => {
+                    self.push(done_at + after, pid, EventKind::Timer(kind));
+                }
+            }
+        }
+    }
+
+    /// Process one event. Returns `false` when the event queue is empty.
+    pub fn step(&mut self) -> bool {
+        self.start();
+        let Some(Reverse(ev)) = self.heap.pop() else { return false };
+        self.now = ev.time;
+        let Some(&idx) = self.pid_index.get(&ev.to) else { return true };
+        if self.crashed[idx] {
+            return true; // drop events to crashed processes
+        }
+        match ev.kind {
+            EventKind::Crash => {
+                self.crashed[idx] = true;
+                self.backlog[idx].clear();
+                self.trace.on_crash(ev.time, ev.to);
+                self.nodes[idx].on_crash(ev.time);
+            }
+            EventKind::Drain => {
+                self.drain_scheduled[idx] = false;
+                if let Some(kind) = self.backlog[idx].pop_front() {
+                    self.process(idx, ev.to, ev.time, kind);
+                }
+                if !self.backlog[idx].is_empty() {
+                    self.drain_scheduled[idx] = true;
+                    self.push(self.busy_until[idx], ev.to, EventKind::Drain);
+                }
+            }
+            EventKind::Arrival { .. } | EventKind::Timer(_) => {
+                // single-threaded server: queue behind in-progress work
+                // (FIFO backlog + one Drain wake-up keeps this O(1) per
+                // event even at saturation)
+                if self.drain_scheduled[idx] || self.busy_until[idx] > ev.time {
+                    self.backlog[idx].push_back(ev.kind);
+                    if !self.drain_scheduled[idx] {
+                        self.drain_scheduled[idx] = true;
+                        self.push(self.busy_until[idx], ev.to, EventKind::Drain);
+                    }
+                    return true;
+                }
+                self.process(idx, ev.to, ev.time, ev.kind);
+            }
+        }
+        true
+    }
+
+    /// Execute one node event at `time`, charging the CPU cost model.
+    fn process(&mut self, idx: usize, to: Pid, time: u64, kind: EventKind) {
+        let (cost_in, acts) = match kind {
+            EventKind::Arrival { from, wire } => {
+                *self.arrivals.entry(to).or_insert(0) += 1;
+                let bytes = wire.size() as u64;
+                let extra = if matches!(wire, Wire::Paxos { .. }) { self.cpu.paxos_extra_ns } else { 0 };
+                if self.log_events {
+                    eprintln!("[{:>12}] {:?} -> {:?}: {:?}", time, from, to, wire);
+                }
+                let acts = self.nodes[idx].on_wire(from, wire, time);
+                (self.cpu.recv_ns + self.cpu.per_byte_ns * bytes + extra, acts)
+            }
+            EventKind::Timer(k) => {
+                let acts = self.nodes[idx].on_timer(k, time);
+                (self.cpu.recv_ns, acts)
+            }
+            _ => unreachable!(),
+        };
+        let sends = acts.iter().filter(|a| matches!(a, Action::Send(..))).count() as u64;
+        let cost = cost_in + self.cpu.send_ns * sends;
+        let done_at = time + cost;
+        self.busy_until[idx] = done_at;
+        self.apply(to, done_at, acts);
+    }
+
+    /// Run until the virtual clock reaches `t` (or the queue drains).
+    pub fn run_until(&mut self, t: u64) {
+        self.start();
+        while let Some(Reverse(ev)) = self.heap.peek() {
+            if ev.time > t {
+                break;
+            }
+            self.step();
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Run until the event queue is empty (quiescence). Panics after
+    /// `max_events` to catch livelock in tests.
+    pub fn run_to_quiescence(&mut self, max_events: u64) {
+        self.start();
+        let mut n = 0u64;
+        while self.step() {
+            n += 1;
+            assert!(n < max_events, "no quiescence after {max_events} events");
+        }
+    }
+
+    /// Access a node (for test inspection). Panics on unknown pid.
+    pub fn node(&self, pid: Pid) -> &dyn Node {
+        &*self.nodes[self.pid_index[&pid]]
+    }
+    pub fn node_mut(&mut self, pid: Pid) -> &mut (dyn Node + 'static) {
+        &mut *self.nodes[self.pid_index[&pid]]
+    }
+    /// Typed access to a node (dyn upcast to `Any`, then downcast).
+    pub fn node_as<T: 'static>(&self, pid: Pid) -> &T {
+        let n: &dyn Node = &*self.nodes[self.pid_index[&pid]];
+        (n as &dyn std::any::Any).downcast_ref::<T>().expect("node type mismatch")
+    }
+    pub fn is_crashed(&self, pid: Pid) -> bool {
+        self.crashed[self.pid_index[&pid]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Ts};
+
+    /// A node that echoes every MULTICAST back as DELIVERED after
+    /// re-sending it to a peer once.
+    struct Echo {
+        pid: Pid,
+        peer: Pid,
+        got: Vec<(u64, MsgId)>,
+    }
+    impl Node for Echo {
+        fn pid(&self) -> Pid {
+            self.pid
+        }
+        fn on_start(&mut self, _now: u64) -> Vec<Action> {
+            vec![]
+        }
+        fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
+            match wire {
+                Wire::Multicast { meta } => {
+                    self.got.push((now, meta.id));
+                    vec![Action::Send(self.peer, Wire::Delivered { m: meta.id, g: Gid(0), gts: Ts::BOT })]
+                }
+                Wire::Delivered { m, .. } => {
+                    self.got.push((now, m));
+                    let _ = from;
+                    vec![]
+                }
+                _ => vec![],
+            }
+        }
+        fn on_timer(&mut self, _t: TimerKind, _now: u64) -> Vec<Action> {
+            vec![]
+        }
+    }
+
+    struct Kick {
+        pid: Pid,
+        to: Pid,
+        n: u32,
+    }
+    impl Node for Kick {
+        fn pid(&self) -> Pid {
+            self.pid
+        }
+        fn on_start(&mut self, _now: u64) -> Vec<Action> {
+            (0..self.n)
+                .map(|i| {
+                    Action::Send(
+                        self.to,
+                        Wire::Multicast { meta: MsgMeta::new(MsgId::new(self.pid.0, i), GidSet::single(Gid(0)), vec![]) },
+                    )
+                })
+                .collect()
+        }
+        fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64) -> Vec<Action> {
+            vec![]
+        }
+        fn on_timer(&mut self, _t: TimerKind, _n: u64) -> Vec<Action> {
+            vec![]
+        }
+    }
+
+    #[test]
+    fn const_delay_and_fifo() {
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Kick { pid: Pid(1), to: Pid(0), n: 5 }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let mut w = World::new(topo, nodes, SimConfig::theory(1000));
+        w.run_to_quiescence(1000);
+        // All 5 arrive at t=1000 in FIFO order.
+        let echo = w.node_as::<Echo>(Pid(0));
+        assert_eq!(echo.got.len(), 5);
+        assert!(echo.got.iter().all(|&(t, _)| t == 1000));
+        let seqs: Vec<u32> = echo.got.iter().map(|&(_, m)| m.seq()).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cpu_cost_serialises_processing() {
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Kick { pid: Pid(1), to: Pid(0), n: 3 }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let cfg = SimConfig {
+            delay: Box::new(ConstDelay(1000)),
+            cpu: CpuCost { recv_ns: 100, per_byte_ns: 0, send_ns: 0, paxos_extra_ns: 0 },
+            seed: 0,
+            record_full: true,
+        };
+        let mut w = World::new(topo, nodes, cfg);
+        w.run_to_quiescence(1000);
+        let echo = w.node_as::<Echo>(Pid(0));
+        // arrivals at 1000; processing serialises at 1000, 1100, 1200
+        let times: Vec<u64> = echo.got.iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![1000, 1100, 1200]);
+    }
+
+    #[test]
+    fn crashed_node_receives_nothing() {
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Kick { pid: Pid(1), to: Pid(0), n: 1 }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let mut w = World::new(topo, nodes, SimConfig::theory(1000));
+        w.crash_at(Pid(0), 500);
+        w.run_to_quiescence(1000);
+        let echo = w.node_as::<Echo>(Pid(0));
+        assert!(echo.got.is_empty());
+        assert!(w.is_crashed(Pid(0)));
+        assert_eq!(w.trace.crashes, vec![(500, Pid(0))]);
+    }
+
+    #[test]
+    fn timers_fire_in_order() {
+        struct T {
+            pid: Pid,
+            fired: Vec<(u64, TimerKind)>,
+        }
+        impl Node for T {
+            fn pid(&self) -> Pid {
+                self.pid
+            }
+            fn on_start(&mut self, _n: u64) -> Vec<Action> {
+                vec![
+                    Action::Timer(TimerKind::LssTick, 500),
+                    Action::Timer(TimerKind::ClientNext, 200),
+                    Action::Timer(TimerKind::BatchFlush, 900),
+                ]
+            }
+            fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64) -> Vec<Action> {
+                vec![]
+            }
+            fn on_timer(&mut self, t: TimerKind, now: u64) -> Vec<Action> {
+                self.fired.push((now, t));
+                vec![]
+            }
+        }
+        let topo = Topology::new(1, 0);
+        let mut w = World::new(topo, vec![Box::new(T { pid: Pid(0), fired: vec![] })], SimConfig::theory(10));
+        w.run_to_quiescence(100);
+        let t = w.node_as::<T>(Pid(0));
+        assert_eq!(
+            t.fired,
+            vec![(200, TimerKind::ClientNext), (500, TimerKind::LssTick), (900, TimerKind::BatchFlush)]
+        );
+    }
+
+    #[test]
+    fn ballot_unused_silence_compiler() {
+        let _ = Ballot::BOT;
+    }
+}

@@ -1,0 +1,188 @@
+//! Run observability: online latency/throughput accounting plus an
+//! optional full event trace for correctness checking.
+
+use crate::types::{GidSet, MsgId, Pid, Topology, Ts};
+use std::collections::HashMap;
+
+/// A delivery observed at a process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeliveryEv {
+    pub time: u64,
+    pub pid: Pid,
+    pub m: MsgId,
+    pub gts: Ts,
+}
+
+/// Latency bookkeeping for one in-flight multicast.
+#[derive(Clone, Debug)]
+struct Inflight {
+    sent_at: u64,
+    dest: GidSet,
+    /// groups in which some process has already delivered
+    first_delivered: GidSet,
+}
+
+/// Aggregated + optional full-resolution record of a run.
+pub struct Trace {
+    topo: Topology,
+    /// Record every delivery event (needed by the correctness checkers;
+    /// disable for long throughput runs).
+    pub record_full: bool,
+    pub multicasts: HashMap<MsgId, (u64, GidSet)>,
+    pub deliveries: Vec<DeliveryEv>,
+    pub crashes: Vec<(u64, Pid)>,
+    /// first-delivery latency samples (ns), one per (message, dest group)
+    pub latencies: Vec<u64>,
+    /// completion times of fully (partially-per-§II) delivered multicasts
+    pub completions: Vec<u64>,
+    inflight: HashMap<MsgId, Inflight>,
+    pub sends: u64,
+    pub send_bytes: u64,
+    pub delivered_count: u64,
+}
+
+impl Trace {
+    pub fn new(topo: Topology, record_full: bool) -> Self {
+        Trace {
+            topo,
+            record_full,
+            multicasts: HashMap::new(),
+            deliveries: Vec::new(),
+            crashes: Vec::new(),
+            latencies: Vec::new(),
+            completions: Vec::new(),
+            inflight: HashMap::new(),
+            sends: 0,
+            send_bytes: 0,
+            delivered_count: 0,
+        }
+    }
+
+    /// Record the (first) multicast of `m`.
+    pub fn on_multicast(&mut self, time: u64, m: MsgId, dest: GidSet) {
+        if self.multicasts.contains_key(&m) {
+            return; // client retransmission
+        }
+        self.multicasts.insert(m, (time, dest));
+        self.inflight.insert(m, Inflight { sent_at: time, dest, first_delivered: GidSet::EMPTY });
+    }
+
+    /// Record a local delivery at `pid`.
+    pub fn on_deliver(&mut self, time: u64, pid: Pid, m: MsgId, gts: Ts) {
+        self.delivered_count += 1;
+        if self.record_full {
+            self.deliveries.push(DeliveryEv { time, pid, m, gts });
+        }
+        let Some(g) = self.topo.group_of(pid) else { return };
+        if let Some(fl) = self.inflight.get_mut(&m) {
+            if !fl.first_delivered.contains(g) {
+                fl.first_delivered.insert(g);
+                self.latencies.push(time.saturating_sub(fl.sent_at));
+                if fl.first_delivered == fl.dest {
+                    self.completions.push(time);
+                    self.inflight.remove(&m);
+                }
+            }
+        }
+    }
+
+    pub fn on_crash(&mut self, time: u64, pid: Pid) {
+        self.crashes.push((time, pid));
+    }
+
+    /// Messages multicast but not yet delivered in all destination groups.
+    pub fn incomplete(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Mean first-delivery latency (ns) over all (message, group) samples.
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return f64::NAN;
+        }
+        self.latencies.iter().map(|&x| x as f64).sum::<f64>() / self.latencies.len() as f64
+    }
+
+    pub fn max_latency(&self) -> u64 {
+        self.latencies.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Completed multicasts per second over `[from, to)` (ns).
+    pub fn throughput(&self, from: u64, to: u64) -> f64 {
+        let n = self.completions.iter().filter(|&&t| t >= from && t < to).count();
+        n as f64 / ((to - from) as f64 / 1e9)
+    }
+
+    /// Bin completions into `bin_ns` buckets over `[0, horizon)` —
+    /// used by the Fig. 11 recovery timeline.
+    pub fn throughput_bins(&self, bin_ns: u64, horizon: u64) -> Vec<f64> {
+        let n = horizon.div_ceil(bin_ns) as usize;
+        let mut bins = vec![0f64; n];
+        for &t in &self.completions {
+            if t < horizon {
+                bins[((t / bin_ns) as usize).min(n - 1)] += 1.0;
+            }
+        }
+        let scale = 1e9 / bin_ns as f64;
+        for b in &mut bins {
+            *b *= scale;
+        }
+        bins
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Gid;
+
+    #[test]
+    fn latency_and_completion_accounting() {
+        let topo = Topology::new(2, 1);
+        let mut tr = Trace::new(topo, true);
+        let m = MsgId::new(9, 1);
+        let dest = GidSet::from_iter([Gid(0), Gid(1)]);
+        tr.on_multicast(100, m, dest);
+        // duplicate multicast ignored
+        tr.on_multicast(150, m, dest);
+        tr.on_deliver(300, Pid(0), m, Ts::new(1, Gid(0))); // g0 first
+        tr.on_deliver(350, Pid(1), m, Ts::new(1, Gid(0))); // g0 again: no sample
+        assert_eq!(tr.latencies, vec![200]);
+        assert_eq!(tr.completions.len(), 0);
+        assert_eq!(tr.incomplete(), 1);
+        tr.on_deliver(400, Pid(3), m, Ts::new(1, Gid(0))); // g1
+        assert_eq!(tr.latencies, vec![200, 300]);
+        assert_eq!(tr.completions, vec![400]);
+        assert_eq!(tr.incomplete(), 0);
+        assert_eq!(tr.delivered_count, 3);
+    }
+
+    #[test]
+    fn client_deliveries_ignored_for_latency() {
+        let topo = Topology::new(1, 1);
+        let mut tr = Trace::new(topo, false);
+        let m = MsgId::new(1, 1);
+        tr.on_multicast(0, m, GidSet::single(Gid(0)));
+        tr.on_deliver(10, Pid(99), m, Ts::BOT); // client pid: not a member
+        assert!(tr.latencies.is_empty());
+    }
+
+    #[test]
+    fn throughput_bins_scale() {
+        let topo = Topology::new(1, 1);
+        let mut tr = Trace::new(topo, false);
+        // 4 completions in the first second, 2 in the second
+        for (i, t) in [100, 200, 300, 400, 1_300_000_000u64, 1_600_000_000].iter().enumerate() {
+            let m = MsgId::new(1, i as u32);
+            tr.on_multicast(0, m, GidSet::single(Gid(0)));
+            tr.on_deliver(*t, Pid(0), m, Ts::new(i as u64 + 1, Gid(0)));
+        }
+        let bins = tr.throughput_bins(1_000_000_000, 2_000_000_000);
+        assert_eq!(bins, vec![4.0, 2.0]);
+        assert!((tr.throughput(0, 2_000_000_000) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Metrics: log-bucketed latency histogram (HdrHistogram-style, built
+//! in-repo — the offline image has no hdrhistogram crate), percentile
+//! estimation and throughput time-bins.
+
+/// Log-bucketed histogram for latencies in nanoseconds.
+///
+/// Buckets have ~2% relative width (64 sub-buckets per octave), covering
+/// 1 ns .. ~584 years; memory is a flat `Vec<u64>`.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+
+fn bucket_of(v: u64) -> usize {
+    let v = v.max(1);
+    let msb = 63 - v.leading_zeros() as u64;
+    if msb < SUB_BITS as u64 {
+        return v as usize;
+    }
+    let shift = msb - SUB_BITS as u64;
+    let sub = (v >> shift) - SUB;
+    ((msb - SUB_BITS as u64 + 1) * SUB as u64 + sub) as usize
+}
+
+fn bucket_lower(b: usize) -> u64 {
+    let b = b as u64;
+    if b < SUB * 2 {
+        return b.min(SUB * 2 - 1).max(0);
+    }
+    let octave = b / SUB - 1;
+    let sub = b % SUB;
+    (SUB + sub) << octave
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; bucket_of(u64::MAX) + 1], total: 0, sum: 0.0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0, 1] (bucket lower bound; ≤2% error).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_lower(b).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Raw (quantile, value) sketch rows for the XLA quantile artifact /
+    /// reporting.
+    pub fn snapshot(&self, qs: &[f64]) -> Vec<(f64, u64)> {
+        qs.iter().map(|&q| (q, self.quantile(q))).collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn exact_for_small_values() {
+        let mut h = Histogram::new();
+        for v in 1..=50 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 50);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 50);
+        assert_eq!(h.p50(), 25);
+        assert!((h.mean() - 25.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        prop::check(50, |r: &mut Rng| {
+            let mut h = Histogram::new();
+            let mut vals: Vec<u64> = (0..500).map(|_| r.range(1, 10_000_000_000)).collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            for &(q, idx) in &[(0.5f64, 249usize), (0.9, 449), (0.99, 494)] {
+                let est = h.quantile(q);
+                let tru = vals[idx];
+                let rel = (est as f64 - tru as f64).abs() / tru as f64;
+                assert!(rel < 0.05, "q={q}: est {est} vs true {tru} (rel {rel})");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut r = Rng::new(3);
+        for _ in 0..200 {
+            let v = r.range(1, 1_000_000);
+            if r.chance(0.5) {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.p50(), c.p50());
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn bucket_bounds_consistent() {
+        for v in [1u64, 2, 63, 64, 65, 127, 128, 1000, 1 << 20, (1 << 40) + 12345] {
+            let b = bucket_of(v);
+            let lo = bucket_lower(b);
+            assert!(lo <= v, "v={v} b={b} lo={lo}");
+            assert!(bucket_of(lo) == b || lo == 0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.mean().is_nan());
+        assert_eq!(h.quantile(0.5), 0);
+    }
+}

@@ -1,0 +1,374 @@
+//! Core protocol types: identifiers, lexicographic timestamps, ballots,
+//! phases, group topology and the wire-message enum shared by all
+//! protocol implementations.
+
+pub mod wire;
+
+pub use wire::{MsgMeta, PaxosMsg, Wire};
+
+use std::fmt;
+
+/// Process identifier, unique across the whole deployment (group members
+/// and clients alike).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Pid(pub u32);
+
+/// Group identifier.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Gid(pub u32);
+
+/// Application-message identifier: `(client << 32) | sequence`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct MsgId(pub u64);
+
+impl MsgId {
+    pub fn new(client: u32, seq: u32) -> Self {
+        MsgId(((client as u64) << 32) | seq as u64)
+    }
+    pub fn client(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+    pub fn seq(self) -> u32 {
+        self.0 as u32
+    }
+}
+
+impl fmt::Debug for Pid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+impl fmt::Debug for Gid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "g{}", self.0)
+    }
+}
+impl fmt::Debug for MsgId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}.{}", self.client(), self.seq())
+    }
+}
+impl fmt::Display for Pid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+impl fmt::Display for Gid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+impl fmt::Display for MsgId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// A set of destination groups, encoded as a bitmask (≤ 64 groups, the
+/// paper's deployments use 10).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct GidSet(pub u64);
+
+impl GidSet {
+    pub const EMPTY: GidSet = GidSet(0);
+
+    pub fn single(g: Gid) -> Self {
+        GidSet(1 << g.0)
+    }
+    pub fn from_iter<I: IntoIterator<Item = Gid>>(it: I) -> Self {
+        let mut s = 0u64;
+        for g in it {
+            assert!(g.0 < 64, "GidSet supports at most 64 groups");
+            s |= 1 << g.0;
+        }
+        GidSet(s)
+    }
+    pub fn contains(self, g: Gid) -> bool {
+        g.0 < 64 && self.0 & (1 << g.0) != 0
+    }
+    pub fn insert(&mut self, g: Gid) {
+        assert!(g.0 < 64);
+        self.0 |= 1 << g.0;
+    }
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+    pub fn intersects(self, other: GidSet) -> bool {
+        self.0 & other.0 != 0
+    }
+    pub fn iter(self) -> impl Iterator<Item = Gid> {
+        let mut bits = self.0;
+        std::iter::from_fn(move || {
+            if bits == 0 {
+                None
+            } else {
+                let g = bits.trailing_zeros();
+                bits &= bits - 1;
+                Some(Gid(g))
+            }
+        })
+    }
+}
+
+impl fmt::Debug for GidSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, g) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{g:?}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// A multicast timestamp `(t, g)`, ordered lexicographically (§III).
+/// `Ts::BOT` (`t = 0`) is the minimal timestamp ⊥; real timestamps always
+/// have `t ≥ 1` because clocks are incremented before assignment.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ts {
+    pub t: u64,
+    pub g: Gid,
+}
+
+impl Ts {
+    pub const BOT: Ts = Ts { t: 0, g: Gid(0) };
+
+    pub fn new(t: u64, g: Gid) -> Self {
+        Ts { t, g }
+    }
+    pub fn time(self) -> u64 {
+        self.t
+    }
+    pub fn is_bot(self) -> bool {
+        self.t == 0
+    }
+
+    /// Encode as a single `i64` lane for the XLA batch engine:
+    /// `t << 8 | g` preserves the lexicographic order for `g < 256`.
+    pub fn encode(self) -> i64 {
+        debug_assert!(self.g.0 < 256);
+        debug_assert!(self.t < (1 << 55));
+        ((self.t << 8) | self.g.0 as u64) as i64
+    }
+    pub fn decode(enc: i64) -> Ts {
+        let enc = enc as u64;
+        Ts { t: enc >> 8, g: Gid((enc & 0xFF) as u32) }
+    }
+}
+
+impl fmt::Debug for Ts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_bot() {
+            write!(f, "⊥")
+        } else {
+            write!(f, "({},{:?})", self.t, self.g)
+        }
+    }
+}
+
+/// A ballot `(n, p)` identifying a leadership period of process `p`
+/// within its group, ordered lexicographically. `Ballot::BOT` is ⊥.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Ballot {
+    pub n: u32,
+    pub p: Pid,
+}
+
+impl Ballot {
+    pub const BOT: Ballot = Ballot { n: 0, p: Pid(0) };
+
+    pub fn new(n: u32, p: Pid) -> Self {
+        Ballot { n, p }
+    }
+    pub fn leader(self) -> Pid {
+        self.p
+    }
+    pub fn is_bot(self) -> bool {
+        self.n == 0
+    }
+    /// The successor ballot led by `p`.
+    pub fn next_for(self, p: Pid) -> Ballot {
+        Ballot { n: self.n + 1, p }
+    }
+}
+
+impl fmt::Debug for Ballot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_bot() {
+            write!(f, "⊥b")
+        } else {
+            write!(f, "b({},{:?})", self.n, self.p)
+        }
+    }
+}
+
+/// Phase of an application message at a process (Fig. 3).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Default)]
+pub enum Phase {
+    #[default]
+    Start,
+    Proposed,
+    Accepted,
+    Committed,
+}
+
+/// Process status (Fig. 3).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Status {
+    Leader,
+    Follower,
+    Recovering,
+}
+
+/// Static deployment topology: disjoint groups of `2f + 1` processes each.
+/// Clients are processes outside all groups.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Members of each group; `groups[g][0]` is the initial leader.
+    pub groups: Vec<Vec<Pid>>,
+    /// Fault threshold per group (`|group| = 2f + 1`).
+    pub f: usize,
+}
+
+impl Topology {
+    /// Build a topology of `k` groups with `2f + 1` members each.
+    /// Pids `0 .. k*(2f+1)` are group members (group-major); clients get
+    /// pids from [`Topology::first_client_pid`] upward.
+    pub fn new(k: usize, f: usize) -> Self {
+        assert!(k >= 1 && k <= 64);
+        let gsize = 2 * f + 1;
+        let groups = (0..k)
+            .map(|g| (0..gsize).map(|i| Pid((g * gsize + i) as u32)).collect())
+            .collect();
+        Topology { groups, f }
+    }
+
+    pub fn group_size(&self) -> usize {
+        2 * self.f + 1
+    }
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+    /// Size of a quorum in any group (`f + 1`).
+    pub fn quorum(&self) -> usize {
+        self.f + 1
+    }
+    /// Total number of group-member processes.
+    pub fn num_members(&self) -> usize {
+        self.groups.len() * self.group_size()
+    }
+    /// First pid usable for clients.
+    pub fn first_client_pid(&self) -> Pid {
+        Pid(self.num_members() as u32)
+    }
+    /// Group of a member pid, if any.
+    pub fn group_of(&self, p: Pid) -> Option<Gid> {
+        let n = self.num_members() as u32;
+        if p.0 < n {
+            Some(Gid(p.0 / self.group_size() as u32))
+        } else {
+            None
+        }
+    }
+    pub fn members(&self, g: Gid) -> &[Pid] {
+        &self.groups[g.0 as usize]
+    }
+    /// Initial (ballot-⊥-successor) leader of a group.
+    pub fn initial_leader(&self, g: Gid) -> Pid {
+        self.groups[g.0 as usize][0]
+    }
+    pub fn is_member(&self, p: Pid, g: Gid) -> bool {
+        self.group_of(p) == Some(g)
+    }
+    /// All group ids.
+    pub fn gids(&self) -> impl Iterator<Item = Gid> + '_ {
+        (0..self.groups.len() as u32).map(Gid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ts_lex_order() {
+        let a = Ts::new(1, Gid(5));
+        let b = Ts::new(2, Gid(0));
+        let c = Ts::new(2, Gid(1));
+        assert!(Ts::BOT < a);
+        assert!(a < b);
+        assert!(b < c);
+    }
+
+    #[test]
+    fn ts_encode_roundtrip_and_order() {
+        let cases = [
+            Ts::BOT,
+            Ts::new(1, Gid(0)),
+            Ts::new(1, Gid(63)),
+            Ts::new(2, Gid(0)),
+            Ts::new(1 << 40, Gid(9)),
+        ];
+        for &a in &cases {
+            assert_eq!(Ts::decode(a.encode()), a);
+            for &b in &cases {
+                assert_eq!(a.cmp(&b), a.encode().cmp(&b.encode()), "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ballot_order_and_next() {
+        let b1 = Ballot::new(1, Pid(3));
+        let b2 = Ballot::new(1, Pid(4));
+        let b3 = Ballot::new(2, Pid(0));
+        assert!(Ballot::BOT < b1);
+        assert!(b1 < b2);
+        assert!(b2 < b3);
+        assert_eq!(b1.next_for(Pid(7)), Ballot::new(2, Pid(7)));
+    }
+
+    #[test]
+    fn gidset_ops() {
+        let s = GidSet::from_iter([Gid(0), Gid(3), Gid(63)]);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(Gid(3)));
+        assert!(!s.contains(Gid(2)));
+        let gids: Vec<Gid> = s.iter().collect();
+        assert_eq!(gids, vec![Gid(0), Gid(3), Gid(63)]);
+        assert!(s.intersects(GidSet::single(Gid(3))));
+        assert!(!s.intersects(GidSet::single(Gid(5))));
+    }
+
+    #[test]
+    fn msgid_parts() {
+        let m = MsgId::new(7, 42);
+        assert_eq!(m.client(), 7);
+        assert_eq!(m.seq(), 42);
+    }
+
+    #[test]
+    fn topology_layout() {
+        let t = Topology::new(3, 1);
+        assert_eq!(t.group_size(), 3);
+        assert_eq!(t.quorum(), 2);
+        assert_eq!(t.num_members(), 9);
+        assert_eq!(t.members(Gid(1)), &[Pid(3), Pid(4), Pid(5)]);
+        assert_eq!(t.group_of(Pid(5)), Some(Gid(1)));
+        assert_eq!(t.group_of(Pid(9)), None);
+        assert_eq!(t.initial_leader(Gid(2)), Pid(6));
+        assert_eq!(t.first_client_pid(), Pid(9));
+    }
+
+    #[test]
+    fn phase_ordering_matches_protocol() {
+        assert!(Phase::Start < Phase::Proposed);
+        assert!(Phase::Proposed < Phase::Accepted);
+        assert!(Phase::Accepted < Phase::Committed);
+    }
+}

@@ -1,0 +1,208 @@
+//! Wire-level protocol messages, shared by all protocol implementations
+//! (WbCast, Skeen, FT-Skeen, FastCast) and both runtimes (simulator and
+//! real transports). Binary serialization lives in [`crate::codec`].
+
+use super::{Ballot, Gid, GidSet, MsgId, Phase, Ts};
+
+/// Metadata of an application message: identity, destination groups and
+/// payload. The protocols order `MsgMeta`s; the payload is opaque.
+/// The payload is reference-counted: protocol fan-out clones a `MsgMeta`
+/// up to `3d` times per multicast, and an `Arc` keeps those clones
+/// allocation-free (EXPERIMENTS.md §Perf iteration 2).
+#[derive(Clone, PartialEq, Eq, Debug, Default)]
+pub struct MsgMeta {
+    pub id: MsgId,
+    pub dest: GidSet,
+    pub payload: std::sync::Arc<[u8]>,
+}
+
+impl MsgMeta {
+    pub fn new(id: MsgId, dest: GidSet, payload: Vec<u8>) -> Self {
+        MsgMeta { id, dest, payload: payload.into() }
+    }
+    /// Wire size estimate used by the simulator's cost model.
+    pub fn size(&self) -> usize {
+        16 + self.payload.len()
+    }
+}
+
+/// Per-message state snapshot exchanged during WbCast leader recovery
+/// (carried by `NEWLEADER_ACK` and `NEW_STATE`).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct MsgState {
+    pub meta: MsgMeta,
+    pub phase: Phase,
+    pub lts: Ts,
+    pub gts: Ts,
+}
+
+/// Commands replicated through black-box Paxos by the FT-Skeen and
+/// FastCast baselines (their group-local state machine).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum RsmCmd {
+    /// Persist the local timestamp chosen for `meta` (Fig. 1 line 10).
+    AssignLts { meta: MsgMeta, lts: Ts },
+    /// Persist the global timestamp and the clock advance (Fig. 1
+    /// lines 14–15).
+    Commit { m: MsgId, gts: Ts },
+}
+
+/// Black-box Paxos messages (used by the baselines), scoped to one group.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum PaxosMsg {
+    /// Phase-1a: leader candidate solicits votes.
+    P1a { bal: Ballot },
+    /// Phase-1b: vote + all accepted entries `(slot, bal, cmd)`.
+    P1b { bal: Ballot, log: Vec<(u64, Ballot, RsmCmd)> },
+    /// Phase-2a: replicate `cmd` at `slot`.
+    P2a { bal: Ballot, slot: u64, cmd: RsmCmd },
+    /// Phase-2b: acknowledgement.
+    P2b { bal: Ballot, slot: u64 },
+    /// Learn a chosen command (leader → followers).
+    Learn { slot: u64, cmd: RsmCmd },
+}
+
+/// All protocol messages. One enum for every protocol keeps the codec,
+/// the simulator and the transports uniform; each protocol uses its own
+/// subset.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum Wire {
+    // ---------- client <-> protocol ----------
+    /// Client submits `meta` for multicast (sent to the leader of every
+    /// destination group; Fig. 4 line 1).
+    Multicast { meta: MsgMeta },
+    /// Delivery notification to the multicasting client (used for the
+    /// closed loop and latency accounting; "the first process that
+    /// delivers a message can ... reply to the client", §II).
+    Delivered { m: MsgId, g: Gid, gts: Ts },
+
+    // ---------- Skeen (Fig. 1) ----------
+    /// Local-timestamp proposal of group `g` for `m`.
+    Propose { m: MsgId, g: Gid, lts: Ts },
+
+    // ---------- WbCast normal operation (Fig. 4) ----------
+    /// Leader of `g` proposes local timestamp `lts` at ballot `bal`
+    /// to *all* processes in `dest(m)` ("2a"-like; line 9).
+    Accept { meta: MsgMeta, g: Gid, bal: Ballot, lts: Ts },
+    /// Destination process in group `g` acknowledges the accepted local
+    /// timestamps for `m` under the ballot vector `bals` ("2b"-like;
+    /// line 16). `bals` is sorted by `Gid`.
+    AcceptAck { m: MsgId, g: Gid, bals: Vec<(Gid, Ballot)> },
+    /// Leader replicates the committed (lts, gts) pair and orders
+    /// delivery (line 23).
+    Deliver { m: MsgId, bal: Ballot, lts: Ts, gts: Ts },
+
+    // ---------- WbCast leader recovery (Fig. 4, lines 35-66) ----------
+    /// "1a": ask group members to join ballot `bal`.
+    NewLeader { bal: Ballot },
+    /// "1b": vote + full state snapshot.
+    NewLeaderAck { bal: Ballot, cbal: Ballot, clock: u64, state: Vec<MsgState> },
+    /// New leader pushes its recovered state to followers.
+    NewState { bal: Ballot, clock: u64, state: Vec<MsgState> },
+    /// Follower confirms synchronisation with ballot `bal`.
+    NewStateAck { bal: Ballot },
+
+    // ---------- FastCast ----------
+    /// Leader of `g` confirms that consensus on `m`'s local timestamp in
+    /// `g` has decided (the post-consensus exchange of §VI).
+    Confirm { m: MsgId, g: Gid },
+
+    // ---------- baselines' black-box consensus ----------
+    Paxos { g: Gid, msg: PaxosMsg },
+
+    // ---------- liveness plumbing ----------
+    /// Leader heartbeat for the leader-selection service.
+    Heartbeat { bal: Ballot },
+    /// Follower → leader: highest delivered global timestamp, used to
+    /// advance the garbage-collection watermark (§VI: "a mechanism to
+    /// garbage collect delivered messages").
+    GcReport { max_gts: Ts },
+}
+
+impl Wire {
+    /// Wire size estimate (bytes) for the simulator's bandwidth/CPU cost
+    /// model; roughly matches what the binary codec produces.
+    pub fn size(&self) -> usize {
+        match self {
+            Wire::Multicast { meta } => 1 + meta.size(),
+            Wire::Delivered { .. } => 1 + 8 + 4 + 10,
+            Wire::Propose { .. } => 1 + 8 + 4 + 10,
+            Wire::Accept { meta, .. } => 1 + meta.size() + 4 + 8 + 10,
+            Wire::AcceptAck { bals, .. } => 1 + 8 + 4 + bals.len() * 12,
+            Wire::Deliver { .. } => 1 + 8 + 8 + 20,
+            Wire::NewLeader { .. } => 1 + 8,
+            Wire::NewLeaderAck { state, .. } | Wire::NewState { state, .. } => {
+                1 + 24 + state.iter().map(|s| s.meta.size() + 21).sum::<usize>()
+            }
+            Wire::NewStateAck { .. } => 1 + 8,
+            Wire::Confirm { .. } => 1 + 12,
+            Wire::Paxos { msg, .. } => {
+                1 + 4
+                    + match msg {
+                        PaxosMsg::P1a { .. } => 8,
+                        PaxosMsg::P1b { log, .. } => 8 + log.len() * 48,
+                        PaxosMsg::P2a { cmd, .. } => {
+                            16 + match cmd {
+                                RsmCmd::AssignLts { meta, .. } => meta.size() + 10,
+                                RsmCmd::Commit { .. } => 18,
+                            }
+                        }
+                        PaxosMsg::P2b { .. } => 16,
+                        PaxosMsg::Learn { cmd, .. } => {
+                            8 + match cmd {
+                                RsmCmd::AssignLts { meta, .. } => meta.size() + 10,
+                                RsmCmd::Commit { .. } => 18,
+                            }
+                        }
+                    }
+            }
+            Wire::Heartbeat { .. } => 1 + 8,
+            Wire::GcReport { .. } => 1 + 10,
+        }
+    }
+
+    /// Short tag for logging / stats.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Wire::Multicast { .. } => "MULTICAST",
+            Wire::Delivered { .. } => "DELIVERED",
+            Wire::Propose { .. } => "PROPOSE",
+            Wire::Accept { .. } => "ACCEPT",
+            Wire::AcceptAck { .. } => "ACCEPT_ACK",
+            Wire::Deliver { .. } => "DELIVER",
+            Wire::NewLeader { .. } => "NEWLEADER",
+            Wire::NewLeaderAck { .. } => "NEWLEADER_ACK",
+            Wire::NewState { .. } => "NEW_STATE",
+            Wire::NewStateAck { .. } => "NEWSTATE_ACK",
+            Wire::Confirm { .. } => "CONFIRM",
+            Wire::Paxos { .. } => "PAXOS",
+            Wire::Heartbeat { .. } => "HEARTBEAT",
+            Wire::GcReport { .. } => "GC_REPORT",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Pid;
+
+    #[test]
+    fn sizes_are_positive_and_scale_with_payload() {
+        let small = Wire::Multicast { meta: MsgMeta::new(MsgId::new(1, 1), GidSet::single(Gid(0)), vec![0; 20]) };
+        let big = Wire::Multicast { meta: MsgMeta::new(MsgId::new(1, 2), GidSet::single(Gid(0)), vec![0; 200]) };
+        assert!(small.size() > 0);
+        assert_eq!(big.size() - small.size(), 180);
+    }
+
+    #[test]
+    fn tags_distinct() {
+        let msgs = [
+            Wire::NewLeader { bal: Ballot::new(1, Pid(0)) },
+            Wire::NewStateAck { bal: Ballot::new(1, Pid(0)) },
+            Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) },
+        ];
+        let tags: Vec<_> = msgs.iter().map(|m| m.tag()).collect();
+        assert_eq!(tags, vec!["NEWLEADER", "NEWSTATE_ACK", "HEARTBEAT"]);
+    }
+}

@@ -1,0 +1,36 @@
+//! Small self-contained utilities: a seeded PRNG and a mini property-test
+//! driver. The offline build has no `rand`/`proptest`, so these are
+//! in-repo; the property driver reports failing seeds for replay.
+
+pub mod fxhash;
+pub mod prop;
+pub mod rng;
+
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use rng::Rng;
+
+/// Format a nanosecond quantity as a human-readable duration.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{}ns", ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(1_500), "1.500us");
+        assert_eq!(fmt_ns(2_000_000), "2.000ms");
+        assert_eq!(fmt_ns(3_500_000_000), "3.500s");
+    }
+}

@@ -1,0 +1,84 @@
+//! Mini property-test driver (the offline image has no `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure it panics with
+//! the offending seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let n = rng.range(1, 20);
+//!     /* build random input, assert invariant */
+//! });
+//! ```
+//!
+//! Replay a single failure with [`check_seed`].
+
+use super::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Base seed; override with env `WBAM_PROP_SEED` to explore other corners.
+fn base_seed() -> u64 {
+    std::env::var("WBAM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number-of-cases multiplier; override with env `WBAM_PROP_CASES_MUL`.
+fn cases_mul() -> u64 {
+    std::env::var("WBAM_PROP_CASES_MUL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Run `prop` over `cases` random cases. Panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
+    let base = base_seed();
+    for i in 0..cases * cases_mul() {
+        let seed = base ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {i} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case with an explicit seed.
+pub fn check_seed<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert!(a + b <= 198);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check(50, |rng| {
+                assert!(rng.below(10) < 5, "boom");
+            })
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "got: {msg}");
+    }
+}

@@ -1,0 +1,181 @@
+//! End-to-end integration over real threads: the in-process coordinator
+//! runtime with the XLA commit backend, and the TCP transport cluster.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use wbam::client::{Client, ClientCfg};
+use wbam::coordinator::{spawn, Cluster, DeliverFn, NodeRuntime};
+use wbam::net::{InProcMesh, TcpTransport};
+use wbam::protocols::wbcast::{WbConfig, WbNode};
+use wbam::protocols::Node;
+use wbam::runtime::{spawn_engine, XlaBackend};
+use wbam::types::{MsgId, Pid, Topology, Ts};
+
+fn wait_for<F: Fn() -> bool>(pred: F, secs: u64, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !pred() {
+        assert!(Instant::now() < deadline, "timeout waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Full three-layer composition: WbCast leaders commit through the AOT
+/// XLA engine on a real-thread cluster; ordering checked per node.
+#[test]
+fn inproc_cluster_with_xla_backend() {
+    let topo = Topology::new(3, 1);
+    let engine = spawn_engine(wbam::runtime::engine::artifacts_dir()).expect("make artifacts");
+    let wb = WbConfig {
+        hb_interval: 30_000_000,
+        batch_threshold: 4,
+        batch_flush_after: 300_000,
+        ..WbConfig::default()
+    };
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            nodes.push(Box::new(WbNode::with_backend(
+                p,
+                topo.clone(),
+                wb,
+                Box::new(XlaBackend::new(engine.clone())),
+            )));
+        }
+    }
+    for c in 0..6u32 {
+        let pid = Pid(topo.first_client_pid().0 + c);
+        let cfg = ClientCfg { dest_groups: 2, max_requests: Some(20), resend_after: 300_000_000, ..Default::default() };
+        nodes.push(Box::new(Client::new(pid, topo.clone(), cfg, 0xE + c as u64)));
+    }
+    let deliveries = Arc::new(Mutex::new(Vec::<(Pid, MsgId, Ts)>::new()));
+    let dv = Arc::clone(&deliveries);
+    let cb: Arc<Mutex<DeliverFn>> = Arc::new(Mutex::new(Box::new(move |pid, m, gts, _| {
+        dv.lock().unwrap().push((pid, m, gts));
+    })));
+    let cluster = Cluster::launch(nodes, Some(cb));
+    // 6 clients x 20 requests x 2 groups x 3 replicas = 720 deliveries
+    wait_for(|| deliveries.lock().unwrap().len() >= 720, 60, "720 deliveries");
+    let nodes = cluster.shutdown();
+
+    // per-node strictly increasing gts + agreement across nodes
+    let dels = deliveries.lock().unwrap();
+    let mut per_pid: std::collections::HashMap<Pid, Vec<Ts>> = Default::default();
+    let mut gts_of: std::collections::HashMap<MsgId, Ts> = Default::default();
+    for &(pid, m, gts) in dels.iter() {
+        per_pid.entry(pid).or_default().push(gts);
+        let e = gts_of.entry(m).or_insert(gts);
+        assert_eq!(*e, gts, "gts disagreement for {m:?}");
+    }
+    for (pid, seq) in &per_pid {
+        for w in seq.windows(2) {
+            assert!(w[0] < w[1], "{pid:?} delivered out of gts order");
+        }
+    }
+    // all clients finished
+    for n in nodes {
+        let any: &dyn Node = &*n;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            assert_eq!(c.completed.len(), 20);
+        }
+    }
+    engine.shutdown();
+}
+
+/// The same protocol over real TCP sockets with the binary codec.
+#[test]
+fn tcp_cluster_end_to_end() {
+    let topo = Topology::new(2, 1);
+    let base = 46000 + (std::process::id() % 500) as u16 * 16;
+    let mut addrs = std::collections::HashMap::new();
+    for i in 0..8u32 {
+        addrs.insert(Pid(i), format!("127.0.0.1:{}", base + i as u16).parse().unwrap());
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            let node: Box<dyn Node> = Box::new(WbNode::new(p, topo.clone(), wb));
+            let t = TcpTransport::bind(p, addrs.clone()).expect("bind");
+            let d = Arc::clone(&delivered);
+            let cb: DeliverFn = Box::new(move |_pid, _m, _gts, _t| {
+                d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+            handles.push(spawn(node, t, Arc::clone(&stop), Some(cb)));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(100)); // listeners up
+    // two clients, 10 requests each, to both groups
+    let mut client_handles = Vec::new();
+    for c in 0..2u32 {
+        let pid = Pid(6 + c);
+        let cfg = ClientCfg { dest_groups: 2, max_requests: Some(10), resend_after: 500_000_000, ..Default::default() };
+        let node: Box<dyn Node> = Box::new(Client::new(pid, topo.clone(), cfg, 3 + c as u64));
+        let t = TcpTransport::bind(pid, addrs.clone()).expect("bind client");
+        let stop2 = Arc::clone(&stop);
+        client_handles.push(std::thread::spawn(move || {
+            let rt = NodeRuntime::new(node, t);
+            rt.run(stop2)
+        }));
+    }
+    // 2 clients x 10 requests x 2 groups x 3 replicas = 120 deliveries
+    wait_for(|| delivered.load(std::sync::atomic::Ordering::Relaxed) >= 120, 60, "120 TCP deliveries");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut completed = 0;
+    for h in client_handles {
+        let node = h.join().unwrap();
+        let any: &dyn Node = &*node;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            completed += c.completed.len();
+        }
+    }
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+    assert_eq!(completed, 20, "TCP cluster did not complete all requests");
+}
+
+/// InProc mesh disconnect behaves like a crash: the cluster keeps making
+/// progress after the leader of group 0 is disconnected.
+#[test]
+fn inproc_leader_disconnect_recovers() {
+    let topo = Topology::new(2, 1);
+    let mesh = InProcMesh::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let wb = WbConfig {
+        hb_interval: 20_000_000, // 20 ms: suspicion ~ hb*8*(1+rank)
+        hb_suspect_mult: 4,
+        retry_after: 400_000_000,
+        recovery_timeout: 2_000_000_000,
+        gc: false,
+        ..WbConfig::default()
+    };
+    let mut handles = Vec::new();
+    let endpoints: Vec<_> = (0..6u32).map(|i| mesh.endpoint(Pid(i))).collect();
+    for (i, ep) in endpoints.into_iter().enumerate() {
+        let node: Box<dyn Node> = Box::new(WbNode::new(Pid(i as u32), topo.clone(), wb));
+        handles.push(spawn(node, ep, Arc::clone(&stop), None));
+    }
+    let cpid = Pid(6);
+    let ccfg = ClientCfg { dest_groups: 2, max_requests: Some(60), resend_after: 250_000_000, ..Default::default() };
+    let cnode: Box<dyn Node> = Box::new(Client::new(cpid, topo.clone(), ccfg, 99));
+    let cep = mesh.endpoint(cpid);
+    let stop2 = Arc::clone(&stop);
+    let ch = std::thread::spawn(move || NodeRuntime::new(cnode, cep).run(stop2));
+
+    std::thread::sleep(Duration::from_millis(300));
+    mesh.disconnect(Pid(0)); // crash the leader of group 0
+
+    // give the cluster time to elect + catch up
+    std::thread::sleep(Duration::from_secs(8));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let cnode = ch.join().unwrap();
+    let any: &dyn Node = &*cnode;
+    let c = (any as &dyn std::any::Any).downcast_ref::<Client>().unwrap();
+    assert_eq!(c.completed.len(), 60, "client stalled after leader disconnect: {}", c.completed.len());
+    for h in handles {
+        let _ = h.join();
+    }
+}

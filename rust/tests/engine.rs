@@ -1,0 +1,81 @@
+//! Integration: the XLA batch commit engine (AOT JAX/Pallas artifacts)
+//! against the native oracle, across randomized batches.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use wbam::runtime::{commit_batch_native, BatchReq, CommitBatchEngine, QuantileEngine};
+use wbam::types::{Gid, MsgId, Ts};
+use wbam::util::{prop, Rng};
+
+fn engine() -> CommitBatchEngine {
+    let dir = wbam::runtime::engine::artifacts_dir();
+    CommitBatchEngine::load(&dir).expect("artifacts missing — run `make artifacts`")
+}
+
+fn rand_ts(r: &mut Rng) -> Ts {
+    Ts::new(r.range(1, 1 << 30), Gid(r.below(16) as u32))
+}
+
+#[test]
+fn engine_matches_native_on_random_batches() {
+    let eng = engine();
+    prop::check(40, |r| {
+        let n = r.range(1, 40) as usize;
+        let reqs: Vec<BatchReq> = (0..n)
+            .map(|i| {
+                let groups = r.range(1, 10) as usize;
+                BatchReq { m: MsgId::new(1, i as u32), lts: (0..groups).map(|_| rand_ts(r)).collect() }
+            })
+            .collect();
+        let np = r.below(60) as usize;
+        let pending: Vec<Ts> = (0..np).map(|_| rand_ts(r)).collect();
+        let want = commit_batch_native(&reqs, &pending);
+        let got = eng.commit_batch(&reqs, &pending).expect("engine");
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn engine_chunks_oversized_batches() {
+    let eng = engine();
+    let n = eng.max_batch() * 2 + 7;
+    let reqs: Vec<BatchReq> = (0..n)
+        .map(|i| BatchReq { m: MsgId::new(2, i as u32), lts: vec![Ts::new(i as u64 + 1, Gid(0))] })
+        .collect();
+    let got = eng.commit_batch(&reqs, &[]).unwrap();
+    assert_eq!(got.len(), n);
+    for (i, o) in got.iter().enumerate() {
+        assert_eq!(o.gts, Ts::new(i as u64 + 1, Gid(0)));
+        assert!(o.deliverable);
+    }
+}
+
+#[test]
+fn engine_empty_batch_is_noop() {
+    let eng = engine();
+    assert!(eng.commit_batch(&[], &[]).unwrap().is_empty());
+    assert_eq!(eng.calls.get(), 0);
+}
+
+#[test]
+fn engine_deliverability_boundary() {
+    let eng = engine();
+    // gts exactly equal to pending min: NOT deliverable (strict <)
+    let reqs = vec![BatchReq { m: MsgId::new(3, 1), lts: vec![Ts::new(5, Gid(2))] }];
+    let out = eng.commit_batch(&reqs, &[Ts::new(5, Gid(2))]).unwrap();
+    assert!(!out[0].deliverable);
+    // one tick below: deliverable
+    let out = eng.commit_batch(&reqs, &[Ts::new(5, Gid(3))]).unwrap();
+    assert!(out[0].deliverable);
+}
+
+#[test]
+fn quantile_engine_monotone() {
+    let dir = wbam::runtime::engine::artifacts_dir();
+    let q = QuantileEngine::load(&dir).expect("artifacts missing");
+    let samples: Vec<u64> = (1..=1000).map(|i| i * 1000).collect();
+    let qs = q.quantiles(&samples).unwrap();
+    assert!(qs[0] <= qs[1] && qs[1] <= qs[2] && qs[2] <= qs[3], "{qs:?}");
+    // p50 of 1..1000 ms-ish samples
+    assert!((qs[0] - 500_000.0).abs() < 20_000.0, "{qs:?}");
+}

@@ -1,0 +1,142 @@
+//! White-box probes of the paper's Fig. 6 invariants, checked directly
+//! against protocol state after randomized runs (complementing the
+//! trace-level checks in `wbam::invariants`).
+
+use wbam::harness::{build_world, Net, Proto, RunCfg};
+use wbam::invariants;
+use wbam::protocols::wbcast::{WbConfig, WbNode};
+use wbam::sim::{World, MS};
+use wbam::types::{Phase, Pid, Topology, Ts};
+use wbam::util::prop;
+
+fn wb_world(r: &mut wbam::util::Rng, crash: bool) -> (World, Topology) {
+    let delta = MS;
+    let groups = r.range(2, 3) as usize;
+    let mut cfg = RunCfg::new(Proto::WbCast, groups, 3, 2, Net::Theory { delta });
+    cfg.seed = r.next_u64();
+    cfg.max_requests = Some(12);
+    cfg.record_full = true;
+    cfg.wb = if crash { WbConfig::with_failures(delta) } else { WbConfig::default() };
+    cfg.resend_after = if crash { 40 * delta } else { 0 };
+    let topo = Topology::new(groups, 1);
+    let mut w = build_world(&cfg);
+    if crash {
+        let victim = Pid(r.below((groups * 3) as u64) as u32);
+        w.crash_at(victim, r.range(1, 50) * delta);
+        w.run_until(4_000 * delta);
+    } else {
+        w.run_to_quiescence(50_000_000);
+    }
+    (w, topo)
+}
+
+/// Invariants 3(a,b) + 4 at the state level: all processes that know a
+/// committed message agree on its lts within a group and its gts across
+/// groups; gts values are unique.
+#[test]
+fn state_agreement_on_timestamps() {
+    prop::check(12, |r| {
+        let crash = r.chance(0.5);
+        let (w, topo) = wb_world(r, crash);
+        invariants::assert_safe(&w.trace);
+        let crashed: Vec<Pid> = w.trace.crashes.iter().map(|&(_, p)| p).collect();
+        let mut gts_of: std::collections::HashMap<wbam::types::MsgId, Ts> = Default::default();
+        let mut seen_gts: std::collections::HashSet<Ts> = Default::default();
+        for g in topo.gids() {
+            let mut lts_of: std::collections::HashMap<wbam::types::MsgId, Ts> = Default::default();
+            for &p in topo.members(g) {
+                if crashed.contains(&p) {
+                    continue;
+                }
+                let n = w.node_as::<WbNode>(p);
+                for (m, gts) in n.committed_view() {
+                    // gts agreement across every process (Invariant 3b)
+                    let e = gts_of.entry(m).or_insert(gts);
+                    assert_eq!(*e, gts, "{m:?} gts mismatch at {p:?}");
+                    if let Some(lts) = n.lts_view(m) {
+                        let e = lts_of.entry(m).or_insert(lts);
+                        assert_eq!(*e, lts, "{m:?} lts mismatch within {g:?} at {p:?}");
+                    }
+                }
+            }
+        }
+        // gts uniqueness (Invariant 4)
+        for (&m, &gts) in &gts_of {
+            assert!(seen_gts.insert(gts), "duplicate gts {gts:?} (one at {m:?})");
+        }
+    });
+}
+
+/// Invariant 14: at any process, a committed message's global timestamp
+/// never exceeds the clock; Invariant 13: lts ≤ gts.
+#[test]
+fn clock_dominates_committed_gts() {
+    prop::check(12, |r| {
+        let crash = r.chance(0.5);
+        let (w, topo) = wb_world(r, crash);
+        let crashed: Vec<Pid> = w.trace.crashes.iter().map(|&(_, p)| p).collect();
+        for g in topo.gids() {
+            for &p in topo.members(g) {
+                if crashed.contains(&p) {
+                    continue;
+                }
+                let n = w.node_as::<WbNode>(p);
+                for (m, gts) in n.committed_view() {
+                    assert!(n.clock() >= gts.time(), "{p:?}: clock {} < gts {gts:?} of {m:?}", n.clock());
+                    if let Some(lts) = n.lts_view(m) {
+                        assert!(lts <= gts, "{p:?}: lts {lts:?} > gts {gts:?} for {m:?}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Invariant 2(a,b) observable: once a message is delivered anywhere,
+/// every *correct* group member that participates further (same cballot
+/// era) holds it at phase ≥ ACCEPTED with the agreed local timestamp —
+/// after quiescence all correct members of destination groups have it
+/// COMMITTED (Termination strengthens this).
+#[test]
+fn delivered_messages_persist_at_quorums() {
+    prop::check(10, |r| {
+        let (w, topo) = wb_world(r, false);
+        invariants::assert_correct(&w.trace);
+        for d in &w.trace.deliveries {
+            let Some((_, dest)) = w.trace.multicasts.get(&d.m) else { continue };
+            for g in dest.iter() {
+                let committed = topo
+                    .members(g)
+                    .iter()
+                    .filter(|&&p| {
+                        let n = w.node_as::<WbNode>(p);
+                        n.phase_of(d.m) == Phase::Committed
+                    })
+                    .count();
+                assert!(committed >= topo.quorum(), "{:?} not persisted at a quorum of {g:?}", d.m);
+            }
+        }
+    });
+}
+
+/// After a crash + full recovery, ballots are consistent: every correct
+/// member of the affected group ends on the same cballot, led by the
+/// surviving leader (Invariant 6's stable-leader state).
+#[test]
+fn recovery_converges_to_single_ballot() {
+    prop::check(10, |r| {
+        let (w, topo) = wb_world(r, true);
+        invariants::assert_safe(&w.trace);
+        let crashed: Vec<Pid> = w.trace.crashes.iter().map(|&(_, p)| p).collect();
+        for g in topo.gids() {
+            let correct: Vec<Pid> =
+                topo.members(g).iter().copied().filter(|p| !crashed.contains(p)).collect();
+            let bals: Vec<_> = correct.iter().map(|&p| w.node_as::<WbNode>(p).cballot()).collect();
+            assert!(bals.windows(2).all(|x| x[0] == x[1]), "{g:?} split ballots: {bals:?}");
+            let leader = bals[0].leader();
+            assert!(correct.contains(&leader), "{g:?} led by crashed {leader:?}");
+            let n_leaders = correct.iter().filter(|&&p| w.node_as::<WbNode>(p).is_leader()).count();
+            assert_eq!(n_leaders, 1, "{g:?} has {n_leaders} leaders");
+        }
+    });
+}

@@ -1,0 +1,167 @@
+//! Randomized property tests: safety (Validity, Integrity, Ordering —
+//! the observable consequences of Invariants 1–5) and Termination over
+//! randomly generated deployments, workloads, schedules and failure
+//! patterns. Failing cases report a replay seed.
+
+use wbam::harness::{build_world, Net, Proto, RunCfg};
+use wbam::invariants;
+use wbam::protocols::wbcast::WbConfig;
+use wbam::sim::MS;
+use wbam::types::{Gid, GidSet, Pid};
+use wbam::util::prop;
+
+/// Random failure-free runs across all four protocols, LAN jitter.
+#[test]
+fn safety_and_termination_random_failure_free() {
+    prop::check(25, |r| {
+        let proto = *r.choose(&Proto::ALL);
+        let groups = r.range(1, 4) as usize;
+        let clients = r.range(1, 6) as usize;
+        let dest = r.range(1, groups as u64) as usize;
+        let mut cfg = RunCfg::new(proto, groups, clients, dest, Net::Lan);
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(r.range(3, 25) as u32);
+        cfg.record_full = true;
+        let mut w = build_world(&cfg);
+        w.run_to_quiescence(60_000_000);
+        invariants::assert_correct(&w.trace);
+    });
+}
+
+/// Random WAN runs (large heterogeneous delays stress cross-group
+/// reordering).
+#[test]
+fn safety_random_wan() {
+    prop::check(10, |r| {
+        let proto = *r.choose(&Proto::EVAL);
+        let groups = r.range(2, 5) as usize;
+        let mut cfg = RunCfg::new(proto, groups, 4, 2, Net::Wan);
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(8);
+        cfg.record_full = true;
+        let mut w = build_world(&cfg);
+        w.run_to_quiescence(30_000_000);
+        invariants::assert_correct(&w.trace);
+    });
+}
+
+/// WbCast with random single-crash injection (≤ f per group): safety
+/// always; termination among correct processes.
+#[test]
+fn wbcast_random_crashes() {
+    prop::check(15, |r| {
+        let delta = MS;
+        let groups = r.range(2, 3) as usize;
+        let mut cfg = RunCfg::new(Proto::WbCast, groups, 3, 2, Net::Theory { delta });
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(15);
+        cfg.record_full = true;
+        cfg.wb = WbConfig::with_failures(delta);
+        cfg.resend_after = 40 * delta;
+        let mut w = build_world(&cfg);
+        // crash one random member (possibly a leader) at a random time
+        let victim = Pid(r.below((groups * 3) as u64) as u32);
+        let when = r.range(1, 60) * delta;
+        w.crash_at(victim, when);
+        w.run_until(4_000 * delta);
+        invariants::assert_safe(&w.trace);
+        let vs = invariants::check_termination(&w.trace);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert_eq!(w.trace.incomplete(), 0, "stuck messages");
+    });
+}
+
+/// WbCast with aggressive client retransmissions (duplicates everywhere)
+/// must not double-deliver or reorder.
+#[test]
+fn wbcast_duplicate_storms() {
+    prop::check(15, |r| {
+        let delta = MS;
+        let mut cfg = RunCfg::new(Proto::WbCast, 3, 4, 2, Net::Theory { delta });
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(10);
+        cfg.record_full = true;
+        // resend faster than the 3δ commit latency → constant duplicates
+        cfg.resend_after = r.range(1, 3) * delta;
+        let mut w = build_world(&cfg);
+        w.run_to_quiescence(60_000_000);
+        invariants::assert_correct(&w.trace);
+    });
+}
+
+/// Genuineness (§II minimality): processes outside dest(m) ∪ {sender}
+/// receive no protocol traffic when every multicast avoids their groups.
+#[test]
+fn genuineness_non_destinations_stay_silent() {
+    for proto in Proto::EVAL {
+        let topo = wbam::types::Topology::new(4, 1);
+        let mut nodes: Vec<Box<dyn wbam::protocols::Node>> = Vec::new();
+        for g in topo.gids() {
+            for &p in topo.members(g) {
+                match proto {
+                    Proto::FtSkeen => nodes.push(Box::new(wbam::protocols::ftskeen::FtSkeenNode::new(p, topo.clone()))),
+                    Proto::FastCast => nodes.push(Box::new(wbam::protocols::fastcast::FastCastNode::new(p, topo.clone()))),
+                    _ => nodes.push(Box::new(wbam::protocols::wbcast::WbNode::new(p, topo.clone(), WbConfig::default()))),
+                }
+            }
+        }
+        let both = GidSet::from_iter([Gid(0), Gid(1)]);
+        let script: Vec<(u64, GidSet)> = (0..10).map(|i| (i * MS, both)).collect();
+        nodes.push(Box::new(wbam::harness::ScriptedClient::new(topo.first_client_pid(), topo.clone(), script)));
+        let mut w = wbam::sim::World::new(topo.clone(), nodes, wbam::sim::SimConfig::theory(MS));
+        w.run_to_quiescence(1_000_000);
+        invariants::assert_safe(&w.trace);
+        // members of g2 and g3 never participate
+        for g in [Gid(2), Gid(3)] {
+            for &p in topo.members(g) {
+                let n = w.arrivals.get(&p).copied().unwrap_or(0);
+                assert_eq!(n, 0, "{}: non-destination {p:?} received {n} messages", proto.name());
+            }
+        }
+    }
+}
+
+/// Deterministic replay: identical seeds produce identical traces.
+#[test]
+fn simulation_is_deterministic() {
+    prop::check(5, |r| {
+        let seed = r.next_u64();
+        let mk = || {
+            let mut cfg = RunCfg::new(Proto::WbCast, 3, 4, 2, Net::Lan);
+            cfg.seed = seed;
+            cfg.max_requests = Some(20);
+            cfg.record_full = true;
+            let mut w = build_world(&cfg);
+            w.run_to_quiescence(30_000_000);
+            (w.trace.sends, w.trace.delivered_count, w.trace.mean_latency())
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    });
+}
+
+/// Two successive leader crashes in different groups: the system keeps
+/// converging (probing ballot monotonicity, Invariants 8/9, externally).
+#[test]
+fn repeated_recoveries_converge() {
+    prop::check(8, |r| {
+        let delta = MS;
+        let mut cfg = RunCfg::new(Proto::WbCast, 2, 3, 2, Net::Theory { delta });
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(12);
+        cfg.record_full = true;
+        cfg.wb = WbConfig::with_failures(delta);
+        cfg.resend_after = 40 * delta;
+        let mut w = build_world(&cfg);
+        w.crash_at(Pid(0), r.range(5, 40) * delta);
+        w.crash_at(Pid(3), r.range(50, 90) * delta);
+        w.run_until(6_000 * delta);
+        invariants::assert_safe(&w.trace);
+        let vs = invariants::check_termination(&w.trace);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert_eq!(w.trace.incomplete(), 0, "stuck messages");
+    });
+}
