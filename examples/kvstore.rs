@@ -16,7 +16,7 @@ use wbam::client::ClientCfg;
 use wbam::harness::{Net, Proto, RunCfg};
 use wbam::invariants;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
-use wbam::protocols::{Action, Node, TimerKind};
+use wbam::protocols::{Node, Outbox, TimerKind};
 use wbam::sim::{SimConfig, World, MS};
 use wbam::types::{Gid, GidSet, MsgId, MsgMeta, Pid, Topology, Wire};
 use wbam::util::Rng;
@@ -78,9 +78,9 @@ struct TxClient {
 }
 
 impl TxClient {
-    fn next(&mut self, _now: u64) -> Vec<Action> {
+    fn next(&mut self, _now: u64, out: &mut Outbox) {
         if self.seq >= self.max {
-            return vec![];
+            return;
         }
         self.seq += 1;
         // cross-partition with high probability
@@ -92,7 +92,9 @@ impl TxClient {
         let dest = op.dest();
         let meta = MsgMeta::new(id, dest, op.encode());
         self.pending = Some((id, dest, GidSet::EMPTY));
-        dest.iter().map(|g| Action::Send(self.topo.initial_leader(g), Wire::Multicast { meta: meta.clone() })).collect()
+        for g in dest.iter() {
+            out.send(self.topo.initial_leader(g), Wire::Multicast { meta: meta.clone() });
+        }
     }
 }
 
@@ -100,26 +102,24 @@ impl Node for TxClient {
     fn pid(&self) -> Pid {
         self.pid
     }
-    fn on_start(&mut self, now: u64) -> Vec<Action> {
-        self.next(now)
+    fn on_start(&mut self, now: u64, out: &mut Outbox) {
+        self.next(now, out);
     }
-    fn on_wire(&mut self, _from: Pid, wire: Wire, now: u64) -> Vec<Action> {
-        let Wire::Delivered { m, g, .. } = wire else { return vec![] };
-        let Some((id, dest, acked)) = &mut self.pending else { return vec![] };
+    fn on_wire(&mut self, _from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
+        let Wire::Delivered { m, g, .. } = wire else { return };
+        let Some((id, dest, acked)) = &mut self.pending else { return };
         if *id != m || !dest.contains(g) {
-            return vec![];
+            return;
         }
         acked.insert(g);
         if acked != dest {
-            return vec![];
+            return;
         }
         self.done += 1;
         self.pending = None;
-        self.next(now)
+        self.next(now, out);
     }
-    fn on_timer(&mut self, _t: TimerKind, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_timer(&mut self, _t: TimerKind, _now: u64, _out: &mut Outbox) {}
 }
 
 /// One partition replica's materialised state, rebuilt from the

@@ -5,6 +5,8 @@
 //! round-trip cost the coordinator pays per flush. This locates the
 //! break-even batch size for offloading the leader's commit computation.
 
+#![cfg_attr(not(feature = "xla"), allow(dead_code, unused_imports))]
+
 use std::time::Instant;
 use wbam::runtime::{commit_batch_native, spawn_engine, BatchReq, CommitBatchEngine};
 use wbam::types::{Gid, MsgId, Ts};
@@ -33,6 +35,13 @@ fn bench<F: FnMut()>(iters: u32, mut f: F) -> f64 {
     t0.elapsed().as_nanos() as f64 / iters as f64
 }
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("batch_engine bench compares the XLA engine against the native path;");
+    eprintln!("rebuild with `--features xla` (vendored PJRT bindings) to run it.");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     let dir = wbam::runtime::engine::artifacts_dir();
     let eng = CommitBatchEngine::load(&dir).expect("run `make artifacts`");

@@ -1,41 +1,49 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): the WbCast leader
-//! commit path and the simulator event loop, plus an ablation of the
-//! ordered-delivery data structure (the naive Fig. 4 line-21 scan vs the
-//! frontier BTreeSet index).
+//! commit path driven through the reusable [`Outbox`] (zero per-event
+//! effect allocations), the simulator event loop, and the headline
+//! ablation of this refactor — destination-coalesced wire batching
+//! (`Wire::Batch`) on vs off at saturation.
 
 use std::time::Instant;
 use wbam::harness::{run, Net, Proto, RunCfg};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
-use wbam::protocols::Node;
+use wbam::protocols::{Node, Outbox};
 use wbam::sim::MS;
 use wbam::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Pid, Topology, Ts, Wire};
 
 /// Drive one leader through the full ACCEPT/ACK/commit cycle in memory
-/// (no network, no sim): the pure protocol-code cost per multicast.
+/// (no network, no sim): the pure protocol-code cost per multicast. The
+/// single outbox is reused across all events — the steady state does no
+/// effect-vector allocation.
 fn leader_commit_path(n: u32) -> f64 {
     let topo = Topology::new(2, 1);
     let mut leader = WbNode::new(Pid(0), topo.clone(), WbConfig::default());
     let b0 = Ballot::new(1, Pid(0));
     let b1 = Ballot::new(1, Pid(3));
     let dest = GidSet::from_iter([Gid(0), Gid(1)]);
+    let mut out = Outbox::new();
     let t0 = Instant::now();
     for i in 1..=n {
         let m = MsgId::new(9, i);
         let meta = MsgMeta::new(m, dest, vec![0u8; 20]);
         // client MULTICAST
-        let out = leader.on_wire(Pid(9), Wire::Multicast { meta: meta.clone() }, 0);
-        std::hint::black_box(&out);
+        leader.on_wire(Pid(9), Wire::Multicast { meta: meta.clone() }, 0, &mut out);
+        std::hint::black_box(out.sends());
+        out.clear();
         // own ACCEPT (self), remote leader's ACCEPT
         let lts0 = Ts::new(i as u64, Gid(0));
         let lts1 = Ts::new(i as u64, Gid(1));
-        leader.on_wire(Pid(0), Wire::Accept { meta: meta.clone(), g: Gid(0), bal: b0, lts: lts0 }, 0);
-        leader.on_wire(Pid(3), Wire::Accept { meta, g: Gid(1), bal: b1, lts: lts1 }, 0);
+        leader.on_wire(Pid(0), Wire::Accept { meta: meta.clone(), g: Gid(0), bal: b0, lts: lts0 }, 0, &mut out);
+        out.clear();
+        leader.on_wire(Pid(3), Wire::Accept { meta, g: Gid(1), bal: b1, lts: lts1 }, 0, &mut out);
+        out.clear();
         // quorum of ACCEPT_ACKs from both groups
         let bals = vec![(Gid(0), b0), (Gid(1), b1)];
         for p in [Pid(0), Pid(1), Pid(3), Pid(4)] {
             let g = topo.group_of(p).unwrap();
-            let out = leader.on_wire(p, Wire::AcceptAck { m, g, bals: bals.clone() }, 0);
-            std::hint::black_box(&out);
+            leader.on_wire(p, Wire::AcceptAck { m, g, bals: bals.clone() }, 0, &mut out);
+            std::hint::black_box(out.sends());
+            out.clear();
         }
         assert_eq!(leader.stats.committed, i as u64);
     }
@@ -46,7 +54,7 @@ fn main() {
     println!("== L3 hot path ==\n");
 
     let per_commit = leader_commit_path(50_000);
-    println!("leader commit path (in-memory, 2 groups): {per_commit:.0} ns/multicast");
+    println!("leader commit path (in-memory, 2 groups, reused outbox): {per_commit:.0} ns/multicast");
 
     // simulator event throughput under load
     let t0 = Instant::now();
@@ -61,6 +69,29 @@ fn main() {
         events / wall / 1e6
     );
     println!("  {}", r.row());
+
+    // headline ablation: destination-coalesced wire batching on vs off at
+    // saturation. Frames amortise the per-message recv/send CPU charges
+    // (and, on real transports, the per-message encode + syscall), which
+    // is where the knee of the throughput curve comes from. Acceptance
+    // bar for the refactor: ≥20% more completed multicasts with
+    // coalescing on.
+    println!("\nwire-batching ablation (sim, 10 groups, 800 clients, dest=4, commit batch 16):");
+    let mut thru = [0f64; 2];
+    for (i, &co) in [false, true].iter().enumerate() {
+        let mut cfg = RunCfg::new(Proto::WbCast, 10, 800, 4, Net::Lan);
+        cfg.duration = 300 * MS;
+        cfg.coalesce = co;
+        cfg.wb = WbConfig { batch_threshold: 16, batch_flush_after: 200_000, ..WbConfig::default() };
+        let r = run(&cfg);
+        thru[i] = r.throughput;
+        println!("  coalesce={:<5} {}", co, r.row());
+    }
+    let gain = (thru[1] / thru[0] - 1.0) * 100.0;
+    println!(
+        "  => coalescing throughput gain at saturation: {gain:+.1}% {}",
+        if gain >= 20.0 { "(≥20% target met)" } else { "(below 20% target)" }
+    );
 
     // throughput sensitivity to the commit-batch size (the XLA engine's
     // amortisation knob) on the simulated cluster
@@ -92,10 +123,6 @@ fn main() {
     for &sz in &[20usize, 200, 2000] {
         let mut cfg = RunCfg::new(Proto::WbCast, 6, 400, 3, Net::Lan);
         cfg.duration = 300 * MS;
-        let mut w = wbam::harness::build_world(&cfg);
-        let _ = &mut w; // payload knob lives on ClientCfg; reuse run() via cfg when available
-        drop(w);
-        // run() uses default 20B; emulate larger payloads via a custom world
         let r = run_payload(&cfg, sz);
         println!("  payload={sz:<5} {}", r.row());
     }
@@ -104,11 +131,9 @@ fn main() {
 /// run() with an overridden client payload size.
 fn run_payload(cfg: &RunCfg, payload: usize) -> wbam::harness::RunResult {
     use wbam::client::{Client, ClientCfg};
-    use wbam::protocols::wbcast::WbNode;
     use wbam::sim::{CpuCost, LanDelay, SimConfig, World};
-    use wbam::types::{Pid, Topology};
     let topo = Topology::new(cfg.groups, cfg.f);
-    let mut nodes: Vec<Box<dyn wbam::protocols::Node>> = Vec::new();
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
     for g in topo.gids() {
         for &p in topo.members(g) {
             nodes.push(Box::new(WbNode::new(p, topo.clone(), cfg.wb)));
@@ -122,7 +147,13 @@ fn run_payload(cfg: &RunCfg, payload: usize) -> wbam::harness::RunResult {
     let mut w = World::new(
         topo,
         nodes,
-        SimConfig { delay: Box::new(LanDelay::cloudlab()), cpu: CpuCost::lan_server(), seed: cfg.seed, record_full: false },
+        SimConfig {
+            delay: Box::new(LanDelay::cloudlab()),
+            cpu: CpuCost::lan_server(),
+            seed: cfg.seed,
+            record_full: false,
+            coalesce: cfg.coalesce,
+        },
     );
     w.run_until(cfg.duration);
     wbam::harness::summarize(cfg, &w.trace, (cfg.duration as f64 * cfg.warmup_frac) as u64, cfg.duration)

@@ -9,7 +9,7 @@
 //! request. Clients also implement the *message recovery* rule of §IV:
 //! they retransmit `MULTICAST(m)` on a timer until the first delivery.
 
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::{Gid, GidSet, MsgId, MsgMeta, Pid, Topology, Wire};
 #[cfg(test)]
 use crate::types::Ts;
@@ -73,10 +73,10 @@ impl Client {
         Client { pid, topo, cfg, rng: Rng::new(seed), cur_leader, seq: 0, pending: None, completed: Vec::new() }
     }
 
-    fn next_request(&mut self, now: u64) -> Vec<Action> {
+    fn next_request(&mut self, now: u64, out: &mut Outbox) {
         if let Some(max) = self.cfg.max_requests {
             if self.seq >= max {
-                return vec![];
+                return;
             }
         }
         self.seq += 1;
@@ -85,18 +85,17 @@ impl Client {
         let dest = GidSet::from_iter(gidxs.into_iter().map(|i| Gid(i as u32)));
         let meta = MsgMeta::new(id, dest, vec![0u8; self.cfg.payload]);
         self.pending = Some(Pending { id, dest, acked: GidSet::EMPTY, sent_at: now });
-        let mut acts = self.multicast_to_leaders(&meta);
+        self.multicast_to_leaders(&meta, out);
         if self.cfg.resend_after > 0 {
-            acts.push(Action::Timer(TimerKind::ClientResend(id), self.cfg.resend_after));
+            out.timer(TimerKind::ClientResend(id), self.cfg.resend_after);
         }
-        acts
     }
 
-    fn multicast_to_leaders(&self, meta: &MsgMeta) -> Vec<Action> {
-        meta.dest
-            .iter()
-            .map(|g| Action::Send(self.cur_leader[g.0 as usize], Wire::Multicast { meta: meta.clone() }))
-            .collect()
+    fn multicast_to_leaders(&self, meta: &MsgMeta, out: &mut Outbox) {
+        for g in meta.dest.iter() {
+            out.stage(self.cur_leader[g.0 as usize]);
+        }
+        out.send_staged(Wire::Multicast { meta: meta.clone() });
     }
 }
 
@@ -105,60 +104,60 @@ impl Node for Client {
         self.pid
     }
 
-    fn on_start(&mut self, now: u64) -> Vec<Action> {
-        self.next_request(now)
+    fn on_start(&mut self, now: u64, out: &mut Outbox) {
+        self.next_request(now, out);
     }
 
-    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
-        let Wire::Delivered { m, g, gts: _ } = wire else { return vec![] };
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
+        let Wire::Delivered { m, g, gts: _ } = wire else { return };
         // the sender delivered in g — use it as the leader guess for g
         if (g.0 as usize) < self.cur_leader.len() && self.topo.is_member(from, g) {
             self.cur_leader[g.0 as usize] = from;
         }
-        let Some(p) = &mut self.pending else { return vec![] };
+        let Some(p) = &mut self.pending else { return };
         if p.id != m || !p.dest.contains(g) {
-            return vec![]; // stale or duplicate notification
+            return; // stale or duplicate notification
         }
         p.acked.insert(g);
         if p.acked != p.dest {
-            return vec![];
+            return;
         }
         let sample = Sample { id: p.id, sent_at: p.sent_at, done_at: now };
         self.completed.push(sample);
         self.pending = None;
         if self.cfg.think_ns > 0 {
-            vec![Action::Timer(TimerKind::ClientNext, self.cfg.think_ns)]
+            out.timer(TimerKind::ClientNext, self.cfg.think_ns);
         } else {
-            self.next_request(now)
+            self.next_request(now, out);
         }
     }
 
-    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action> {
+    fn on_timer(&mut self, timer: TimerKind, now: u64, out: &mut Outbox) {
         match timer {
-            TimerKind::ClientNext => self.next_request(now),
+            TimerKind::ClientNext => self.next_request(now, out),
             TimerKind::ClientResend(m) => {
-                let Some(p) = &self.pending else { return vec![] };
+                let Some(p) = &self.pending else { return };
                 if p.id != m {
-                    return vec![]; // request already completed
+                    return; // request already completed
                 }
                 // message recovery (§IV): retransmit to current leader
                 // guesses, and also to all members of not-yet-acked groups
                 // in case our leader guess is stale.
                 let meta = MsgMeta::new(p.id, p.dest, vec![0u8; self.cfg.payload]);
-                let mut acts = self.multicast_to_leaders(&meta);
-                for g in p.dest.iter() {
-                    if !p.acked.contains(g) {
+                let (dest, acked) = (p.dest, p.acked);
+                self.multicast_to_leaders(&meta, out);
+                for g in dest.iter() {
+                    if !acked.contains(g) {
                         for &mem in self.topo.members(g) {
                             if mem != self.cur_leader[g.0 as usize] {
-                                acts.push(Action::Send(mem, Wire::Multicast { meta: meta.clone() }));
+                                out.send(mem, Wire::Multicast { meta: meta.clone() });
                             }
                         }
                     }
                 }
-                acts.push(Action::Timer(TimerKind::ClientResend(m), self.cfg.resend_after));
-                acts
+                out.timer(TimerKind::ClientResend(m), self.cfg.resend_after);
             }
-            _ => vec![],
+            _ => {}
         }
     }
 }
@@ -172,79 +171,91 @@ mod tests {
         Client::new(Pid(100), topo, ClientCfg { dest_groups: 2, resend_after: 1000, ..Default::default() }, 7)
     }
 
+    fn start(c: &mut Client) -> Outbox {
+        let mut out = Outbox::new();
+        c.on_start(0, &mut out);
+        out
+    }
+
+    fn delivered(c: &mut Client, from: Pid, m: MsgId, g: Gid, gts: Ts, now: u64) -> Outbox {
+        let mut out = Outbox::new();
+        c.on_wire(from, Wire::Delivered { m, g, gts }, now, &mut out);
+        out
+    }
+
     #[test]
     fn first_request_targets_initial_leaders() {
         let mut c = mk();
-        let acts = c.on_start(0);
-        let sends: Vec<_> = acts.iter().filter(|a| matches!(a, Action::Send(..))).collect();
-        assert_eq!(sends.len(), 2);
-        for a in &acts {
-            if let Action::Send(to, Wire::Multicast { meta }) = a {
-                assert_eq!(meta.id, MsgId::new(100, 1));
-                assert_eq!(meta.dest.len(), 2);
-                assert_eq!(meta.payload.len(), 20);
-                // initial leaders are the first member of each group
-                assert_eq!(to.0 % 3, 0);
-            }
+        let out = start(&mut c);
+        assert_eq!(out.sends().len(), 2);
+        for (to, w) in out.sends() {
+            let Wire::Multicast { meta } = w else { panic!("unexpected {w:?}") };
+            assert_eq!(meta.id, MsgId::new(100, 1));
+            assert_eq!(meta.dest.len(), 2);
+            assert_eq!(meta.payload.len(), 20);
+            // initial leaders are the first member of each group
+            assert_eq!(to.0 % 3, 0);
         }
+        // resend timer armed
+        assert!(out.timers().iter().any(|(k, _)| matches!(k, TimerKind::ClientResend(_))));
     }
 
     #[test]
     fn completes_only_after_all_groups_ack() {
         let mut c = mk();
-        let acts = c.on_start(0);
-        let dest: Vec<Gid> = match &acts[0] {
-            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+        let out = start(&mut c);
+        let dest: Vec<Gid> = match &out.sends()[0] {
+            (_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
             _ => panic!(),
         };
         let m = MsgId::new(100, 1);
         let leader0 = c.topo.initial_leader(dest[0]);
-        let out = c.on_wire(leader0, Wire::Delivered { m, g: dest[0], gts: Ts::new(1, dest[0]) }, 50);
+        let out = delivered(&mut c, leader0, m, dest[0], Ts::new(1, dest[0]), 50);
         assert!(out.is_empty());
         assert!(c.completed.is_empty());
         let leader1 = c.topo.initial_leader(dest[1]);
-        let out = c.on_wire(leader1, Wire::Delivered { m, g: dest[1], gts: Ts::new(1, dest[0]) }, 80);
+        let out = delivered(&mut c, leader1, m, dest[1], Ts::new(1, dest[0]), 80);
         assert_eq!(c.completed.len(), 1);
         assert_eq!(c.completed[0].done_at, 80);
         // closed loop: next request fired immediately
-        assert!(out.iter().any(|a| matches!(a, Action::Send(_, Wire::Multicast { .. }))));
+        assert!(out.sends().iter().any(|(_, w)| matches!(w, Wire::Multicast { .. })));
     }
 
     #[test]
     fn duplicate_and_stale_notifications_ignored() {
         let mut c = mk();
-        let acts = c.on_start(0);
-        let dest: Vec<Gid> = match &acts[0] {
-            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+        let out = start(&mut c);
+        let dest: Vec<Gid> = match &out.sends()[0] {
+            (_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
             _ => panic!(),
         };
         let m = MsgId::new(100, 1);
         let l0 = c.topo.initial_leader(dest[0]);
-        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 10);
-        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 11);
+        delivered(&mut c, l0, m, dest[0], Ts::BOT, 10);
+        delivered(&mut c, l0, m, dest[0], Ts::BOT, 11);
         assert!(c.completed.is_empty());
         // notification for a different message id
-        c.on_wire(l0, Wire::Delivered { m: MsgId::new(100, 99), g: dest[1], gts: Ts::BOT }, 12);
+        delivered(&mut c, l0, MsgId::new(100, 99), dest[1], Ts::BOT, 12);
         assert!(c.completed.is_empty());
     }
 
     #[test]
     fn resend_timer_retransmits_to_unacked_group_members() {
         let mut c = mk();
-        let acts = c.on_start(0);
-        let dest: Vec<Gid> = match &acts[0] {
-            Action::Send(_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
+        let out = start(&mut c);
+        let dest: Vec<Gid> = match &out.sends()[0] {
+            (_, Wire::Multicast { meta }) => meta.dest.iter().collect(),
             _ => panic!(),
         };
         let m = MsgId::new(100, 1);
         let l0 = c.topo.initial_leader(dest[0]);
-        c.on_wire(l0, Wire::Delivered { m, g: dest[0], gts: Ts::BOT }, 10);
-        let acts = c.on_timer(TimerKind::ClientResend(m), 1000);
+        delivered(&mut c, l0, m, dest[0], Ts::BOT, 10);
+        let mut out = Outbox::new();
+        c.on_timer(TimerKind::ClientResend(m), 1000, &mut out);
         // resends to 2 leader guesses + the 2 non-leader members of the
         // unacked group, + re-arms the timer
-        let sends = acts.iter().filter(|a| matches!(a, Action::Send(..))).count();
-        assert_eq!(sends, 4);
-        assert!(acts.iter().any(|a| matches!(a, Action::Timer(TimerKind::ClientResend(_), _))));
+        assert_eq!(out.sends().len(), 4);
+        assert!(out.timers().iter().any(|(k, _)| matches!(k, TimerKind::ClientResend(_))));
     }
 
     #[test]
@@ -252,8 +263,8 @@ mod tests {
         let topo = Topology::new(1, 0);
         let mut c =
             Client::new(Pid(10), topo.clone(), ClientCfg { dest_groups: 1, max_requests: Some(1), ..Default::default() }, 1);
-        c.on_start(0);
-        let out = c.on_wire(Pid(0), Wire::Delivered { m: MsgId::new(10, 1), g: Gid(0), gts: Ts::BOT }, 5);
+        start(&mut c);
+        let out = delivered(&mut c, Pid(0), MsgId::new(10, 1), Gid(0), Ts::BOT, 5);
         assert!(out.is_empty());
         assert_eq!(c.completed.len(), 1);
     }
@@ -261,12 +272,12 @@ mod tests {
     #[test]
     fn leader_cache_updates_from_notification_sender() {
         let mut c = mk();
-        c.on_start(0);
+        start(&mut c);
         // a different member of group 0 replies -> becomes the leader guess
-        c.on_wire(Pid(2), Wire::Delivered { m: MsgId::new(100, 999), g: Gid(0), gts: Ts::BOT }, 5);
+        delivered(&mut c, Pid(2), MsgId::new(100, 999), Gid(0), Ts::BOT, 5);
         assert_eq!(c.cur_leader[0], Pid(2));
         // a non-member cannot claim leadership of group 0
-        c.on_wire(Pid(5), Wire::Delivered { m: MsgId::new(100, 999), g: Gid(0), gts: Ts::BOT }, 6);
+        delivered(&mut c, Pid(5), MsgId::new(100, 999), Gid(0), Ts::BOT, 6);
         assert_eq!(c.cur_leader[0], Pid(2));
     }
 }

@@ -16,6 +16,10 @@ pub enum CodecError {
     BadTag { what: &'static str, value: u8 },
     #[error("trailing {0} bytes after message")]
     Trailing(usize),
+    #[error("batch frame nested inside a batch frame")]
+    NestedBatch,
+    #[error("empty batch frame")]
+    EmptyBatch,
 }
 
 pub type Result<T> = std::result::Result<T, CodecError>;
@@ -225,32 +229,41 @@ fn get_paxos(d: &mut Dec) -> Result<PaxosMsg> {
 
 // ---------- top-level ----------
 
-/// Serialize a wire message to bytes.
+/// Serialize a wire message to bytes (fresh buffer). The transports use
+/// [`encode_into`] with a reused [`Enc`] to avoid the per-message
+/// allocation.
 pub fn encode(w: &Wire) -> Vec<u8> {
     let mut e = Enc::new();
+    encode_into(&mut e, w);
+    e.buf
+}
+
+/// Serialize a wire message, appending to `e`'s buffer (encode-once hot
+/// path: the caller clears and reuses the buffer across messages).
+pub fn encode_into(e: &mut Enc, w: &Wire) {
     match w {
         Wire::Multicast { meta } => {
             e.u8(0);
-            put_meta(&mut e, meta);
+            put_meta(e, meta);
         }
         Wire::Delivered { m, g, gts } => {
             e.u8(1);
             e.u64(m.0);
             e.u32(g.0);
-            put_ts(&mut e, *gts);
+            put_ts(e, *gts);
         }
         Wire::Propose { m, g, lts } => {
             e.u8(2);
             e.u64(m.0);
             e.u32(g.0);
-            put_ts(&mut e, *lts);
+            put_ts(e, *lts);
         }
         Wire::Accept { meta, g, bal, lts } => {
             e.u8(3);
-            put_meta(&mut e, meta);
+            put_meta(e, meta);
             e.u32(g.0);
-            put_ballot(&mut e, *bal);
-            put_ts(&mut e, *lts);
+            put_ballot(e, *bal);
+            put_ts(e, *lts);
         }
         Wire::AcceptAck { m, g, bals } => {
             e.u8(4);
@@ -259,42 +272,42 @@ pub fn encode(w: &Wire) -> Vec<u8> {
             e.u32(bals.len() as u32);
             for (g, b) in bals {
                 e.u32(g.0);
-                put_ballot(&mut e, *b);
+                put_ballot(e, *b);
             }
         }
         Wire::Deliver { m, bal, lts, gts } => {
             e.u8(5);
             e.u64(m.0);
-            put_ballot(&mut e, *bal);
-            put_ts(&mut e, *lts);
-            put_ts(&mut e, *gts);
+            put_ballot(e, *bal);
+            put_ts(e, *lts);
+            put_ts(e, *gts);
         }
         Wire::NewLeader { bal } => {
             e.u8(6);
-            put_ballot(&mut e, *bal);
+            put_ballot(e, *bal);
         }
         Wire::NewLeaderAck { bal, cbal, clock, state } => {
             e.u8(7);
-            put_ballot(&mut e, *bal);
-            put_ballot(&mut e, *cbal);
+            put_ballot(e, *bal);
+            put_ballot(e, *cbal);
             e.u64(*clock);
             e.u32(state.len() as u32);
             for s in state {
-                put_state(&mut e, s);
+                put_state(e, s);
             }
         }
         Wire::NewState { bal, clock, state } => {
             e.u8(8);
-            put_ballot(&mut e, *bal);
+            put_ballot(e, *bal);
             e.u64(*clock);
             e.u32(state.len() as u32);
             for s in state {
-                put_state(&mut e, s);
+                put_state(e, s);
             }
         }
         Wire::NewStateAck { bal } => {
             e.u8(9);
-            put_ballot(&mut e, *bal);
+            put_ballot(e, *bal);
         }
         Wire::Confirm { m, g } => {
             e.u8(10);
@@ -304,32 +317,48 @@ pub fn encode(w: &Wire) -> Vec<u8> {
         Wire::Paxos { g, msg } => {
             e.u8(11);
             e.u32(g.0);
-            put_paxos(&mut e, msg);
+            put_paxos(e, msg);
         }
         Wire::Heartbeat { bal } => {
             e.u8(12);
-            put_ballot(&mut e, *bal);
+            put_ballot(e, *bal);
         }
         Wire::GcReport { max_gts } => {
             e.u8(13);
-            put_ts(&mut e, *max_gts);
+            put_ts(e, *max_gts);
+        }
+        Wire::Batch(inner) => {
+            debug_assert!(!inner.is_empty(), "encoding empty batch");
+            e.u8(14);
+            e.u32(inner.len() as u32);
+            for w in inner {
+                debug_assert!(!matches!(w, Wire::Batch(_)), "encoding nested batch");
+                encode_into(e, w);
+            }
         }
     }
-    e.buf
 }
 
 /// Deserialize a wire message; checks the buffer is fully consumed.
+/// Batch frames are accepted at the top level only — nested and empty
+/// batches are rejected.
 pub fn decode(buf: &[u8]) -> Result<Wire> {
     let mut d = Dec::new(buf);
-    let w = match d.u8()? {
-        0 => Wire::Multicast { meta: get_meta(&mut d)? },
-        1 => Wire::Delivered { m: MsgId(d.u64()?), g: Gid(d.u32()?), gts: get_ts(&mut d)? },
-        2 => Wire::Propose { m: MsgId(d.u64()?), g: Gid(d.u32()?), lts: get_ts(&mut d)? },
+    let w = get_wire(&mut d, true)?;
+    d.finish()?;
+    Ok(w)
+}
+
+fn get_wire(d: &mut Dec, allow_batch: bool) -> Result<Wire> {
+    Ok(match d.u8()? {
+        0 => Wire::Multicast { meta: get_meta(d)? },
+        1 => Wire::Delivered { m: MsgId(d.u64()?), g: Gid(d.u32()?), gts: get_ts(d)? },
+        2 => Wire::Propose { m: MsgId(d.u64()?), g: Gid(d.u32()?), lts: get_ts(d)? },
         3 => Wire::Accept {
-            meta: get_meta(&mut d)?,
+            meta: get_meta(d)?,
             g: Gid(d.u32()?),
-            bal: get_ballot(&mut d)?,
-            lts: get_ts(&mut d)?,
+            bal: get_ballot(d)?,
+            lts: get_ts(d)?,
         },
         4 => {
             let m = MsgId(d.u64()?);
@@ -337,47 +366,59 @@ pub fn decode(buf: &[u8]) -> Result<Wire> {
             let n = d.u32()? as usize;
             let mut bals = Vec::with_capacity(n);
             for _ in 0..n {
-                bals.push((Gid(d.u32()?), get_ballot(&mut d)?));
+                bals.push((Gid(d.u32()?), get_ballot(d)?));
             }
             Wire::AcceptAck { m, g, bals }
         }
         5 => Wire::Deliver {
             m: MsgId(d.u64()?),
-            bal: get_ballot(&mut d)?,
-            lts: get_ts(&mut d)?,
-            gts: get_ts(&mut d)?,
+            bal: get_ballot(d)?,
+            lts: get_ts(d)?,
+            gts: get_ts(d)?,
         },
-        6 => Wire::NewLeader { bal: get_ballot(&mut d)? },
+        6 => Wire::NewLeader { bal: get_ballot(d)? },
         7 => {
-            let bal = get_ballot(&mut d)?;
-            let cbal = get_ballot(&mut d)?;
+            let bal = get_ballot(d)?;
+            let cbal = get_ballot(d)?;
             let clock = d.u64()?;
             let n = d.u32()? as usize;
             let mut state = Vec::with_capacity(n);
             for _ in 0..n {
-                state.push(get_state(&mut d)?);
+                state.push(get_state(d)?);
             }
             Wire::NewLeaderAck { bal, cbal, clock, state }
         }
         8 => {
-            let bal = get_ballot(&mut d)?;
+            let bal = get_ballot(d)?;
             let clock = d.u64()?;
             let n = d.u32()? as usize;
             let mut state = Vec::with_capacity(n);
             for _ in 0..n {
-                state.push(get_state(&mut d)?);
+                state.push(get_state(d)?);
             }
             Wire::NewState { bal, clock, state }
         }
-        9 => Wire::NewStateAck { bal: get_ballot(&mut d)? },
+        9 => Wire::NewStateAck { bal: get_ballot(d)? },
         10 => Wire::Confirm { m: MsgId(d.u64()?), g: Gid(d.u32()?) },
-        11 => Wire::Paxos { g: Gid(d.u32()?), msg: get_paxos(&mut d)? },
-        12 => Wire::Heartbeat { bal: get_ballot(&mut d)? },
-        13 => Wire::GcReport { max_gts: get_ts(&mut d)? },
+        11 => Wire::Paxos { g: Gid(d.u32()?), msg: get_paxos(d)? },
+        12 => Wire::Heartbeat { bal: get_ballot(d)? },
+        13 => Wire::GcReport { max_gts: get_ts(d)? },
+        14 => {
+            if !allow_batch {
+                return Err(CodecError::NestedBatch);
+            }
+            let n = d.u32()? as usize;
+            if n == 0 {
+                return Err(CodecError::EmptyBatch);
+            }
+            let mut inner = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                inner.push(get_wire(d, false)?);
+            }
+            Wire::Batch(inner)
+        }
         v => return Err(CodecError::BadTag { what: "Wire", value: v }),
-    };
-    d.finish()?;
-    Ok(w)
+    })
 }
 
 #[cfg(test)]
@@ -512,5 +553,67 @@ mod tests {
         let mut bytes = encode(&w);
         bytes.push(0);
         assert!(matches!(decode(&bytes), Err(CodecError::Trailing(1))));
+    }
+
+    // ---------- Wire::Batch framing ----------
+
+    fn rand_batch(r: &mut Rng) -> Wire {
+        let n = r.range(1, 8) as usize;
+        Wire::Batch((0..n).map(|_| rand_wire(r)).collect())
+    }
+
+    #[test]
+    fn roundtrip_random_batches() {
+        prop::check(200, |r| {
+            let w = rand_batch(r);
+            let bytes = encode(&w);
+            let w2 = decode(&bytes).expect("decode batch");
+            assert_eq!(w, w2);
+        });
+    }
+
+    #[test]
+    fn batch_rejects_nested() {
+        // hand-assemble Batch[Batch[Heartbeat]] — the encoder debug-asserts
+        // against this, so splice raw bytes
+        let inner = encode(&Wire::Batch(vec![Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) }]));
+        let mut e = Enc::new();
+        e.u8(14);
+        e.u32(1);
+        e.buf.extend_from_slice(&inner);
+        assert!(matches!(decode(&e.buf), Err(CodecError::NestedBatch)));
+    }
+
+    #[test]
+    fn batch_rejects_empty() {
+        let mut e = Enc::new();
+        e.u8(14);
+        e.u32(0);
+        assert!(matches!(decode(&e.buf), Err(CodecError::EmptyBatch)));
+    }
+
+    #[test]
+    fn batch_rejects_truncated_inner_list() {
+        // claims 3 inner messages, carries 1
+        let mut e = Enc::new();
+        e.u8(14);
+        e.u32(3);
+        encode_into(&mut e, &Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) });
+        assert!(decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn batch_size_matches_encoded_framing_overhead() {
+        // size() and the codec agree on the 5-byte frame header: the
+        // batch's encoded length (and size estimate) is exactly header +
+        // sum of the inner messages'.
+        prop::check(100, |r| {
+            let w = rand_batch(r);
+            let Wire::Batch(inner) = &w else { unreachable!() };
+            let inner_encoded: usize = inner.iter().map(|i| encode(i).len()).sum();
+            assert_eq!(encode(&w).len(), 5 + inner_encoded);
+            let inner_size: usize = inner.iter().map(|i| i.size()).sum();
+            assert_eq!(w.size(), 5 + inner_size);
+        });
     }
 }

@@ -5,13 +5,17 @@
 //! XLA engine service ([`crate::runtime::service`]).
 //!
 //! Event loop: poll the transport with a timeout bounded by the next
-//! armed timer; dispatch wires/timers into the node; apply the resulting
-//! actions (sends → transport, timers → local heap, deliveries → the
-//! registered callback).
+//! armed timer; on wake-up drain *all* ready transport messages (not one
+//! per poll — a backlog must not pay a timeout-poll per message),
+//! dispatching each into the node; apply the effects from the shared
+//! [`Outbox`] (timers → local heap, deliveries → the registered
+//! callback, self-sends → straight back through the node); finally flush
+//! the accumulated outgoing sends once per drain cycle, coalesced into
+//! one [`Wire::Batch`](crate::types::Wire::Batch) frame per destination.
 
 use crate::net::{Incoming, Transport};
-use crate::protocols::{Action, Node, TimerKind};
-use crate::types::{MsgId, Pid, Ts};
+use crate::protocols::{Coalescer, Node, Outbox, TimerKind};
+use crate::types::{MsgId, Pid, Ts, Wire};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,6 +25,10 @@ use std::time::{Duration, Instant};
 /// Delivery callback: `(pid, message, gts, elapsed_ns)`.
 pub type DeliverFn = Box<dyn FnMut(Pid, MsgId, Ts, u64) + Send>;
 
+/// Upper bound on wires dispatched per drain cycle, so a firehose peer
+/// cannot starve the timer wheel forever.
+const MAX_DRAIN: usize = 4096;
+
 /// Runs one protocol node over a transport until stopped.
 pub struct NodeRuntime<T: Transport> {
     node: Box<dyn Node>,
@@ -29,6 +37,14 @@ pub struct NodeRuntime<T: Transport> {
     timer_seq: u64,
     epoch: Instant,
     on_deliver: Option<DeliverFn>,
+    /// shared effects sink (reused across events)
+    outbox: Outbox,
+    /// swap buffer for outbox sends while self-sends recurse into the node
+    scratch: Vec<(Pid, Wire)>,
+    /// outgoing sends accumulated across one drain cycle, flushed as
+    /// coalesced frames
+    outgoing: Vec<(Pid, Wire)>,
+    coalescer: Coalescer,
     /// statistics
     pub wires_in: u64,
     pub wires_out: u64,
@@ -44,6 +60,10 @@ impl<T: Transport> NodeRuntime<T> {
             timer_seq: 0,
             epoch: Instant::now(),
             on_deliver: None,
+            outbox: Outbox::new(),
+            scratch: Vec::new(),
+            outgoing: Vec::new(),
+            coalescer: Coalescer::new(),
             wires_in: 0,
             wires_out: 0,
             delivered: 0,
@@ -58,48 +78,90 @@ impl<T: Transport> NodeRuntime<T> {
         self.epoch.elapsed().as_nanos() as u64
     }
 
-    fn apply(&mut self, acts: Vec<Action>) {
+    /// Feed one transport wire into the node, unpacking batch frames (the
+    /// node only ever sees inner messages), then settle the outbox.
+    fn dispatch_wire(&mut self, from: Pid, wire: Wire) {
         let now = self.now();
-        for a in acts {
-            match a {
-                Action::Send(to, wire) => {
-                    self.wires_out += 1;
-                    if to == self.node.pid() {
-                        // self-send: loop straight back through the node
-                        let acts = self.node.on_wire(to, wire, now);
-                        self.apply(acts);
-                    } else {
-                        self.transport.send(to, &wire);
-                    }
+        match wire {
+            Wire::Batch(inner) => {
+                for w in inner {
+                    self.wires_in += 1;
+                    self.node.on_wire(from, w, now, &mut self.outbox);
                 }
-                Action::Deliver(m, gts) => {
-                    self.delivered += 1;
-                    if let Some(f) = &mut self.on_deliver {
-                        f(self.node.pid(), m, gts, now);
-                    }
+            }
+            w => {
+                self.wires_in += 1;
+                self.node.on_wire(from, w, now, &mut self.outbox);
+            }
+        }
+        self.drain_effects();
+    }
+
+    /// Settle the outbox: deliveries and timers directly; self-sends loop
+    /// back through the node (repeating until the outbox is quiet);
+    /// remote sends accumulate in `outgoing` for the next flush.
+    fn drain_effects(&mut self) {
+        loop {
+            let now = self.now();
+            for i in 0..self.outbox.delivers.len() {
+                let (m, gts) = self.outbox.delivers[i];
+                self.delivered += 1;
+                if let Some(f) = &mut self.on_deliver {
+                    f(self.node.pid(), m, gts, now);
                 }
-                Action::Timer(kind, after) => {
-                    self.timer_seq += 1;
-                    self.timers.push(Reverse((now + after, self.timer_seq, kind)));
+            }
+            self.outbox.delivers.clear();
+            for i in 0..self.outbox.timers.len() {
+                let (kind, after) = self.outbox.timers[i];
+                self.timer_seq += 1;
+                self.timers.push(Reverse((now + after, self.timer_seq, kind)));
+            }
+            self.outbox.timers.clear();
+            if self.outbox.sends.is_empty() {
+                break;
+            }
+            std::mem::swap(&mut self.outbox.sends, &mut self.scratch);
+            let me = self.node.pid();
+            for (to, wire) in self.scratch.drain(..) {
+                self.wires_out += 1;
+                if to == me {
+                    // self-send: loop straight back through the node
+                    self.node.on_wire(to, wire, now, &mut self.outbox);
+                } else {
+                    self.outgoing.push((to, wire));
                 }
             }
         }
     }
 
+    /// Flush the cycle's outgoing sends: one coalesced frame per
+    /// destination, one transport send (→ one encode + one write) each.
+    fn flush_outgoing(&mut self) {
+        let NodeRuntime { coalescer, outgoing, transport, .. } = self;
+        coalescer.drain(outgoing, true, |to, frame| transport.send(to, frame));
+    }
+
     /// Run until `stop` is raised. Returns the node back for inspection.
     pub fn run(mut self, stop: Arc<AtomicBool>) -> Box<dyn Node> {
-        let acts = self.node.on_start(self.now());
-        self.apply(acts);
+        let now0 = self.now();
+        self.node.on_start(now0, &mut self.outbox);
+        self.drain_effects();
+        self.flush_outgoing();
         while !stop.load(Ordering::Relaxed) {
             // fire due timers
             let now = self.now();
+            let mut fired = false;
             while let Some(Reverse((t, _, _))) = self.timers.peek() {
                 if *t > now {
                     break;
                 }
                 let Reverse((_, _, kind)) = self.timers.pop().unwrap();
-                let acts = self.node.on_timer(kind, now);
-                self.apply(acts);
+                self.node.on_timer(kind, now, &mut self.outbox);
+                self.drain_effects();
+                fired = true;
+            }
+            if fired {
+                self.flush_outgoing();
             }
             // poll bounded by the next timer (or a coarse idle tick)
             let next = self.timers.peek().map(|Reverse((t, _, _))| *t);
@@ -109,10 +171,28 @@ impl<T: Transport> NodeRuntime<T> {
             };
             match self.transport.recv_timeout(wait) {
                 Some(Incoming::Wire(from, wire)) => {
-                    self.wires_in += 1;
-                    let now = self.now();
-                    let acts = self.node.on_wire(from, wire, now);
-                    self.apply(acts);
+                    self.dispatch_wire(from, wire);
+                    // drain the backlog until the channel is empty before
+                    // recomputing timers; flush the frames once per cycle
+                    let mut closed = false;
+                    let mut drained = 1;
+                    while drained < MAX_DRAIN {
+                        match self.transport.recv_timeout(Duration::ZERO) {
+                            Some(Incoming::Wire(f, w)) => {
+                                self.dispatch_wire(f, w);
+                                drained += 1;
+                            }
+                            Some(Incoming::Closed) => {
+                                closed = true;
+                                break;
+                            }
+                            None => break,
+                        }
+                    }
+                    self.flush_outgoing();
+                    if closed {
+                        break;
+                    }
                 }
                 Some(Incoming::Closed) => break,
                 None => {}

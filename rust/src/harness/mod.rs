@@ -75,6 +75,9 @@ pub struct RunCfg {
     pub wb: WbConfig,
     /// client retransmission interval (0: disabled)
     pub resend_after: u64,
+    /// destination-coalesced wire batching in the simulated transport
+    /// (see [`crate::sim::SimConfig::coalesce`]; on by default)
+    pub coalesce: bool,
 }
 
 impl RunCfg {
@@ -93,6 +96,7 @@ impl RunCfg {
             record_full: false,
             wb: WbConfig::default(),
             resend_after: 0,
+            coalesce: true,
         }
     }
 }
@@ -177,7 +181,11 @@ pub fn build_world(cfg: &RunCfg) -> World {
         nodes.push(Box::new(Client::new(pid, topo.clone(), ccfg, cfg.seed ^ ((c as u64) << 13) ^ 0x5EED)));
     }
     let (delay, cpu) = delay_model(cfg.net, &topo);
-    World::new(topo, nodes, SimConfig { delay, cpu, seed: cfg.seed, record_full: cfg.record_full })
+    World::new(
+        topo,
+        nodes,
+        SimConfig { delay, cpu, seed: cfg.seed, record_full: cfg.record_full, coalesce: cfg.coalesce },
+    )
 }
 
 /// Run `cfg` and summarise. With `max_requests` set the run goes to
@@ -235,23 +243,21 @@ impl ScriptedClient {
         ScriptedClient { pid, topo, script, next: 0, seq: 0 }
     }
 
-    fn fire_due(&mut self, now: u64) -> Vec<crate::protocols::Action> {
-        use crate::protocols::{Action, TimerKind};
+    fn fire_due(&mut self, now: u64, out: &mut crate::protocols::Outbox) {
+        use crate::protocols::TimerKind;
         use crate::types::{MsgId, MsgMeta, Wire};
-        let mut acts = Vec::new();
         while self.next < self.script.len() && self.script[self.next].0 <= now {
             let (_, dest) = self.script[self.next];
             self.next += 1;
             self.seq += 1;
             let meta = MsgMeta::new(MsgId::new(self.pid.0, self.seq), dest, vec![0u8; 20]);
             for g in dest.iter() {
-                acts.push(Action::Send(self.topo.initial_leader(g), Wire::Multicast { meta: meta.clone() }));
+                out.send(self.topo.initial_leader(g), Wire::Multicast { meta: meta.clone() });
             }
         }
         if self.next < self.script.len() {
-            acts.push(Action::Timer(TimerKind::ClientNext, self.script[self.next].0 - now));
+            out.timer(TimerKind::ClientNext, self.script[self.next].0 - now);
         }
-        acts
     }
 }
 
@@ -259,14 +265,12 @@ impl crate::protocols::Node for ScriptedClient {
     fn pid(&self) -> Pid {
         self.pid
     }
-    fn on_start(&mut self, now: u64) -> Vec<crate::protocols::Action> {
-        self.fire_due(now)
+    fn on_start(&mut self, now: u64, out: &mut crate::protocols::Outbox) {
+        self.fire_due(now, out);
     }
-    fn on_wire(&mut self, _f: Pid, _w: crate::types::Wire, _n: u64) -> Vec<crate::protocols::Action> {
-        vec![]
-    }
-    fn on_timer(&mut self, _t: crate::protocols::TimerKind, now: u64) -> Vec<crate::protocols::Action> {
-        self.fire_due(now)
+    fn on_wire(&mut self, _f: Pid, _w: crate::types::Wire, _n: u64, _out: &mut crate::protocols::Outbox) {}
+    fn on_timer(&mut self, _t: crate::protocols::TimerKind, now: u64, out: &mut crate::protocols::Outbox) {
+        self.fire_due(now, out);
     }
 }
 

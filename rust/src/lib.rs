@@ -11,17 +11,31 @@
 //! * [`protocols`] — event-driven state machines for the paper's protocol
 //!   (`wbcast`) and all baselines it is evaluated against: unreplicated
 //!   Skeen (`skeen`), fault-tolerant Skeen over black-box Paxos
-//!   (`ftskeen`), and FastCast (`fastcast`).
+//!   (`ftskeen`), and FastCast (`fastcast`). Every node writes its
+//!   effects into a runtime-owned, reusable
+//!   [`Outbox`](protocols::Outbox) — the hot path does zero per-event
+//!   effect allocations — and the runtimes coalesce same-destination
+//!   sends into [`Wire::Batch`](types::Wire::Batch) frames
+//!   ([`protocols::Coalescer`]): one frame per destination per flush
+//!   cycle, amortising per-message receive, encode and syscall costs.
+//!   The commit-side companion knob is
+//!   [`WbConfig::batch_threshold`](protocols::wbcast::WbConfig).
 //! * [`sim`] — a deterministic discrete-event simulator (virtual time,
 //!   configurable delay models, crash/partition injection) used to
 //!   regenerate every figure of the paper's evaluation and to validate the
-//!   latency theorems of §V.
+//!   latency theorems of §V. Batch frames arrive as one event with one
+//!   frame-level CPU charge ([`sim::SimConfig::coalesce`]).
 //! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and the
 //!   group runtime that drive the same state machines on actual threads.
+//!   The coordinator drains the whole transport backlog per wake-up and
+//!   flushes one coalesced frame per destination per cycle; TCP encodes
+//!   each frame once into a reused buffer and writes it with a single
+//!   length-prefixed write.
 //! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
 //!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
 //!   resolution + delivery-frontier check) and executes it from the leader
-//!   hot path; a bit-exact native fallback lives alongside it.
+//!   hot path; a bit-exact native fallback lives alongside it (and stands
+//!   in entirely when built without the optional `xla` feature).
 //! * [`paxos`], [`lss`] — substrates: multi-Paxos (for the black-box
 //!   baselines) and an Ω-style leader selection service.
 //! * [`client`], [`stats`], [`harness`] — closed-loop workload generator,

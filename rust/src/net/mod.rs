@@ -23,9 +23,12 @@ pub enum Incoming {
     Closed,
 }
 
-/// Node-side handle: send to any peer, receive own traffic.
+/// Node-side handle: send to any peer, receive own traffic. `send` takes
+/// the wire by value: the coordinator flush hands each per-destination
+/// frame over exactly once, so the in-process mesh forwards it without a
+/// clone and TCP encodes it once into a reused buffer.
 pub trait Transport: Send {
-    fn send(&mut self, to: Pid, wire: &Wire);
+    fn send(&mut self, to: Pid, wire: Wire);
     /// Blocking receive with timeout; `None` on timeout.
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming>;
 }
@@ -63,10 +66,10 @@ pub struct InProcTransport {
 }
 
 impl Transport for InProcTransport {
-    fn send(&mut self, to: Pid, wire: &Wire) {
+    fn send(&mut self, to: Pid, wire: Wire) {
         let guard = self.mesh.inner.lock().unwrap();
         if let Some(tx) = guard.get(&to) {
-            let _ = tx.send((self.pid, wire.clone())); // dead peer: drop
+            let _ = tx.send((self.pid, wire)); // dead peer: drop
         }
     }
 
@@ -91,6 +94,10 @@ pub struct TcpTransport {
     addrs: Arc<HashMap<Pid, SocketAddr>>,
     conns: HashMap<Pid, BufWriter<TcpStream>>,
     rx: Receiver<(Pid, Wire)>,
+    /// reused encode buffer: `u32 length ++ codec bytes`, written with a
+    /// single `write_all` per frame (encode-once, one syscall per flush
+    /// per destination)
+    enc: codec::Enc,
     _listener_thread: std::thread::JoinHandle<()>,
 }
 
@@ -150,27 +157,47 @@ impl TcpTransport {
                     });
                 }
             })?;
-        Ok(TcpTransport { pid, addrs: Arc::new(addrs), conns: HashMap::new(), rx, _listener_thread: listener_thread })
+        Ok(TcpTransport {
+            pid,
+            addrs: Arc::new(addrs),
+            conns: HashMap::new(),
+            rx,
+            enc: codec::Enc::new(),
+            _listener_thread: listener_thread,
+        })
     }
 
-    fn conn(&mut self, to: Pid) -> Option<&mut BufWriter<TcpStream>> {
-        if !self.conns.contains_key(&to) {
-            let addr = *self.addrs.get(&to)?;
+    /// Borrow-splitting helper: the returned writer borrows only `conns`,
+    /// leaving the encode buffer free for the caller.
+    fn conn<'a>(
+        conns: &'a mut HashMap<Pid, BufWriter<TcpStream>>,
+        addrs: &HashMap<Pid, SocketAddr>,
+        me: Pid,
+        to: Pid,
+    ) -> Option<&'a mut BufWriter<TcpStream>> {
+        if !conns.contains_key(&to) {
+            let addr = *addrs.get(&to)?;
             let stream = TcpStream::connect(addr).ok()?;
             stream.set_nodelay(true).ok();
             let mut w = BufWriter::new(stream);
-            write_frame(&mut w, &self.pid.0.to_le_bytes()).ok()?;
-            self.conns.insert(to, w);
+            write_frame(&mut w, &me.0.to_le_bytes()).ok()?;
+            conns.insert(to, w);
         }
-        self.conns.get_mut(&to)
+        conns.get_mut(&to)
     }
 }
 
 impl Transport for TcpTransport {
-    fn send(&mut self, to: Pid, wire: &Wire) {
-        let bytes = codec::encode(wire);
-        let ok = match self.conn(to) {
-            Some(w) => write_frame(w, &bytes).is_ok(),
+    fn send(&mut self, to: Pid, wire: Wire) {
+        // encode once into the reused buffer, length prefix in-band, and
+        // put the frame on the socket with a single write
+        self.enc.buf.clear();
+        self.enc.u32(0); // length placeholder
+        codec::encode_into(&mut self.enc, &wire);
+        let n = (self.enc.buf.len() - 4) as u32;
+        self.enc.buf[..4].copy_from_slice(&n.to_le_bytes());
+        let ok = match Self::conn(&mut self.conns, &self.addrs, self.pid, to) {
+            Some(w) => w.write_all(&self.enc.buf).and_then(|()| w.flush()).is_ok(),
             None => false,
         };
         if !ok {
@@ -202,7 +229,7 @@ mod tests {
         let mut a = mesh.endpoint(Pid(1));
         let mut b = mesh.endpoint(Pid(2));
         for i in 0..10 {
-            a.send(Pid(2), &mcast(i));
+            a.send(Pid(2), mcast(i));
         }
         for i in 0..10 {
             match b.recv_timeout(Duration::from_secs(1)) {
@@ -220,7 +247,7 @@ mod tests {
     fn inproc_send_to_unknown_is_dropped() {
         let mesh = InProcMesh::new();
         let mut a = mesh.endpoint(Pid(1));
-        a.send(Pid(99), &mcast(1)); // no panic
+        a.send(Pid(99), mcast(1)); // no panic
     }
 
     #[test]
@@ -232,7 +259,7 @@ mod tests {
         let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
         let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
         for i in 0..50 {
-            a.send(Pid(2), &mcast(i));
+            a.send(Pid(2), mcast(i));
         }
         for i in 0..50 {
             match b.recv_timeout(Duration::from_secs(5)) {
@@ -244,9 +271,25 @@ mod tests {
             }
         }
         // bidirectional: b replies
-        b.send(Pid(1), &Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
+        b.send(Pid(1), Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
         match a.recv_timeout(Duration::from_secs(5)) {
             Some(Incoming::Wire(Pid(2), Wire::Heartbeat { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tcp_carries_batch_frames_intact() {
+        let base = 44000 + (std::process::id() % 1000) as u16;
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", base + 4).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", base + 5).parse().unwrap());
+        let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
+        let frame = Wire::Batch((0..5).map(mcast).collect());
+        a.send(Pid(2), frame.clone());
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), w)) => assert_eq!(w, frame),
             other => panic!("unexpected {other:?}"),
         }
     }

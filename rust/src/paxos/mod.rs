@@ -10,7 +10,7 @@
 //! decided by a quorum of `P2b`s at the leader and disseminated to
 //! followers with `Learn`; every replica applies the log in slot order.
 
-use crate::protocols::Action;
+use crate::protocols::Outbox;
 use crate::types::wire::{PaxosMsg, RsmCmd};
 use crate::types::{Ballot, Gid, Pid, Topology, Wire};
 use std::collections::{BTreeMap, HashMap, HashSet};
@@ -66,7 +66,7 @@ impl Paxos {
 
     /// Leader: replicate `cmd` in the next log slot. The leader accepts
     /// its own proposal locally (no self-message).
-    pub fn propose(&mut self, cmd: RsmCmd, acts: &mut Vec<Action>) {
+    pub fn propose(&mut self, cmd: RsmCmd, out: &mut Outbox) {
         assert!(self.is_leader, "only the leader proposes");
         let slot = self.next_slot;
         self.next_slot += 1;
@@ -74,16 +74,13 @@ impl Paxos {
         self.accepted.insert(slot, (self.bal, cmd.clone()));
         self.acks.entry(slot).or_default().insert(self.pid);
         let msg = Wire::Paxos { g: self.gid, msg: PaxosMsg::P2a { bal: self.bal, slot, cmd } };
-        for &p in &self.members {
-            if p != self.pid {
-                acts.push(Action::Send(p, msg.clone()));
-            }
-        }
+        let me = self.pid;
+        out.send_to_many(self.members.iter().copied().filter(|&p| p != me), msg);
     }
 
     /// Handle a Paxos message; newly applicable commands (in slot order)
-    /// are appended to `out`.
-    pub fn on_msg(&mut self, from: Pid, msg: PaxosMsg, acts: &mut Vec<Action>, out: &mut Vec<RsmCmd>) {
+    /// are appended to `decided`.
+    pub fn on_msg(&mut self, from: Pid, msg: PaxosMsg, out: &mut Outbox, decided: &mut Vec<RsmCmd>) {
         match msg {
             PaxosMsg::P2a { bal, slot, cmd } => {
                 if bal < self.bal {
@@ -91,7 +88,7 @@ impl Paxos {
                 }
                 self.bal = bal;
                 self.accepted.insert(slot, (bal, cmd));
-                acts.push(Action::Send(from, Wire::Paxos { g: self.gid, msg: PaxosMsg::P2b { bal, slot } }));
+                out.send(from, Wire::Paxos { g: self.gid, msg: PaxosMsg::P2b { bal, slot } });
             }
             PaxosMsg::P2b { bal, slot } => {
                 if !self.is_leader || bal != self.bal || self.chosen.contains_key(&slot) {
@@ -104,12 +101,9 @@ impl Paxos {
                     let cmd = self.accepted.get(&slot).expect("leader accepted own P2a").1.clone();
                     self.chosen.insert(slot, cmd.clone());
                     let learn = Wire::Paxos { g: self.gid, msg: PaxosMsg::Learn { slot, cmd } };
-                    for &p in &self.members {
-                        if p != self.pid {
-                            acts.push(Action::Send(p, learn.clone()));
-                        }
-                    }
-                    self.drain(out);
+                    let me = self.pid;
+                    out.send_to_many(self.members.iter().copied().filter(|&p| p != me), learn);
+                    self.drain(decided);
                 }
             }
             PaxosMsg::Learn { slot, cmd } => {
@@ -117,7 +111,7 @@ impl Paxos {
                     return; // leader already chose
                 }
                 self.chosen.insert(slot, cmd);
-                self.drain(out);
+                self.drain(decided);
             }
             // phase-1 messages are out of scope for the baselines (stable
             // pre-agreed leader); see the module docs
@@ -148,27 +142,23 @@ mod tests {
         RsmCmd::Commit { m: MsgId::new(1, n), gts: Ts::new(n as u64, Gid(0)) }
     }
 
-    fn pump(nodes: &mut [Paxos], acts: Vec<Action>, out: &mut Vec<Vec<RsmCmd>>) {
-        // tiny synchronous network: deliver sends until quiescent
-        let mut queue: Vec<(Pid, Pid, Wire)> = acts
-            .into_iter()
-            .filter_map(|a| if let Action::Send(to, w) = a { Some((Pid(99), to, w)) } else { None })
-            .collect();
-        // fix sender for the initial batch: the leader is node 0
-        for q in &mut queue {
-            q.0 = Pid(0);
+    fn pump(nodes: &mut [Paxos], out: &mut Outbox, decided: &mut [Vec<RsmCmd>]) {
+        // tiny synchronous network: deliver sends until quiescent (the
+        // initial outbox was produced by the leader, node 0)
+        let mut queue: Vec<(Pid, Pid, Wire)> = Vec::new();
+        for (to, w) in out.sends() {
+            queue.push((Pid(0), *to, w.clone()));
         }
+        out.clear();
         while let Some((from, to, w)) = queue.pop() {
             let Wire::Paxos { msg, .. } = w else { continue };
             let idx = to.0 as usize;
-            let mut acts = Vec::new();
-            let mut decided = Vec::new();
-            nodes[idx].on_msg(from, msg, &mut acts, &mut decided);
-            out[idx].extend(decided);
-            for a in acts {
-                if let Action::Send(to2, w2) = a {
-                    queue.push((to, to2, w2));
-                }
+            let mut step = Outbox::new();
+            let mut d = Vec::new();
+            nodes[idx].on_msg(from, msg, &mut step, &mut d);
+            decided[idx].extend(d);
+            for (to2, w2) in step.sends() {
+                queue.push((to, *to2, w2.clone()));
             }
         }
     }
@@ -177,13 +167,13 @@ mod tests {
     fn commands_decided_in_slot_order_at_all_replicas() {
         let topo = Topology::new(1, 1);
         let mut nodes: Vec<Paxos> = (0..3).map(|i| Paxos::new(Pid(i), &topo, Gid(0))).collect();
-        let mut out: Vec<Vec<RsmCmd>> = vec![vec![], vec![], vec![]];
+        let mut decided: Vec<Vec<RsmCmd>> = vec![vec![], vec![], vec![]];
         for n in 0..5 {
-            let mut acts = Vec::new();
-            nodes[0].propose(cmd(n), &mut acts);
-            pump(&mut nodes, acts, &mut out);
+            let mut out = Outbox::new();
+            nodes[0].propose(cmd(n), &mut out);
+            pump(&mut nodes, &mut out, &mut decided);
         }
-        for o in &out {
+        for o in &decided {
             assert_eq!(o.len(), 5);
             for (i, c) in o.iter().enumerate() {
                 assert_eq!(*c, cmd(i as u32));
@@ -195,8 +185,8 @@ mod tests {
     fn stale_ballot_p2a_rejected() {
         let topo = Topology::new(1, 1);
         let mut n = Paxos::new(Pid(1), &topo, Gid(0));
-        let mut acts = Vec::new();
-        let mut out = Vec::new();
+        let mut out = Outbox::new();
+        let mut decided = Vec::new();
         let stale = Ballot::new(0, Pid(0));
         n.on_msg(
             Pid(0),
@@ -205,39 +195,39 @@ mod tests {
                 slot: 0,
                 cmd: RsmCmd::AssignLts { meta: MsgMeta::new(MsgId::new(1, 1), GidSet::single(Gid(0)), vec![]), lts: Ts::BOT },
             },
-            &mut acts,
             &mut out,
+            &mut decided,
         );
-        assert!(acts.is_empty(), "must not ack a stale ballot");
+        assert!(out.is_empty(), "must not ack a stale ballot");
     }
 
     #[test]
     fn learn_applies_with_gaps_buffered() {
         let topo = Topology::new(1, 1);
         let mut n = Paxos::new(Pid(1), &topo, Gid(0));
-        let mut acts = Vec::new();
-        let mut out = Vec::new();
-        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 1, cmd: cmd(1) }, &mut acts, &mut out);
-        assert!(out.is_empty(), "slot 0 missing: nothing applicable");
+        let mut out = Outbox::new();
+        let mut decided = Vec::new();
+        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 1, cmd: cmd(1) }, &mut out, &mut decided);
+        assert!(decided.is_empty(), "slot 0 missing: nothing applicable");
         assert_eq!(n.backlog(), 1);
-        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 0, cmd: cmd(0) }, &mut acts, &mut out);
-        assert_eq!(out, vec![cmd(0), cmd(1)]);
+        n.on_msg(Pid(0), PaxosMsg::Learn { slot: 0, cmd: cmd(0) }, &mut out, &mut decided);
+        assert_eq!(decided, vec![cmd(0), cmd(1)]);
     }
 
     #[test]
     fn quorum_required_before_choose() {
         let topo = Topology::new(1, 2); // 5 members, quorum 3
         let mut leader = Paxos::new(Pid(0), &topo, Gid(0));
-        let mut acts = Vec::new();
-        leader.propose(cmd(0), &mut acts);
+        let mut out = Outbox::new();
+        leader.propose(cmd(0), &mut out);
         // leader's own acceptance comes through its self-addressed P2a
-        let mut out = Vec::new();
-        leader.on_msg(Pid(0), PaxosMsg::P2a { bal: leader.ballot(), slot: 0, cmd: cmd(0) }, &mut acts, &mut out);
+        let mut decided = Vec::new();
+        leader.on_msg(Pid(0), PaxosMsg::P2a { bal: leader.ballot(), slot: 0, cmd: cmd(0) }, &mut out, &mut decided);
         let b = leader.ballot();
-        leader.on_msg(Pid(0), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
-        leader.on_msg(Pid(1), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
-        assert!(out.is_empty(), "2 < quorum of 3");
-        leader.on_msg(Pid(2), PaxosMsg::P2b { bal: b, slot: 0 }, &mut acts, &mut out);
-        assert_eq!(out, vec![cmd(0)]);
+        leader.on_msg(Pid(0), PaxosMsg::P2b { bal: b, slot: 0 }, &mut out, &mut decided);
+        leader.on_msg(Pid(1), PaxosMsg::P2b { bal: b, slot: 0 }, &mut out, &mut decided);
+        assert!(decided.is_empty(), "2 < quorum of 3");
+        leader.on_msg(Pid(2), PaxosMsg::P2b { bal: b, slot: 0 }, &mut out, &mut decided);
+        assert_eq!(decided, vec![cmd(0)]);
     }
 }

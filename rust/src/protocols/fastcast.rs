@@ -20,7 +20,7 @@
 //! exercises only the white-box protocol.
 
 use crate::paxos::Paxos;
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::wire::RsmCmd;
 use crate::types::{Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -113,7 +113,7 @@ impl FastCastNode {
         })
     }
 
-    fn apply(&mut self, cmd: RsmCmd, acts: &mut Vec<Action>) {
+    fn apply(&mut self, cmd: RsmCmd, out: &mut Outbox) {
         match cmd {
             // persist the speculatively chosen local timestamp
             RsmCmd::AssignLts { meta, lts } => {
@@ -135,10 +135,10 @@ impl FastCastNode {
                     // consensus#1 decided: confirm to the other leaders
                     for g in dest.iter() {
                         if g != gid {
-                            acts.push(Action::Send(self.topo.initial_leader(g), Wire::Confirm { m, g: gid }));
+                            out.send(self.topo.initial_leader(g), Wire::Confirm { m, g: gid });
                         }
                     }
-                    self.on_confirm(m, gid, acts);
+                    self.on_confirm(m, gid, out);
                 }
             }
             // persist the speculative global timestamp + clock advance
@@ -154,7 +154,7 @@ impl FastCastNode {
                 // *persisted* clock only here — this is what gives
                 // FastCast its 4δ clock-update latency (C in Thm. 4)
                 self.next_assign = self.next_assign.max(self.clock);
-                self.try_finalize(m, acts);
+                self.try_finalize(m, out);
             }
         }
     }
@@ -163,7 +163,7 @@ impl FastCastNode {
     /// destination group (followers see confirmations implicitly — the
     /// leader only Learns a Commit after it committed itself, so log
     /// order suffices for them).
-    fn try_finalize(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+    fn try_finalize(&mut self, m: MsgId, out: &mut Outbox) {
         let is_leader = self.paxos.is_leader();
         let Some(e) = self.entries.get_mut(&m) else { return };
         if e.phase == Phase::Committed || !e.commit_applied {
@@ -179,13 +179,13 @@ impl FastCastNode {
             self.committed.insert((gts, m)); // followers deliver on DELIVER
         }
         self.stats.committed += 1;
-        self.try_deliver(acts);
+        self.try_deliver(out);
     }
 
-    fn on_confirm(&mut self, m: MsgId, g: Gid, acts: &mut Vec<Action>) {
+    fn on_confirm(&mut self, m: MsgId, g: Gid, out: &mut Outbox) {
         let Some(e) = self.entries.get_mut(&m) else { return };
         e.confirms.insert(g);
-        self.try_finalize(m, acts);
+        self.try_finalize(m, out);
     }
 
     /// Leader-side ordered delivery. The frontier (`pending`) includes
@@ -196,7 +196,7 @@ impl FastCastNode {
     /// order (their own log-apply order could invert gts order when a
     /// speculative Commit lands in an earlier slot than a conflicting
     /// AssignLts).
-    fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+    fn try_deliver(&mut self, out: &mut Outbox) {
         if !self.paxos.is_leader() {
             return;
         }
@@ -212,19 +212,19 @@ impl FastCastNode {
             e.delivered = true;
             let lts = e.lts;
             self.stats.delivered += 1;
-            acts.push(Action::Deliver(m, gts));
-            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            out.deliver(m, gts);
+            out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
             let bal = self.paxos.ballot();
-            for &p in self.topo.members(self.gid) {
-                if p != self.pid {
-                    acts.push(Action::Send(p, Wire::Deliver { m, bal, lts, gts }));
-                }
-            }
+            let me = self.pid;
+            out.send_to_many(
+                self.topo.members(self.gid).iter().copied().filter(|&p| p != me),
+                Wire::Deliver { m, bal, lts, gts },
+            );
         }
     }
 
     /// Follower: deliver in the order the leader decided.
-    fn on_deliver(&mut self, m: MsgId, gts: Ts, acts: &mut Vec<Action>) {
+    fn on_deliver(&mut self, m: MsgId, gts: Ts, out: &mut Outbox) {
         if self.max_follower_gts >= gts {
             return; // duplicate
         }
@@ -233,12 +233,12 @@ impl FastCastNode {
             e.delivered = true;
         }
         self.stats.delivered += 1;
-        acts.push(Action::Deliver(m, gts));
+        out.deliver(m, gts);
     }
 
     /// Leader: speculative commit — start consensus#2 as soon as all
     /// local timestamps are known, without waiting for consensus#1.
-    fn try_speculative_commit(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+    fn try_speculative_commit(&mut self, m: MsgId, out: &mut Outbox) {
         if self.commit_submitted.contains(&m) {
             return;
         }
@@ -251,7 +251,7 @@ impl FastCastNode {
         self.commit_submitted.insert(m);
         self.stats.consensus_instances += 1;
         self.stats.speculative_commits += 1;
-        self.paxos.propose(RsmCmd::Commit { m, gts }, acts);
+        self.paxos.propose(RsmCmd::Commit { m, gts }, out);
     }
 }
 
@@ -260,26 +260,23 @@ impl Node for FastCastNode {
         self.pid
     }
 
-    fn on_start(&mut self, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_start(&mut self, _now: u64, _out: &mut Outbox) {}
 
-    fn on_wire(&mut self, from: Pid, wire: Wire, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    fn on_wire(&mut self, from: Pid, wire: Wire, _now: u64, out: &mut Outbox) {
         match wire {
             Wire::Multicast { meta } => {
                 if !self.is_leader() {
-                    return acts;
+                    return;
                 }
                 debug_assert!(meta.dest.contains(self.gid), "genuineness: not a destination");
                 if let Some(e) = self.entries.get(&meta.id) {
                     if e.delivered {
-                        acts.push(Action::Send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts }));
+                        out.send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts });
                     }
-                    return acts;
+                    return;
                 }
                 if !self.submitted.insert(meta.id) {
-                    return acts;
+                    return;
                 }
                 // speculatively issue the local timestamp from the
                 // in-memory counter (unique; ≥ persisted clock)
@@ -297,51 +294,48 @@ impl Node for FastCastNode {
                 self.pending.insert((lts, m));
                 // start consensus#1 ...
                 self.stats.consensus_instances += 1;
-                self.paxos.propose(RsmCmd::AssignLts { meta: meta.clone(), lts }, &mut acts);
+                self.paxos.propose(RsmCmd::AssignLts { meta: meta.clone(), lts }, out);
                 // ... and send PROPOSE to the other leaders immediately
                 for g in meta.dest.iter() {
                     if g != self.gid {
-                        acts.push(Action::Send(self.topo.initial_leader(g), Wire::Propose { m, g: self.gid, lts }));
+                        out.send(self.topo.initial_leader(g), Wire::Propose { m, g: self.gid, lts });
                     }
                 }
                 self.proposals.entry(m).or_default().insert(self.gid, lts);
-                self.try_speculative_commit(m, &mut acts);
+                self.try_speculative_commit(m, out);
             }
             Wire::Propose { m, g, lts } => {
                 if !self.is_leader() {
-                    return acts;
+                    return;
                 }
                 // speculative: act on the unconfirmed remote timestamp
                 self.proposals.entry(m).or_default().insert(g, lts);
-                self.try_speculative_commit(m, &mut acts);
+                self.try_speculative_commit(m, out);
             }
             Wire::Confirm { m, g } => {
                 if !self.is_leader() {
-                    return acts;
+                    return;
                 }
-                self.on_confirm(m, g, &mut acts);
+                self.on_confirm(m, g, out);
             }
             Wire::Deliver { m, gts, .. } => {
                 if !self.is_leader() {
-                    self.on_deliver(m, gts, &mut acts);
+                    self.on_deliver(m, gts, out);
                 }
             }
             Wire::Paxos { g, msg } => {
                 debug_assert_eq!(g, self.gid);
                 let mut decided = Vec::new();
-                self.paxos.on_msg(from, msg, &mut acts, &mut decided);
+                self.paxos.on_msg(from, msg, out, &mut decided);
                 for cmd in decided {
-                    self.apply(cmd, &mut acts);
+                    self.apply(cmd, out);
                 }
             }
             _ => {}
         }
-        acts
     }
 
-    fn on_timer(&mut self, _timer: TimerKind, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_timer(&mut self, _timer: TimerKind, _now: u64, _out: &mut Outbox) {}
 }
 
 #[cfg(test)]
@@ -370,7 +364,7 @@ mod tests {
         World::new(
             topo,
             nodes,
-            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true },
+            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true, coalesce: true },
         )
     }
 

@@ -17,7 +17,7 @@
 //! Theorems 3–4 the collision-free / failure-free latencies are 6δ / 12δ.
 
 use crate::paxos::Paxos;
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::wire::RsmCmd;
 use crate::types::{Gid, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -98,7 +98,7 @@ impl FtSkeenNode {
         self.entries.get(&m).map(|e| e.phase).unwrap_or(Phase::Start)
     }
 
-    fn apply(&mut self, cmd: RsmCmd, acts: &mut Vec<Action>) {
+    fn apply(&mut self, cmd: RsmCmd, out: &mut Outbox) {
         match cmd {
             // consensus#1 decided: the local timestamp is durable; the
             // leader may now reveal it to the other destination groups
@@ -122,7 +122,7 @@ impl FtSkeenNode {
                 self.clock = self.clock.max(lts.time());
                 if is_leader {
                     for g in meta.dest.iter() {
-                        acts.push(Action::Send(self.topo.initial_leader(g), Wire::Propose { m, g: self.gid, lts }));
+                        out.send(self.topo.initial_leader(g), Wire::Propose { m, g: self.gid, lts });
                     }
                 }
             }
@@ -146,7 +146,7 @@ impl FtSkeenNode {
                     self.committed.insert((gts, m));
                 }
                 self.stats.committed += 1;
-                self.try_deliver(acts);
+                self.try_deliver(out);
             }
         }
     }
@@ -154,7 +154,7 @@ impl FtSkeenNode {
     /// Fig. 1 line 17 at the leader; followers deliver on the leader's
     /// DELIVER messages (first-delivery semantics match the paper's
     /// latency metric).
-    fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+    fn try_deliver(&mut self, out: &mut Outbox) {
         if !self.paxos.is_leader() {
             return;
         }
@@ -170,18 +170,18 @@ impl FtSkeenNode {
             e.delivered = true;
             let lts = e.lts;
             self.stats.delivered += 1;
-            acts.push(Action::Deliver(m, gts));
-            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            out.deliver(m, gts);
+            out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
             let bal = self.paxos.ballot();
-            for &p in self.topo.members(self.gid) {
-                if p != self.pid {
-                    acts.push(Action::Send(p, Wire::Deliver { m, bal, lts, gts }));
-                }
-            }
+            let me = self.pid;
+            out.send_to_many(
+                self.topo.members(self.gid).iter().copied().filter(|&p| p != me),
+                Wire::Deliver { m, bal, lts, gts },
+            );
         }
     }
 
-    fn on_deliver(&mut self, m: MsgId, gts: Ts, acts: &mut Vec<Action>) {
+    fn on_deliver(&mut self, m: MsgId, gts: Ts, out: &mut Outbox) {
         if self.max_follower_gts >= gts {
             return;
         }
@@ -190,12 +190,12 @@ impl FtSkeenNode {
             e.delivered = true;
         }
         self.stats.delivered += 1;
-        acts.push(Action::Deliver(m, gts));
+        out.deliver(m, gts);
     }
 
     /// Once local timestamps from every destination group are known and
     /// our own is durable, submit the Commit command.
-    fn try_commit(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+    fn try_commit(&mut self, m: MsgId, out: &mut Outbox) {
         if self.commit_submitted.contains(&m) {
             return;
         }
@@ -210,7 +210,7 @@ impl FtSkeenNode {
         let gts = e.meta.dest.iter().map(|g| props[&g]).max().unwrap();
         self.commit_submitted.insert(m);
         self.stats.consensus_instances += 1;
-        self.paxos.propose(RsmCmd::Commit { m, gts }, acts);
+        self.paxos.propose(RsmCmd::Commit { m, gts }, out);
     }
 }
 
@@ -219,26 +219,23 @@ impl Node for FtSkeenNode {
         self.pid
     }
 
-    fn on_start(&mut self, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_start(&mut self, _now: u64, _out: &mut Outbox) {}
 
-    fn on_wire(&mut self, from: Pid, wire: Wire, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    fn on_wire(&mut self, from: Pid, wire: Wire, _now: u64, out: &mut Outbox) {
         match wire {
             Wire::Multicast { meta } => {
                 if !self.is_leader() {
-                    return acts;
+                    return;
                 }
                 debug_assert!(meta.dest.contains(self.gid), "genuineness: not a destination");
                 if let Some(e) = self.entries.get(&meta.id) {
                     if e.delivered {
-                        acts.push(Action::Send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts }));
+                        out.send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts });
                     }
-                    return acts;
+                    return;
                 }
                 if !self.submitted.insert(meta.id) {
-                    return acts;
+                    return;
                 }
                 // Fig. 1 lines 9-10 at the simulated reliable process:
                 // eager, unique local timestamp; effect persisted by
@@ -253,48 +250,45 @@ impl Node for FtSkeenNode {
                 );
                 self.pending.insert((lts, m));
                 self.stats.consensus_instances += 1;
-                self.paxos.propose(RsmCmd::AssignLts { meta, lts }, &mut acts);
+                self.paxos.propose(RsmCmd::AssignLts { meta, lts }, out);
             }
             Wire::Propose { m, g, lts } => {
                 if !self.is_leader() {
-                    return acts;
+                    return;
                 }
                 self.proposals.entry(m).or_default().insert(g, lts);
-                self.try_commit(m, &mut acts);
+                self.try_commit(m, out);
             }
             Wire::Deliver { m, gts, .. } => {
                 if !self.is_leader() {
-                    self.on_deliver(m, gts, &mut acts);
+                    self.on_deliver(m, gts, out);
                 }
             }
             Wire::Paxos { g, msg } => {
                 debug_assert_eq!(g, self.gid);
                 let mut decided = Vec::new();
-                self.paxos.on_msg(from, msg, &mut acts, &mut decided);
+                self.paxos.on_msg(from, msg, out, &mut decided);
                 for cmd in decided {
                     if let RsmCmd::AssignLts { meta, .. } = &cmd {
                         let m = meta.id;
-                        self.apply(cmd.clone(), &mut acts);
+                        self.apply(cmd.clone(), out);
                         if self.is_leader() {
                             if let Some(e) = self.entries.get(&m) {
                                 let lts = e.lts;
                                 self.proposals.entry(m).or_default().insert(self.gid, lts);
                             }
-                            self.try_commit(m, &mut acts);
+                            self.try_commit(m, out);
                         }
                         continue;
                     }
-                    self.apply(cmd, &mut acts);
+                    self.apply(cmd, out);
                 }
             }
             _ => {}
         }
-        acts
     }
 
-    fn on_timer(&mut self, _timer: TimerKind, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_timer(&mut self, _timer: TimerKind, _now: u64, _out: &mut Outbox) {}
 }
 
 #[cfg(test)]
@@ -323,7 +317,7 @@ mod tests {
         World::new(
             topo,
             nodes,
-            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true },
+            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true, coalesce: true },
         )
     }
 

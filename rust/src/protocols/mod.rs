@@ -2,10 +2,16 @@
 //!
 //! Every protocol (and the workload client) is an event-driven, pure,
 //! deterministic [`Node`]: it consumes wire messages and timer firings and
-//! emits [`Action`]s. No I/O happens inside a node — the same state machine
-//! runs unchanged under the discrete-event simulator ([`crate::sim`]), the
-//! in-process thread runtime and the TCP runtime ([`crate::net`],
-//! [`crate::coordinator`]).
+//! writes its effects — sends, local deliveries, timer arms — into a
+//! runtime-owned [`Outbox`]. No I/O happens inside a node — the same state
+//! machine runs unchanged under the discrete-event simulator
+//! ([`crate::sim`]), the in-process thread runtime and the TCP runtime
+//! ([`crate::net`], [`crate::coordinator`]).
+//!
+//! The [`Outbox`] buffers are reused across events (no per-event effect
+//! allocation), and the runtimes coalesce same-destination sends into
+//! [`Wire::Batch`](crate::types::Wire::Batch) frames via [`Coalescer`] —
+//! see [`outbox`] for the full design.
 //!
 //! * [`skeen`] — folklore Skeen's protocol among singleton reliable
 //!   groups (paper Fig. 1); collision-free 2δ, failure-free 4δ.
@@ -17,10 +23,13 @@
 
 pub mod fastcast;
 pub mod ftskeen;
+pub mod outbox;
 pub mod skeen;
 pub mod wbcast;
 
-use crate::types::{MsgId, Pid, Ts, Wire};
+pub use outbox::{Coalescer, Outbox};
+
+use crate::types::{MsgId, Pid, Wire};
 
 /// Timer kinds a node may arm. Timers are never cancelled; handlers must
 /// check state and ignore stale firings.
@@ -43,36 +52,19 @@ pub enum TimerKind {
     BatchFlush,
 }
 
-/// Effects emitted by a node transition.
-#[derive(Clone, Debug)]
-pub enum Action {
-    /// Send a wire message to another process (or to self).
-    Send(Pid, Wire),
-    /// Deliver application message `m` locally (the `deliver(m)` event of
-    /// §II). `gts` is its final global timestamp.
-    Deliver(MsgId, Ts),
-    /// Arm a timer to fire after `after_ns`.
-    Timer(TimerKind, u64),
-}
-
-/// An event-driven protocol participant.
+/// An event-driven protocol participant. Handlers never perform I/O;
+/// every effect goes through the runtime-owned [`Outbox`].
 pub trait Node: Send + std::any::Any {
     fn pid(&self) -> Pid;
     /// Called once at start-of-world; typically arms timers / kicks off
     /// client workload.
-    fn on_start(&mut self, now: u64) -> Vec<Action>;
-    /// Handle a wire message from `from`.
-    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action>;
+    fn on_start(&mut self, now: u64, out: &mut Outbox);
+    /// Handle a wire message from `from`. Runtimes unpack
+    /// [`Wire::Batch`] frames, so nodes only ever see inner messages.
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox);
     /// Handle a timer firing.
-    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action>;
+    fn on_timer(&mut self, timer: TimerKind, now: u64, out: &mut Outbox);
     /// Crash notification (used by some harness nodes for bookkeeping;
     /// crashed nodes simply stop receiving events).
     fn on_crash(&mut self, _now: u64) {}
-}
-
-/// Convenience: send one message to many recipients.
-pub fn send_all<'a, I: IntoIterator<Item = &'a Pid>>(acts: &mut Vec<Action>, to: I, wire: Wire) {
-    for &p in to {
-        acts.push(Action::Send(p, wire.clone()));
-    }
 }

@@ -1,0 +1,355 @@
+//! The reusable effects sink every [`Node`](super::Node) writes into, and
+//! the destination-coalescing machinery the runtimes use to turn the flat
+//! send list into per-destination wire frames.
+//!
+//! Design (EXPERIMENTS.md §Perf, hot-path effects refactor):
+//!
+//! * **`Outbox`** replaces the old `Vec<Action>` return value. The three
+//!   effect buffers (sends, local deliveries, timers) are owned by the
+//!   runtime and reused across events, so the steady-state hot path does
+//!   zero per-event effect-vector allocations. Payload fan-out stays
+//!   allocation-free too: `MsgMeta::payload` is an `Arc`, so the wire
+//!   clones made by [`Outbox::send_to_many`] / [`Outbox::send_staged`]
+//!   never copy payload bytes (the last recipient receives the original,
+//!   so `n` recipients cost `n - 1` shallow clones).
+//! * **`Coalescer`** groups a drained send list by destination,
+//!   preserving per-destination FIFO order, and wraps multi-wire
+//!   destinations into a single [`Wire::Batch`] frame. One frame means
+//!   one arrival event (and one CPU charge) in the simulator and one
+//!   encode + one length-prefixed write (one syscall) in the TCP
+//!   transport. Frames are emitted in first-occurrence order of their
+//!   destination, which keeps schedules deterministic and — for
+//!   single-wire destinations — identical to the uncoalesced order.
+
+use super::TimerKind;
+use crate::types::{MsgId, Pid, Ts, Wire};
+use crate::util::FxHashMap;
+
+/// Effects sink passed to every [`Node`](super::Node) handler. Buffers
+/// are drained (not dropped) by the runtimes and reused across events.
+#[derive(Default)]
+pub struct Outbox {
+    pub(crate) sends: Vec<(Pid, Wire)>,
+    pub(crate) delivers: Vec<(MsgId, Ts)>,
+    pub(crate) timers: Vec<(TimerKind, u64)>,
+    /// staged recipient list for [`Outbox::send_staged`] (reused scratch)
+    staged: Vec<Pid>,
+}
+
+impl Outbox {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Send `wire` to `to`. Nodes must not emit [`Wire::Batch`] frames
+    /// themselves — batching belongs to the runtime flush.
+    #[inline]
+    pub fn send(&mut self, to: Pid, wire: Wire) {
+        debug_assert!(!matches!(wire, Wire::Batch(_)), "nodes must not emit Batch frames");
+        self.sends.push((to, wire));
+    }
+
+    /// Send one message to many recipients: `n - 1` shallow clones, the
+    /// last recipient receives `wire` itself.
+    pub fn send_to_many<I: IntoIterator<Item = Pid>>(&mut self, to: I, wire: Wire) {
+        debug_assert!(!matches!(wire, Wire::Batch(_)), "nodes must not emit Batch frames");
+        let mut it = to.into_iter();
+        let Some(first) = it.next() else { return };
+        let mut prev = first;
+        for p in it {
+            self.sends.push((prev, wire.clone()));
+            prev = p;
+        }
+        self.sends.push((prev, wire));
+    }
+
+    /// Stage a recipient for the next [`Outbox::send_staged`] call. Used
+    /// when the recipient list must be computed from data that ends up
+    /// owned by the wire itself (e.g. `ACCEPT_ACK`'s ballot vector).
+    #[inline]
+    pub fn stage(&mut self, to: Pid) {
+        self.staged.push(to);
+    }
+
+    /// Send `wire` to every staged recipient (clearing the stage):
+    /// `n - 1` shallow clones, the last recipient receives `wire` itself.
+    pub fn send_staged(&mut self, wire: Wire) {
+        debug_assert!(!matches!(wire, Wire::Batch(_)), "nodes must not emit Batch frames");
+        let n = self.staged.len();
+        for i in 0..n.saturating_sub(1) {
+            let to = self.staged[i];
+            self.sends.push((to, wire.clone()));
+        }
+        if n > 0 {
+            let to = self.staged[n - 1];
+            self.sends.push((to, wire));
+        }
+        self.staged.clear();
+    }
+
+    /// Deliver application message `m` locally with global timestamp
+    /// `gts` (the `deliver(m)` event of §II).
+    #[inline]
+    pub fn deliver(&mut self, m: MsgId, gts: Ts) {
+        self.delivers.push((m, gts));
+    }
+
+    /// Arm a timer to fire after `after_ns`.
+    #[inline]
+    pub fn timer(&mut self, kind: TimerKind, after_ns: u64) {
+        self.timers.push((kind, after_ns));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        // staged counts: recipients staged without a send_staged would
+        // otherwise leak invisibly into the next event's staged send
+        self.sends.is_empty() && self.delivers.is_empty() && self.timers.is_empty() && self.staged.is_empty()
+    }
+
+    /// Drop all staged effects (buffers keep their capacity).
+    pub fn clear(&mut self) {
+        self.sends.clear();
+        self.delivers.clear();
+        self.timers.clear();
+        self.staged.clear();
+    }
+
+    // ---------- inspection (tests, probes) ----------
+    pub fn sends(&self) -> &[(Pid, Wire)] {
+        &self.sends
+    }
+    pub fn delivers(&self) -> &[(MsgId, Ts)] {
+        &self.delivers
+    }
+    pub fn timers(&self) -> &[(TimerKind, u64)] {
+        &self.timers
+    }
+}
+
+/// Upper bound on one coalesced frame's estimated wire size. The TCP
+/// receiver rejects frames above 64 MiB (`net::read_frame`) and drops
+/// the connection, so oversized batches are split into consecutive
+/// frames well under that cap (per-destination FIFO is preserved —
+/// consecutive chunks on the same link).
+pub const MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// Reusable scratch state for grouping a flat `(destination, wire)` list
+/// into per-destination frames. All maps/vectors retain capacity across
+/// calls; only multi-wire destinations allocate (the `Vec<Wire>` moved
+/// into the emitted [`Wire::Batch`] frame — one allocation per frame,
+/// not per message).
+#[derive(Default)]
+pub struct Coalescer {
+    counts: FxHashMap<Pid, u32>,
+    frames: FxHashMap<Pid, Vec<Wire>>,
+    /// emission order: destinations at first occurrence; `Some(wire)`
+    /// carries single-wire frames inline (no per-wire Vec allocation)
+    order: Vec<(Pid, Option<Wire>)>,
+}
+
+impl Coalescer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of frames `drain` would emit for `sends`.
+    pub fn frame_count(&mut self, sends: &[(Pid, Wire)], coalesce: bool) -> usize {
+        if !coalesce {
+            return sends.len();
+        }
+        self.counts.clear();
+        for &(to, _) in sends {
+            *self.counts.entry(to).or_insert(0) += 1;
+        }
+        self.counts.len()
+    }
+
+    /// Drain `sends` into frames, calling `emit(to, frame)` once per
+    /// destination in first-occurrence order. Multi-wire destinations are
+    /// wrapped in [`Wire::Batch`] preserving their FIFO order; single-wire
+    /// destinations receive the wire unwrapped. With `coalesce = false`
+    /// every send is emitted as its own frame in the original order.
+    pub fn drain<F: FnMut(Pid, Wire)>(&mut self, sends: &mut Vec<(Pid, Wire)>, coalesce: bool, mut emit: F) {
+        if !coalesce || sends.len() <= 1 {
+            for (to, wire) in sends.drain(..) {
+                emit(to, wire);
+            }
+            return;
+        }
+        self.counts.clear();
+        for &(to, _) in sends.iter() {
+            *self.counts.entry(to).or_insert(0) += 1;
+        }
+        for (to, wire) in sends.drain(..) {
+            if self.counts[&to] == 1 {
+                self.order.push((to, Some(wire)));
+            } else {
+                let buf = self.frames.entry(to).or_default();
+                if buf.is_empty() {
+                    self.order.push((to, None));
+                }
+                buf.push(wire);
+            }
+        }
+        for (to, single) in self.order.drain(..) {
+            match single {
+                Some(wire) => emit(to, wire),
+                None => {
+                    let batch = self.frames.remove(&to).expect("frame staged");
+                    emit_batch_bounded(to, batch, &mut emit);
+                }
+            }
+        }
+    }
+}
+
+/// Emit `batch` as one `Wire::Batch` frame, splitting into consecutive
+/// frames whenever the size estimate would exceed [`MAX_FRAME_BYTES`].
+fn emit_batch_bounded<F: FnMut(Pid, Wire)>(to: Pid, batch: Vec<Wire>, emit: &mut F) {
+    let total: usize = batch.iter().map(|w| w.size()).sum();
+    if total <= MAX_FRAME_BYTES {
+        emit(to, Wire::Batch(batch));
+        return;
+    }
+    let mut chunk: Vec<Wire> = Vec::new();
+    let mut bytes = 0usize;
+    for w in batch {
+        let sz = w.size();
+        if !chunk.is_empty() && bytes + sz > MAX_FRAME_BYTES {
+            let frame = if chunk.len() == 1 { chunk.pop().unwrap() } else { Wire::Batch(std::mem::take(&mut chunk)) };
+            emit(to, frame);
+            chunk.clear();
+            bytes = 0;
+        }
+        bytes += sz;
+        chunk.push(w);
+    }
+    if !chunk.is_empty() {
+        let frame = if chunk.len() == 1 { chunk.pop().unwrap() } else { Wire::Batch(chunk) };
+        emit(to, frame);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Ballot, Gid, Ts};
+
+    fn hb(n: u32) -> Wire {
+        Wire::Heartbeat { bal: Ballot::new(n, Pid(0)) }
+    }
+
+    #[test]
+    fn send_to_many_fans_out_once_per_recipient() {
+        let mut out = Outbox::new();
+        out.send_to_many([Pid(1), Pid(2), Pid(3)], hb(7));
+        assert_eq!(out.sends().len(), 3);
+        for (i, (to, w)) in out.sends().iter().enumerate() {
+            assert_eq!(*to, Pid(i as u32 + 1));
+            assert_eq!(*w, hb(7));
+        }
+        out.clear();
+        out.send_to_many(std::iter::empty(), hb(1));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn staged_recipients_cleared_after_send() {
+        let mut out = Outbox::new();
+        out.stage(Pid(4));
+        out.stage(Pid(5));
+        out.send_staged(hb(1));
+        assert_eq!(out.sends().len(), 2);
+        out.send_staged(hb(2)); // empty stage: no sends
+        assert_eq!(out.sends().len(), 2);
+    }
+
+    #[test]
+    fn coalescer_groups_by_destination_preserving_fifo() {
+        let mut c = Coalescer::new();
+        let mut sends = vec![(Pid(1), hb(10)), (Pid(2), hb(20)), (Pid(1), hb(11)), (Pid(1), hb(12))];
+        assert_eq!(c.frame_count(&sends, true), 2);
+        assert_eq!(c.frame_count(&sends, false), 4);
+        let mut got = Vec::new();
+        c.drain(&mut sends, true, |to, w| got.push((to, w)));
+        assert_eq!(got.len(), 2);
+        // first-occurrence order: Pid(1) before Pid(2)
+        assert_eq!(got[0].0, Pid(1));
+        match &got[0].1 {
+            Wire::Batch(inner) => assert_eq!(inner.as_slice(), &[hb(10), hb(11), hb(12)]),
+            w => panic!("expected batch, got {w:?}"),
+        }
+        // single-wire destination is not wrapped
+        assert_eq!(got[1], (Pid(2), hb(20)));
+        assert!(sends.is_empty());
+    }
+
+    #[test]
+    fn coalescer_off_preserves_exact_order() {
+        let mut c = Coalescer::new();
+        let mut sends = vec![(Pid(1), hb(1)), (Pid(1), hb(2)), (Pid(2), hb(3))];
+        let mut got = Vec::new();
+        c.drain(&mut sends, false, |to, w| got.push((to, w)));
+        assert_eq!(got, vec![(Pid(1), hb(1)), (Pid(1), hb(2)), (Pid(2), hb(3))]);
+    }
+
+    #[test]
+    fn oversized_batches_split_below_the_frame_cap() {
+        use crate::types::{GidSet, MsgId, MsgMeta};
+        // 5 × 3 MiB payloads: one destination, total ~15 MiB > cap (8 MiB)
+        let big = |i: u32| Wire::Multicast {
+            meta: MsgMeta::new(MsgId::new(1, i), GidSet::single(Gid(0)), vec![0u8; 3 << 20]),
+        };
+        let mut c = Coalescer::new();
+        let mut sends: Vec<(Pid, Wire)> = (0..5).map(|i| (Pid(9), big(i))).collect();
+        let mut got = Vec::new();
+        c.drain(&mut sends, true, |to, w| got.push((to, w)));
+        assert!(got.len() > 1, "oversized batch must split");
+        let mut seen = Vec::new();
+        for (to, frame) in &got {
+            assert_eq!(*to, Pid(9));
+            assert!(frame.size() <= MAX_FRAME_BYTES, "frame over cap: {}", frame.size());
+            match frame {
+                Wire::Batch(inner) => {
+                    for w in inner {
+                        let Wire::Multicast { meta } = w else { panic!() };
+                        seen.push(meta.id.seq());
+                    }
+                }
+                Wire::Multicast { meta } => seen.push(meta.id.seq()),
+                w => panic!("unexpected {}", w.tag()),
+            }
+        }
+        // FIFO across the split frames
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn coalescer_reuse_across_flushes() {
+        let mut c = Coalescer::new();
+        for round in 0..3u32 {
+            let mut sends = vec![(Pid(1), hb(round)), (Pid(1), hb(round + 100))];
+            let mut got = Vec::new();
+            c.drain(&mut sends, true, |to, w| got.push((to, w)));
+            assert_eq!(got.len(), 1);
+            match &got[0].1 {
+                Wire::Batch(inner) => assert_eq!(inner.len(), 2),
+                w => panic!("expected batch, got {w:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn outbox_effect_kinds_land_in_their_buffers() {
+        let mut out = Outbox::new();
+        out.send(Pid(1), hb(1));
+        out.deliver(MsgId::new(1, 1), Ts::new(3, Gid(0)));
+        out.timer(TimerKind::LssTick, 500);
+        assert_eq!(out.sends().len(), 1);
+        assert_eq!(out.delivers(), &[(MsgId::new(1, 1), Ts::new(3, Gid(0)))]);
+        assert_eq!(out.timers(), &[(TimerKind::LssTick, 500)]);
+        assert!(!out.is_empty());
+        out.clear();
+        assert!(out.is_empty());
+    }
+}

@@ -11,7 +11,7 @@
 //! Collision-free latency 2δ (MULTICAST, PROPOSE); failure-free 4δ due to
 //! the convoy effect (Fig. 2).
 
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::{Gid, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
 use std::collections::{BTreeSet, HashMap};
 
@@ -62,7 +62,7 @@ impl SkeenNode {
 
     /// Deliver every committed message whose global timestamp lies below
     /// the pending frontier, in global-timestamp order (Fig. 1 line 17).
-    fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+    fn try_deliver(&mut self, out: &mut Outbox) {
         loop {
             let Some(&(gts, m)) = self.committed.iter().next() else { break };
             if let Some(&(frontier, _)) = self.pending.iter().next() {
@@ -75,8 +75,8 @@ impl SkeenNode {
             debug_assert!(!e.delivered);
             e.delivered = true;
             self.delivered_count += 1;
-            acts.push(Action::Deliver(m, gts));
-            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            out.deliver(m, gts);
+            out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
         }
     }
 }
@@ -86,12 +86,9 @@ impl Node for SkeenNode {
         self.pid
     }
 
-    fn on_start(&mut self, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_start(&mut self, _now: u64, _out: &mut Outbox) {}
 
-    fn on_wire(&mut self, _from: Pid, wire: Wire, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    fn on_wire(&mut self, _from: Pid, wire: Wire, _now: u64, out: &mut Outbox) {
         match wire {
             // Fig. 1 line 8: assign a local timestamp and broadcast it to
             // the destination groups.
@@ -105,15 +102,15 @@ impl Node for SkeenNode {
                         if e.phase == Phase::Proposed {
                             for g in e.meta.dest.iter() {
                                 let to = self.topo.initial_leader(g);
-                                acts.push(Action::Send(to, Wire::Propose { m: meta.id, g: self.gid, lts: e.lts }));
+                                out.send(to, Wire::Propose { m: meta.id, g: self.gid, lts: e.lts });
                             }
                         } else if e.delivered {
-                            acts.push(Action::Send(
+                            out.send(
                                 Pid(meta.id.client()),
                                 Wire::Delivered { m: meta.id, g: self.gid, gts: e.gts },
-                            ));
+                            );
                         }
-                        return acts;
+                        return;
                     }
                     // else: entry holds parked remote proposals (a PROPOSE
                     // overtook the MULTICAST) — fall through and propose,
@@ -131,7 +128,7 @@ impl Node for SkeenNode {
                 self.pending.insert((lts, id));
                 for g in dest.iter() {
                     let to = self.topo.initial_leader(g); // singleton group
-                    acts.push(Action::Send(to, Wire::Propose { m: id, g: self.gid, lts }));
+                    out.send(to, Wire::Propose { m: id, g: self.gid, lts });
                 }
                 // the self-send above delivers our own PROPOSE back to us,
                 // which (together with any parked proposals) triggers the
@@ -158,11 +155,11 @@ impl Node for SkeenNode {
                             proposals,
                         },
                     );
-                    return acts;
+                    return;
                 };
                 e.proposals.insert(g, lts);
                 if e.phase != Phase::Proposed {
-                    return acts; // not yet proposed locally, or already done
+                    return; // not yet proposed locally, or already done
                 }
                 if e.meta.dest.iter().all(|g| e.proposals.contains_key(&g)) {
                     let gts = e.meta.dest.iter().map(|g| e.proposals[&g]).max().unwrap();
@@ -172,17 +169,14 @@ impl Node for SkeenNode {
                     self.clock = self.clock.max(gts.time()); // line 15
                     self.pending.remove(&(lts, m));
                     self.committed.insert((gts, m));
-                    self.try_deliver(&mut acts);
+                    self.try_deliver(out);
                 }
             }
             _ => {}
         }
-        acts
     }
 
-    fn on_timer(&mut self, _timer: TimerKind, _now: u64) -> Vec<Action> {
-        vec![]
-    }
+    fn on_timer(&mut self, _timer: TimerKind, _now: u64, _out: &mut Outbox) {}
 }
 
 #[cfg(test)]
@@ -190,8 +184,16 @@ mod tests {
     use super::*;
     use crate::types::GidSet;
 
-    fn mcast(node: &mut SkeenNode, id: MsgId, dest: GidSet) -> Vec<Action> {
-        node.on_wire(Pid(99), Wire::Multicast { meta: MsgMeta::new(id, dest, vec![]) }, 0)
+    fn mcast(node: &mut SkeenNode, id: MsgId, dest: GidSet) -> Outbox {
+        let mut out = Outbox::new();
+        node.on_wire(Pid(99), Wire::Multicast { meta: MsgMeta::new(id, dest, vec![]) }, 0, &mut out);
+        out
+    }
+
+    fn propose(node: &mut SkeenNode, from: Pid, m: MsgId, g: Gid, lts: Ts) -> Outbox {
+        let mut out = Outbox::new();
+        node.on_wire(from, Wire::Propose { m, g, lts }, 1, &mut out);
+        out
     }
 
     #[test]
@@ -205,25 +207,16 @@ mod tests {
         let a0 = mcast(&mut n0, m, dest);
         let a1 = mcast(&mut n1, m, dest);
         // each sends PROPOSE to both destinations
-        assert_eq!(a0.len(), 2);
-        assert_eq!(a1.len(), 2);
+        assert_eq!(a0.sends().len(), 2);
+        assert_eq!(a1.sends().len(), 2);
 
         // deliver all proposals to n0
-        let mut out = Vec::new();
-        out.extend(n0.on_wire(Pid(0), Wire::Propose { m, g: Gid(0), lts: Ts::new(1, Gid(0)) }, 1));
-        out.extend(n0.on_wire(Pid(1), Wire::Propose { m, g: Gid(1), lts: Ts::new(1, Gid(1)) }, 1));
-        let delivered: Vec<_> = out.iter().filter(|a| matches!(a, Action::Deliver(..))).collect();
-        assert_eq!(delivered.len(), 1);
+        propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
+        let out = propose(&mut n0, Pid(1), m, Gid(1), Ts::new(1, Gid(1)));
         // gts = max((1,g0),(1,g1)) = (1,g1)
-        match delivered[0] {
-            Action::Deliver(mm, gts) => {
-                assert_eq!(*mm, m);
-                assert_eq!(*gts, Ts::new(1, Gid(1)));
-            }
-            _ => unreachable!(),
-        }
+        assert_eq!(out.delivers(), &[(m, Ts::new(1, Gid(1)))]);
         // client notified
-        assert!(out.iter().any(|a| matches!(a, Action::Send(Pid(99), Wire::Delivered { .. }))));
+        assert!(out.sends().iter().any(|(to, w)| *to == Pid(99) && matches!(w, Wire::Delivered { .. })));
         assert_eq!(n0.clock(), 1);
     }
 
@@ -239,20 +232,17 @@ mod tests {
 
         mcast(&mut n0, m, dest); // lts (1,g0)
         mcast(&mut n0, m2, dest); // lts (2,g0)
-        n0.on_wire(Pid(0), Wire::Propose { m, g: Gid(0), lts: Ts::new(1, Gid(0)) }, 1);
-        let out = n0.on_wire(Pid(1), Wire::Propose { m, g: Gid(1), lts: Ts::new(5, Gid(1)) }, 1);
+        propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
+        let out = propose(&mut n0, Pid(1), m, Gid(1), Ts::new(5, Gid(1)));
         // m is committed with gts (5,g1) but m2 (lts (2,g0)) blocks it
-        assert!(out.iter().all(|a| !matches!(a, Action::Deliver(..))));
+        assert!(out.delivers().is_empty());
         // clock advanced to 5 by line 15
         assert_eq!(n0.clock(), 5);
 
         // commit m2 with gts (7,g1): both deliver, in gts order m(5) then m2(7)
-        n0.on_wire(Pid(0), Wire::Propose { m: m2, g: Gid(0), lts: Ts::new(2, Gid(0)) }, 2);
-        let out = n0.on_wire(Pid(1), Wire::Propose { m: m2, g: Gid(1), lts: Ts::new(7, Gid(1)) }, 2);
-        let delivered: Vec<MsgId> = out
-            .iter()
-            .filter_map(|a| if let Action::Deliver(mm, _) = a { Some(*mm) } else { None })
-            .collect();
+        propose(&mut n0, Pid(0), m2, Gid(0), Ts::new(2, Gid(0)));
+        let out = propose(&mut n0, Pid(1), m2, Gid(1), Ts::new(7, Gid(1)));
+        let delivered: Vec<MsgId> = out.delivers().iter().map(|&(mm, _)| mm).collect();
         assert_eq!(delivered, vec![m, m2]);
     }
 
@@ -264,13 +254,13 @@ mod tests {
         let mut n0 = SkeenNode::new(Pid(0), topo.clone());
         let m = MsgId::new(99, 1);
         mcast(&mut n0, m, GidSet::from_iter([Gid(0), Gid(1)]));
-        n0.on_wire(Pid(0), Wire::Propose { m, g: Gid(0), lts: Ts::new(1, Gid(0)) }, 1);
-        n0.on_wire(Pid(1), Wire::Propose { m, g: Gid(1), lts: Ts::new(5, Gid(1)) }, 1);
+        propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
+        propose(&mut n0, Pid(1), m, Gid(1), Ts::new(5, Gid(1)));
         let m2 = MsgId::new(98, 1);
-        let acts = mcast(&mut n0, m2, GidSet::from_iter([Gid(0)]));
-        match &acts[0] {
-            Action::Send(_, Wire::Propose { lts, .. }) => assert_eq!(*lts, Ts::new(6, Gid(0))),
-            a => panic!("unexpected {a:?}"),
+        let out = mcast(&mut n0, m2, GidSet::from_iter([Gid(0)]));
+        match &out.sends()[0] {
+            (_, Wire::Propose { lts, .. }) => assert_eq!(*lts, Ts::new(6, Gid(0))),
+            (_, w) => panic!("unexpected {w:?}"),
         }
     }
 
@@ -282,13 +272,13 @@ mod tests {
         let dest = GidSet::single(Gid(0));
         mcast(&mut n0, m, dest);
         // still proposed: duplicate triggers PROPOSE re-send
-        let acts = mcast(&mut n0, m, dest);
-        assert!(acts.iter().any(|a| matches!(a, Action::Send(_, Wire::Propose { .. }))));
+        let out = mcast(&mut n0, m, dest);
+        assert!(out.sends().iter().any(|(_, w)| matches!(w, Wire::Propose { .. })));
         // commit + deliver via self proposal
-        n0.on_wire(Pid(0), Wire::Propose { m, g: Gid(0), lts: Ts::new(1, Gid(0)) }, 1);
+        propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
         // duplicate after delivery: re-notify the client
-        let acts = mcast(&mut n0, m, dest);
-        assert!(acts.iter().any(|a| matches!(a, Action::Send(Pid(99), Wire::Delivered { .. }))));
+        let out = mcast(&mut n0, m, dest);
+        assert!(out.sends().iter().any(|(to, w)| *to == Pid(99) && matches!(w, Wire::Delivered { .. })));
     }
 
     #[test]
@@ -298,7 +288,7 @@ mod tests {
         let mut n0 = SkeenNode::new(Pid(0), topo);
         let m = MsgId::new(99, 1);
         mcast(&mut n0, m, GidSet::single(Gid(0)));
-        let out = n0.on_wire(Pid(0), Wire::Propose { m, g: Gid(0), lts: Ts::new(1, Gid(0)) }, 1);
-        assert!(out.iter().any(|a| matches!(a, Action::Deliver(..))));
+        let out = propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
+        assert_eq!(out.delivers().len(), 1);
     }
 }

@@ -17,7 +17,7 @@
 
 pub mod recovery;
 
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::{Ballot, Gid, MsgId, MsgMeta, Phase, Pid, Status, Topology, Ts, Wire};
 use crate::util::{FxHashMap, FxHashSet};
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
@@ -38,7 +38,13 @@ pub struct WbConfig {
     pub gc: bool,
     /// commit-batch size: quorum-complete messages are staged and
     /// committed through the batch backend once this many accumulate
-    /// (1 = commit immediately; >1 enables the XLA batch engine path)
+    /// (1 = commit immediately; >1 enables the XLA batch engine path).
+    /// This is the *commit-side* coalescing knob; its wire-side
+    /// companion is destination-coalesced batching in the runtimes
+    /// ([`crate::sim::SimConfig::coalesce`], always-on in the
+    /// coordinator): a flush of `k` staged commits emits `k` `DELIVER`s
+    /// per follower, which the outbox flush folds into a single
+    /// [`Wire::Batch`](crate::types::Wire::Batch) frame per follower.
     pub batch_threshold: usize,
     /// flush a non-empty stage after this long even if below threshold
     pub batch_flush_after: u64,
@@ -287,19 +293,18 @@ impl WbNode {
     }
 
     // ---------- Fig. 4 line 3: MULTICAST at the leader ----------
-    fn on_multicast(&mut self, meta: MsgMeta, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_multicast(&mut self, meta: MsgMeta, _now: u64, out: &mut Outbox) {
         let mid = meta.id;
         if self.status != Status::Leader {
-            return acts; // pre: status = LEADER
+            return; // pre: status = LEADER
         }
         debug_assert!(meta.dest.contains(self.gid), "genuineness: not a destination");
         // GC'd duplicate: strictly below the client watermark the message
         // was delivered everywhere (clients are sequential); never
         // re-propose — that would mint a second global timestamp.
         if self.below_gc_watermark(meta.id) {
-            acts.push(Action::Send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: Ts::BOT }));
-            return acts;
+            out.send(Pid(meta.id.client()), Wire::Delivered { m: meta.id, g: self.gid, gts: Ts::BOT });
+            return;
         }
         let e = self.entries.entry(meta.id).or_insert_with(|| Entry::new(meta.clone()));
         if e.meta.dest.is_empty() {
@@ -320,40 +325,36 @@ impl WbNode {
             // on m can finish (§IV message recovery: "groups that have
             // already processed m will just resend the corresponding
             // protocol messages")
-            acts.push(Action::Send(Pid(e.meta.id.client()), Wire::Delivered { m: e.meta.id, g: self.gid, gts: e.gts }));
+            out.send(Pid(e.meta.id.client()), Wire::Delivered { m: e.meta.id, g: self.gid, gts: e.gts });
         }
         // (re)send ACCEPT with the locally stored data (Invariant 1: one
-        // local timestamp per ballot)
+        // local timestamp per ballot). The Arc'd payload makes the
+        // per-member wire clones shallow.
+        let dest = e.meta.dest;
         let wire = Wire::Accept { meta: e.meta.clone(), g: self.gid, bal: self.cballot, lts: e.lts };
-        let mut targets = Vec::new();
-        for g in e.meta.dest.iter() {
-            targets.extend_from_slice(self.topo.members(g));
-        }
-        for to in targets {
-            acts.push(Action::Send(to, wire.clone()));
+        for g in dest.iter() {
+            out.send_to_many(self.topo.members(g).iter().copied(), wire.clone());
         }
         // arm the retry chain only on the first proposal: on_retry re-arms
         // itself, so one chain per message suffices (duplicates arming
         // more would multiply timers)
         if fresh && self.cfg.retry_after > 0 {
-            acts.push(Action::Timer(TimerKind::Retry(mid), self.cfg.retry_after));
+            out.timer(TimerKind::Retry(mid), self.cfg.retry_after);
         }
-        acts
     }
 
     // ---------- Fig. 4 line 10: ACCEPT at a destination process ----------
-    fn on_accept(&mut self, meta: MsgMeta, g: Gid, bal: Ballot, lts: Ts, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_accept(&mut self, meta: MsgMeta, g: Gid, bal: Ballot, lts: Ts, _now: u64, out: &mut Outbox) {
         let mid = meta.id;
         if self.status == Status::Recovering {
-            return acts; // pre: status ∈ {FOLLOWER, LEADER}
+            return; // pre: status ∈ {FOLLOWER, LEADER}
         }
         // learn the remote leader for retries
         if (g.0 as usize) < self.cur_leader.len() && g != self.gid {
             self.cur_leader[g.0 as usize] = bal.leader();
         }
         if self.below_gc_watermark(meta.id) {
-            return acts; // stale ACCEPT for a collected message
+            return; // stale ACCEPT for a collected message
         }
         let e = self.entries.entry(meta.id).or_insert_with(|| Entry::new(meta.clone()));
         if e.meta.dest.is_empty() {
@@ -362,15 +363,13 @@ impl WbNode {
         // store the latest proposal from this group (a re-proposal after a
         // remote leader change replaces the stale one)
         e.accepts.insert(g, (bal, lts));
-        let _ = mid;
-        self.try_accept_ack(mid, &mut acts);
-        acts
+        self.try_accept_ack(mid, out);
     }
 
     /// Fire line 10's body once ACCEPTs from all destination leaders are
     /// present and our own group's ballot matches `cballot`. Re-checked
     /// whenever `cballot` changes (recovery completion).
-    pub(crate) fn try_accept_ack(&mut self, m: MsgId, acts: &mut Vec<Action>) {
+    pub(crate) fn try_accept_ack(&mut self, m: MsgId, out: &mut Outbox) {
         let Some(e) = self.entries.get_mut(&m) else { return };
         if e.meta.dest.is_empty() {
             return;
@@ -394,25 +393,32 @@ impl WbNode {
         // line 14: speculative clock advance to the would-be global ts
         let gts = e.accepts.values().map(|&(_, l)| l).max().unwrap();
         self.clock = self.clock.max(gts.time());
-        // line 16: acknowledge to every proposing leader
+        // line 16: acknowledge to every proposing leader (the ballot
+        // vector ends up owned by the wire, so recipients are staged)
         let bals = Self::ballot_vector(e);
-        let leaders: Vec<Pid> = bals.iter().map(|&(_, b)| b.leader()).collect();
-        let wire = Wire::AcceptAck { m, g: self.gid, bals };
-        for to in leaders {
-            acts.push(Action::Send(to, wire.clone()));
+        for &(_, b) in &bals {
+            out.stage(b.leader());
         }
+        out.send_staged(Wire::AcceptAck { m, g: self.gid, bals });
     }
 
     // ---------- Fig. 4 line 17: ACCEPT_ACK at the leader ----------
-    fn on_accept_ack(&mut self, m: MsgId, g: Gid, bals: Vec<(Gid, Ballot)>, from: Pid, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_accept_ack(
+        &mut self,
+        m: MsgId,
+        g: Gid,
+        bals: Vec<(Gid, Ballot)>,
+        from: Pid,
+        _now: u64,
+        out: &mut Outbox,
+    ) {
         if self.status != Status::Leader {
-            return acts;
+            return;
         }
         let quorum = self.quorum();
-        let Some(e) = self.entries.get_mut(&m) else { return acts };
+        let Some(e) = self.entries.get_mut(&m) else { return };
         if e.phase == Phase::Committed {
-            return acts;
+            return;
         }
         // avoid cloning the ballot-vector key when the tally row exists
         // (every ack after the first; §Perf iteration 3)
@@ -426,19 +432,19 @@ impl WbNode {
         let tally = &e.acks[&bals];
         let have_quorums = e.meta.dest.iter().all(|g| tally.get(&g).map(|s| s.len()).unwrap_or(0) >= quorum);
         if !have_quorums {
-            return acts;
+            return;
         }
         let own_ok = bals.iter().any(|&(g, b)| g == self.gid && b == self.cballot);
         if !own_ok {
-            return acts; // stale vector from a previous leadership
+            return; // stale vector from a previous leadership
         }
         let accepts_match = bals.len() == e.meta.dest.len()
             && bals.iter().all(|&(g, b)| e.accepts.get(&g).map(|&(ab, _)| ab == b).unwrap_or(false));
         if !accepts_match {
-            return acts;
+            return;
         }
         if e.staged {
-            return acts; // already in the commit batch
+            return; // already in the commit batch
         }
         // lines 19-20: stage the commit; the global timestamp is resolved
         // by the batch backend (native or the AOT XLA engine). The entry
@@ -448,16 +454,15 @@ impl WbNode {
         let lts_set: Vec<Ts> = bals.iter().map(|&(g, _)| e.accepts[&g].1).collect();
         self.ready.push(crate::runtime::BatchReq { m, lts: lts_set });
         if self.ready.len() >= self.cfg.batch_threshold {
-            self.flush_commits(&mut acts);
+            self.flush_commits(out);
         } else if self.cfg.batch_flush_after > 0 && self.ready.len() == 1 {
-            acts.push(Action::Timer(TimerKind::BatchFlush, self.cfg.batch_flush_after));
+            out.timer(TimerKind::BatchFlush, self.cfg.batch_flush_after);
         }
-        acts
     }
 
     /// Resolve global timestamps for the staged batch through the commit
     /// backend, apply the commits, and deliver whatever is unblocked.
-    pub(crate) fn flush_commits(&mut self, acts: &mut Vec<Action>) {
+    pub(crate) fn flush_commits(&mut self, out: &mut Outbox) {
         if self.ready.is_empty() {
             return;
         }
@@ -473,22 +478,22 @@ impl WbNode {
         let pending_snapshot: Vec<Ts> =
             self.pending.iter().take(crate::runtime::engine::P_SLOTS).map(|&(lts, _)| lts).collect();
         let outs = self.backend.commit_batch(&reqs, &pending_snapshot);
-        for out in outs {
-            let Some(e) = self.entries.get_mut(&out.m) else { continue };
+        for o in outs {
+            let Some(e) = self.entries.get_mut(&o.m) else { continue };
             if e.phase == Phase::Committed {
                 continue;
             }
             e.phase = Phase::Committed;
             e.staged = false;
-            e.gts = out.gts;
-            self.committed.insert((out.gts, out.m));
+            e.gts = o.gts;
+            self.committed.insert((o.gts, o.m));
             self.stats.committed += 1;
         }
-        self.try_deliver(acts);
+        self.try_deliver(out);
     }
 
     // ---------- Fig. 4 line 21: ordered delivery at the leader ----------
-    pub(crate) fn try_deliver(&mut self, acts: &mut Vec<Action>) {
+    pub(crate) fn try_deliver(&mut self, out: &mut Outbox) {
         loop {
             let Some(&(gts, m)) = self.committed.iter().next() else { break };
             if let Some(&(frontier, _)) = self.pending.iter().next() {
@@ -497,14 +502,14 @@ impl WbNode {
                 }
             }
             self.committed.remove(&(gts, m));
-            self.deliver_one(m, gts, acts, true);
+            self.deliver_one(m, gts, out, true);
         }
     }
 
     /// Mark `m` delivered at this process and replicate the decision to
     /// the followers (`DELIVER`, line 23). `notify`: send the client
     /// notification (suppressed for post-recovery resends).
-    pub(crate) fn deliver_one(&mut self, m: MsgId, gts: Ts, acts: &mut Vec<Action>, notify: bool) {
+    pub(crate) fn deliver_one(&mut self, m: MsgId, gts: Ts, out: &mut Outbox, notify: bool) {
         let e = self.entries.get_mut(&m).expect("deliver_one: unknown entry");
         debug_assert_eq!(e.phase, Phase::Committed);
         let lts = e.lts;
@@ -513,7 +518,7 @@ impl WbNode {
             self.delivered_log.insert(gts, m);
             if gts > self.max_delivered_gts {
                 self.max_delivered_gts = gts;
-                acts.push(Action::Deliver(m, gts));
+                out.deliver(m, gts);
                 self.stats.delivered += 1;
             }
             let c = m.client();
@@ -521,21 +526,18 @@ impl WbNode {
             *seq = (*seq).max(m.seq());
         }
         if notify {
-            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
         }
-        for &p in self.group() {
-            if p != self.pid {
-                acts.push(Action::Send(p, Wire::Deliver { m, bal: self.cballot, lts, gts }));
-            }
-        }
+        let me = self.pid;
+        let wire = Wire::Deliver { m, bal: self.cballot, lts, gts };
+        out.send_to_many(self.group().iter().copied().filter(|&p| p != me), wire);
     }
 
     // ---------- Fig. 4 line 24: DELIVER at a follower ----------
-    fn on_deliver(&mut self, m: MsgId, b: Ballot, lts: Ts, gts: Ts, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_deliver(&mut self, m: MsgId, b: Ballot, lts: Ts, gts: Ts, _now: u64, out: &mut Outbox) {
         // pre: status ∈ {FOLLOWER, LEADER} ∧ cballot = b ∧ max_delivered_gts < gts
         if self.status == Status::Recovering || self.cballot != b || self.max_delivered_gts >= gts {
-            return acts;
+            return;
         }
         let e = self.entries.entry(m).or_insert_with(|| Entry::new(MsgMeta::new(m, crate::types::GidSet::EMPTY, vec![])));
         // lines 26-31
@@ -556,28 +558,24 @@ impl WbNode {
         let seq = self.gc_client_seq.entry(c).or_insert(0);
         *seq = (*seq).max(m.seq());
         self.stats.delivered += 1;
-        acts.push(Action::Deliver(m, gts));
-        acts
+        out.deliver(m, gts);
     }
 
     // ---------- Fig. 4 line 32: retry (message recovery) ----------
-    fn on_retry(&mut self, m: MsgId, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    fn on_retry(&mut self, m: MsgId, _now: u64, out: &mut Outbox) {
         if self.status != Status::Leader {
-            return acts;
+            return;
         }
-        let Some(e) = self.entries.get(&m) else { return acts };
+        let Some(e) = self.entries.get(&m) else { return };
         if e.phase != Phase::Proposed && e.phase != Phase::Accepted {
-            return acts;
+            return;
         }
         self.stats.retries += 1;
-        let wire = Wire::Multicast { meta: e.meta.clone() };
-        let dests: Vec<Pid> = e.meta.dest.iter().map(|g| self.cur_leader[g.0 as usize]).collect();
-        for to in dests {
-            acts.push(Action::Send(to, wire.clone()));
+        for g in e.meta.dest.iter() {
+            out.stage(self.cur_leader[g.0 as usize]);
         }
-        acts.push(Action::Timer(TimerKind::Retry(m), self.cfg.retry_after));
-        acts
+        out.send_staged(Wire::Multicast { meta: e.meta.clone() });
+        out.timer(TimerKind::Retry(m), self.cfg.retry_after);
     }
 
     // ---------- GC (§VI) ----------
@@ -630,76 +628,69 @@ impl Node for WbNode {
         self.pid
     }
 
-    fn on_start(&mut self, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    fn on_start(&mut self, _now: u64, out: &mut Outbox) {
         if self.cfg.hb_interval > 0 {
-            acts.push(Action::Timer(TimerKind::LssTick, self.cfg.hb_interval));
+            out.timer(TimerKind::LssTick, self.cfg.hb_interval);
         }
-        acts
     }
 
-    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
         match wire {
-            Wire::Multicast { meta } => self.on_multicast(meta, now),
+            Wire::Multicast { meta } => self.on_multicast(meta, now, out),
             Wire::Accept { meta, g, bal, lts } => {
                 if g == self.gid && bal.leader() == from {
                     self.last_hb = now; // own leader is alive
                 }
-                self.on_accept(meta, g, bal, lts, now)
+                self.on_accept(meta, g, bal, lts, now, out)
             }
-            Wire::AcceptAck { m, g, bals } => self.on_accept_ack(m, g, bals, from, now),
+            Wire::AcceptAck { m, g, bals } => self.on_accept_ack(m, g, bals, from, now, out),
             Wire::Deliver { m, bal, lts, gts } => {
                 if bal.leader() == from {
                     self.last_hb = now;
                 }
-                self.on_deliver(m, bal, lts, gts, now)
+                self.on_deliver(m, bal, lts, gts, now, out)
             }
-            Wire::NewLeader { bal } => self.on_new_leader(bal, from, now),
-            Wire::NewLeaderAck { bal, cbal, clock, state } => self.on_new_leader_ack(bal, cbal, clock, state, from, now),
-            Wire::NewState { bal, clock, state } => self.on_new_state(bal, clock, state, from, now),
-            Wire::NewStateAck { bal } => self.on_new_state_ack(bal, from, now),
+            Wire::NewLeader { bal } => self.on_new_leader(bal, from, now, out),
+            Wire::NewLeaderAck { bal, cbal, clock, state } => {
+                self.on_new_leader_ack(bal, cbal, clock, state, from, now, out)
+            }
+            Wire::NewState { bal, clock, state } => self.on_new_state(bal, clock, state, from, now, out),
+            Wire::NewStateAck { bal } => self.on_new_state_ack(bal, from, now, out),
             Wire::Heartbeat { bal } => {
                 if bal >= self.cballot && self.topo.is_member(from, self.gid) {
                     self.last_hb = now;
                 }
-                vec![]
             }
             Wire::GcReport { max_gts } => {
-                let mut acts = Vec::new();
                 if !self.topo.is_member(from, self.gid) {
-                    return acts;
+                    return;
                 }
                 if self.status == Status::Leader {
                     // follower report: update watermark, sweep, announce
                     self.gc_reports.insert(from, max_gts);
                     if let Some(wm) = self.gc_sweep() {
-                        for &p in self.group() {
-                            if p != self.pid {
-                                acts.push(Action::Send(p, Wire::GcReport { max_gts: wm }));
-                            }
-                        }
+                        let me = self.pid;
+                        out.send_to_many(
+                            self.group().iter().copied().filter(|&p| p != me),
+                            Wire::GcReport { max_gts: wm },
+                        );
                     }
                 } else if from == self.cballot.leader() {
                     // leader's group-wide watermark announcement
                     self.trim_below(max_gts);
                 }
-                acts
             }
-            _ => vec![],
+            _ => {}
         }
     }
 
-    fn on_timer(&mut self, timer: TimerKind, now: u64) -> Vec<Action> {
+    fn on_timer(&mut self, timer: TimerKind, now: u64, out: &mut Outbox) {
         match timer {
-            TimerKind::Retry(m) => self.on_retry(m, now),
-            TimerKind::LssTick => self.on_lss_tick(now),
-            TimerKind::RecoveryTimeout(n) => self.on_recovery_timeout(n, now),
-            TimerKind::BatchFlush => {
-                let mut acts = Vec::new();
-                self.flush_commits(&mut acts);
-                acts
-            }
-            _ => vec![],
+            TimerKind::Retry(m) => self.on_retry(m, now, out),
+            TimerKind::LssTick => self.on_lss_tick(now, out),
+            TimerKind::RecoveryTimeout(n) => self.on_recovery_timeout(n, now, out),
+            TimerKind::BatchFlush => self.flush_commits(out),
+            _ => {}
         }
     }
 }

@@ -10,7 +10,7 @@
 //! preserving Invariant 5) *before* resuming normal operation.
 
 use super::{Entry, WbNode};
-use crate::protocols::{Action, TimerKind};
+use crate::protocols::{Outbox, TimerKind};
 use crate::types::wire::MsgState;
 use crate::types::{Ballot, MsgId, Phase, Pid, Status, Ts, Wire};
 use std::collections::HashMap;
@@ -33,37 +33,31 @@ impl WbNode {
     }
 
     /// Fig. 4 line 35: start a new candidacy.
-    pub(crate) fn recover(&mut self, _now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn recover(&mut self, _now: u64, out: &mut Outbox) {
         let n = self.ballot.n.max(self.cballot.n) + 1;
         let b = Ballot::new(n, self.pid);
         self.stats.recoveries_started += 1;
         // our own NEWLEADER (self-send) moves us to RECOVERING
-        for &p in self.group() {
-            acts.push(Action::Send(p, Wire::NewLeader { bal: b }));
-        }
+        out.send_to_many(self.group().iter().copied(), Wire::NewLeader { bal: b });
         if self.cfg.recovery_timeout > 0 {
-            acts.push(Action::Timer(TimerKind::RecoveryTimeout(n), self.cfg.recovery_timeout));
+            out.timer(TimerKind::RecoveryTimeout(n), self.cfg.recovery_timeout);
         }
-        acts
     }
 
     /// Fig. 4 line 37: vote for a prospective leader.
-    pub(crate) fn on_new_leader(&mut self, b: Ballot, from: Pid, now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_new_leader(&mut self, b: Ballot, from: Pid, now: u64, out: &mut Outbox) {
         if !self.topo.is_member(from, self.gid) || b <= self.ballot {
-            return acts; // pre: b > ballot
+            return; // pre: b > ballot
         }
         self.ballot = b;
         self.status = Status::Recovering;
         self.nl_acks.clear();
         self.ns_acks.clear();
         self.last_hb = now; // give the candidate time before suspecting it
-        acts.push(Action::Send(
+        out.send(
             from,
             Wire::NewLeaderAck { bal: b, cbal: self.cballot, clock: self.clock, state: self.snapshot() },
-        ));
-        acts
+        );
     }
 
     /// Fig. 4 line 42: collect votes; on quorum, compute the initial state.
@@ -75,16 +69,16 @@ impl WbNode {
         state: Vec<MsgState>,
         from: Pid,
         now: u64,
-    ) -> Vec<Action> {
-        let mut acts = Vec::new();
+        out: &mut Outbox,
+    ) {
         // pre: status = RECOVERING ∧ ballot = b; `cballot < b` excludes
         // duplicate computation after the state was already adopted
         if self.status != Status::Recovering || self.ballot != b || b.leader() != self.pid || self.cballot >= b {
-            return acts;
+            return;
         }
         self.nl_acks.insert(from, NlAck { cbal, clock, state });
         if self.nl_acks.len() < self.quorum() {
-            return acts;
+            return;
         }
 
         // ---- lines 44-55: compute the new state ----
@@ -124,12 +118,11 @@ impl WbNode {
         self.ns_acks.insert(self.pid);
         for &p in self.group() {
             if p != self.pid {
-                acts.push(Action::Send(p, Wire::NewState { bal: b, clock: new_clock, state: state_out.clone() }));
+                out.send(p, Wire::NewState { bal: b, clock: new_clock, state: state_out.clone() });
             }
         }
         self.nl_acks.clear();
-        self.maybe_finish_recovery(&mut acts, now);
-        acts
+        self.maybe_finish_recovery(out, now);
     }
 
     /// Replace protocol state with `state` (recovered or pushed by the new
@@ -172,32 +165,36 @@ impl WbNode {
     }
 
     /// Fig. 4 line 57: follower adopts the new leader's state.
-    pub(crate) fn on_new_state(&mut self, b: Ballot, clock: u64, state: Vec<MsgState>, from: Pid, now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_new_state(
+        &mut self,
+        b: Ballot,
+        clock: u64,
+        state: Vec<MsgState>,
+        from: Pid,
+        now: u64,
+        out: &mut Outbox,
+    ) {
         if self.status != Status::Recovering || self.ballot != b {
-            return acts;
+            return;
         }
         self.adopt(&state, clock);
         self.status = Status::Follower;
         self.cballot = b;
         self.cur_leader[self.gid.0 as usize] = b.leader();
         self.last_hb = now;
-        acts.push(Action::Send(from, Wire::NewStateAck { bal: b }));
-        acts
+        out.send(from, Wire::NewStateAck { bal: b });
     }
 
     /// Fig. 4 line 63: with a quorum in sync, resume normal operation.
-    pub(crate) fn on_new_state_ack(&mut self, b: Ballot, from: Pid, now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_new_state_ack(&mut self, b: Ballot, from: Pid, now: u64, out: &mut Outbox) {
         if self.status != Status::Recovering || self.ballot != b || self.cballot != b {
-            return acts;
+            return;
         }
         self.ns_acks.insert(from);
-        self.maybe_finish_recovery(&mut acts, now);
-        acts
+        self.maybe_finish_recovery(out, now);
     }
 
-    fn maybe_finish_recovery(&mut self, acts: &mut Vec<Action>, now: u64) {
+    fn maybe_finish_recovery(&mut self, out: &mut Outbox, now: u64) {
         if self.status != Status::Recovering || self.cballot != self.ballot || self.ns_acks.len() < self.quorum() {
             return;
         }
@@ -214,51 +211,45 @@ impl WbNode {
         for (gts, m) in resend {
             let e = &self.entries[&m];
             let (lts, bal) = (e.lts, self.cballot);
-            for &p in self.group() {
-                if p != self.pid {
-                    acts.push(Action::Send(p, Wire::Deliver { m, bal, lts, gts }));
-                }
-            }
+            let me = self.pid;
+            out.send_to_many(
+                self.group().iter().copied().filter(|&p| p != me),
+                Wire::Deliver { m, bal, lts, gts },
+            );
             // re-notify the client: its notification may have died with
             // the old leader (clients deduplicate)
-            acts.push(Action::Send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts }));
+            out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
         }
         // deliver whatever is now unblocked (line 66 delivery condition)
-        self.try_deliver(acts);
+        self.try_deliver(out);
 
         // resume stuck messages (§IV message recovery): retry every
         // still-pending (ACCEPTED) message through the MULTICAST path,
         // which re-sends ACCEPTs with our new ballot
         let stuck: Vec<MsgId> = self.pending.iter().map(|&(_, m)| m).collect();
         for m in stuck {
-            let mut a = self.on_retry_now(m);
-            acts.append(&mut a);
+            self.on_retry_now(m, out);
         }
         // announce ourselves
-        for &p in self.group() {
-            if p != self.pid {
-                acts.push(Action::Send(p, Wire::Heartbeat { bal: self.cballot }));
-            }
-        }
+        let me = self.pid;
+        let hb = Wire::Heartbeat { bal: self.cballot };
+        out.send_to_many(self.group().iter().copied().filter(|&p| p != me), hb);
     }
 
     /// retry(m) without the leader-status guard (we just became leader)
-    fn on_retry_now(&mut self, m: MsgId) -> Vec<Action> {
-        let mut acts = Vec::new();
-        let Some(e) = self.entries.get(&m) else { return acts };
+    fn on_retry_now(&mut self, m: MsgId, out: &mut Outbox) {
+        let Some(e) = self.entries.get(&m) else { return };
         if e.phase != Phase::Proposed && e.phase != Phase::Accepted {
-            return acts;
+            return;
         }
         self.stats.retries += 1;
-        let wire = Wire::Multicast { meta: e.meta.clone() };
-        let dests: Vec<Pid> = e.meta.dest.iter().map(|g| self.cur_leader[g.0 as usize]).collect();
-        for to in dests {
-            acts.push(Action::Send(to, wire.clone()));
+        for g in e.meta.dest.iter() {
+            out.stage(self.cur_leader[g.0 as usize]);
         }
+        out.send_staged(Wire::Multicast { meta: e.meta.clone() });
         if self.cfg.retry_after > 0 {
-            acts.push(Action::Timer(TimerKind::Retry(m), self.cfg.retry_after));
+            out.timer(TimerKind::Retry(m), self.cfg.retry_after);
         }
-        acts
     }
 
     // ---------- leader-selection service (Ω-style, §IV "LSS") ----------
@@ -266,47 +257,41 @@ impl WbNode {
     /// Periodic tick: leaders emit heartbeats (and run GC); followers
     /// check leader health with rank-staggered timeouts so a single
     /// stable candidate emerges (Invariant 6).
-    pub(crate) fn on_lss_tick(&mut self, now: u64) -> Vec<Action> {
-        let mut acts = Vec::new();
+    pub(crate) fn on_lss_tick(&mut self, now: u64, out: &mut Outbox) {
         if self.cfg.hb_interval == 0 {
-            return acts;
+            return;
         }
-        acts.push(Action::Timer(TimerKind::LssTick, self.cfg.hb_interval));
+        out.timer(TimerKind::LssTick, self.cfg.hb_interval);
         match self.status {
             Status::Leader => {
-                for &p in self.group() {
-                    if p != self.pid {
-                        acts.push(Action::Send(p, Wire::Heartbeat { bal: self.cballot }));
-                    }
-                }
+                let me = self.pid;
+                let hb = Wire::Heartbeat { bal: self.cballot };
+                out.send_to_many(self.group().iter().copied().filter(|&p| p != me), hb);
             }
             Status::Follower | Status::Recovering => {
                 // candidates track their own progress via RecoveryTimeout
                 if self.status == Status::Recovering && self.ballot.leader() == self.pid {
-                    return acts;
+                    return;
                 }
                 if self.cfg.gc && self.status == Status::Follower && !self.max_delivered_gts.is_bot() {
                     let leader = self.cballot.leader();
                     if leader != self.pid {
-                        acts.push(Action::Send(leader, Wire::GcReport { max_gts: self.max_delivered_gts }));
+                        out.send(leader, Wire::GcReport { max_gts: self.max_delivered_gts });
                     }
                 }
                 let timeout = self.cfg.hb_interval * self.cfg.hb_suspect_mult * (1 + self.rank());
                 if now.saturating_sub(self.last_hb) > timeout {
-                    let mut a = self.recover(now);
-                    acts.append(&mut a);
+                    self.recover(now, out);
                 }
             }
         }
-        acts
     }
 
     /// A candidacy that stalls (no quorum of NEWLEADER_ACK/NEWSTATE_ACK)
     /// restarts with a higher ballot.
-    pub(crate) fn on_recovery_timeout(&mut self, n: u32, now: u64) -> Vec<Action> {
+    pub(crate) fn on_recovery_timeout(&mut self, n: u32, now: u64, out: &mut Outbox) {
         if self.status == Status::Recovering && self.ballot.n == n && self.ballot.leader() == self.pid {
-            return self.recover(now);
+            self.recover(now, out);
         }
-        vec![]
     }
 }

@@ -4,7 +4,7 @@
 use super::*;
 use crate::client::{Client, ClientCfg};
 use crate::invariants;
-use crate::protocols::Node;
+use crate::protocols::{Node, Outbox};
 use crate::sim::{CpuCost, SimConfig, World};
 use crate::types::{GidSet, MsgId, MsgMeta, Topology};
 
@@ -26,7 +26,7 @@ fn world(k: usize, f: usize, n_clients: usize, dest_groups: usize, wb: WbConfig,
     World::new(
         topo,
         nodes,
-        SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true },
+        SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true, coalesce: true },
     )
 }
 
@@ -185,24 +185,23 @@ fn deposed_leader_cannot_commit() {
     // run a bit, then depose
     w.run_until(10 * D);
     let b = Ballot::new(2, Pid(1));
-    let acts = {
+    let mut o1 = Outbox::new();
+    {
         let n1 = w.node_mut(Pid(1));
         let n1 = (n1 as &mut dyn std::any::Any).downcast_mut::<WbNode>().unwrap();
-        n1.recover(10 * D)
-    };
-    // inject the candidate's NEWLEADER messages by hand
-    for a in acts {
-        if let crate::protocols::Action::Send(to, wire) = a {
-            let out = w.node_mut(to).on_wire(Pid(1), wire, 10 * D);
-            for a2 in out {
-                if let crate::protocols::Action::Send(to2, wire2) = a2 {
-                    let out2 = w.node_mut(to2).on_wire(to, wire2, 10 * D);
-                    for a3 in out2 {
-                        if let crate::protocols::Action::Send(to3, wire3) = a3 {
-                            w.node_mut(to3).on_wire(to2, wire3, 10 * D);
-                        }
-                    }
-                }
+        n1.recover(10 * D, &mut o1);
+    }
+    // inject the candidate's NEWLEADER messages by hand (three hops:
+    // NEWLEADER → NEWLEADER_ACK → NEW_STATE/NEWSTATE_ACK)
+    for (to, wire) in o1.sends().to_vec() {
+        let mut o2 = Outbox::new();
+        w.node_mut(to).on_wire(Pid(1), wire, 10 * D, &mut o2);
+        for (to2, wire2) in o2.sends().to_vec() {
+            let mut o3 = Outbox::new();
+            w.node_mut(to2).on_wire(to, wire2, 10 * D, &mut o3);
+            for (to3, wire3) in o3.sends().to_vec() {
+                let mut o4 = Outbox::new();
+                w.node_mut(to3).on_wire(to2, wire3, 10 * D, &mut o4);
             }
         }
     }
@@ -227,15 +226,17 @@ fn gc_trims_delivered_entries() {
     // duplicate MULTICAST of a GC'd message re-acks the client
     let m = MsgId::new(w.trace.topo().first_client_pid().0, 1);
     let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
-    let acts = {
+    let mut out = Outbox::new();
+    {
         let n = w.node_mut(Pid(0));
         let n = (n as &mut dyn std::any::Any).downcast_mut::<WbNode>().unwrap();
         assert_eq!(n.phase_of(m), Phase::Start, "entry should be GC'd");
-        n.on_multicast(meta, 0)
-    };
+        n.on_multicast(meta, 0, &mut out);
+    }
     assert!(
-        acts.iter().any(|a| matches!(a, Action::Send(_, Wire::Delivered { .. }))),
-        "GC'd duplicate must re-ack: {acts:?}"
+        out.sends().iter().any(|(_, w)| matches!(w, Wire::Delivered { .. })),
+        "GC'd duplicate must re-ack: {:?}",
+        out.sends()
     );
 }
 
@@ -245,11 +246,13 @@ fn stale_ballot_accept_ack_is_ignored() {
     let mut n = WbNode::new(Pid(0), topo.clone(), WbConfig::default());
     let m = MsgId::new(9, 1);
     let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
-    n.on_multicast(meta.clone(), 0);
+    let mut out = Outbox::new();
+    n.on_multicast(meta.clone(), 0, &mut out);
+    out.clear();
     // ack with a ballot vector from a previous leadership
     let stale = vec![(Gid(0), Ballot::new(0, Pid(0)))];
-    let acts = n.on_accept_ack(m, Gid(0), stale, Pid(1), 0);
-    assert!(acts.is_empty());
+    n.on_accept_ack(m, Gid(0), stale, Pid(1), 0, &mut out);
+    assert!(out.is_empty());
     assert_eq!(n.phase_of(m), Phase::Proposed);
 }
 
@@ -260,8 +263,9 @@ fn accept_from_recovering_process_is_deferred() {
     n.status = Status::Recovering;
     let m = MsgId::new(9, 1);
     let meta = MsgMeta::new(m, GidSet::single(Gid(0)), vec![]);
-    let acts = n.on_accept(meta, Gid(0), Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), 0);
-    assert!(acts.is_empty(), "recovering process must not ack");
+    let mut out = Outbox::new();
+    n.on_accept(meta, Gid(0), Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    assert!(out.is_empty(), "recovering process must not ack");
 }
 
 #[test]
@@ -270,15 +274,17 @@ fn deliver_requires_matching_cballot() {
     let mut n = WbNode::new(Pid(1), topo.clone(), WbConfig::default());
     let m = MsgId::new(9, 1);
     // DELIVER from a ballot we have not synchronised with
-    let acts = n.on_deliver(m, Ballot::new(9, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
-    assert!(acts.is_empty());
+    let mut out = Outbox::new();
+    n.on_deliver(m, Ballot::new(9, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    assert!(out.is_empty());
     assert_eq!(n.phase_of(m), Phase::Start);
     // matching ballot works
-    let acts = n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
-    assert!(acts.iter().any(|a| matches!(a, Action::Deliver(..))));
+    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    assert_eq!(out.delivers().len(), 1);
+    out.clear();
     // duplicate (same gts) is dropped by max_delivered_gts
-    let acts = n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0);
-    assert!(acts.is_empty());
+    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    assert!(out.is_empty());
 }
 
 #[test]
@@ -286,8 +292,9 @@ fn follower_ignores_multicast() {
     let topo = Topology::new(1, 1);
     let mut n = WbNode::new(Pid(1), topo.clone(), WbConfig::default()); // follower
     let m = MsgId::new(9, 1);
-    let acts = n.on_multicast(MsgMeta::new(m, GidSet::single(Gid(0)), vec![]), 0);
-    assert!(acts.is_empty());
+    let mut out = Outbox::new();
+    n.on_multicast(MsgMeta::new(m, GidSet::single(Gid(0)), vec![]), 0, &mut out);
+    assert!(out.is_empty());
     assert_eq!(n.phase_of(m), Phase::Start);
 }
 

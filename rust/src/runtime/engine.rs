@@ -5,11 +5,16 @@
 //! that fits the batch, pads the int64 lane buffers and executes on the
 //! CPU PJRT client. `QuantileEngine` does the same for the latency
 //! quantile sketch.
+//!
+//! The PJRT bindings (the `xla` crate) are optional: the offline build
+//! cannot fetch them, so they sit behind the `xla` cargo feature. With
+//! the feature off, the engines still type-check but `load` fails and
+//! every caller falls back to the bit-exact native path
+//! ([`super::native`]) — the default deployment.
 
 use super::{BatchOut, BatchReq};
 use crate::types::Ts;
-use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use anyhow::Result;
 use std::path::Path;
 
 /// Must match `python/compile/aot.py`.
@@ -17,140 +22,197 @@ pub const G_LANES: usize = 16;
 pub const P_SLOTS: usize = 256;
 pub const BATCH_SIZES: [usize; 3] = [16, 64, 256];
 pub const N_SAMPLES: usize = 1024;
-const NEG_INF: i64 = -(1 << 62);
-const POS_INF: i64 = 1 << 62;
 
-/// Loads and runs the batched commit computation (L2 `commit_batch`).
-pub struct CommitBatchEngine {
-    client: xla::PjRtClient,
-    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    /// executions performed (stats)
-    pub calls: std::cell::Cell<u64>,
-}
+#[cfg(feature = "xla")]
+mod imp {
+    use super::*;
+    use anyhow::{bail, Context};
+    use std::collections::BTreeMap;
 
-fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("bad path")?)
-        .with_context(|| format!("parsing {}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
-}
+    const NEG_INF: i64 = -(1 << 62);
+    const POS_INF: i64 = 1 << 62;
 
-impl CommitBatchEngine {
-    /// Load every batch-size variant from `dir` (default `artifacts/`).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let mut exes = BTreeMap::new();
-        for b in BATCH_SIZES {
-            let path = dir.join(format!("commit_batch_b{b}.hlo.txt"));
-            if !path.exists() {
-                bail!("missing artifact {} — run `make artifacts`", path.display());
+    /// Loads and runs the batched commit computation (L2 `commit_batch`).
+    pub struct CommitBatchEngine {
+        client: xla::PjRtClient,
+        exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        /// executions performed (stats)
+        pub calls: std::cell::Cell<u64>,
+    }
+
+    fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("bad path")?)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    impl CommitBatchEngine {
+        /// Load every batch-size variant from `dir` (default `artifacts/`).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let mut exes = BTreeMap::new();
+            for b in BATCH_SIZES {
+                let path = dir.join(format!("commit_batch_b{b}.hlo.txt"));
+                if !path.exists() {
+                    bail!("missing artifact {} — run `make artifacts`", path.display());
+                }
+                exes.insert(b, load_exe(&client, &path)?);
             }
-            exes.insert(b, load_exe(&client, &path)?);
+            Ok(CommitBatchEngine { client, exes, calls: std::cell::Cell::new(0) })
         }
-        Ok(CommitBatchEngine { client, exes, calls: std::cell::Cell::new(0) })
-    }
 
-    /// Largest supported batch per execution.
-    pub fn max_batch(&self) -> usize {
-        *self.exes.keys().next_back().unwrap()
-    }
-
-    /// Execute one commit batch. `pending` is the current delivery
-    /// frontier content; only its 256 smallest entries matter (the
-    /// computation takes their min), so callers may truncate.
-    pub fn commit_batch(&self, reqs: &[BatchReq], pending: &[Ts]) -> Result<Vec<BatchOut>> {
-        if reqs.is_empty() {
-            return Ok(vec![]);
+        /// Largest supported batch per execution.
+        pub fn max_batch(&self) -> usize {
+            *self.exes.keys().next_back().unwrap()
         }
-        let max_b = self.max_batch();
-        let mut out = Vec::with_capacity(reqs.len());
-        for chunk in reqs.chunks(max_b) {
-            out.extend(self.run_chunk(chunk, pending)?);
-        }
-        Ok(out)
-    }
 
-    fn run_chunk(&self, reqs: &[BatchReq], pending: &[Ts]) -> Result<Vec<BatchOut>> {
-        let b = *self
-            .exes
-            .keys()
-            .find(|&&b| b >= reqs.len())
-            .expect("chunked to max batch size");
-        let exe = &self.exes[&b];
-
-        // lane buffers (padded)
-        let mut lts = vec![0i64; b * G_LANES];
-        let mut mask = vec![0i64; b * G_LANES];
-        for (i, r) in reqs.iter().enumerate() {
-            assert!(!r.lts.is_empty(), "empty lts set for {:?}", r.m);
-            assert!(r.lts.len() <= G_LANES, "too many destination groups");
-            for (j, &t) in r.lts.iter().enumerate() {
-                lts[i * G_LANES + j] = t.encode();
-                mask[i * G_LANES + j] = 1;
+        /// Execute one commit batch. `pending` is the current delivery
+        /// frontier content; only its 256 smallest entries matter (the
+        /// computation takes their min), so callers may truncate.
+        pub fn commit_batch(&self, reqs: &[BatchReq], pending: &[Ts]) -> Result<Vec<BatchOut>> {
+            if reqs.is_empty() {
+                return Ok(vec![]);
             }
+            let max_b = self.max_batch();
+            let mut out = Vec::with_capacity(reqs.len());
+            for chunk in reqs.chunks(max_b) {
+                out.extend(self.run_chunk(chunk, pending)?);
+            }
+            Ok(out)
         }
-        let mut pend = vec![0i64; P_SLOTS];
-        let mut pmask = vec![0i64; P_SLOTS];
-        for (i, &t) in pending.iter().take(P_SLOTS).enumerate() {
-            pend[i] = t.encode();
-            pmask[i] = 1;
+
+        fn run_chunk(&self, reqs: &[BatchReq], pending: &[Ts]) -> Result<Vec<BatchOut>> {
+            let b = *self
+                .exes
+                .keys()
+                .find(|&&b| b >= reqs.len())
+                .expect("chunked to max batch size");
+            let exe = &self.exes[&b];
+
+            // lane buffers (padded)
+            let mut lts = vec![0i64; b * G_LANES];
+            let mut mask = vec![0i64; b * G_LANES];
+            for (i, r) in reqs.iter().enumerate() {
+                assert!(!r.lts.is_empty(), "empty lts set for {:?}", r.m);
+                assert!(r.lts.len() <= G_LANES, "too many destination groups");
+                for (j, &t) in r.lts.iter().enumerate() {
+                    lts[i * G_LANES + j] = t.encode();
+                    mask[i * G_LANES + j] = 1;
+                }
+            }
+            let mut pend = vec![0i64; P_SLOTS];
+            let mut pmask = vec![0i64; P_SLOTS];
+            for (i, &t) in pending.iter().take(P_SLOTS).enumerate() {
+                pend[i] = t.encode();
+                pmask[i] = 1;
+            }
+
+            let l_lts = xla::Literal::vec1(&lts).reshape(&[b as i64, G_LANES as i64])?;
+            let l_mask = xla::Literal::vec1(&mask).reshape(&[b as i64, G_LANES as i64])?;
+            let l_pend = xla::Literal::vec1(&pend);
+            let l_pmask = xla::Literal::vec1(&pmask);
+
+            let result = exe.execute::<xla::Literal>(&[l_lts, l_mask, l_pend, l_pmask])?[0][0]
+                .to_literal_sync()?;
+            self.calls.set(self.calls.get() + 1);
+            let (gts_l, deliv_l, _pmin_l) = result.to_tuple3()?;
+            let gts_v = gts_l.to_vec::<i64>()?;
+            let deliv_v = deliv_l.to_vec::<i64>()?;
+
+            Ok(reqs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    debug_assert!(gts_v[i] != NEG_INF && gts_v[i] < POS_INF);
+                    BatchOut { m: r.m, gts: Ts::decode(gts_v[i]), deliverable: deliv_v[i] != 0 }
+                })
+                .collect())
         }
 
-        let l_lts = xla::Literal::vec1(&lts).reshape(&[b as i64, G_LANES as i64])?;
-        let l_mask = xla::Literal::vec1(&mask).reshape(&[b as i64, G_LANES as i64])?;
-        let l_pend = xla::Literal::vec1(&pend);
-        let l_pmask = xla::Literal::vec1(&pmask);
-
-        let result = exe.execute::<xla::Literal>(&[l_lts, l_mask, l_pend, l_pmask])?[0][0]
-            .to_literal_sync()?;
-        self.calls.set(self.calls.get() + 1);
-        let (gts_l, deliv_l, _pmin_l) = result.to_tuple3()?;
-        let gts_v = gts_l.to_vec::<i64>()?;
-        let deliv_v = deliv_l.to_vec::<i64>()?;
-
-        Ok(reqs
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                debug_assert!(gts_v[i] != NEG_INF && gts_v[i] < POS_INF);
-                BatchOut { m: r.m, gts: Ts::decode(gts_v[i]), deliverable: deliv_v[i] != 0 }
-            })
-            .collect())
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Loads and runs the latency-quantile sketch (`quantiles.hlo.txt`).
+    pub struct QuantileEngine {
+        _client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl QuantileEngine {
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let exe = load_exe(&client, &dir.join("quantiles.hlo.txt"))?;
+            Ok(QuantileEngine { _client: client, exe })
+        }
+
+        /// Quantiles (0.5, 0.9, 0.95, 0.99) of up to [`N_SAMPLES`] latency
+        /// samples (ns). Fewer samples are padded by cycling — an
+        /// approximation that preserves the empirical distribution.
+        pub fn quantiles(&self, samples_ns: &[u64]) -> Result<[f64; 4]> {
+            anyhow::ensure!(!samples_ns.is_empty(), "no samples");
+            let mut buf = vec![0f32; N_SAMPLES];
+            for i in 0..N_SAMPLES {
+                buf[i] = samples_ns[i % samples_ns.len()] as f32;
+            }
+            let lit = xla::Literal::vec1(&buf);
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?.to_vec::<f32>()?;
+            Ok([out[0] as f64, out[1] as f64, out[2] as f64, out[3] as f64])
+        }
     }
 }
 
-/// Loads and runs the latency-quantile sketch (`quantiles.hlo.txt`).
-pub struct QuantileEngine {
-    _client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "xla")]
+pub use imp::{CommitBatchEngine, QuantileEngine};
 
-impl QuantileEngine {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let exe = load_exe(&client, &dir.join("quantiles.hlo.txt"))?;
-        Ok(QuantileEngine { _client: client, exe })
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::*;
+    use anyhow::bail;
+
+    /// Built without the `xla` feature: `load` always fails, so no value
+    /// of this type can exist (the `Infallible` field makes the
+    /// post-load methods statically unreachable). Callers fall back to
+    /// [`crate::runtime::native`].
+    pub struct CommitBatchEngine {
+        never: std::convert::Infallible,
     }
 
-    /// Quantiles (0.5, 0.9, 0.95, 0.99) of up to [`N_SAMPLES`] latency
-    /// samples (ns). Fewer samples are padded by cycling — an
-    /// approximation that preserves the empirical distribution.
-    pub fn quantiles(&self, samples_ns: &[u64]) -> Result<[f64; 4]> {
-        anyhow::ensure!(!samples_ns.is_empty(), "no samples");
-        let mut buf = vec![0f32; N_SAMPLES];
-        for i in 0..N_SAMPLES {
-            buf[i] = samples_ns[i % samples_ns.len()] as f32;
+    impl CommitBatchEngine {
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!("wbam was built without the `xla` feature — XLA offload unavailable, use the native backend")
         }
-        let lit = xla::Literal::vec1(&buf);
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?.to_vec::<f32>()?;
-        Ok([out[0] as f64, out[1] as f64, out[2] as f64, out[3] as f64])
+        pub fn max_batch(&self) -> usize {
+            match self.never {}
+        }
+        pub fn commit_batch(&self, _reqs: &[BatchReq], _pending: &[Ts]) -> Result<Vec<BatchOut>> {
+            match self.never {}
+        }
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+    }
+
+    /// See [`CommitBatchEngine`]: stub that never loads.
+    pub struct QuantileEngine {
+        never: std::convert::Infallible,
+    }
+
+    impl QuantileEngine {
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!("wbam was built without the `xla` feature — XLA offload unavailable")
+        }
+        pub fn quantiles(&self, _samples_ns: &[u64]) -> Result<[f64; 4]> {
+            match self.never {}
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{CommitBatchEngine, QuantileEngine};
 
 /// Default artifacts directory: `$WBAM_ARTIFACTS` or `artifacts/` under
 /// the crate root (works from `cargo test` / `cargo bench` cwd).
@@ -158,6 +220,5 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(d) = std::env::var("WBAM_ARTIFACTS") {
         return d.into();
     }
-    let here = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    here
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }

@@ -12,11 +12,11 @@ pub mod trace;
 pub use delay::{ConstDelay, DelayModel, LanDelay, WanDelay, MS, US};
 pub use trace::{DeliveryEv, Trace};
 
-use crate::protocols::{Action, Node, TimerKind};
+use crate::protocols::{Coalescer, Node, Outbox, TimerKind};
 use crate::types::{Pid, Topology, Wire};
 use crate::util::{FxHashMap, Rng};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 /// Per-event CPU cost model. `zero()` gives the idealised §V setting where
 /// local steps are instantaneous.
@@ -90,11 +90,16 @@ pub struct SimConfig {
     pub seed: u64,
     /// record full delivery trace (correctness checks)
     pub record_full: bool,
+    /// coalesce same-destination sends of one event into a single
+    /// [`Wire::Batch`] arrival (one frame = one arrival event, one
+    /// `recv_ns` + `send_ns` charge). Off models the seed's
+    /// message-at-a-time server.
+    pub coalesce: bool,
 }
 
 impl SimConfig {
     pub fn theory(delta: u64) -> Self {
-        SimConfig { delay: Box::new(ConstDelay(delta)), cpu: CpuCost::zero(), seed: 0, record_full: true }
+        SimConfig { delay: Box::new(ConstDelay(delta)), cpu: CpuCost::zero(), seed: 0, record_full: true, coalesce: true }
     }
 }
 
@@ -116,10 +121,20 @@ pub struct World {
     drain_scheduled: Vec<bool>,
     /// last scheduled arrival per (from, to): reliable FIFO channels
     fifo_last: FxHashMap<(Pid, Pid), u64>,
-    /// per-node count of received protocol messages (genuineness checks)
+    /// per-node count of received protocol messages (genuineness checks;
+    /// batch frames count once per inner message)
     pub arrivals: FxHashMap<Pid, u64>,
     pub trace: Trace,
     started: bool,
+    /// reusable effects sink shared by all node handlers (one event runs
+    /// at a time, so a single outbox suffices — zero per-event allocs)
+    outbox: Outbox,
+    /// reusable destination-coalescing scratch for the outbox flush
+    coalescer: Coalescer,
+    /// reusable per-event frame buffer (coalesced sends awaiting emission)
+    frames: Vec<(Pid, Wire)>,
+    /// wire batching on/off (SimConfig::coalesce)
+    coalesce: bool,
     /// debug: print every handled event (env `WBAM_SIM_LOG=1`)
     pub log_events: bool,
 }
@@ -145,6 +160,10 @@ impl World {
             arrivals: Default::default(),
             trace: Trace::new(topo, cfg.record_full),
             started: false,
+            outbox: Outbox::new(),
+            coalescer: Coalescer::new(),
+            frames: Vec::new(),
+            coalesce: cfg.coalesce,
             log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
         }
     }
@@ -174,39 +193,70 @@ impl World {
         self.started = true;
         for i in 0..self.nodes.len() {
             let pid = self.nodes[i].pid();
-            let acts = self.nodes[i].on_start(0);
-            self.apply(pid, 0, acts);
+            self.nodes[i].on_start(0, &mut self.outbox);
+            // start-of-world kicks are free of CPU charges (as before)
+            self.finish_event(i, pid, 0, 0, false);
         }
     }
 
-    fn apply(&mut self, pid: Pid, done_at: u64, acts: Vec<Action>) {
-        for a in acts {
-            match a {
-                Action::Send(to, wire) => {
-                    self.trace.sends += 1;
-                    self.trace.send_bytes += wire.size() as u64;
-                    if let Wire::Multicast { meta } = &wire {
-                        self.trace.on_multicast(done_at, meta.id, meta.dest);
+    /// Settle the shared outbox after node `idx`'s handler ran at `time`
+    /// with input-side cost `cost_in`: coalesce sends into
+    /// per-destination frames (one pass, into a reusable buffer), charge
+    /// `send_ns` per *frame* (the syscall/framing amortisation batching
+    /// buys), then emit deliveries/timers/arrivals stamped with the
+    /// completion time. Outbox and frame buffers are retained for reuse.
+    fn finish_event(&mut self, idx: usize, pid: Pid, time: u64, cost_in: u64, charge_sends: bool) {
+        let mut sends = std::mem::take(&mut self.outbox.sends);
+        let mut frames = std::mem::take(&mut self.frames);
+        let coalesce = self.coalesce;
+        self.coalescer.drain(&mut sends, coalesce, |to, frame| frames.push((to, frame)));
+        self.outbox.sends = sends; // drained, capacity retained
+
+        let send_cost = if charge_sends { self.cpu.send_ns * frames.len() as u64 } else { 0 };
+        let done_at = time + cost_in + send_cost;
+        self.busy_until[idx] = done_at;
+
+        for i in 0..self.outbox.delivers.len() {
+            let (m, gts) = self.outbox.delivers[i];
+            self.trace.on_deliver(done_at, pid, m, gts);
+        }
+        self.outbox.delivers.clear();
+        for i in 0..self.outbox.timers.len() {
+            let (kind, after) = self.outbox.timers[i];
+            self.push(done_at + after, pid, EventKind::Timer(kind));
+        }
+        self.outbox.timers.clear();
+
+        for (to, frame) in frames.drain(..) {
+            // per-wire accounting: a batch frame still carries n messages
+            match &frame {
+                Wire::Batch(inner) => {
+                    for w in inner {
+                        self.account_wire(done_at, w);
                     }
-                    let arr = if to == pid {
-                        done_at // self-sends are local
-                    } else {
-                        done_at + self.delay.sample(&mut self.rng, pid, to)
-                    };
-                    // reliable FIFO channel: never reorder within a link
-                    let key = (pid, to);
-                    let last = self.fifo_last.get(&key).copied().unwrap_or(0);
-                    let arr = arr.max(last);
-                    self.fifo_last.insert(key, arr);
-                    self.push(arr, to, EventKind::Arrival { from: pid, wire });
                 }
-                Action::Deliver(m, gts) => {
-                    self.trace.on_deliver(done_at, pid, m, gts);
-                }
-                Action::Timer(kind, after) => {
-                    self.push(done_at + after, pid, EventKind::Timer(kind));
-                }
+                w => self.account_wire(done_at, w),
             }
+            self.trace.send_bytes += frame.size() as u64;
+            let arr = if to == pid {
+                done_at // self-sends are local
+            } else {
+                done_at + self.delay.sample(&mut self.rng, pid, to)
+            };
+            // reliable FIFO channel: never reorder within a link
+            let key = (pid, to);
+            let last = self.fifo_last.get(&key).copied().unwrap_or(0);
+            let arr = arr.max(last);
+            self.fifo_last.insert(key, arr);
+            self.push(arr, to, EventKind::Arrival { from: pid, wire: frame });
+        }
+        self.frames = frames;
+    }
+
+    fn account_wire(&mut self, at: u64, w: &Wire) {
+        self.trace.sends += 1;
+        if let Wire::Multicast { meta } = w {
+            self.trace.on_multicast(at, meta.id, meta.dest);
         }
     }
 
@@ -255,29 +305,45 @@ impl World {
     }
 
     /// Execute one node event at `time`, charging the CPU cost model.
+    /// Batch frames are unpacked here: one `recv_ns` + per-byte charge for
+    /// the whole frame, per-message costs (`paxos_extra_ns`) still per
+    /// inner message — the amortisation that batching buys.
     fn process(&mut self, idx: usize, to: Pid, time: u64, kind: EventKind) {
-        let (cost_in, acts) = match kind {
+        debug_assert!(self.outbox.is_empty());
+        let cost_in = match kind {
             EventKind::Arrival { from, wire } => {
-                *self.arrivals.entry(to).or_insert(0) += 1;
                 let bytes = wire.size() as u64;
-                let extra = if matches!(wire, Wire::Paxos { .. }) { self.cpu.paxos_extra_ns } else { 0 };
                 if self.log_events {
                     eprintln!("[{:>12}] {:?} -> {:?}: {:?}", time, from, to, wire);
                 }
-                let acts = self.nodes[idx].on_wire(from, wire, time);
-                (self.cpu.recv_ns + self.cpu.per_byte_ns * bytes + extra, acts)
+                let mut extra = 0;
+                match wire {
+                    Wire::Batch(inner) => {
+                        *self.arrivals.entry(to).or_insert(0) += inner.len() as u64;
+                        for w in inner {
+                            if matches!(w, Wire::Paxos { .. }) {
+                                extra += self.cpu.paxos_extra_ns;
+                            }
+                            self.nodes[idx].on_wire(from, w, time, &mut self.outbox);
+                        }
+                    }
+                    w => {
+                        *self.arrivals.entry(to).or_insert(0) += 1;
+                        if matches!(w, Wire::Paxos { .. }) {
+                            extra = self.cpu.paxos_extra_ns;
+                        }
+                        self.nodes[idx].on_wire(from, w, time, &mut self.outbox);
+                    }
+                }
+                self.cpu.recv_ns + self.cpu.per_byte_ns * bytes + extra
             }
             EventKind::Timer(k) => {
-                let acts = self.nodes[idx].on_timer(k, time);
-                (self.cpu.recv_ns, acts)
+                self.nodes[idx].on_timer(k, time, &mut self.outbox);
+                self.cpu.recv_ns
             }
             _ => unreachable!(),
         };
-        let sends = acts.iter().filter(|a| matches!(a, Action::Send(..))).count() as u64;
-        let cost = cost_in + self.cpu.send_ns * sends;
-        let done_at = time + cost;
-        self.busy_until[idx] = done_at;
-        self.apply(to, done_at, acts);
+        self.finish_event(idx, to, time, cost_in, true);
     }
 
     /// Run until the virtual clock reaches `t` (or the queue drains).
@@ -336,26 +402,21 @@ mod tests {
         fn pid(&self) -> Pid {
             self.pid
         }
-        fn on_start(&mut self, _now: u64) -> Vec<Action> {
-            vec![]
-        }
-        fn on_wire(&mut self, from: Pid, wire: Wire, now: u64) -> Vec<Action> {
+        fn on_start(&mut self, _now: u64, _out: &mut Outbox) {}
+        fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
             match wire {
                 Wire::Multicast { meta } => {
                     self.got.push((now, meta.id));
-                    vec![Action::Send(self.peer, Wire::Delivered { m: meta.id, g: Gid(0), gts: Ts::BOT })]
+                    out.send(self.peer, Wire::Delivered { m: meta.id, g: Gid(0), gts: Ts::BOT });
                 }
                 Wire::Delivered { m, .. } => {
                     self.got.push((now, m));
                     let _ = from;
-                    vec![]
                 }
-                _ => vec![],
+                _ => {}
             }
         }
-        fn on_timer(&mut self, _t: TimerKind, _now: u64) -> Vec<Action> {
-            vec![]
-        }
+        fn on_timer(&mut self, _t: TimerKind, _now: u64, _out: &mut Outbox) {}
     }
 
     struct Kick {
@@ -367,22 +428,16 @@ mod tests {
         fn pid(&self) -> Pid {
             self.pid
         }
-        fn on_start(&mut self, _now: u64) -> Vec<Action> {
-            (0..self.n)
-                .map(|i| {
-                    Action::Send(
-                        self.to,
-                        Wire::Multicast { meta: MsgMeta::new(MsgId::new(self.pid.0, i), GidSet::single(Gid(0)), vec![]) },
-                    )
-                })
-                .collect()
+        fn on_start(&mut self, _now: u64, out: &mut Outbox) {
+            for i in 0..self.n {
+                out.send(
+                    self.to,
+                    Wire::Multicast { meta: MsgMeta::new(MsgId::new(self.pid.0, i), GidSet::single(Gid(0)), vec![]) },
+                );
+            }
         }
-        fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64) -> Vec<Action> {
-            vec![]
-        }
-        fn on_timer(&mut self, _t: TimerKind, _n: u64) -> Vec<Action> {
-            vec![]
-        }
+        fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64, _out: &mut Outbox) {}
+        fn on_timer(&mut self, _t: TimerKind, _n: u64, _out: &mut Outbox) {}
     }
 
     #[test]
@@ -409,11 +464,14 @@ mod tests {
             Box::new(Kick { pid: Pid(1), to: Pid(0), n: 3 }),
             Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
         ];
+        // coalescing off: this test pins down the unbatched
+        // message-at-a-time serialisation behaviour
         let cfg = SimConfig {
             delay: Box::new(ConstDelay(1000)),
             cpu: CpuCost { recv_ns: 100, per_byte_ns: 0, send_ns: 0, paxos_extra_ns: 0 },
             seed: 0,
             record_full: true,
+            coalesce: false,
         };
         let mut w = World::new(topo, nodes, cfg);
         w.run_to_quiescence(1000);
@@ -421,6 +479,37 @@ mod tests {
         // arrivals at 1000; processing serialises at 1000, 1100, 1200
         let times: Vec<u64> = echo.got.iter().map(|&(t, _)| t).collect();
         assert_eq!(times, vec![1000, 1100, 1200]);
+    }
+
+    #[test]
+    fn coalesced_batch_is_one_arrival_with_one_recv_charge() {
+        // same workload as cpu_cost_serialises_processing, but with
+        // coalescing ON: the 3 same-destination sends of Kick's start
+        // event arrive as one Batch frame, processed as one event — all
+        // inner messages handled at t=1000 with a single recv_ns charge.
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Kick { pid: Pid(1), to: Pid(0), n: 3 }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let cfg = SimConfig {
+            delay: Box::new(ConstDelay(1000)),
+            cpu: CpuCost { recv_ns: 100, per_byte_ns: 0, send_ns: 0, paxos_extra_ns: 0 },
+            seed: 0,
+            record_full: true,
+            coalesce: true,
+        };
+        let mut w = World::new(topo, nodes, cfg);
+        w.run_to_quiescence(1000);
+        let echo = w.node_as::<Echo>(Pid(0));
+        let times: Vec<u64> = echo.got.iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![1000, 1000, 1000]);
+        // FIFO within the batch preserved
+        let seqs: Vec<u32> = echo.got.iter().map(|&(_, m)| m.seq()).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        // protocol-message accounting is per inner message, not per frame
+        assert_eq!(w.arrivals[&Pid(0)], 3);
+        assert!(w.trace.sends >= 3);
     }
 
     #[test]
@@ -449,19 +538,14 @@ mod tests {
             fn pid(&self) -> Pid {
                 self.pid
             }
-            fn on_start(&mut self, _n: u64) -> Vec<Action> {
-                vec![
-                    Action::Timer(TimerKind::LssTick, 500),
-                    Action::Timer(TimerKind::ClientNext, 200),
-                    Action::Timer(TimerKind::BatchFlush, 900),
-                ]
+            fn on_start(&mut self, _n: u64, out: &mut Outbox) {
+                out.timer(TimerKind::LssTick, 500);
+                out.timer(TimerKind::ClientNext, 200);
+                out.timer(TimerKind::BatchFlush, 900);
             }
-            fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64) -> Vec<Action> {
-                vec![]
-            }
-            fn on_timer(&mut self, t: TimerKind, now: u64) -> Vec<Action> {
+            fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64, _out: &mut Outbox) {}
+            fn on_timer(&mut self, t: TimerKind, now: u64, _out: &mut Outbox) {
                 self.fired.push((now, t));
-                vec![]
             }
         }
         let topo = Topology::new(1, 0);

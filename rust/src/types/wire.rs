@@ -117,6 +117,14 @@ pub enum Wire {
     /// advance the garbage-collection watermark (§VI: "a mechanism to
     /// garbage collect delivered messages").
     GcReport { max_gts: Ts },
+
+    // ---------- transport framing ----------
+    /// Destination-coalesced frame: every protocol message a flush cycle
+    /// produced for one destination, in FIFO order. Produced only by the
+    /// runtime flush ([`crate::protocols::Coalescer`]) and unpacked by
+    /// the receiving runtime — protocol nodes never see one. Never
+    /// nested, never empty (the codec rejects both).
+    Batch(Vec<Wire>),
 }
 
 impl Wire {
@@ -158,6 +166,9 @@ impl Wire {
             }
             Wire::Heartbeat { .. } => 1 + 8,
             Wire::GcReport { .. } => 1 + 10,
+            // tag + u32 count + inner encodings (matches the codec's
+            // framing overhead exactly; see codec tests)
+            Wire::Batch(inner) => 1 + 4 + inner.iter().map(|w| w.size()).sum::<usize>(),
         }
     }
 
@@ -178,6 +189,7 @@ impl Wire {
             Wire::Paxos { .. } => "PAXOS",
             Wire::Heartbeat { .. } => "HEARTBEAT",
             Wire::GcReport { .. } => "GC_REPORT",
+            Wire::Batch(..) => "BATCH",
         }
     }
 }
@@ -201,8 +213,17 @@ mod tests {
             Wire::NewLeader { bal: Ballot::new(1, Pid(0)) },
             Wire::NewStateAck { bal: Ballot::new(1, Pid(0)) },
             Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) },
+            Wire::Batch(vec![]),
         ];
         let tags: Vec<_> = msgs.iter().map(|m| m.tag()).collect();
-        assert_eq!(tags, vec!["NEWLEADER", "NEWSTATE_ACK", "HEARTBEAT"]);
+        assert_eq!(tags, vec!["NEWLEADER", "NEWSTATE_ACK", "HEARTBEAT", "BATCH"]);
+    }
+
+    #[test]
+    fn batch_size_is_header_plus_inner_sizes() {
+        let a = Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) };
+        let b = Wire::Multicast { meta: MsgMeta::new(MsgId::new(1, 1), GidSet::single(Gid(0)), vec![0; 20]) };
+        let batch = Wire::Batch(vec![a.clone(), b.clone()]);
+        assert_eq!(batch.size(), 5 + a.size() + b.size());
     }
 }

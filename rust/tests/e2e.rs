@@ -1,5 +1,6 @@
 //! End-to-end integration over real threads: the in-process coordinator
 //! runtime with the XLA commit backend, and the TCP transport cluster.
+#![cfg_attr(not(feature = "xla"), allow(unused_imports))]
 
 use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Mutex};
@@ -9,7 +10,6 @@ use wbam::coordinator::{spawn, Cluster, DeliverFn, NodeRuntime};
 use wbam::net::{InProcMesh, TcpTransport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
-use wbam::runtime::{spawn_engine, XlaBackend};
 use wbam::types::{MsgId, Pid, Topology, Ts};
 
 fn wait_for<F: Fn() -> bool>(pred: F, secs: u64, what: &str) {
@@ -22,8 +22,11 @@ fn wait_for<F: Fn() -> bool>(pred: F, secs: u64, what: &str) {
 
 /// Full three-layer composition: WbCast leaders commit through the AOT
 /// XLA engine on a real-thread cluster; ordering checked per node.
+/// Needs `--features xla` + `make artifacts`.
+#[cfg(feature = "xla")]
 #[test]
 fn inproc_cluster_with_xla_backend() {
+    use wbam::runtime::{spawn_engine, XlaBackend};
     let topo = Topology::new(3, 1);
     let engine = spawn_engine(wbam::runtime::engine::artifacts_dir()).expect("make artifacts");
     let wb = WbConfig {

@@ -1,7 +1,9 @@
 //! Integration: the XLA batch commit engine (AOT JAX/Pallas artifacts)
 //! against the native oracle, across randomized batches.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` and a build with `--features xla` (the
+//! offline default build ships the native-fallback stub instead).
+#![cfg(feature = "xla")]
 
 use wbam::runtime::{commit_batch_native, BatchReq, CommitBatchEngine, QuantileEngine};
 use wbam::types::{Gid, MsgId, Ts};
