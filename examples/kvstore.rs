@@ -1,38 +1,48 @@
 //! Partitioned, replicated key-value store — the paper's motivating use
 //! case (§I: "scale fault-tolerant transaction processing systems").
 //!
-//! Keys are partitioned across 4 groups of 3 replicas. Single-key writes
-//! multicast to one group; cross-partition *transfers* multicast to the
-//! two groups owning the accounts. Atomic multicast gives every replica
-//! of every partition the same relative order for conflicting
-//! transactions, which makes the bank-transfer invariant (total balance
-//! conservation) hold without any extra concurrency control.
+//! Keys are partitioned twice: by **shard** (independent ordering
+//! domains, `account % SHARDS` — the per-core partitioning of the
+//! sharded runtime) and, within a shard, across 4 **groups** of 3
+//! replicas. Single-key writes multicast to one group; cross-partition
+//! *transfers* multicast to the two groups owning the accounts. Atomic
+//! multicast gives every replica of every partition the same relative
+//! order for conflicting transactions, which makes the bank-transfer
+//! invariant (total balance conservation) hold without any extra
+//! concurrency control. Transfers never cross shards — each client and
+//! each account belongs to exactly one shard.
 //!
 //!     cargo run --release --example kvstore
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use wbam::client::ClientCfg;
-use wbam::harness::{Net, Proto, RunCfg};
 use wbam::invariants;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox, TimerKind};
 use wbam::sim::{SimConfig, World, MS};
-use wbam::types::{Gid, GidSet, MsgId, MsgMeta, Pid, Topology, Wire};
+use wbam::types::{Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Wire};
 use wbam::util::Rng;
 
+const SHARDS: usize = 2;
 const GROUPS: usize = 4;
 const ACCOUNTS: u64 = 64;
 const INITIAL: i64 = 1000;
 
+/// Ordering domain of an account: transfers stay within one shard.
+fn shard_of_account(account: u64) -> usize {
+    (account % SHARDS as u64) as usize
+}
+
+/// Partition (group) of an account within its shard.
 fn partition(account: u64) -> Gid {
-    Gid((account % GROUPS as u64) as u32)
+    Gid(((account / SHARDS as u64) % GROUPS as u64) as u32)
 }
 
 /// A bank transaction shipped as the multicast payload.
 #[derive(Clone, Copy, Debug)]
 enum Op {
-    /// move `amount` from `from` to `to` (possibly cross-partition)
+    /// move `amount` from `from` to `to` (possibly cross-partition,
+    /// never cross-shard)
     Transfer { from: u64, to: u64, amount: i64 },
     /// set an account balance (single partition, setup)
     Deposit { account: u64, amount: i64 },
@@ -64,11 +74,14 @@ impl Op {
     }
 }
 
-/// Transactional client: issues transfers between random accounts in a
-/// closed loop, registering each op so replicas can apply payloads.
+/// Transactional client: issues transfers between random accounts *of
+/// its shard* in a closed loop, registering each op so replicas can
+/// apply payloads.
 struct TxClient {
     pid: Pid,
+    /// this client's shard topology (leader pids of its ordering domain)
     topo: Topology,
+    shard: usize,
     rng: Rng,
     registry: Arc<Mutex<HashMap<MsgId, Op>>>,
     seq: u32,
@@ -83,9 +96,13 @@ impl TxClient {
             return;
         }
         self.seq += 1;
+        // random pair of distinct accounts of this shard,
         // cross-partition with high probability
-        let from = self.rng.below(ACCOUNTS);
-        let to = (from + 1 + self.rng.below(ACCOUNTS - 1)) % ACCOUNTS;
+        let per_shard = ACCOUNTS / SHARDS as u64;
+        let x = self.rng.below(per_shard);
+        let y = (x + 1 + self.rng.below(per_shard - 1)) % per_shard;
+        let from = self.shard as u64 + SHARDS as u64 * x;
+        let to = self.shard as u64 + SHARDS as u64 * y;
         let op = Op::Transfer { from, to, amount: self.rng.range(1, 20) as i64 };
         let id = MsgId::new(self.pid.0, self.seq);
         self.registry.lock().unwrap().insert(id, op);
@@ -123,24 +140,29 @@ impl Node for TxClient {
 }
 
 /// One partition replica's materialised state, rebuilt from the
-/// delivery trace (the per-pid projection of the total order).
-fn replay(deliveries: &[(MsgId, Gid)], registry: &HashMap<MsgId, Op>, my_group: Gid) -> HashMap<u64, i64> {
+/// delivery trace (the per-pid projection of the shard's total order).
+fn replay(
+    deliveries: &[(MsgId, Gid)],
+    registry: &HashMap<MsgId, Op>,
+    my_shard: usize,
+    my_group: Gid,
+) -> HashMap<u64, i64> {
     let mut kv: HashMap<u64, i64> = (0..ACCOUNTS)
-        .filter(|&a| partition(a) == my_group)
+        .filter(|&a| shard_of_account(a) == my_shard && partition(a) == my_group)
         .map(|a| (a, INITIAL))
         .collect();
     for (m, _g) in deliveries {
         match registry[m] {
             Op::Transfer { from, to, amount } => {
-                if partition(from) == my_group {
+                if shard_of_account(from) == my_shard && partition(from) == my_group {
                     *kv.get_mut(&from).unwrap() -= amount;
                 }
-                if partition(to) == my_group {
+                if shard_of_account(to) == my_shard && partition(to) == my_group {
                     *kv.get_mut(&to).unwrap() += amount;
                 }
             }
             Op::Deposit { account, amount } => {
-                if partition(account) == my_group {
+                if shard_of_account(account) == my_shard && partition(account) == my_group {
                     kv.insert(account, amount);
                 }
             }
@@ -150,21 +172,27 @@ fn replay(deliveries: &[(MsgId, Gid)], registry: &HashMap<MsgId, Op>, my_group: 
 }
 
 fn main() {
-    let topo = Topology::new(GROUPS, 1);
+    let map = ShardMap::new(GROUPS, 1, SHARDS);
     let registry: Arc<Mutex<HashMap<MsgId, Op>>> = Arc::new(Mutex::new(HashMap::new()));
 
     let mut nodes: Vec<Box<dyn Node>> = Vec::new();
-    for g in topo.gids() {
-        for &p in topo.members(g) {
-            nodes.push(Box::new(WbNode::new(p, topo.clone(), WbConfig::default())));
+    for s in 0..map.shards {
+        let topo = map.topo(s);
+        for g in topo.gids() {
+            for &p in topo.members(g) {
+                nodes.push(Box::new(WbNode::new(p, topo.clone(), WbConfig::default())));
+            }
         }
     }
-    let n_clients = 6;
+    let n_clients = 6u32; // 3 per shard
     let tx_per_client = 50;
     for c in 0..n_clients {
+        let pid = Pid(map.first_client_pid().0 + c);
+        let shard = map.client_shard(pid);
         nodes.push(Box::new(TxClient {
-            pid: Pid(topo.first_client_pid().0 + c),
-            topo: topo.clone(),
+            pid,
+            topo: map.topo(shard),
+            shard,
             rng: Rng::new(0xBA2C + c as u64),
             registry: Arc::clone(&registry),
             seq: 0,
@@ -173,36 +201,44 @@ fn main() {
             done: 0,
         }));
     }
-    let _ = ClientCfg::default();
-
-    let mut world = World::new(topo.clone(), nodes, SimConfig::theory(MS));
+    let mut world = World::new_sharded(map, nodes, SimConfig::theory(MS));
     world.run_to_quiescence(10_000_000);
-    invariants::assert_correct(&world.trace);
+    invariants::assert_correct_sharded(&world.trace);
+    for c in 0..n_clients {
+        let t = world.node_as::<TxClient>(Pid(map.first_client_pid().0 + c));
+        assert_eq!(t.done, tx_per_client, "client {c} stalled");
+    }
 
     let registry = registry.lock().unwrap();
-    println!("kvstore — {GROUPS} partitions x 3 replicas, {} cross-partition transfers\n", registry.len());
+    println!(
+        "kvstore — {SHARDS} shards x {GROUPS} partitions x 3 replicas, {} cross-partition transfers\n",
+        registry.len()
+    );
 
     // rebuild every replica's state from its delivery sequence
     let mut total_across_partitions = 0i64;
-    for g in topo.gids() {
-        let mut states = Vec::new();
-        for &p in topo.members(g) {
-            let dels: Vec<(MsgId, Gid)> =
-                world.trace.deliveries.iter().filter(|d| d.pid == p).map(|d| (d.m, g)).collect();
-            states.push((p, replay(&dels, &registry, g)));
+    for s in 0..map.shards {
+        let topo = map.topo(s);
+        for g in topo.gids() {
+            let mut states = Vec::new();
+            for &p in topo.members(g) {
+                let dels: Vec<(MsgId, Gid)> =
+                    world.trace.deliveries.iter().filter(|d| d.pid == p).map(|d| (d.m, g)).collect();
+                states.push((p, replay(&dels, &registry, s, g)));
+            }
+            // replica agreement within the partition
+            for w in states.windows(2) {
+                assert_eq!(w[0].1, w[1].1, "replica divergence in shard {s} {g:?}");
+            }
+            let sum: i64 = states[0].1.values().sum();
+            let keys = states[0].1.len();
+            total_across_partitions += sum;
+            println!("  shard {s} {g:?}: {keys} keys, partition balance {sum}, replicas agree ✓");
         }
-        // replica agreement within the partition
-        for w in states.windows(2) {
-            assert_eq!(w[0].1, w[1].1, "replica divergence in {g:?}");
-        }
-        let sum: i64 = states[0].1.values().sum();
-        let keys = states[0].1.len();
-        total_across_partitions += sum;
-        println!("  {g:?}: {keys} keys, partition balance {sum}, replicas agree ✓");
     }
 
     let expected = ACCOUNTS as i64 * INITIAL;
-    println!("\ntotal balance across partitions: {total_across_partitions} (expected {expected})");
+    println!("\ntotal balance across shards+partitions: {total_across_partitions} (expected {expected})");
     assert_eq!(total_across_partitions, expected, "conservation violated — transfers were not atomic");
     println!("cross-partition atomicity + replica agreement: OK");
 }

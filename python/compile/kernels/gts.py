@@ -5,7 +5,7 @@ masked lexicographic maximum of encoded local timestamps — Fig. 4 line 19
 (``GlobalTS[m] = max { Lts(g) | g in dest(m) }``) vectorised over the
 commit batch of the Rust leader hot path.
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the [B, G] timestamp matrix
+TPU mapping (EXPERIMENTS.md §Hardware-Adaptation): the [B, G] timestamp matrix
 is tiled over the batch dimension with BlockSpec so each block fits VMEM;
 the reduction is a vector-lane max, no MXU involvement. On CPU PJRT we
 must lower with ``interpret=True`` (real TPU lowering emits a Mosaic

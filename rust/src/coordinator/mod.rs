@@ -1,116 +1,144 @@
 //! Coordinator runtime: drives the same [`Node`] state machines that run
 //! under the simulator on *real threads* over a [`Transport`]
-//! (in-process or TCP). One `NodeRuntime` per process; the leader's
-//! commit path can offload batched global-timestamp resolution to the
-//! XLA engine service ([`crate::runtime::service`]).
+//! (in-process or TCP).
 //!
-//! Event loop: poll the transport with a timeout bounded by the next
-//! armed timer; on wake-up drain *all* ready transport messages (not one
-//! per poll — a backlog must not pay a timeout-poll per message),
-//! dispatching each into the node; apply the effects from the shared
-//! [`Outbox`] (timers → local heap, deliveries → the registered
-//! callback, self-sends → straight back through the node); finally flush
-//! the accumulated outgoing sends once per drain cycle, coalesced into
-//! one [`Wire::Batch`](crate::types::Wire::Batch) frame per destination.
+//! One [`ShardedRuntime`] per transport endpoint. An endpoint hosts `S`
+//! protocol nodes — one shard per core, laid out by
+//! [`ShardMap`](crate::types::ShardMap) — and demuxes incoming frames to
+//! them by destination pid:
+//!
+//! * one **shard worker thread** per hosted node, owning the node, its
+//!   timer wheel and its reusable [`Outbox`]. Self-sends loop straight
+//!   back through the node; sends to *other locally hosted pids* are
+//!   routed in-process over the sibling shard's channel, never touching
+//!   the transport; remote sends accumulate per event-loop cycle and are
+//!   handed to the flusher as one batch.
+//! * one **flusher thread** owning the transport's send half and the
+//!   shared [`Coalescer`]: every cycle it folds all shards' pending sends
+//!   into one [`Wire::Batch`](crate::types::Wire::Batch) frame per link
+//!   (one encode + one write each), preserving per-link FIFO order.
+//! * the **caller's thread** runs the receive loop: poll the transport,
+//!   route each addressed frame to its shard worker.
+//!
+//! The single-node [`NodeRuntime`] (clients, CLI `serve`) is the 1-shard
+//! special case of the same machinery.
 
-use crate::net::{Incoming, Transport};
+use crate::net::{Incoming, Transport, TransportTx};
 use crate::protocols::{Coalescer, Node, Outbox, TimerKind};
 use crate::types::{MsgId, Pid, Ts, Wire};
+use crate::util::FxHashMap;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Delivery callback: `(pid, message, gts, elapsed_ns)`.
 pub type DeliverFn = Box<dyn FnMut(Pid, MsgId, Ts, u64) + Send>;
 
-/// Upper bound on wires dispatched per drain cycle, so a firehose peer
-/// cannot starve the timer wheel forever.
+/// A directed transport link (source shard pid, destination pid).
+type Link = (Pid, Pid);
+
+/// Upper bound on *inner* wires dispatched per drain cycle (batch frames
+/// count their contents, not 1), so a firehose peer cannot starve a
+/// shard's timer wheel forever.
 const MAX_DRAIN: usize = 4096;
 
-/// Runs one protocol node over a transport until stopped.
-pub struct NodeRuntime<T: Transport> {
+/// Idle poll tick: the upper bound on how long any loop sleeps before
+/// rechecking its stop flag.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// Runtime counters, shared across shard workers (read them via the
+/// handle returned by [`ShardedRuntime::stats`]).
+#[derive(Default)]
+pub struct RuntimeStats {
+    /// protocol wires fed into local nodes (batch frames count their
+    /// inner messages)
+    pub wires_in: AtomicU64,
+    /// wires handed to the transport flush (excludes in-process routing)
+    pub wires_out: AtomicU64,
+    /// wires routed in-process: self-sends and cross-shard sends between
+    /// locally hosted pids — these never reach the transport
+    pub self_wires: AtomicU64,
+    /// local deliveries
+    pub delivered: AtomicU64,
+}
+
+/// One shard's event loop state (runs on its own worker thread).
+struct ShardWorker {
     node: Box<dyn Node>,
-    transport: T,
+    rx: Receiver<(Pid, Pid, Wire)>,
+    /// channels of every locally hosted shard (cross-shard in-process
+    /// routing); includes our own pid, which is short-circuited inline.
+    /// Each worker owns its clone of the (small) map, so no cross-thread
+    /// sharing of the senders is needed.
+    peers: FxHashMap<Pid, Sender<(Pid, Pid, Wire)>>,
+    /// batched hand-off to the flusher thread
+    out_tx: Sender<Vec<(Link, Wire)>>,
+    outbox: Outbox,
+    scratch: Vec<(Pid, Wire)>,
+    outgoing: Vec<(Link, Wire)>,
     timers: BinaryHeap<Reverse<(u64, u64, TimerKind)>>,
     timer_seq: u64,
     epoch: Instant,
-    on_deliver: Option<DeliverFn>,
-    /// shared effects sink (reused across events)
-    outbox: Outbox,
-    /// swap buffer for outbox sends while self-sends recurse into the node
-    scratch: Vec<(Pid, Wire)>,
-    /// outgoing sends accumulated across one drain cycle, flushed as
-    /// coalesced frames
-    outgoing: Vec<(Pid, Wire)>,
-    coalescer: Coalescer,
-    /// statistics
-    pub wires_in: u64,
-    pub wires_out: u64,
-    pub delivered: u64,
+    on_deliver: Option<Arc<Mutex<DeliverFn>>>,
+    stats: Arc<RuntimeStats>,
+    stop: Arc<AtomicBool>,
+    halt: Arc<AtomicBool>,
 }
 
-impl<T: Transport> NodeRuntime<T> {
-    pub fn new(node: Box<dyn Node>, transport: T) -> Self {
-        NodeRuntime {
-            node,
-            transport,
-            timers: BinaryHeap::new(),
-            timer_seq: 0,
-            epoch: Instant::now(),
-            on_deliver: None,
-            outbox: Outbox::new(),
-            scratch: Vec::new(),
-            outgoing: Vec::new(),
-            coalescer: Coalescer::new(),
-            wires_in: 0,
-            wires_out: 0,
-            delivered: 0,
-        }
-    }
-
-    pub fn on_deliver(&mut self, f: DeliverFn) {
-        self.on_deliver = Some(f);
-    }
-
+impl ShardWorker {
     fn now(&self) -> u64 {
         self.epoch.elapsed().as_nanos() as u64
     }
 
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Relaxed) || self.halt.load(Ordering::Relaxed)
+    }
+
     /// Feed one transport wire into the node, unpacking batch frames (the
     /// node only ever sees inner messages), then settle the outbox.
-    fn dispatch_wire(&mut self, from: Pid, wire: Wire) {
+    /// Returns the number of inner wires dispatched.
+    fn dispatch_wire(&mut self, from: Pid, wire: Wire) -> usize {
         let now = self.now();
-        match wire {
+        let n = match wire {
             Wire::Batch(inner) => {
+                let n = inner.len();
                 for w in inner {
-                    self.wires_in += 1;
                     self.node.on_wire(from, w, now, &mut self.outbox);
                 }
+                n
             }
             w => {
-                self.wires_in += 1;
                 self.node.on_wire(from, w, now, &mut self.outbox);
+                1
             }
-        }
+        };
+        self.stats.wires_in.fetch_add(n as u64, Ordering::Relaxed);
         self.drain_effects();
+        n
     }
 
     /// Settle the outbox: deliveries and timers directly; self-sends loop
     /// back through the node (repeating until the outbox is quiet);
-    /// remote sends accumulate in `outgoing` for the next flush.
+    /// cross-shard local sends go over the sibling's channel; remote
+    /// sends accumulate in `outgoing` for the next flush hand-off.
     fn drain_effects(&mut self) {
+        let me = self.node.pid();
         loop {
             let now = self.now();
-            for i in 0..self.outbox.delivers.len() {
-                let (m, gts) = self.outbox.delivers[i];
-                self.delivered += 1;
-                if let Some(f) = &mut self.on_deliver {
-                    f(self.node.pid(), m, gts, now);
+            if !self.outbox.delivers.is_empty() {
+                if let Some(cb) = &self.on_deliver {
+                    let mut f = cb.lock().unwrap();
+                    for i in 0..self.outbox.delivers.len() {
+                        let (m, gts) = self.outbox.delivers[i];
+                        f(me, m, gts, now);
+                    }
                 }
+                self.stats.delivered.fetch_add(self.outbox.delivers.len() as u64, Ordering::Relaxed);
+                self.outbox.delivers.clear();
             }
-            self.outbox.delivers.clear();
             for i in 0..self.outbox.timers.len() {
                 let (kind, after) = self.outbox.timers[i];
                 self.timer_seq += 1;
@@ -121,89 +149,258 @@ impl<T: Transport> NodeRuntime<T> {
                 break;
             }
             std::mem::swap(&mut self.outbox.sends, &mut self.scratch);
-            let me = self.node.pid();
             for (to, wire) in self.scratch.drain(..) {
-                self.wires_out += 1;
                 if to == me {
-                    // self-send: loop straight back through the node
-                    self.node.on_wire(to, wire, now, &mut self.outbox);
+                    // self-send: straight back through the node
+                    self.stats.self_wires.fetch_add(1, Ordering::Relaxed);
+                    self.node.on_wire(me, wire, now, &mut self.outbox);
+                } else if let Some(tx) = self.peers.get(&to) {
+                    // cross-shard, same endpoint: in-process routing
+                    self.stats.self_wires.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send((me, to, wire));
                 } else {
-                    self.outgoing.push((to, wire));
+                    self.stats.wires_out.fetch_add(1, Ordering::Relaxed);
+                    self.outgoing.push(((me, to), wire));
                 }
             }
         }
     }
 
-    /// Flush the cycle's outgoing sends: one coalesced frame per
-    /// destination, one transport send (→ one encode + one write) each.
-    fn flush_outgoing(&mut self) {
-        let NodeRuntime { coalescer, outgoing, transport, .. } = self;
-        coalescer.drain(outgoing, true, |to, frame| transport.send(to, frame));
+    /// Hand the cycle's remote sends to the flusher (one channel message
+    /// per cycle; the flusher coalesces per link).
+    fn flush(&mut self) {
+        if !self.outgoing.is_empty() {
+            let batch = std::mem::take(&mut self.outgoing);
+            let _ = self.out_tx.send(batch);
+        }
     }
 
-    /// Run until `stop` is raised. Returns the node back for inspection.
-    pub fn run(mut self, stop: Arc<AtomicBool>) -> Box<dyn Node> {
+    fn run(mut self) -> Box<dyn Node> {
         let now0 = self.now();
         self.node.on_start(now0, &mut self.outbox);
         self.drain_effects();
-        self.flush_outgoing();
-        while !stop.load(Ordering::Relaxed) {
+        self.flush();
+        while !self.stopping() {
             // fire due timers
-            let now = self.now();
             let mut fired = false;
-            while let Some(Reverse((t, _, _))) = self.timers.peek() {
-                if *t > now {
-                    break;
+            loop {
+                let now = self.now();
+                match self.timers.peek() {
+                    Some(&Reverse((t, _, _))) if t <= now => {}
+                    _ => break,
                 }
-                let Reverse((_, _, kind)) = self.timers.pop().unwrap();
+                let Reverse((_, _, kind)) = self.timers.pop().expect("peeked timer");
                 self.node.on_timer(kind, now, &mut self.outbox);
                 self.drain_effects();
                 fired = true;
             }
             if fired {
-                self.flush_outgoing();
+                self.flush();
             }
-            // poll bounded by the next timer (or a coarse idle tick)
-            let next = self.timers.peek().map(|Reverse((t, _, _))| *t);
+            // wait for traffic, bounded by the next timer and the stop tick
+            let next = self.timers.peek().map(|&Reverse((t, _, _))| t);
             let wait = match next {
-                Some(t) => Duration::from_nanos(t.saturating_sub(self.now()).min(50_000_000)),
-                None => Duration::from_millis(50),
+                Some(t) => Duration::from_nanos(t.saturating_sub(self.now())).min(IDLE_TICK),
+                None => IDLE_TICK,
             };
-            match self.transport.recv_timeout(wait) {
-                Some(Incoming::Wire(from, wire)) => {
-                    self.dispatch_wire(from, wire);
-                    // drain the backlog until the channel is empty before
-                    // recomputing timers; flush the frames once per cycle
-                    let mut closed = false;
-                    let mut drained = 1;
+            match self.rx.recv_timeout(wait) {
+                Ok((from, _to, wire)) => {
+                    // drain the backlog before recomputing timers, bounded
+                    // by dispatched inner wires; flush once per cycle
+                    let mut drained = self.dispatch_wire(from, wire);
                     while drained < MAX_DRAIN {
-                        match self.transport.recv_timeout(Duration::ZERO) {
-                            Some(Incoming::Wire(f, w)) => {
-                                self.dispatch_wire(f, w);
-                                drained += 1;
-                            }
-                            Some(Incoming::Closed) => {
-                                closed = true;
-                                break;
-                            }
-                            None => break,
+                        match self.rx.try_recv() {
+                            Ok((f, _t, w)) => drained += self.dispatch_wire(f, w),
+                            Err(_) => break,
                         }
                     }
-                    self.flush_outgoing();
-                    if closed {
-                        break;
-                    }
+                    self.flush();
                 }
-                Some(Incoming::Closed) => break,
-                None => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         self.node
     }
 }
 
-/// Convenience: spawn a runtime on its own thread; returns a join handle
-/// yielding the node when stopped.
+/// Flusher loop: collect the shard workers' outgoing batches, fold them
+/// into one coalesced frame per link per cycle, one transport send
+/// (→ one encode + one write) each.
+fn run_flusher(mut tx: Box<dyn TransportTx>, rx: Receiver<Vec<(Link, Wire)>>, halt: Arc<AtomicBool>) {
+    let mut coalescer: Coalescer<Link> = Coalescer::new();
+    let mut outgoing: Vec<(Link, Wire)> = Vec::new();
+    loop {
+        match rx.recv_timeout(IDLE_TICK) {
+            Ok(batch) => {
+                outgoing.extend(batch);
+                // opportunistic cycle: everything already queued flushes
+                // together (more cross-shard coalescing under load)
+                while let Ok(more) = rx.try_recv() {
+                    outgoing.extend(more);
+                }
+                coalescer.drain(&mut outgoing, true, |(from, to), frame| tx.send(from, to, frame));
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if halt.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Runs `S` protocol nodes (shards) over one transport endpoint until
+/// stopped. See the module docs for the thread layout.
+pub struct ShardedRuntime<T: Transport> {
+    transport: T,
+    nodes: Vec<Box<dyn Node>>,
+    on_deliver: Option<Arc<Mutex<DeliverFn>>>,
+    stats: Arc<RuntimeStats>,
+    epoch: Instant,
+}
+
+impl<T: Transport> ShardedRuntime<T> {
+    pub fn new(nodes: Vec<Box<dyn Node>>, transport: T) -> Self {
+        assert!(!nodes.is_empty(), "an endpoint must host at least one node");
+        ShardedRuntime {
+            transport,
+            nodes,
+            on_deliver: None,
+            stats: Arc::new(RuntimeStats::default()),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Install the delivery callback (invoked from shard worker threads).
+    pub fn on_deliver(&mut self, f: DeliverFn) {
+        self.on_deliver = Some(Arc::new(Mutex::new(f)));
+    }
+
+    /// Install a callback already shared with other endpoints (e.g. the
+    /// cluster-wide handle [`Cluster`] holds) — one lock layer, no
+    /// re-wrapping.
+    pub fn on_deliver_shared(&mut self, f: Arc<Mutex<DeliverFn>>) {
+        self.on_deliver = Some(f);
+    }
+
+    /// Shared counters handle (clone before `run` to observe afterwards).
+    pub fn stats(&self) -> Arc<RuntimeStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Run until `stop` is raised (or the transport closes). Returns the
+    /// nodes back for inspection, in their original order.
+    pub fn run(mut self, stop: Arc<AtomicBool>) -> Vec<Box<dyn Node>> {
+        // endpoint-local halt: a transport close must stop this runtime's
+        // helper threads without touching the caller's (possibly shared)
+        // stop flag
+        let halt = Arc::new(AtomicBool::new(false));
+        let cb = self.on_deliver.take();
+
+        let (out_tx, out_rx) = mpsc::channel::<Vec<(Link, Wire)>>();
+        let flusher = {
+            let tx = self.transport.sender();
+            let halt = Arc::clone(&halt);
+            std::thread::Builder::new()
+                .name("wbam-flush".into())
+                .spawn(move || run_flusher(tx, out_rx, halt))
+                .expect("spawn flusher thread")
+        };
+
+        // one channel per shard, registered before any worker starts so
+        // cross-shard routing never races a missing peer
+        let mut peers: FxHashMap<Pid, Sender<(Pid, Pid, Wire)>> = FxHashMap::default();
+        let mut inboxes = Vec::new();
+        for node in &self.nodes {
+            let (tx, rx) = mpsc::channel();
+            peers.insert(node.pid(), tx.clone());
+            inboxes.push((tx, rx));
+        }
+
+        let mut workers = Vec::new();
+        let mut senders: FxHashMap<Pid, Sender<(Pid, Pid, Wire)>> = FxHashMap::default();
+        let nodes = std::mem::take(&mut self.nodes);
+        for (node, (tx, rx)) in nodes.into_iter().zip(inboxes) {
+            let pid = node.pid();
+            senders.insert(pid, tx);
+            let worker = ShardWorker {
+                node,
+                rx,
+                peers: peers.clone(),
+                out_tx: out_tx.clone(),
+                outbox: Outbox::new(),
+                scratch: Vec::new(),
+                outgoing: Vec::new(),
+                timers: BinaryHeap::new(),
+                timer_seq: 0,
+                epoch: self.epoch,
+                on_deliver: cb.clone(),
+                stats: Arc::clone(&self.stats),
+                stop: Arc::clone(&stop),
+                halt: Arc::clone(&halt),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("wbam-shard-{}", pid.0))
+                    .spawn(move || worker.run())
+                    .expect("spawn shard worker"),
+            );
+        }
+        drop(out_tx); // flusher exits once every worker is gone
+        drop(peers); // workers own their clones; ours would pin the channels
+
+        // receive loop: demux addressed frames to shard workers
+        while !stop.load(Ordering::Relaxed) && !halt.load(Ordering::Relaxed) {
+            match self.transport.recv_timeout(IDLE_TICK) {
+                Some(Incoming::Wire(from, to, wire)) => match senders.get(&to) {
+                    Some(tx) => {
+                        let _ = tx.send((from, to, wire));
+                    }
+                    None => log::warn!("frame {from:?}->{to:?} at an endpoint not hosting {to:?}"),
+                },
+                Some(Incoming::Closed) => break,
+                None => {}
+            }
+        }
+        halt.store(true, Ordering::Relaxed);
+        drop(senders); // workers also exit on channel disconnect
+        let nodes: Vec<Box<dyn Node>> =
+            workers.into_iter().map(|h| h.join().expect("shard worker panicked")).collect();
+        let _ = flusher.join();
+        nodes
+    }
+}
+
+/// The single-node runtime (clients, CLI `serve`): the 1-shard special
+/// case of [`ShardedRuntime`].
+pub struct NodeRuntime<T: Transport> {
+    inner: ShardedRuntime<T>,
+}
+
+impl<T: Transport> NodeRuntime<T> {
+    pub fn new(node: Box<dyn Node>, transport: T) -> Self {
+        NodeRuntime { inner: ShardedRuntime::new(vec![node], transport) }
+    }
+
+    pub fn on_deliver(&mut self, f: DeliverFn) {
+        self.inner.on_deliver(f);
+    }
+
+    pub fn stats(&self) -> Arc<RuntimeStats> {
+        self.inner.stats()
+    }
+
+    /// Run until `stop` is raised. Returns the node back for inspection.
+    pub fn run(self, stop: Arc<AtomicBool>) -> Box<dyn Node> {
+        let mut nodes = self.inner.run(stop);
+        nodes.pop().expect("single node")
+    }
+}
+
+/// Convenience: spawn a single-node runtime on its own thread; returns a
+/// join handle yielding the node when stopped.
 pub fn spawn<T: Transport + 'static>(
     node: Box<dyn Node>,
     transport: T,
@@ -223,38 +420,90 @@ pub fn spawn<T: Transport + 'static>(
         .expect("spawn node thread")
 }
 
-/// A whole in-process cluster: group members + clients on threads.
+/// Spawn one endpoint hosting several shard nodes; yields the nodes back
+/// when stopped.
+pub fn spawn_sharded<T: Transport + 'static>(
+    nodes: Vec<Box<dyn Node>>,
+    transport: T,
+    stop: Arc<AtomicBool>,
+    on_deliver: Option<DeliverFn>,
+) -> std::thread::JoinHandle<Vec<Box<dyn Node>>> {
+    let name = format!("wbam-host-{}", nodes.first().map(|n| n.pid().0).unwrap_or(0));
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let mut rt = ShardedRuntime::new(nodes, transport);
+            if let Some(f) = on_deliver {
+                rt.on_deliver(f);
+            }
+            rt.run(stop)
+        })
+        .expect("spawn host thread")
+}
+
+/// A whole in-process cluster: endpoints (each hosting one or more
+/// nodes) on threads over a fresh [`crate::net::InProcMesh`].
 pub struct Cluster {
     pub stop: Arc<AtomicBool>,
-    pub handles: Vec<std::thread::JoinHandle<Box<dyn Node>>>,
+    pub handles: Vec<std::thread::JoinHandle<Vec<Box<dyn Node>>>>,
 }
 
 impl Cluster {
-    /// Launch `nodes` over a fresh in-proc mesh. `on_deliver` is invoked
-    /// for every local delivery on any node.
-    pub fn launch(nodes: Vec<Box<dyn Node>>, on_deliver: Option<Arc<std::sync::Mutex<DeliverFn>>>) -> Cluster {
+    /// Launch `nodes`, one endpoint each. `on_deliver` is invoked for
+    /// every local delivery on any node.
+    pub fn launch(nodes: Vec<Box<dyn Node>>, on_deliver: Option<Arc<Mutex<DeliverFn>>>) -> Cluster {
+        Self::launch_hosts(nodes.into_iter().map(|n| vec![n]).collect(), on_deliver)
+    }
+
+    /// Launch a sharded deployment: `hosts[i]` is the set of nodes
+    /// sharing endpoint `i` (e.g. one machine's shard counterparts per
+    /// [`crate::types::ShardMap::hosted_by`], clients as singleton
+    /// hosts).
+    pub fn launch_hosts(
+        hosts: Vec<Vec<Box<dyn Node>>>,
+        on_deliver: Option<Arc<Mutex<DeliverFn>>>,
+    ) -> Cluster {
         let mesh = crate::net::InProcMesh::new();
         let stop = Arc::new(AtomicBool::new(false));
         // register all endpoints before starting any node so early sends
         // have somewhere to go
-        let endpoints: Vec<_> = nodes.iter().map(|n| mesh.endpoint(n.pid())).collect();
+        let endpoints: Vec<_> = hosts
+            .iter()
+            .map(|ns| {
+                let pids: Vec<Pid> = ns.iter().map(|n| n.pid()).collect();
+                mesh.endpoint_hosting(&pids)
+            })
+            .collect();
         let mut handles = Vec::new();
-        for (node, ep) in nodes.into_iter().zip(endpoints) {
-            let cb: Option<DeliverFn> = on_deliver.as_ref().map(|f| {
-                let f = Arc::clone(f);
-                Box::new(move |pid: Pid, m: MsgId, gts: Ts, t: u64| {
-                    (f.lock().unwrap())(pid, m, gts, t);
-                }) as DeliverFn
-            });
-            handles.push(spawn(node, ep, Arc::clone(&stop), cb));
+        for (ns, ep) in hosts.into_iter().zip(endpoints) {
+            // hand every endpoint the same shared callback handle: one
+            // lock layer cluster-wide, no per-endpoint re-wrapping
+            let cb = on_deliver.clone();
+            let stop2 = Arc::clone(&stop);
+            let name = format!("wbam-host-{}", ns.first().map(|n| n.pid().0).unwrap_or(0));
+            handles.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        let mut rt = ShardedRuntime::new(ns, ep);
+                        if let Some(f) = cb {
+                            rt.on_deliver_shared(f);
+                        }
+                        rt.run(stop2)
+                    })
+                    .expect("spawn host thread"),
+            );
         }
         Cluster { stop, handles }
     }
 
-    /// Stop all node threads and collect the nodes.
+    /// Stop all endpoint threads and collect the nodes.
     pub fn shutdown(self) -> Vec<Box<dyn Node>> {
         self.stop.store(true, Ordering::Relaxed);
-        self.handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
+        self.handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("node thread panicked"))
+            .collect()
     }
 }
 
@@ -263,8 +512,70 @@ mod tests {
     use super::*;
     use crate::client::{Client, ClientCfg};
     use crate::protocols::wbcast::{WbConfig, WbNode};
-    use crate::types::Topology;
-    use std::sync::Mutex;
+    use crate::types::{Ballot, ShardMap, Topology};
+
+    /// Two shards on one endpoint plus a remote sink: sends between the
+    /// hosted pids must be routed in-process (`self_wires`), only the
+    /// remote-bound wires may reach the transport (`wires_out`).
+    #[test]
+    fn cross_shard_routing_stays_in_process() {
+        struct Chatter {
+            pid: Pid,
+            sibling: Pid,
+            remote: Pid,
+            heard: u32,
+        }
+        impl Node for Chatter {
+            fn pid(&self) -> Pid {
+                self.pid
+            }
+            fn on_start(&mut self, _now: u64, out: &mut Outbox) {
+                out.send(self.sibling, Wire::Heartbeat { bal: Ballot::new(1, self.pid) });
+                out.send(self.remote, Wire::Heartbeat { bal: Ballot::new(1, self.pid) });
+            }
+            fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64, _o: &mut Outbox) {
+                self.heard += 1;
+            }
+            fn on_timer(&mut self, _t: TimerKind, _n: u64, _o: &mut Outbox) {}
+        }
+
+        let mesh = crate::net::InProcMesh::new();
+        let ep = mesh.endpoint_hosting(&[Pid(1), Pid(2)]);
+        let mut remote = mesh.endpoint(Pid(9));
+        let stop = Arc::new(AtomicBool::new(false));
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Chatter { pid: Pid(1), sibling: Pid(2), remote: Pid(9), heard: 0 }),
+            Box::new(Chatter { pid: Pid(2), sibling: Pid(1), remote: Pid(9), heard: 0 }),
+        ];
+        let mut rt = ShardedRuntime::new(nodes, ep);
+        let stats = rt.stats();
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || rt.run(stop2));
+
+        // exactly the two remote-bound heartbeats reach the transport
+        for _ in 0..2 {
+            match remote.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(_, Pid(9), Wire::Heartbeat { .. })) => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // both cross-shard heartbeats arrive through the in-process route
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while stats.wires_in.load(Ordering::Relaxed) < 2 {
+            assert!(Instant::now() < deadline, "cross-shard wires never delivered");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let nodes = handle.join().expect("runtime thread");
+        for n in &nodes {
+            let any: &dyn Node = &**n;
+            let c = (any as &dyn std::any::Any).downcast_ref::<Chatter>().expect("chatter");
+            assert_eq!(c.heard, 1, "{:?} missed its sibling's heartbeat", c.pid);
+        }
+        assert_eq!(stats.self_wires.load(Ordering::Relaxed), 2, "cross-shard sends must stay off the transport");
+        assert_eq!(stats.wires_out.load(Ordering::Relaxed), 2, "remote sends must reach the transport");
+        assert_eq!(stats.wires_in.load(Ordering::Relaxed), 2);
+    }
 
     #[test]
     fn inproc_cluster_runs_wbcast_end_to_end() {
@@ -322,6 +633,92 @@ mod tests {
             let any: &dyn Node = &*n;
             if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
                 assert_eq!(c.completed.len(), 25);
+            }
+        }
+    }
+
+    /// Acceptance: a 2-group topology with 4 shards per leader delivers a
+    /// multi-group workload end to end, per-pid gts ordering green, and
+    /// cross-shard traffic stays off the transport.
+    #[test]
+    fn sharded_runtime_end_to_end() {
+        let map = ShardMap::new(2, 1, 4);
+        let wb = WbConfig { hb_interval: 20_000_000, ..WbConfig::default() };
+        let mut hosts: Vec<Vec<Box<dyn Node>>> = Vec::new();
+        // 6 member endpoints, each hosting its 4 shard counterparts
+        for e in map.endpoints() {
+            let mut ns: Vec<Box<dyn Node>> = Vec::new();
+            for p in map.hosted_by(e) {
+                let s = map.shard_of(p).expect("hosted pid is a member");
+                ns.push(Box::new(WbNode::new(p, map.topo(s), wb)));
+            }
+            hosts.push(ns);
+        }
+        // 8 clients, partitioned round-robin over the 4 shards
+        let n_clients = 8u32;
+        let requests = 15usize;
+        for c in 0..n_clients {
+            let pid = Pid(map.first_client_pid().0 + c);
+            let s = map.client_shard(pid);
+            let cfg = ClientCfg {
+                dest_groups: 2,
+                max_requests: Some(requests as u32),
+                resend_after: 200_000_000,
+                ..Default::default()
+            };
+            hosts.push(vec![Box::new(Client::new(pid, map.topo(s), cfg, 31 + c as u64))]);
+        }
+
+        let deliveries = Arc::new(Mutex::new(Vec::<(Pid, MsgId, Ts)>::new()));
+        let dv = Arc::clone(&deliveries);
+        let cb: Arc<Mutex<DeliverFn>> = Arc::new(Mutex::new(Box::new(move |pid, m, gts, _t| {
+            dv.lock().unwrap().push((pid, m, gts));
+        })));
+        let cluster = Cluster::launch_hosts(hosts, Some(cb));
+
+        // 8 clients x 15 requests x 2 groups x 3 replicas = 720 deliveries
+        let expected = n_clients as usize * requests * 2 * 3;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let n = deliveries.lock().unwrap().len();
+            if n >= expected {
+                break;
+            }
+            assert!(Instant::now() < deadline, "timeout: {n}/{expected} deliveries");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let nodes = cluster.shutdown();
+
+        let dels = deliveries.lock().unwrap();
+        // per-pid gts strictly increasing (Ordering, per shard node), and
+        // every delivering pid is a member of the shard it claims
+        let mut per_pid: std::collections::HashMap<Pid, Vec<Ts>> = Default::default();
+        for &(pid, m, gts) in dels.iter() {
+            assert_eq!(
+                map.client_shard(Pid(m.client())),
+                map.shard_of(pid).expect("delivery at a member"),
+                "message crossed shards"
+            );
+            per_pid.entry(pid).or_default().push(gts);
+        }
+        // all 24 shard nodes participated
+        assert_eq!(per_pid.len(), map.num_members(), "idle shard nodes");
+        for (pid, seq) in &per_pid {
+            for w in seq.windows(2) {
+                assert!(w[0] < w[1], "{pid:?} delivered out of gts order");
+            }
+        }
+        // gts agreement per message across its shard's replicas
+        let mut gts_of: std::collections::HashMap<MsgId, Ts> = Default::default();
+        for &(_pid, m, gts) in dels.iter() {
+            let e = gts_of.entry(m).or_insert(gts);
+            assert_eq!(*e, gts, "gts disagreement for {m:?}");
+        }
+        // clients all completed
+        for n in nodes {
+            let any: &dyn Node = &*n;
+            if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+                assert_eq!(c.completed.len(), requests);
             }
         }
     }

@@ -38,6 +38,9 @@ impl std::fmt::Display for Violation {
 /// Returns all violations found; empty = clean run.
 pub fn check_safety(trace: &Trace) -> Vec<Violation> {
     assert!(trace.record_full, "safety checking needs record_full = true");
+    // shards are independent ordering domains (gts uniqueness only holds
+    // within one) — check each projection, see [`assert_correct_sharded`]
+    assert_eq!(trace.shards(), 1, "check sharded traces per shard via Trace::shard_view");
     let mut v = Vec::new();
     let topo = trace.topo().clone();
 
@@ -158,6 +161,7 @@ pub fn check_safety(trace: &Trace) -> Vec<Violation> {
 /// unless delivered somewhere (§II Termination).
 pub fn check_termination(trace: &Trace) -> Vec<Violation> {
     assert!(trace.record_full);
+    assert_eq!(trace.shards(), 1, "check sharded traces per shard via Trace::shard_view");
     let mut v = Vec::new();
     let topo = trace.topo().clone();
     let crashed: HashSet<Pid> = trace.crashes.iter().map(|&(_, p)| p).collect();
@@ -212,6 +216,14 @@ pub fn assert_correct(trace: &Trace) {
     if !vs.is_empty() {
         let head: Vec<String> = vs.iter().take(10).map(|v| v.to_string()).collect();
         panic!("{} termination violations:\n{}", vs.len(), head.join("\n"));
+    }
+}
+
+/// Assert safety + termination of a sharded run, shard by shard (each
+/// shard is its own ordering domain; see [`Trace::shard_view`]).
+pub fn assert_correct_sharded(trace: &Trace) {
+    for s in 0..trace.shards() {
+        assert_correct(&trace.shard_view(s));
     }
 }
 

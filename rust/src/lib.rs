@@ -25,12 +25,19 @@
 //!   regenerate every figure of the paper's evaluation and to validate the
 //!   latency theorems of §V. Batch frames arrive as one event with one
 //!   frame-level CPU charge ([`sim::SimConfig::coalesce`]).
-//! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and the
-//!   group runtime that drive the same state machines on actual threads.
-//!   The coordinator drains the whole transport backlog per wake-up and
-//!   flushes one coalesced frame per destination per cycle; TCP encodes
-//!   each frame once into a reused buffer and writes it with a single
-//!   length-prefixed write.
+//! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and
+//!   the sharded runtime that drives the same state machines on actual
+//!   threads. One transport endpoint hosts `S` protocol shards
+//!   ([`types::ShardMap`]; one
+//!   [`ShardedRuntime`](coordinator::ShardedRuntime) worker thread per
+//!   shard, clients partitioned by client id), demuxing incoming frames
+//!   by destination pid and routing same-endpoint sends in-process.
+//!   Each shard drains its whole backlog per wake-up (bounded by inner
+//!   wires, not frames); a shared flusher folds all shards' sends into
+//!   one coalesced frame per link per cycle. TCP encodes each frame once
+//!   into a reused buffer, writes it with a single length-prefixed
+//!   write, and repairs dead connections with a reconnect-and-retry
+//!   before (visibly) dropping a frame.
 //! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
 //!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
 //!   resolution + delivery-frontier check) and executes it from the leader
@@ -60,4 +67,4 @@ pub mod stats;
 pub mod types;
 pub mod util;
 
-pub use types::{Ballot, Gid, GidSet, MsgId, Pid, Topology, Ts};
+pub use types::{Ballot, Gid, GidSet, MsgId, Pid, ShardMap, Topology, Ts};

@@ -5,8 +5,8 @@
 //!            --dest 3 --net lan|wan|theory [--delta-us 1000] [--duration-ms 5000]
 //!            [--seed 42]                       # simulated deployment
 //! wbam table                                   # §V latency table (T-lat)
-//! wbam serve --pid 0 --config cluster.toml     # TCP group member
-//! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100
+//! wbam serve --pid 0 --config cluster.toml [--shards 4]   # TCP member endpoint
+//! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100 [--shards 4]
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
 //!
@@ -27,14 +27,14 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use wbam::client::{Client, ClientCfg};
 use wbam::config::{Args, Config};
-use wbam::coordinator::NodeRuntime;
+use wbam::coordinator::{NodeRuntime, ShardedRuntime};
 use wbam::harness::{run, Net, Proto, RunCfg};
 use wbam::net::TcpTransport;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, XlaBackend};
 use wbam::sim::MS;
-use wbam::types::{Pid, Topology};
+use wbam::types::{Pid, ShardMap};
 
 fn parse_proto(s: &str) -> Result<Proto> {
     Ok(match s {
@@ -85,43 +85,62 @@ fn cmd_table(_a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_cluster(a: &Args) -> Result<(Topology, HashMap<Pid, std::net::SocketAddr>)> {
+/// Load the cluster config: the shard map and the address book. The
+/// config lists one address per *endpoint* (group members then clients);
+/// with `--shards S` every member pid's shard counterparts alias the
+/// member's address, so shard traffic reaches the hosting endpoint.
+fn load_cluster(a: &Args) -> Result<(ShardMap, HashMap<Pid, std::net::SocketAddr>)> {
     let path = a.opt("config").context("--config required")?;
     let cfg = Config::load(path)?;
     let groups = cfg.usize("cluster.groups", 2)?;
     let f = cfg.usize("cluster.f", 1)?;
-    let topo = Topology::new(groups, f);
-    let mut addrs = HashMap::new();
+    let shards = a.usize_opt("shards", 1);
+    let map = ShardMap::new(groups, f, shards);
+    let members = map.members_per_shard() as u32;
+    let mut addrs: HashMap<Pid, std::net::SocketAddr> = HashMap::new();
     let mut i = 0u32;
     while let Some(addr) = cfg.get(&format!("addrs.p{i}")) {
-        addrs.insert(Pid(i), addr.parse().with_context(|| format!("addrs.p{i}"))?);
+        let addr = addr.parse().with_context(|| format!("addrs.p{i}"))?;
+        if i < members {
+            // a member endpoint: every shard counterpart lives here
+            for p in map.hosted_by(Pid(i)) {
+                addrs.insert(p, addr);
+            }
+        } else {
+            // a client: its pid is shifted past all shards' members
+            addrs.insert(Pid(i - members + map.first_client_pid().0), addr);
+        }
         i += 1;
     }
-    if (addrs.len() as u32) < topo.num_members() as u32 {
-        bail!("config lists {} addresses; {} group members required", addrs.len(), topo.num_members());
+    if i < members {
+        bail!("config lists {i} addresses; {members} group members required");
     }
-    Ok((topo, addrs))
+    Ok((map, addrs))
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    let (topo, addrs) = load_cluster(a)?;
+    let (map, addrs) = load_cluster(a)?;
     let pid = Pid(a.u64_opt("pid", 0) as u32);
-    if topo.group_of(pid).is_none() {
-        bail!("{pid:?} is not a group member");
+    if (pid.0 as usize) >= map.members_per_shard() {
+        bail!("{pid:?} is not a member endpoint (0..{})", map.members_per_shard());
     }
     let mut wb = WbConfig::with_failures(5 * MS);
     wb.batch_threshold = a.usize_opt("batch", 1);
     wb.batch_flush_after = a.u64_opt("flush-us", 200) * 1000;
-    let node: Box<dyn Node> = if a.flag("xla") {
-        let handle = spawn_engine(wbam::runtime::engine::artifacts_dir())?;
-        Box::new(WbNode::with_backend(pid, topo.clone(), wb, Box::new(XlaBackend::new(handle))))
-    } else {
-        Box::new(WbNode::new(pid, topo.clone(), wb))
-    };
+    let engine = if a.flag("xla") { Some(spawn_engine(wbam::runtime::engine::artifacts_dir())?) } else { None };
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for p in map.hosted_by(pid) {
+        let topo = map.topo(map.shard_of(p).expect("hosted pid is a member"));
+        let node: Box<dyn Node> = match &engine {
+            Some(h) => Box::new(WbNode::with_backend(p, topo, wb, Box::new(XlaBackend::new(h.clone())))),
+            None => Box::new(WbNode::new(p, topo, wb)),
+        };
+        nodes.push(node);
+    }
     let transport = TcpTransport::bind(pid, addrs)?;
-    println!("serving {pid:?} (group {:?})", topo.group_of(pid).unwrap());
+    println!("serving endpoint {pid:?}: {} shard node(s)", nodes.len());
     let stop = Arc::new(AtomicBool::new(false));
-    let mut rt = NodeRuntime::new(node, transport);
+    let mut rt = ShardedRuntime::new(nodes, transport);
     rt.on_deliver(Box::new(|pid, m, gts, _| {
         log::info!("{pid:?} deliver {m:?} gts {gts:?}");
     }));
@@ -130,8 +149,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
 }
 
 fn cmd_client(a: &Args) -> Result<()> {
-    let (topo, addrs) = load_cluster(a)?;
-    let pid = Pid(a.u64_opt("pid", topo.first_client_pid().0 as u64) as u32);
+    let (map, addrs) = load_cluster(a)?;
+    let pid = Pid(a.u64_opt("pid", map.first_client_pid().0 as u64) as u32);
+    if (pid.0 as usize) < map.num_members() {
+        bail!("{pid:?} is a member pid; client pids start at {}", map.first_client_pid());
+    }
+    let topo = map.topo(map.client_shard(pid));
     let requests = a.u64_opt("requests", 100) as u32;
     let ccfg = ClientCfg {
         dest_groups: a.usize_opt("dest", 1),

@@ -4,7 +4,22 @@
 //! image has no tokio — one reader thread per peer connection).
 //!
 //! Both preserve the protocol's channel assumptions: reliable FIFO
-//! per-link delivery.
+//! per-link delivery, where a *link* is an ordered `(from, to)` pid
+//! pair. One endpoint may host several local pids (the shards of a
+//! [`crate::types::ShardMap`]): every frame carries its source and
+//! destination pid so the receiving runtime can demux to the right
+//! shard, and outgoing TCP connections are shared per remote *address*,
+//! not per pid.
+//!
+//! A TCP send that hits a dead connection re-establishes the connection
+//! and retries once; a frame that still cannot be *written* is
+//! `log::warn!`ed rather than vanishing, and an idle-connection probe
+//! closes most of the window in which a peer death could swallow a
+//! frame buffered into a dead socket. The residual TCP in-flight loss
+//! (peer dies mid-stream with writes succeeding into the kernel buffer)
+//! is inherent to TCP without application acks — that is exactly what
+//! the protocol's retransmit timers (§IV message recovery) absorb; the
+//! transport's job is to make every *locally observed* failure visible.
 
 use crate::codec;
 use crate::types::{Pid, Wire};
@@ -15,20 +30,35 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Incoming event at a node.
+/// Incoming event at an endpoint.
 #[derive(Debug)]
 pub enum Incoming {
-    Wire(Pid, Wire),
+    /// `(from, to, wire)`: an addressed frame. `to` selects the local
+    /// shard node at endpoints hosting more than one pid.
+    Wire(Pid, Pid, Wire),
     /// transport shut down
     Closed,
 }
 
-/// Node-side handle: send to any peer, receive own traffic. `send` takes
-/// the wire by value: the coordinator flush hands each per-destination
-/// frame over exactly once, so the in-process mesh forwards it without a
-/// clone and TCP encodes it once into a reused buffer.
+/// The send half of a transport, usable from a thread other than the
+/// receiver's (the sharded runtime's flusher thread). `send` takes the
+/// wire by value: the flush hands each per-link frame over exactly once,
+/// so the in-process mesh forwards it without a clone and TCP encodes it
+/// once into a reused buffer.
+pub trait TransportTx: Send {
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire);
+}
+
+/// Endpoint handle: send to any peer, receive the traffic of every
+/// locally hosted pid.
 pub trait Transport: Send {
-    fn send(&mut self, to: Pid, wire: Wire);
+    /// An independent send half (own connection/encode state) for use on
+    /// another thread. All of a runtime's outgoing traffic should flow
+    /// through a single half so per-link FIFO order is preserved.
+    fn sender(&self) -> Box<dyn TransportTx>;
+    /// Convenience send from the receiving half (tests, single-threaded
+    /// callers).
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire);
     /// Blocking receive with timeout; `None` on timeout.
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming>;
 }
@@ -36,9 +66,10 @@ pub trait Transport: Send {
 // ---------------- in-process mesh ----------------
 
 /// Registry mapping pids to channel senders (shared by all endpoints).
+/// Several pids may map to one endpoint's channel (shard hosting).
 #[derive(Clone, Default)]
 pub struct InProcMesh {
-    inner: Arc<Mutex<HashMap<Pid, Sender<(Pid, Wire)>>>>,
+    inner: Arc<Mutex<HashMap<Pid, Sender<(Pid, Pid, Wire)>>>>,
 }
 
 impl InProcMesh {
@@ -46,36 +77,64 @@ impl InProcMesh {
         Self::default()
     }
 
-    /// Create the endpoint for `pid`.
+    /// Create the endpoint for a single `pid`.
     pub fn endpoint(&self, pid: Pid) -> InProcTransport {
-        let (tx, rx) = mpsc::channel();
-        self.inner.lock().unwrap().insert(pid, tx);
-        InProcTransport { pid, mesh: self.clone(), rx }
+        self.endpoint_hosting(&[pid])
     }
 
-    /// Disconnect `pid` (crash simulation: its queue drops).
+    /// Create one endpoint receiving the traffic of every pid in `pids`
+    /// (the shards hosted by one machine).
+    pub fn endpoint_hosting(&self, pids: &[Pid]) -> InProcTransport {
+        let (tx, rx) = mpsc::channel();
+        let mut guard = self.inner.lock().unwrap();
+        for &p in pids {
+            guard.insert(p, tx.clone());
+        }
+        drop(guard);
+        InProcTransport { mesh: self.clone(), rx }
+    }
+
+    /// Disconnect `pid` (crash simulation: its queue drops once no alias
+    /// remains registered).
     pub fn disconnect(&self, pid: Pid) {
         self.inner.lock().unwrap().remove(&pid);
     }
 }
 
-pub struct InProcTransport {
-    pid: Pid,
+/// Send half of the mesh (just a registry handle).
+pub struct InProcSender {
     mesh: InProcMesh,
-    rx: Receiver<(Pid, Wire)>,
+}
+
+impl TransportTx for InProcSender {
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        let guard = self.mesh.inner.lock().unwrap();
+        if let Some(tx) = guard.get(&to) {
+            let _ = tx.send((from, to, wire)); // dead peer: drop
+        }
+    }
+}
+
+pub struct InProcTransport {
+    mesh: InProcMesh,
+    rx: Receiver<(Pid, Pid, Wire)>,
 }
 
 impl Transport for InProcTransport {
-    fn send(&mut self, to: Pid, wire: Wire) {
+    fn sender(&self) -> Box<dyn TransportTx> {
+        Box::new(InProcSender { mesh: self.mesh.clone() })
+    }
+
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
         let guard = self.mesh.inner.lock().unwrap();
         if let Some(tx) = guard.get(&to) {
-            let _ = tx.send((self.pid, wire)); // dead peer: drop
+            let _ = tx.send((from, to, wire));
         }
     }
 
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
         match self.rx.recv_timeout(d) {
-            Ok((from, wire)) => Some(Incoming::Wire(from, wire)),
+            Ok((from, to, wire)) => Some(Incoming::Wire(from, to, wire)),
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
         }
@@ -84,27 +143,18 @@ impl Transport for InProcTransport {
 
 // ---------------- TCP ----------------
 
-/// TCP transport: every node listens on `addrs[pid]`; outgoing
-/// connections are cached; each accepted connection gets a reader thread
-/// that forwards framed messages (u32-LE length ++ codec bytes) into the
-/// node's queue. The first frame on a connection is a hello carrying the
-/// sender pid.
+/// Frame layout on the wire: `u32 len ++ u32 from ++ u32 to ++ codec
+/// bytes`. `addrs` maps every addressable pid — including each shard
+/// counterpart of a hosted endpoint — to the `SocketAddr` of the
+/// endpoint hosting it; outgoing connections are cached per address so
+/// all shard traffic to one machine shares a socket. Each accepted
+/// connection gets a reader thread that forwards decoded frames into the
+/// endpoint's queue.
 pub struct TcpTransport {
-    pid: Pid,
     addrs: Arc<HashMap<Pid, SocketAddr>>,
-    conns: HashMap<Pid, BufWriter<TcpStream>>,
-    rx: Receiver<(Pid, Wire)>,
-    /// reused encode buffer: `u32 length ++ codec bytes`, written with a
-    /// single `write_all` per frame (encode-once, one syscall per flush
-    /// per destination)
-    enc: codec::Enc,
+    tx_half: TcpSender,
+    rx: Receiver<(Pid, Pid, Wire)>,
     _listener_thread: std::thread::JoinHandle<()>,
-}
-
-fn write_frame(w: &mut impl Write, bytes: &[u8]) -> std::io::Result<()> {
-    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()
 }
 
 fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
@@ -122,7 +172,7 @@ fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
 impl TcpTransport {
     pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addrs[&pid])?;
-        let (tx, rx) = mpsc::channel::<(Pid, Wire)>();
+        let (tx, rx) = mpsc::channel::<(Pid, Pid, Wire)>();
         let accept_tx = tx.clone();
         let listener_thread = std::thread::Builder::new()
             .name(format!("wbam-listen-{}", pid.0))
@@ -132,85 +182,155 @@ impl TcpTransport {
                     let tx = accept_tx.clone();
                     std::thread::spawn(move || {
                         let mut r = BufReader::new(stream);
-                        // hello frame: 4-byte sender pid
-                        let Ok(hello) = read_frame(&mut r) else { return };
-                        if hello.len() != 4 {
-                            return;
-                        }
-                        let from = Pid(u32::from_le_bytes(hello.try_into().unwrap()));
                         loop {
                             match read_frame(&mut r) {
-                                Ok(bytes) => match codec::decode(&bytes) {
-                                    Ok(wire) => {
-                                        if tx.send((from, wire)).is_err() {
+                                Ok(bytes) => {
+                                    if bytes.len() < 8 {
+                                        log::warn!("runt frame ({} bytes)", bytes.len());
+                                        return;
+                                    }
+                                    let from = Pid(u32::from_le_bytes(bytes[0..4].try_into().unwrap()));
+                                    let to = Pid(u32::from_le_bytes(bytes[4..8].try_into().unwrap()));
+                                    match codec::decode(&bytes[8..]) {
+                                        Ok(wire) => {
+                                            if tx.send((from, to, wire)).is_err() {
+                                                return;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            log::warn!("bad frame from {from:?}: {e}");
                                             return;
                                         }
                                     }
-                                    Err(e) => {
-                                        log::warn!("bad frame from {from:?}: {e}");
-                                        return;
-                                    }
-                                },
+                                }
                                 Err(_) => return, // peer closed
                             }
                         }
                     });
                 }
             })?;
+        let addrs = Arc::new(addrs);
         Ok(TcpTransport {
-            pid,
-            addrs: Arc::new(addrs),
-            conns: HashMap::new(),
+            addrs: Arc::clone(&addrs),
+            tx_half: TcpSender::new(addrs),
             rx,
-            enc: codec::Enc::new(),
             _listener_thread: listener_thread,
         })
-    }
-
-    /// Borrow-splitting helper: the returned writer borrows only `conns`,
-    /// leaving the encode buffer free for the caller.
-    fn conn<'a>(
-        conns: &'a mut HashMap<Pid, BufWriter<TcpStream>>,
-        addrs: &HashMap<Pid, SocketAddr>,
-        me: Pid,
-        to: Pid,
-    ) -> Option<&'a mut BufWriter<TcpStream>> {
-        if !conns.contains_key(&to) {
-            let addr = *addrs.get(&to)?;
-            let stream = TcpStream::connect(addr).ok()?;
-            stream.set_nodelay(true).ok();
-            let mut w = BufWriter::new(stream);
-            write_frame(&mut w, &me.0.to_le_bytes()).ok()?;
-            conns.insert(to, w);
-        }
-        conns.get_mut(&to)
     }
 }
 
 impl Transport for TcpTransport {
-    fn send(&mut self, to: Pid, wire: Wire) {
-        // encode once into the reused buffer, length prefix in-band, and
-        // put the frame on the socket with a single write
-        self.enc.buf.clear();
-        self.enc.u32(0); // length placeholder
-        codec::encode_into(&mut self.enc, &wire);
-        let n = (self.enc.buf.len() - 4) as u32;
-        self.enc.buf[..4].copy_from_slice(&n.to_le_bytes());
-        let ok = match Self::conn(&mut self.conns, &self.addrs, self.pid, to) {
-            Some(w) => w.write_all(&self.enc.buf).and_then(|()| w.flush()).is_ok(),
-            None => false,
-        };
-        if !ok {
-            self.conns.remove(&to); // reconnect next time
-        }
+    fn sender(&self) -> Box<dyn TransportTx> {
+        Box::new(TcpSender::new(Arc::clone(&self.addrs)))
+    }
+
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        self.tx_half.send(from, to, wire)
     }
 
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
         match self.rx.recv_timeout(d) {
-            Ok((from, wire)) => Some(Incoming::Wire(from, wire)),
+            Ok((from, to, wire)) => Some(Incoming::Wire(from, to, wire)),
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
         }
+    }
+}
+
+/// How long a connection may sit idle before the next send probes it for
+/// a peer close. Back-to-back frames skip the probe (keeping the hot
+/// path at one write syscall per frame); a link that died during a lull
+/// is detected before the first write that could silently vanish into
+/// the dead socket.
+const PROBE_AFTER_IDLE: Duration = Duration::from_millis(10);
+
+struct Conn {
+    w: BufWriter<TcpStream>,
+    last_used: std::time::Instant,
+}
+
+/// TCP send half: per-address connection cache + a reused encode buffer
+/// (`u32 length ++ from ++ to ++ codec bytes`, written with a single
+/// `write_all` per frame — encode-once, one syscall per frame).
+pub struct TcpSender {
+    addrs: Arc<HashMap<Pid, SocketAddr>>,
+    conns: HashMap<SocketAddr, Conn>,
+    enc: codec::Enc,
+}
+
+impl TcpSender {
+    fn new(addrs: Arc<HashMap<Pid, SocketAddr>>) -> Self {
+        TcpSender { addrs, conns: HashMap::new(), enc: codec::Enc::new() }
+    }
+
+    /// Eager liveness probe on a cached, write-only connection: a peer
+    /// close shows up as readable-EOF long before a write fails, so
+    /// checking here closes (most of) the window in which a frame could
+    /// be buffered into a connection the peer has already torn down.
+    fn conn_is_dead(stream: &TcpStream) -> bool {
+        if stream.set_nonblocking(true).is_err() {
+            return true;
+        }
+        let mut probe = [0u8; 1];
+        let mut r: &TcpStream = stream;
+        let dead = match r.read(&mut probe) {
+            Ok(0) => true,                                                   // EOF: peer closed
+            Ok(_) => false,                                                  // stray inbound byte; still open
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,   // healthy and idle
+            Err(_) => true,
+        };
+        let _ = stream.set_nonblocking(false);
+        dead
+    }
+
+    /// One attempt to put the encoded frame on the wire: (re)connect if
+    /// needed, drop the connection on any failure so the next attempt
+    /// starts fresh.
+    fn try_write(&mut self, addr: SocketAddr, probe: bool) -> bool {
+        if probe {
+            if let Some(c) = self.conns.get(&addr) {
+                if c.last_used.elapsed() >= PROBE_AFTER_IDLE && Self::conn_is_dead(c.w.get_ref()) {
+                    self.conns.remove(&addr);
+                }
+            }
+        }
+        if !self.conns.contains_key(&addr) {
+            let Ok(stream) = TcpStream::connect(addr) else { return false };
+            stream.set_nodelay(true).ok();
+            self.conns.insert(addr, Conn { w: BufWriter::new(stream), last_used: std::time::Instant::now() });
+        }
+        let c = self.conns.get_mut(&addr).expect("connection just ensured");
+        if c.w.write_all(&self.enc.buf).and_then(|()| c.w.flush()).is_ok() {
+            c.last_used = std::time::Instant::now();
+            true
+        } else {
+            self.conns.remove(&addr);
+            false
+        }
+    }
+}
+
+impl TransportTx for TcpSender {
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        let tag = wire.tag();
+        // encode once into the reused buffer, length prefix in-band
+        self.enc.buf.clear();
+        self.enc.u32(0); // length placeholder
+        self.enc.u32(from.0);
+        self.enc.u32(to.0);
+        codec::encode_into(&mut self.enc, &wire);
+        let n = (self.enc.buf.len() - 4) as u32;
+        self.enc.buf[..4].copy_from_slice(&n.to_le_bytes());
+        let Some(&addr) = self.addrs.get(&to) else {
+            log::warn!("tcp: dropping {tag} {from:?}->{to:?}: destination has no address");
+            return;
+        };
+        // reliable-FIFO link repair: re-establish the connection and
+        // retry the send once before declaring the frame lost
+        if self.try_write(addr, true) || self.try_write(addr, false) {
+            return;
+        }
+        log::warn!("tcp: dropping {tag} {from:?}->{to:?} ({addr}) after reconnect retry");
     }
 }
 
@@ -218,9 +338,38 @@ impl Transport for TcpTransport {
 mod tests {
     use super::*;
     use crate::types::{Ballot, GidSet, MsgId, MsgMeta};
+    use std::sync::atomic::{AtomicU16, Ordering};
 
     fn mcast(id: u64) -> Wire {
         Wire::Multicast { meta: MsgMeta::new(MsgId(id), GidSet::single(crate::types::Gid(0)), vec![1, 2, 3]) }
+    }
+
+    /// Per-process unique localhost ports (tests run concurrently).
+    fn next_port() -> u16 {
+        static NEXT: AtomicU16 = AtomicU16::new(0);
+        42000 + (std::process::id() % 400) as u16 * 32 + NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Capture `log::warn!` output so tests can assert frames are never
+    /// *silently* dropped.
+    struct CaptureLog(Mutex<Vec<String>>);
+    impl log::Log for CaptureLog {
+        fn enabled(&self, _: &log::Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &log::Record) {
+            self.0.lock().unwrap().push(format!("{}", record.args()));
+        }
+        fn flush(&self) {}
+    }
+    static CAPTURE: CaptureLog = CaptureLog(Mutex::new(Vec::new()));
+    fn install_capture() -> &'static CaptureLog {
+        static ONCE: std::sync::Once = std::sync::Once::new();
+        ONCE.call_once(|| {
+            let _ = log::set_logger(&CAPTURE);
+            log::set_max_level(log::LevelFilter::Warn);
+        });
+        &CAPTURE
     }
 
     #[test]
@@ -229,12 +378,13 @@ mod tests {
         let mut a = mesh.endpoint(Pid(1));
         let mut b = mesh.endpoint(Pid(2));
         for i in 0..10 {
-            a.send(Pid(2), mcast(i));
+            a.send(Pid(1), Pid(2), mcast(i));
         }
         for i in 0..10 {
             match b.recv_timeout(Duration::from_secs(1)) {
-                Some(Incoming::Wire(from, Wire::Multicast { meta })) => {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
                     assert_eq!(from, Pid(1));
+                    assert_eq!(to, Pid(2));
                     assert_eq!(meta.id, MsgId(i));
                 }
                 other => panic!("unexpected {other:?}"),
@@ -247,50 +397,184 @@ mod tests {
     fn inproc_send_to_unknown_is_dropped() {
         let mesh = InProcMesh::new();
         let mut a = mesh.endpoint(Pid(1));
-        a.send(Pid(99), mcast(1)); // no panic
+        a.send(Pid(1), Pid(99), mcast(1)); // no panic
+    }
+
+    #[test]
+    fn inproc_multi_pid_endpoint_demuxes_by_to() {
+        let mesh = InProcMesh::new();
+        let mut host = mesh.endpoint_hosting(&[Pid(1), Pid(4), Pid(7)]);
+        let mut c = mesh.endpoint(Pid(9));
+        // one endpoint receives for all hosted pids, tagged with `to`
+        c.send(Pid(9), Pid(4), mcast(1));
+        c.send(Pid(9), Pid(7), mcast(2));
+        for expect in [(Pid(4), 1u64), (Pid(7), 2)] {
+            match host.recv_timeout(Duration::from_secs(1)) {
+                Some(Incoming::Wire(Pid(9), to, Wire::Multicast { meta })) => {
+                    assert_eq!(to, expect.0);
+                    assert_eq!(meta.id, MsgId(expect.1));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // the detached sender half works too
+        let mut tx = host.sender();
+        tx.send(Pid(1), Pid(9), mcast(3));
+        match c.recv_timeout(Duration::from_secs(1)) {
+            Some(Incoming::Wire(Pid(1), Pid(9), Wire::Multicast { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]
     fn tcp_roundtrip_and_fifo() {
-        let base = 42000 + (std::process::id() % 1000) as u16;
         let mut addrs = HashMap::new();
-        addrs.insert(Pid(1), format!("127.0.0.1:{}", base).parse().unwrap());
-        addrs.insert(Pid(2), format!("127.0.0.1:{}", base + 1).parse().unwrap());
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
         let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
         let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
         for i in 0..50 {
-            a.send(Pid(2), mcast(i));
+            a.send(Pid(1), Pid(2), mcast(i));
         }
         for i in 0..50 {
             match b.recv_timeout(Duration::from_secs(5)) {
-                Some(Incoming::Wire(from, Wire::Multicast { meta })) => {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
                     assert_eq!(from, Pid(1));
+                    assert_eq!(to, Pid(2));
                     assert_eq!(meta.id, MsgId(i));
                 }
                 other => panic!("unexpected {other:?}"),
             }
         }
         // bidirectional: b replies
-        b.send(Pid(1), Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
+        b.send(Pid(2), Pid(1), Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
         match a.recv_timeout(Duration::from_secs(5)) {
-            Some(Incoming::Wire(Pid(2), Wire::Heartbeat { .. })) => {}
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Heartbeat { .. })) => {}
             other => panic!("unexpected {other:?}"),
         }
     }
 
     #[test]
     fn tcp_carries_batch_frames_intact() {
-        let base = 44000 + (std::process::id() % 1000) as u16;
         let mut addrs = HashMap::new();
-        addrs.insert(Pid(1), format!("127.0.0.1:{}", base + 4).parse().unwrap());
-        addrs.insert(Pid(2), format!("127.0.0.1:{}", base + 5).parse().unwrap());
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
         let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
         let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
         let frame = Wire::Batch((0..5).map(mcast).collect());
-        a.send(Pid(2), frame.clone());
+        a.send(Pid(1), Pid(2), frame.clone());
         match b.recv_timeout(Duration::from_secs(5)) {
-            Some(Incoming::Wire(Pid(1), w)) => assert_eq!(w, frame),
+            Some(Incoming::Wire(Pid(1), Pid(2), w)) => assert_eq!(w, frame),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn tcp_shard_pids_share_one_connection_per_address() {
+        // two shard pids (2, 12) live behind one endpoint address; both
+        // receive through the same listener, demuxed by `to`
+        let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+        let host_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), host_addr);
+        addrs.insert(Pid(12), host_addr);
+        let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut host = TcpTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(1));
+        a.send(Pid(11), Pid(12), mcast(2)); // different source shard, same socket
+        for expect in [(Pid(1), Pid(2), 1u64), (Pid(11), Pid(12), 2)] {
+            match host.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
+                    assert_eq!((from, to, meta.id.0), expect);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    /// Acceptance: frames sent across a dropped-then-reconnected link are
+    /// either delivered in FIFO order or visibly logged as dropped —
+    /// never silently lost.
+    #[test]
+    fn tcp_dropped_link_reconnects_or_warns() {
+        let capture = install_capture();
+        let a_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let b_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), a_addr);
+        addrs.insert(Pid(2), b_addr);
+
+        // raw receiver we can kill: accept one connection, read `n`
+        // frames, then drop the socket mid-link
+        let listener = TcpListener::bind(b_addr).unwrap();
+        let server = std::thread::spawn(move || -> Vec<u64> {
+            let mut got = Vec::new();
+            // first connection: read 3 frames, then hard-close
+            let (s1, _) = listener.accept().unwrap();
+            let mut r1 = BufReader::new(s1);
+            for _ in 0..3 {
+                let bytes = read_frame(&mut r1).unwrap();
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            drop(r1);
+            // the sender must reconnect; collect everything it resends
+            let (s2, _) = listener.accept().unwrap();
+            let mut r2 = BufReader::new(s2);
+            while let Ok(bytes) = read_frame(&mut r2) {
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            got
+        });
+
+        let mut a = TcpTransport::bind(Pid(1), addrs).unwrap();
+        for i in 0..3 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        // let the server read + close, and the FIN reach our socket, so
+        // the next send observes the dead link instead of racing it
+        std::thread::sleep(Duration::from_millis(200));
+        for i in 3..8 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        // close our side so the server's second read loop terminates
+        drop(a);
+        let got = server.join().unwrap();
+
+        // every frame is accounted for: delivered (in FIFO order) or
+        // visibly warned about — never silently lost. (The capture is
+        // process-global; filter to this test's link.)
+        let warned = capture.0.lock().unwrap();
+        let warned_ids: Vec<String> =
+            warned.iter().filter(|w| w.contains("dropping") && w.contains("p1->p2")).cloned().collect();
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "redelivered frames out of FIFO order: {got:?}");
+        assert_eq!(
+            got.len() + warned_ids.len(),
+            8,
+            "silently lost frames: delivered {got:?}, warned {warned_ids:?}"
+        );
+        // the happy path of the probe: everything made it
+        assert!(got.len() >= 3, "first connection frames lost: {got:?}");
+    }
+
+    /// A destination that never accepts is warned about, not ignored.
+    #[test]
+    fn tcp_unreachable_destination_is_warned() {
+        let capture = install_capture();
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        addrs.insert(Pid(7), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        let mut a = TcpTransport::bind(Pid(1), addrs).unwrap();
+        let before = capture.0.lock().unwrap().len();
+        a.send(Pid(1), Pid(7), mcast(99)); // nothing listens on p7's port
+        let warned = capture.0.lock().unwrap();
+        assert!(
+            warned[before..].iter().any(|w| w.contains("dropping") && w.contains("p7")),
+            "no visible drop warning: {:?}",
+            &warned[before..]
+        );
     }
 }

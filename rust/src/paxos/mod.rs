@@ -6,7 +6,7 @@
 //! Scope: the steady-state phase-2 path with a stable, deployment-time
 //! leader (ballot `(1, leader(g))`) — exactly what the paper's baseline
 //! evaluation exercises (the recovery experiment, Fig. 11, concerns only
-//! the white-box protocol; see DESIGN.md §Substitutions). Commands are
+//! the white-box protocol; see EXPERIMENTS.md §Substitutions). Commands are
 //! decided by a quorum of `P2b`s at the leader and disseminated to
 //! followers with `Learn`; every replica applies the log in slot order.
 

@@ -138,22 +138,28 @@ pub const MAX_FRAME_BYTES: usize = 8 << 20;
 /// calls; only multi-wire destinations allocate (the `Vec<Wire>` moved
 /// into the emitted [`Wire::Batch`] frame — one allocation per frame,
 /// not per message).
+///
+/// The destination key `K` is a [`Pid`] in the simulator and the
+/// single-node runtime; the sharded runtime coalesces per *link*
+/// (`(from, to)` pid pair) because one endpoint's flush carries wires
+/// originating at several local shard nodes.
 #[derive(Default)]
-pub struct Coalescer {
-    counts: FxHashMap<Pid, u32>,
-    frames: FxHashMap<Pid, Vec<Wire>>,
+pub struct Coalescer<K = Pid> {
+    counts: FxHashMap<K, u32>,
+    frames: FxHashMap<K, Vec<Wire>>,
     /// emission order: destinations at first occurrence; `Some(wire)`
     /// carries single-wire frames inline (no per-wire Vec allocation)
-    order: Vec<(Pid, Option<Wire>)>,
+    order: Vec<(K, Option<Wire>)>,
 }
 
-impl Coalescer {
+impl<K: std::hash::Hash + Eq + Copy> Coalescer<K> {
     pub fn new() -> Self {
-        Self::default()
+        // no `K: Default` bound needed: the maps' Default has none
+        Coalescer { counts: FxHashMap::default(), frames: FxHashMap::default(), order: Vec::new() }
     }
 
     /// Number of frames `drain` would emit for `sends`.
-    pub fn frame_count(&mut self, sends: &[(Pid, Wire)], coalesce: bool) -> usize {
+    pub fn frame_count(&mut self, sends: &[(K, Wire)], coalesce: bool) -> usize {
         if !coalesce {
             return sends.len();
         }
@@ -169,7 +175,7 @@ impl Coalescer {
     /// wrapped in [`Wire::Batch`] preserving their FIFO order; single-wire
     /// destinations receive the wire unwrapped. With `coalesce = false`
     /// every send is emitted as its own frame in the original order.
-    pub fn drain<F: FnMut(Pid, Wire)>(&mut self, sends: &mut Vec<(Pid, Wire)>, coalesce: bool, mut emit: F) {
+    pub fn drain<F: FnMut(K, Wire)>(&mut self, sends: &mut Vec<(K, Wire)>, coalesce: bool, mut emit: F) {
         if !coalesce || sends.len() <= 1 {
             for (to, wire) in sends.drain(..) {
                 emit(to, wire);
@@ -205,7 +211,7 @@ impl Coalescer {
 
 /// Emit `batch` as one `Wire::Batch` frame, splitting into consecutive
 /// frames whenever the size estimate would exceed [`MAX_FRAME_BYTES`].
-fn emit_batch_bounded<F: FnMut(Pid, Wire)>(to: Pid, batch: Vec<Wire>, emit: &mut F) {
+fn emit_batch_bounded<K: Copy, F: FnMut(K, Wire)>(to: K, batch: Vec<Wire>, emit: &mut F) {
     let total: usize = batch.iter().map(|w| w.size()).sum();
     if total <= MAX_FRAME_BYTES {
         emit(to, Wire::Batch(batch));

@@ -136,7 +136,7 @@ pub struct WbNode {
     pub(crate) cur_leader: Vec<Pid>,
     pub(crate) max_delivered_gts: Ts,
 
-    // --- derived indices (performance; see DESIGN.md §Perf) ---
+    // --- derived indices (performance; see EXPERIMENTS.md §Perf) ---
     /// (lts, m) of messages in PROPOSED/ACCEPTED — the delivery frontier
     pub(crate) pending: BTreeSet<(Ts, MsgId)>,
     /// (gts, m) committed and not yet delivered
@@ -148,7 +148,7 @@ pub struct WbNode {
     pub(crate) nl_acks: HashMap<Pid, recovery::NlAck>,
     pub(crate) ns_acks: HashSet<Pid>,
 
-    // --- batched commit engine (DESIGN.md L2/L1 integration) ---
+    // --- batched commit engine (L2/L1 integration; see crate::runtime::engine) ---
     pub(crate) backend: Box<dyn crate::runtime::CommitBackend>,
     pub(crate) ready: Vec<crate::runtime::BatchReq>,
 

@@ -13,7 +13,7 @@ pub use delay::{ConstDelay, DelayModel, LanDelay, WanDelay, MS, US};
 pub use trace::{DeliveryEv, Trace};
 
 use crate::protocols::{Coalescer, Node, Outbox, TimerKind};
-use crate::types::{Pid, Topology, Wire};
+use crate::types::{Pid, ShardMap, Topology, Wire};
 use crate::util::{FxHashMap, Rng};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -141,6 +141,16 @@ pub struct World {
 
 impl World {
     pub fn new(topo: Topology, nodes: Vec<Box<dyn Node>>, cfg: SimConfig) -> Self {
+        Self::with_trace(Trace::new(topo, cfg.record_full), nodes, cfg)
+    }
+
+    /// A sharded deployment: `nodes` holds every shard's members plus the
+    /// clients; the trace attributes deliveries per shard via `map`.
+    pub fn new_sharded(map: ShardMap, nodes: Vec<Box<dyn Node>>, cfg: SimConfig) -> Self {
+        Self::with_trace(Trace::new_sharded(map, cfg.record_full), nodes, cfg)
+    }
+
+    fn with_trace(trace: Trace, nodes: Vec<Box<dyn Node>>, cfg: SimConfig) -> Self {
         let pid_index = nodes.iter().enumerate().map(|(i, n)| (n.pid(), i)).collect();
         let n = nodes.len();
         World {
@@ -158,7 +168,7 @@ impl World {
             drain_scheduled: vec![false; n],
             fifo_last: Default::default(),
             arrivals: Default::default(),
-            trace: Trace::new(topo, cfg.record_full),
+            trace,
             started: false,
             outbox: Outbox::new(),
             coalescer: Coalescer::new(),
@@ -273,6 +283,11 @@ impl World {
             EventKind::Crash => {
                 self.crashed[idx] = true;
                 self.backlog[idx].clear();
+                // a crashed pid's links can never be consulted again:
+                // prune its FIFO watermarks and arrival count, or long
+                // crash-injection runs grow these maps without bound
+                self.fifo_last.retain(|&(a, b), _| a != ev.to && b != ev.to);
+                self.arrivals.remove(&ev.to);
                 self.trace.on_crash(ev.time, ev.to);
                 self.nodes[idx].on_crash(ev.time);
             }
@@ -526,6 +541,27 @@ mod tests {
         assert!(echo.got.is_empty());
         assert!(w.is_crashed(Pid(0)));
         assert_eq!(w.trace.crashes, vec![(500, Pid(0))]);
+    }
+
+    #[test]
+    fn crash_prunes_link_state() {
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Kick { pid: Pid(1), to: Pid(0), n: 3 }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let mut w = World::new(topo, nodes, SimConfig::theory(1000));
+        w.run_to_quiescence(1000);
+        assert!(w.arrivals.contains_key(&Pid(0)));
+        assert!(w.fifo_last.keys().any(|&(a, b)| a == Pid(0) || b == Pid(0)));
+        let t = w.now() + 10;
+        w.crash_at(Pid(0), t);
+        w.run_to_quiescence(1000);
+        // the crashed pid's link watermarks and arrival count are gone
+        assert!(w.fifo_last.keys().all(|&(a, b)| a != Pid(0) && b != Pid(0)));
+        assert!(!w.arrivals.contains_key(&Pid(0)));
+        // the surviving pid's state is untouched
+        assert!(w.arrivals.contains_key(&Pid(1)));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Run observability: online latency/throughput accounting plus an
 //! optional full event trace for correctness checking.
 
-use crate::types::{GidSet, MsgId, Pid, Topology, Ts};
+use crate::types::{Gid, GidSet, MsgId, Pid, ShardMap, Topology, Ts};
 use std::collections::HashMap;
 
 /// A delivery observed at a process.
@@ -23,8 +23,14 @@ struct Inflight {
 }
 
 /// Aggregated + optional full-resolution record of a run.
+///
+/// For sharded runs ([`Trace::new_sharded`]) deliveries are attributed
+/// to their *local* (per-shard) group, so latency/completion accounting
+/// works across all shards at once; correctness checking happens per
+/// shard on the projections returned by [`Trace::shard_view`].
 pub struct Trace {
     topo: Topology,
+    map: ShardMap,
     /// Record every delivery event (needed by the correctness checkers;
     /// disable for long throughput runs).
     pub record_full: bool,
@@ -43,8 +49,19 @@ pub struct Trace {
 
 impl Trace {
     pub fn new(topo: Topology, record_full: bool) -> Self {
+        let map = ShardMap::solo(&topo);
+        Self::with_map(topo, map, record_full)
+    }
+
+    /// Trace for a sharded deployment.
+    pub fn new_sharded(map: ShardMap, record_full: bool) -> Self {
+        Self::with_map(map.topo(0), map, record_full)
+    }
+
+    fn with_map(topo: Topology, map: ShardMap, record_full: bool) -> Self {
         Trace {
             topo,
+            map,
             record_full,
             multicasts: HashMap::new(),
             deliveries: Vec::new(),
@@ -67,13 +84,22 @@ impl Trace {
         self.inflight.insert(m, Inflight { sent_at: time, dest, first_delivered: GidSet::EMPTY });
     }
 
+    /// The (per-shard local) group of a member pid, across all shards.
+    fn member_group(&self, pid: Pid) -> Option<Gid> {
+        if self.map.shards > 1 {
+            self.map.local_group_of(pid)
+        } else {
+            self.topo.group_of(pid)
+        }
+    }
+
     /// Record a local delivery at `pid`.
     pub fn on_deliver(&mut self, time: u64, pid: Pid, m: MsgId, gts: Ts) {
         self.delivered_count += 1;
         if self.record_full {
             self.deliveries.push(DeliveryEv { time, pid, m, gts });
         }
-        let Some(g) = self.topo.group_of(pid) else { return };
+        let Some(g) = self.member_group(pid) else { return };
         if let Some(fl) = self.inflight.get_mut(&m) {
             if !fl.first_delivered.contains(g) {
                 fl.first_delivered.insert(g);
@@ -133,6 +159,40 @@ impl Trace {
     pub fn topo(&self) -> &Topology {
         &self.topo
     }
+
+    /// Number of shards this trace spans (1 for plain runs).
+    pub fn shards(&self) -> usize {
+        self.map.shards
+    }
+
+    /// Project the trace onto shard `s`: only that shard's multicasts,
+    /// deliveries and crashes, against the shard's own topology. The
+    /// per-shard projection is what the correctness checkers
+    /// ([`crate::invariants`]) run on — shards are independent ordering
+    /// domains, so e.g. gts uniqueness only holds within one. Requires
+    /// `record_full`. Aggregate counters (`sends`, `send_bytes`) are not
+    /// attributable per shard and stay zero in the projection.
+    pub fn shard_view(&self, s: usize) -> Trace {
+        assert!(self.record_full, "shard_view needs record_full = true");
+        assert!(s < self.map.shards, "shard {s} out of range");
+        let mut t = Trace::new(self.map.topo(s), true);
+        for (&m, &(time, dest)) in &self.multicasts {
+            if self.map.client_shard(Pid(m.client())) == s {
+                t.on_multicast(time, m, dest);
+            }
+        }
+        for d in &self.deliveries {
+            if self.map.shard_of(d.pid) == Some(s) {
+                t.on_deliver(d.time, d.pid, d.m, d.gts);
+            }
+        }
+        for &(time, pid) in &self.crashes {
+            if self.map.shard_of(pid) == Some(s) {
+                t.on_crash(time, pid);
+            }
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +229,33 @@ mod tests {
         tr.on_multicast(0, m, GidSet::single(Gid(0)));
         tr.on_deliver(10, Pid(99), m, Ts::BOT); // client pid: not a member
         assert!(tr.latencies.is_empty());
+    }
+
+    #[test]
+    fn sharded_trace_attribution_and_projection() {
+        let map = ShardMap::new(2, 1, 2); // 2 groups x 3 members x 2 shards; clients from 12
+        let mut tr = Trace::new_sharded(map, true);
+        let m0 = MsgId::new(12, 1); // shard-0 client
+        let m1 = MsgId::new(13, 1); // shard-1 client
+        tr.on_multicast(0, m0, GidSet::from_iter([Gid(0), Gid(1)]));
+        tr.on_multicast(0, m1, GidSet::single(Gid(0)));
+        tr.on_deliver(100, Pid(3), m0, Ts::new(1, Gid(1))); // shard 0, local g1
+        tr.on_deliver(150, Pid(0), m0, Ts::new(1, Gid(1))); // shard 0, local g0
+        tr.on_deliver(120, Pid(6), m1, Ts::new(1, Gid(0))); // shard 1, local g0
+        // local-group attribution: both messages complete
+        assert_eq!(tr.latencies, vec![100, 150, 120]);
+        assert_eq!(tr.completions, vec![150, 120]);
+        assert_eq!(tr.incomplete(), 0);
+
+        // per-shard projections split the record cleanly
+        let v0 = tr.shard_view(0);
+        assert_eq!(v0.multicasts.len(), 1);
+        assert_eq!(v0.deliveries.len(), 2);
+        assert_eq!(v0.completions, vec![150]);
+        let v1 = tr.shard_view(1);
+        assert_eq!(v1.deliveries.len(), 1);
+        assert_eq!(v1.completions, vec![120]);
+        assert_eq!(v1.topo().group_of(Pid(6)), Some(Gid(0)));
     }
 
     #[test]

@@ -227,12 +227,19 @@ pub enum Status {
 
 /// Static deployment topology: disjoint groups of `2f + 1` processes each.
 /// Clients are processes outside all groups.
+///
+/// A topology may be *based*: its member pids start at `base` instead of
+/// 0. Shard topologies (see [`ShardMap`]) are based so that `S`
+/// independent protocol instances can coexist in one pid space.
 #[derive(Clone, Debug)]
 pub struct Topology {
     /// Members of each group; `groups[g][0]` is the initial leader.
     pub groups: Vec<Vec<Pid>>,
     /// Fault threshold per group (`|group| = 2f + 1`).
     pub f: usize,
+    /// First member pid (0 for plain topologies; shard `s` of a
+    /// [`ShardMap`] starts at `s * members_per_shard`).
+    pub base: u32,
 }
 
 impl Topology {
@@ -240,12 +247,17 @@ impl Topology {
     /// Pids `0 .. k*(2f+1)` are group members (group-major); clients get
     /// pids from [`Topology::first_client_pid`] upward.
     pub fn new(k: usize, f: usize) -> Self {
+        Self::with_base(k, f, 0)
+    }
+
+    /// Build a topology whose member pids start at `base` (group-major).
+    pub fn with_base(k: usize, f: usize, base: u32) -> Self {
         assert!(k >= 1 && k <= 64);
         let gsize = 2 * f + 1;
         let groups = (0..k)
-            .map(|g| (0..gsize).map(|i| Pid((g * gsize + i) as u32)).collect())
+            .map(|g| (0..gsize).map(|i| Pid(base + (g * gsize + i) as u32)).collect())
             .collect();
-        Topology { groups, f }
+        Topology { groups, f, base }
     }
 
     pub fn group_size(&self) -> usize {
@@ -262,15 +274,16 @@ impl Topology {
     pub fn num_members(&self) -> usize {
         self.groups.len() * self.group_size()
     }
-    /// First pid usable for clients.
+    /// First pid usable for clients. For sharded deployments use
+    /// [`ShardMap::first_client_pid`], which accounts for every shard.
     pub fn first_client_pid(&self) -> Pid {
-        Pid(self.num_members() as u32)
+        Pid(self.base + self.num_members() as u32)
     }
     /// Group of a member pid, if any.
     pub fn group_of(&self, p: Pid) -> Option<Gid> {
         let n = self.num_members() as u32;
-        if p.0 < n {
-            Some(Gid(p.0 / self.group_size() as u32))
+        if p.0 >= self.base && p.0 < self.base + n {
+            Some(Gid((p.0 - self.base) / self.group_size() as u32))
         } else {
             None
         }
@@ -288,6 +301,103 @@ impl Topology {
     /// All group ids.
     pub fn gids(&self) -> impl Iterator<Item = Gid> + '_ {
         (0..self.groups.len() as u32).map(Gid)
+    }
+}
+
+/// Shard map: one deployment hosting `shards` independent protocol
+/// instances ("shards"), each a full [`Topology`] of `groups` groups with
+/// `2f + 1` members. Every *physical endpoint* (machine / transport
+/// endpoint) hosts one protocol node per shard — shard `s`'s counterpart
+/// of the endpoint's shard-0 pid — so a group leader's work spreads over
+/// `shards` cores behind a single endpoint.
+///
+/// Pid layout: shard `s` owns member pids
+/// `[s * members_per_shard, (s + 1) * members_per_shard)`, group-major
+/// within the shard. Clients take pids from
+/// [`ShardMap::first_client_pid`] upward and are partitioned round-robin
+/// over shards ([`ShardMap::client_shard`]). Messages never cross shards:
+/// each shard orders its own clients' multicasts independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    pub groups: usize,
+    pub f: usize,
+    pub shards: usize,
+}
+
+impl ShardMap {
+    pub fn new(groups: usize, f: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "ShardMap needs at least one shard");
+        assert!(groups >= 1 && groups <= 64);
+        ShardMap { groups, f, shards }
+    }
+
+    /// The single-shard map equivalent to a plain topology. (For a
+    /// *based* topology the map's pid arithmetic does not apply; callers
+    /// holding one route pid lookups through the topology itself.)
+    pub fn solo(topo: &Topology) -> Self {
+        ShardMap { groups: topo.num_groups(), f: topo.f, shards: 1 }
+    }
+
+    pub fn group_size(&self) -> usize {
+        2 * self.f + 1
+    }
+    /// Member pids per shard (= pid stride between a pid's shard
+    /// counterparts).
+    pub fn members_per_shard(&self) -> usize {
+        self.groups * self.group_size()
+    }
+    /// Total member pids across all shards.
+    pub fn num_members(&self) -> usize {
+        self.members_per_shard() * self.shards
+    }
+    /// First pid usable for clients (above every shard's members).
+    pub fn first_client_pid(&self) -> Pid {
+        Pid(self.num_members() as u32)
+    }
+
+    /// The topology of shard `s` (member pids offset by `s` strides).
+    pub fn topo(&self, s: usize) -> Topology {
+        assert!(s < self.shards, "shard {s} out of range");
+        Topology::with_base(self.groups, self.f, (s * self.members_per_shard()) as u32)
+    }
+
+    /// Shard owning member pid `p` (None for clients / out-of-range pids).
+    pub fn shard_of(&self, p: Pid) -> Option<usize> {
+        if (p.0 as usize) < self.num_members() {
+            Some(p.0 as usize / self.members_per_shard())
+        } else {
+            None
+        }
+    }
+
+    /// Per-shard (local) group of member pid `p`.
+    pub fn local_group_of(&self, p: Pid) -> Option<Gid> {
+        self.shard_of(p)
+            .map(|_| Gid(((p.0 as usize % self.members_per_shard()) / self.group_size()) as u32))
+    }
+
+    /// Shard serving client pid `c` (clients partitioned round-robin).
+    pub fn client_shard(&self, c: Pid) -> usize {
+        debug_assert!(c.0 as usize >= self.num_members(), "{c:?} is a member pid");
+        (c.0 as usize - self.num_members()) % self.shards
+    }
+
+    /// The physical endpoint hosting member pid `p`, identified by the
+    /// pid's shard-0 counterpart.
+    pub fn endpoint_of(&self, p: Pid) -> Option<Pid> {
+        self.shard_of(p).map(|s| Pid(p.0 - (s * self.members_per_shard()) as u32))
+    }
+
+    /// All member pids hosted by endpoint `e` (a shard-0 member pid):
+    /// `e`'s counterpart in every shard, shard-major.
+    pub fn hosted_by(&self, e: Pid) -> Vec<Pid> {
+        assert!((e.0 as usize) < self.members_per_shard(), "{e:?} is not an endpoint (shard-0) pid");
+        (0..self.shards).map(|s| Pid(e.0 + (s * self.members_per_shard()) as u32)).collect()
+    }
+
+    /// All physical member endpoints (the shard-0 member pids).
+    pub fn endpoints(&self) -> impl Iterator<Item = Pid> {
+        (0..self.members_per_shard() as u32).map(Pid)
     }
 }
 
@@ -363,6 +473,38 @@ mod tests {
         assert_eq!(t.group_of(Pid(9)), None);
         assert_eq!(t.initial_leader(Gid(2)), Pid(6));
         assert_eq!(t.first_client_pid(), Pid(9));
+    }
+
+    #[test]
+    fn shard_map_layout() {
+        let map = ShardMap::new(2, 1, 4); // 2 groups x 3 members x 4 shards
+        assert_eq!(map.members_per_shard(), 6);
+        assert_eq!(map.num_members(), 24);
+        assert_eq!(map.first_client_pid(), Pid(24));
+
+        // shard 2's topology is offset by two strides and self-consistent
+        let t2 = map.topo(2);
+        assert_eq!(t2.base, 12);
+        assert_eq!(t2.members(Gid(1)), &[Pid(15), Pid(16), Pid(17)]);
+        assert_eq!(t2.initial_leader(Gid(0)), Pid(12));
+        assert_eq!(t2.group_of(Pid(15)), Some(Gid(1)));
+        assert_eq!(t2.group_of(Pid(11)), None); // shard 1's pid
+        assert_eq!(t2.group_of(Pid(24)), None); // client
+
+        // pid -> (shard, local group, endpoint)
+        assert_eq!(map.shard_of(Pid(15)), Some(2));
+        assert_eq!(map.local_group_of(Pid(15)), Some(Gid(1)));
+        assert_eq!(map.endpoint_of(Pid(15)), Some(Pid(3)));
+        assert_eq!(map.shard_of(Pid(24)), None);
+
+        // endpoint 3 hosts its counterpart in every shard
+        assert_eq!(map.hosted_by(Pid(3)), vec![Pid(3), Pid(9), Pid(15), Pid(21)]);
+        assert_eq!(map.endpoints().count(), 6);
+
+        // clients partition round-robin
+        assert_eq!(map.client_shard(Pid(24)), 0);
+        assert_eq!(map.client_shard(Pid(27)), 3);
+        assert_eq!(map.client_shard(Pid(28)), 0);
     }
 
     #[test]

@@ -20,9 +20,10 @@ impl MsgMeta {
     pub fn new(id: MsgId, dest: GidSet, payload: Vec<u8>) -> Self {
         MsgMeta { id, dest, payload: payload.into() }
     }
-    /// Wire size estimate used by the simulator's cost model.
+    /// Exact encoded size: id (8) + dest mask (8) + length-prefixed
+    /// payload (4 + len). Also the simulator cost model's byte count.
     pub fn size(&self) -> usize {
-        16 + self.payload.len()
+        20 + self.payload.len()
     }
 }
 
@@ -128,46 +129,53 @@ pub enum Wire {
 }
 
 impl Wire {
-    /// Wire size estimate (bytes) for the simulator's bandwidth/CPU cost
-    /// model; roughly matches what the binary codec produces.
+    /// Wire size (bytes): exactly what [`crate::codec::encode`] produces,
+    /// variant by variant, and therefore a safe **upper bound** for the
+    /// [`MAX_FRAME_BYTES`](crate::protocols::outbox::MAX_FRAME_BYTES)
+    /// frame-splitting logic (the TCP receiver rejects frames over
+    /// 64 MiB). Also the simulator's bandwidth/CPU byte count. A property
+    /// test (`tests/properties.rs`) holds this and the codec together.
     pub fn size(&self) -> usize {
+        const TS: usize = 12; // u64 time + u32 gid
+        const BAL: usize = 8; // u32 round + u32 pid
+        fn cmd_size(c: &RsmCmd) -> usize {
+            1 + match c {
+                RsmCmd::AssignLts { meta, .. } => meta.size() + TS,
+                RsmCmd::Commit { .. } => 8 + TS,
+            }
+        }
+        fn state_size(s: &MsgState) -> usize {
+            s.meta.size() + 1 + 2 * TS
+        }
         match self {
             Wire::Multicast { meta } => 1 + meta.size(),
-            Wire::Delivered { .. } => 1 + 8 + 4 + 10,
-            Wire::Propose { .. } => 1 + 8 + 4 + 10,
-            Wire::Accept { meta, .. } => 1 + meta.size() + 4 + 8 + 10,
-            Wire::AcceptAck { bals, .. } => 1 + 8 + 4 + bals.len() * 12,
-            Wire::Deliver { .. } => 1 + 8 + 8 + 20,
-            Wire::NewLeader { .. } => 1 + 8,
-            Wire::NewLeaderAck { state, .. } | Wire::NewState { state, .. } => {
-                1 + 24 + state.iter().map(|s| s.meta.size() + 21).sum::<usize>()
+            Wire::Delivered { .. } => 1 + 8 + 4 + TS,
+            Wire::Propose { .. } => 1 + 8 + 4 + TS,
+            Wire::Accept { meta, .. } => 1 + meta.size() + 4 + BAL + TS,
+            Wire::AcceptAck { bals, .. } => 1 + 8 + 4 + 4 + bals.len() * (4 + BAL),
+            Wire::Deliver { .. } => 1 + 8 + BAL + 2 * TS,
+            Wire::NewLeader { .. } => 1 + BAL,
+            Wire::NewLeaderAck { state, .. } => {
+                1 + 2 * BAL + 8 + 4 + state.iter().map(state_size).sum::<usize>()
             }
-            Wire::NewStateAck { .. } => 1 + 8,
-            Wire::Confirm { .. } => 1 + 12,
+            Wire::NewState { state, .. } => 1 + BAL + 8 + 4 + state.iter().map(state_size).sum::<usize>(),
+            Wire::NewStateAck { .. } => 1 + BAL,
+            Wire::Confirm { .. } => 1 + 8 + 4,
             Wire::Paxos { msg, .. } => {
                 1 + 4
                     + match msg {
-                        PaxosMsg::P1a { .. } => 8,
-                        PaxosMsg::P1b { log, .. } => 8 + log.len() * 48,
-                        PaxosMsg::P2a { cmd, .. } => {
-                            16 + match cmd {
-                                RsmCmd::AssignLts { meta, .. } => meta.size() + 10,
-                                RsmCmd::Commit { .. } => 18,
-                            }
+                        PaxosMsg::P1a { .. } => 1 + BAL,
+                        PaxosMsg::P1b { log, .. } => {
+                            1 + BAL + 4 + log.iter().map(|(_, _, c)| 8 + BAL + cmd_size(c)).sum::<usize>()
                         }
-                        PaxosMsg::P2b { .. } => 16,
-                        PaxosMsg::Learn { cmd, .. } => {
-                            8 + match cmd {
-                                RsmCmd::AssignLts { meta, .. } => meta.size() + 10,
-                                RsmCmd::Commit { .. } => 18,
-                            }
-                        }
+                        PaxosMsg::P2a { cmd, .. } => 1 + BAL + 8 + cmd_size(cmd),
+                        PaxosMsg::P2b { .. } => 1 + BAL + 8,
+                        PaxosMsg::Learn { cmd, .. } => 1 + 8 + cmd_size(cmd),
                     }
             }
-            Wire::Heartbeat { .. } => 1 + 8,
-            Wire::GcReport { .. } => 1 + 10,
-            // tag + u32 count + inner encodings (matches the codec's
-            // framing overhead exactly; see codec tests)
+            Wire::Heartbeat { .. } => 1 + BAL,
+            Wire::GcReport { .. } => 1 + TS,
+            // tag + u32 count + inner encodings
             Wire::Batch(inner) => 1 + 4 + inner.iter().map(|w| w.size()).sum::<usize>(),
         }
     }

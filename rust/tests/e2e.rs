@@ -6,11 +6,11 @@ use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use wbam::client::{Client, ClientCfg};
-use wbam::coordinator::{spawn, Cluster, DeliverFn, NodeRuntime};
+use wbam::coordinator::{spawn, spawn_sharded, Cluster, DeliverFn, NodeRuntime};
 use wbam::net::{InProcMesh, TcpTransport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
-use wbam::types::{MsgId, Pid, Topology, Ts};
+use wbam::types::{MsgId, Pid, ShardMap, Topology, Ts};
 
 fn wait_for<F: Fn() -> bool>(pred: F, secs: u64, what: &str) {
     let deadline = Instant::now() + Duration::from_secs(secs);
@@ -138,6 +138,70 @@ fn tcp_cluster_end_to_end() {
         let _ = h.join().unwrap();
     }
     assert_eq!(completed, 20, "TCP cluster did not complete all requests");
+}
+
+/// Sharded runtime over real TCP sockets: 6 member endpoints each
+/// hosting 2 shard nodes (2 groups x 2 shards), shard pids aliased to
+/// their endpoint's address, clients partitioned across shards.
+#[test]
+fn tcp_sharded_cluster_end_to_end() {
+    let map = ShardMap::new(2, 1, 2);
+    let base = 52000 + (std::process::id() % 400) as u16 * 16;
+    let mut addrs = std::collections::HashMap::new();
+    for e in 0..6u32 {
+        let addr = format!("127.0.0.1:{}", base + e as u16).parse().unwrap();
+        for p in map.hosted_by(Pid(e)) {
+            addrs.insert(p, addr);
+        }
+    }
+    let n_clients = 2u32;
+    for c in 0..n_clients {
+        let pid = Pid(map.first_client_pid().0 + c);
+        addrs.insert(pid, format!("127.0.0.1:{}", base + 8 + c as u16).parse().unwrap());
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
+    let mut handles = Vec::new();
+    for e in 0..6u32 {
+        let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+        for p in map.hosted_by(Pid(e)) {
+            let s = map.shard_of(p).expect("hosted pid is a member");
+            nodes.push(Box::new(WbNode::new(p, map.topo(s), wb)));
+        }
+        let t = TcpTransport::bind(Pid(e), addrs.clone()).expect("bind endpoint");
+        let d = Arc::clone(&delivered);
+        let cb: DeliverFn = Box::new(move |_pid, _m, _gts, _t| {
+            d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        handles.push(spawn_sharded(nodes, t, Arc::clone(&stop), Some(cb)));
+    }
+    std::thread::sleep(Duration::from_millis(100)); // listeners up
+    let mut client_handles = Vec::new();
+    for c in 0..n_clients {
+        let pid = Pid(map.first_client_pid().0 + c);
+        let cfg = ClientCfg { dest_groups: 2, max_requests: Some(10), resend_after: 500_000_000, ..Default::default() };
+        let node: Box<dyn Node> = Box::new(Client::new(pid, map.topo(map.client_shard(pid)), cfg, 3 + c as u64));
+        let t = TcpTransport::bind(pid, addrs.clone()).expect("bind client");
+        let stop2 = Arc::clone(&stop);
+        client_handles.push(std::thread::spawn(move || NodeRuntime::new(node, t).run(stop2)));
+    }
+    // 2 clients x 10 requests x 2 groups x 3 replicas = 120 deliveries
+    wait_for(|| delivered.load(std::sync::atomic::Ordering::Relaxed) >= 120, 60, "120 sharded TCP deliveries");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut completed = 0;
+    for h in client_handles {
+        let node = h.join().unwrap();
+        let any: &dyn Node = &*node;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            completed += c.completed.len();
+        }
+    }
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+    assert_eq!(completed, 20, "sharded TCP cluster did not complete all requests");
 }
 
 /// InProc mesh disconnect behaves like a crash: the cluster keeps making
