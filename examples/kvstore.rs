@@ -20,7 +20,7 @@ use wbam::invariants;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox, TimerKind};
 use wbam::sim::{SimConfig, World, MS};
-use wbam::types::{Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Wire};
+use wbam::types::{FlushPolicy, Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Wire};
 use wbam::util::Rng;
 
 const SHARDS: usize = 2;
@@ -201,7 +201,15 @@ fn main() {
             done: 0,
         }));
     }
-    let mut world = World::new_sharded(map, nodes, SimConfig::theory(MS));
+    // adaptive per-link coalescing: hold a link's wires up to 100 µs for
+    // companions (no early quiet flush). Transfers tolerate the batching
+    // window with zero change to atomicity or replica agreement — the
+    // invariant checks below are the proof.
+    let sim = SimConfig {
+        flush: FlushPolicy { max_delay_us: 100, max_bytes: 1 << 20, flush_on_quiet: false },
+        ..SimConfig::theory(MS)
+    };
+    let mut world = World::new_sharded(map, nodes, sim);
     world.run_to_quiescence(10_000_000);
     invariants::assert_correct_sharded(&world.trace);
     for c in 0..n_clients {

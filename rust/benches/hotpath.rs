@@ -1,17 +1,21 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): the WbCast leader
 //! commit path driven through the reusable [`Outbox`] (zero per-event
-//! effect allocations), the simulator event loop, and the headline
-//! ablation of this refactor — destination-coalesced wire batching
-//! (`Wire::Batch`) on vs off at saturation.
+//! effect allocations), the simulator event loop, the headline wire
+//! batching / sharding ablations at saturation, the inline-vs-threaded
+//! 1-shard runtime latency comparison, and the adaptive flush-policy
+//! ablation.
+//!
+//! Set `WBAM_SMOKE=1` for a seconds-long bit-rot check (tiny iteration
+//! counts; the printed numbers are meaningless) — CI runs this mode.
 
 use std::time::Instant;
 use wbam::client::{Client, ClientCfg};
-use wbam::coordinator::Cluster;
+use wbam::coordinator::{one_shard_round_trip_ns, Cluster};
 use wbam::harness::{run, Net, Proto, RunCfg};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox};
 use wbam::sim::MS;
-use wbam::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Ts, Wire};
+use wbam::types::{Ballot, FlushPolicy, Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Ts, Wire};
 
 /// Drive one leader through the full ACCEPT/ACK/commit cycle in memory
 /// (no network, no sim): the pure protocol-code cost per multicast. The
@@ -55,13 +59,24 @@ fn leader_commit_path(n: u32) -> f64 {
 fn main() {
     println!("== L3 hot path ==\n");
 
-    let per_commit = leader_commit_path(50_000);
+    // WBAM_SMOKE=1: tiny iteration counts so CI can catch bench bit-rot
+    // in seconds (the numbers are not meaningful in this mode)
+    let smoke = std::env::var("WBAM_SMOKE").is_ok();
+    if smoke {
+        println!("(smoke mode: tiny iteration counts, numbers are meaningless)\n");
+    }
+    let commit_iters = if smoke { 2_000 } else { 50_000 };
+    let dur = if smoke { 30 * MS } else { 300 * MS };
+    let secs = if smoke { 1 } else { 3 };
+    let trips = if smoke { 300 } else { 5_000 };
+
+    let per_commit = leader_commit_path(commit_iters);
     println!("leader commit path (in-memory, 2 groups, reused outbox): {per_commit:.0} ns/multicast");
 
     // simulator event throughput under load
     let t0 = Instant::now();
     let mut cfg = RunCfg::new(Proto::WbCast, 10, 800, 4, Net::Lan);
-    cfg.duration = 300 * MS;
+    cfg.duration = dur;
     let r = run(&cfg);
     let wall = t0.elapsed().as_secs_f64();
     let events = r.completed as f64 * r.msgs_per_multicast;
@@ -82,7 +97,7 @@ fn main() {
     let mut thru = [0f64; 2];
     for (i, &co) in [false, true].iter().enumerate() {
         let mut cfg = RunCfg::new(Proto::WbCast, 10, 800, 4, Net::Lan);
-        cfg.duration = 300 * MS;
+        cfg.duration = dur;
         cfg.coalesce = co;
         cfg.wb = WbConfig { batch_threshold: 16, batch_flush_after: 200_000, ..WbConfig::default() };
         let r = run(&cfg);
@@ -95,6 +110,32 @@ fn main() {
         if gain >= 20.0 { "(≥20% target met)" } else { "(below 20% target)" }
     );
 
+    // adaptive per-link coalescing at the same saturated operating
+    // point: holding a link for up to 200 µs under load folds wires from
+    // *several* events into one frame (flush-per-cycle only merges one
+    // event's fan-out), trading bounded extra latency for a higher CPU
+    // knee. See EXPERIMENTS.md §Coalescing knees.
+    println!("\nadaptive flush-policy ablation (sim, 10 groups, 800 clients, dest=4):");
+    let policies: [(&str, FlushPolicy); 3] = [
+        ("immediate        ", FlushPolicy::immediate()),
+        ("adaptive 200us   ", FlushPolicy { max_delay_us: 200, max_bytes: 1 << 20, flush_on_quiet: true }),
+        ("adaptive no-quiet", FlushPolicy { max_delay_us: 200, max_bytes: 1 << 20, flush_on_quiet: false }),
+    ];
+    let mut athru = [0f64; 3];
+    for (i, (name, p)) in policies.iter().enumerate() {
+        let mut cfg = RunCfg::new(Proto::WbCast, 10, 800, 4, Net::Lan);
+        cfg.duration = dur;
+        cfg.flush = *p;
+        let r = run(&cfg);
+        athru[i] = r.throughput;
+        println!("  {name} {}", r.row());
+    }
+    println!(
+        "  => adaptive (quiet) vs immediate at saturation: {:+.1}%; strict window: {:+.1}%",
+        (athru[1] / athru[0] - 1.0) * 100.0,
+        (athru[2] / athru[0] - 1.0) * 100.0
+    );
+
     // leader sharding: S independent protocol instances behind each
     // endpoint, clients partitioned by client id. Every shard is its own
     // single-threaded server in the sim's CPU model, so the saturation
@@ -104,7 +145,7 @@ fn main() {
     let mut sharded = [0f64; 2];
     for (i, &s) in [1usize, 4].iter().enumerate() {
         let mut cfg = RunCfg::new(Proto::WbCast, 2, 256, 2, Net::Lan);
-        cfg.duration = 300 * MS;
+        cfg.duration = dur;
         cfg.shards = s;
         let r = run(&cfg);
         sharded[i] = r.throughput;
@@ -119,18 +160,34 @@ fn main() {
     // the same comparison on the real threaded ShardedRuntime over the
     // in-process mesh: one worker thread per shard behind each endpoint,
     // so the actual speedup is bounded by the host's core count
-    println!("\nsharded runtime (real threads, 2 groups x 3 replicas, 64 clients, dest=2, 3s):");
+    println!("\nsharded runtime (real threads, 2 groups x 3 replicas, 64 clients, dest=2, {secs}s):");
     for &s in &[1usize, 4] {
-        let thru = real_cluster_throughput(s, 64, 3);
+        let thru = real_cluster_throughput(s, 64, secs);
         println!("  shards={s:<2} {thru:.0} multicasts/s");
     }
+
+    // inline 1-shard fast path vs the threaded worker/flusher pipeline
+    // on single-message latency: the inline loop removes two channel
+    // hops and two thread wakeups per message. Acceptance bar: >= 20%
+    // lower round-trip latency, pinned (via the same shared harness) as
+    // coordinator::tests::inline_single_shard_beats_threaded_on_latency.
+    println!("\n1-shard runtime ping-pong ({trips} round trips over the in-process mesh):");
+    let threaded_ns = one_shard_round_trip_ns(trips, true);
+    let inline_ns = one_shard_round_trip_ns(trips, false);
+    let gain = (1.0 - inline_ns / threaded_ns) * 100.0;
+    println!("  threaded pipeline: {threaded_ns:.0} ns/round-trip");
+    println!("  inline fast path:  {inline_ns:.0} ns/round-trip");
+    println!(
+        "  => inline latency improvement: {gain:.1}% {}",
+        if gain >= 20.0 { "(≥20% target met)" } else { "(below 20% target)" }
+    );
 
     // throughput sensitivity to the commit-batch size (the XLA engine's
     // amortisation knob) on the simulated cluster
     println!("\ncommit staging ablation (sim, batch_threshold sweep):");
     for &bt in &[1usize, 4, 16] {
         let mut cfg = RunCfg::new(Proto::WbCast, 10, 800, 4, Net::Lan);
-        cfg.duration = 300 * MS;
+        cfg.duration = dur;
         cfg.wb = WbConfig { batch_threshold: bt, batch_flush_after: 200_000, ..WbConfig::default() };
         let r = run(&cfg);
         println!("  batch_threshold={bt:<3} {}", r.row());
@@ -143,7 +200,7 @@ fn main() {
     for &f in &[1usize, 2, 3] {
         let mut cfg = RunCfg::new(Proto::WbCast, 6, 400, 3, Net::Lan);
         cfg.f = f;
-        cfg.duration = 300 * MS;
+        cfg.duration = dur;
         let r = run(&cfg);
         println!("  f={f} (groups of {}): {}", 2 * f + 1, r.row());
     }
@@ -154,7 +211,7 @@ fn main() {
     println!("\npayload-size ablation (WbCast, LAN, 400 clients, dest=3):");
     for &sz in &[20usize, 200, 2000] {
         let mut cfg = RunCfg::new(Proto::WbCast, 6, 400, 3, Net::Lan);
-        cfg.duration = 300 * MS;
+        cfg.duration = dur;
         let r = run_payload(&cfg, sz);
         println!("  payload={sz:<5} {}", r.row());
     }
@@ -221,6 +278,7 @@ fn run_payload(cfg: &RunCfg, payload: usize) -> wbam::harness::RunResult {
             seed: cfg.seed,
             record_full: false,
             coalesce: cfg.coalesce,
+            flush: cfg.flush,
         },
     );
     w.run_until(cfg.duration);

@@ -70,7 +70,14 @@ fn convoy_latency(proto: Proto, o: u64) -> u64 {
     let mut world = World::new(
         topo,
         nodes,
-        SimConfig { delay: Box::new(delay), cpu: CpuCost::zero(), seed: 0, record_full: true, coalesce: true },
+        SimConfig {
+            delay: Box::new(delay),
+            cpu: CpuCost::zero(),
+            seed: 0,
+            record_full: true,
+            coalesce: true,
+            flush: wbam::types::FlushPolicy::default(),
+        },
     );
     world.run_to_quiescence(10_000_000);
     invariants::assert_safe(&world.trace);

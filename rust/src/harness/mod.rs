@@ -11,7 +11,7 @@ use crate::protocols::wbcast::{WbConfig, WbNode};
 use crate::protocols::Node;
 use crate::sim::{ConstDelay, CpuCost, DelayModel, LanDelay, SimConfig, Trace, WanDelay, World, MS};
 use crate::stats::Histogram;
-use crate::types::{Pid, ShardMap, Topology};
+use crate::types::{FlushPolicy, Pid, ShardMap, Topology};
 
 /// Protocol under test.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -78,6 +78,9 @@ pub struct RunCfg {
     /// destination-coalesced wire batching in the simulated transport
     /// (see [`crate::sim::SimConfig::coalesce`]; on by default)
     pub coalesce: bool,
+    /// adaptive per-link flush policy applied by the simulated transport
+    /// when `coalesce` is on (default: flush every event immediately)
+    pub flush: FlushPolicy,
     /// leader shards per group ([`ShardMap`]): `shards` independent
     /// protocol instances, clients partitioned round-robin across them
     /// (1 = the plain unsharded deployment)
@@ -101,6 +104,7 @@ impl RunCfg {
             wb: WbConfig::default(),
             resend_after: 0,
             coalesce: true,
+            flush: FlushPolicy::default(),
             shards: 1,
         }
     }
@@ -197,7 +201,14 @@ pub fn build_world(cfg: &RunCfg) -> World {
     World::new_sharded(
         map,
         nodes,
-        SimConfig { delay, cpu, seed: cfg.seed, record_full: cfg.record_full, coalesce: cfg.coalesce },
+        SimConfig {
+            delay,
+            cpu,
+            seed: cfg.seed,
+            record_full: cfg.record_full,
+            coalesce: cfg.coalesce,
+            flush: cfg.flush,
+        },
     )
 }
 

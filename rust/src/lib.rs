@@ -16,8 +16,10 @@
 //!   [`Outbox`](protocols::Outbox) — the hot path does zero per-event
 //!   effect allocations — and the runtimes coalesce same-destination
 //!   sends into [`Wire::Batch`](types::Wire::Batch) frames
-//!   ([`protocols::Coalescer`]): one frame per destination per flush
-//!   cycle, amortising per-message receive, encode and syscall costs.
+//!   ([`protocols::LinkCoalescer`]): one frame per destination per
+//!   flush cycle by default, or an adaptive delay/byte window
+//!   ([`types::FlushPolicy`]), amortising per-message receive, encode
+//!   and syscall costs.
 //!   The commit-side companion knob is
 //!   [`WbConfig::batch_threshold`](protocols::wbcast::WbConfig).
 //! * [`sim`] — a deterministic discrete-event simulator (virtual time,
@@ -26,18 +28,24 @@
 //!   latency theorems of §V. Batch frames arrive as one event with one
 //!   frame-level CPU charge ([`sim::SimConfig::coalesce`]).
 //! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and
-//!   the sharded runtime that drives the same state machines on actual
-//!   threads. One transport endpoint hosts `S` protocol shards
-//!   ([`types::ShardMap`]; one
+//!   the runtimes that drive the same state machines on actual threads.
+//!   A 1-node endpoint (every client, unsharded `serve`) runs an
+//!   **inline fast path** — dispatch, timers and flush on the receive
+//!   thread, no worker/flusher threads or channel hops. An endpoint
+//!   hosting `S > 1` protocol shards ([`types::ShardMap`]; one
 //!   [`ShardedRuntime`](coordinator::ShardedRuntime) worker thread per
-//!   shard, clients partitioned by client id), demuxing incoming frames
-//!   by destination pid and routing same-endpoint sends in-process.
-//!   Each shard drains its whole backlog per wake-up (bounded by inner
-//!   wires, not frames); a shared flusher folds all shards' sends into
-//!   one coalesced frame per link per cycle. TCP encodes each frame once
-//!   into a reused buffer, writes it with a single length-prefixed
-//!   write, and repairs dead connections with a reconnect-and-retry
-//!   before (visibly) dropping a frame.
+//!   shard, clients partitioned by client id) demuxes incoming frames
+//!   by destination pid and routes same-endpoint sends in-process; each
+//!   shard drains its whole backlog per wake-up (bounded by inner
+//!   wires, not frames), and a shared flusher folds all shards' sends
+//!   into coalesced per-link frames. Both paths (and the sim) flush
+//!   through the same [`protocols::LinkCoalescer`] under a configurable
+//!   [`types::FlushPolicy`] — immediate per-cycle frames by default, or
+//!   an adaptive delay/byte window. TCP encodes each frame once into a
+//!   reused buffer, writes it with a single length-prefixed write,
+//!   repairs dead connections with a reconnect-and-retry before
+//!   (visibly) dropping a frame, and counts drops and idle-probe
+//!   verdicts in [`net::NetStats`].
 //! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
 //!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
 //!   resolution + delivery-frontier check) and executes it from the leader

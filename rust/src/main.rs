@@ -10,6 +10,15 @@
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
 //!
+//! Adaptive wire coalescing (`sim`, `serve` and `client` accept all
+//! three; the default flushes one frame per link per event-loop cycle):
+//!
+//! ```text
+//! --flush-max-delay-us N   hold a link's wires up to N µs for companions
+//! --flush-max-bytes B      flush a link early at B pending encoded bytes
+//! --flush-no-quiet         do NOT flush early when the loop goes idle
+//! ```
+//!
 //! The cluster config file lists the deployment:
 //!
 //! ```toml
@@ -34,7 +43,7 @@ use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, XlaBackend};
 use wbam::sim::MS;
-use wbam::types::{Pid, ShardMap};
+use wbam::types::{FlushPolicy, Pid, ShardMap};
 
 fn parse_proto(s: &str) -> Result<Proto> {
     Ok(match s {
@@ -55,6 +64,16 @@ fn parse_net(a: &Args) -> Result<Net> {
     })
 }
 
+/// The `--flush-*` adaptive-coalescing flags (shared by `sim`, `serve`
+/// and `client`); defaults reproduce the one-frame-per-cycle policy.
+fn parse_flush(a: &Args) -> FlushPolicy {
+    FlushPolicy {
+        max_delay_us: a.u64_opt("flush-max-delay-us", 0),
+        max_bytes: a.usize_opt("flush-max-bytes", usize::MAX),
+        flush_on_quiet: !a.flag("flush-no-quiet"),
+    }
+}
+
 fn cmd_sim(a: &Args) -> Result<()> {
     let proto = parse_proto(&a.str_opt("proto", "wbcast"))?;
     let mut cfg = RunCfg::new(
@@ -66,6 +85,7 @@ fn cmd_sim(a: &Args) -> Result<()> {
     );
     cfg.seed = a.u64_opt("seed", 42);
     cfg.duration = a.u64_opt("duration-ms", 5_000) * MS;
+    cfg.flush = parse_flush(a);
     let r = run(&cfg);
     println!("{}", r.row());
     Ok(())
@@ -138,9 +158,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
         nodes.push(node);
     }
     let transport = TcpTransport::bind(pid, addrs)?;
-    println!("serving endpoint {pid:?}: {} shard node(s)", nodes.len());
+    println!(
+        "serving endpoint {pid:?}: {} shard node(s){}",
+        nodes.len(),
+        if nodes.len() == 1 { " (inline fast path)" } else { "" }
+    );
     let stop = Arc::new(AtomicBool::new(false));
     let mut rt = ShardedRuntime::new(nodes, transport);
+    rt.flush_policy(parse_flush(a));
     rt.on_deliver(Box::new(|pid, m, gts, _| {
         log::info!("{pid:?} deliver {m:?} gts {gts:?}");
     }));
@@ -166,7 +191,8 @@ fn cmd_client(a: &Args) -> Result<()> {
     let transport = TcpTransport::bind(pid, addrs)?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
-    let rt = NodeRuntime::new(node, transport);
+    let mut rt = NodeRuntime::new(node, transport);
+    rt.flush_policy(parse_flush(a));
     let handle = std::thread::spawn(move || rt.run(stop2));
     // the closed loop finishes when `requests` complete; give it a bounded
     // wall-clock window, then stop and report what we got

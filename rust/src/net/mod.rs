@@ -13,7 +13,8 @@
 //!
 //! A TCP send that hits a dead connection re-establishes the connection
 //! and retries once; a frame that still cannot be *written* is
-//! `log::warn!`ed rather than vanishing, and an idle-connection probe
+//! `log::warn!`ed **and counted** ([`NetStats::dropped_frames`]) rather
+//! than vanishing, and an idle-connection probe (outcomes counted too)
 //! closes most of the window in which a peer death could swallow a
 //! frame buffered into a dead socket. The residual TCP in-flight loss
 //! (peer dies mid-stream with writes succeeding into the kernel buffer)
@@ -26,6 +27,7 @@ use crate::types::{Pid, Wire};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -38,6 +40,29 @@ pub enum Incoming {
     Wire(Pid, Pid, Wire),
     /// transport shut down
     Closed,
+}
+
+/// Transport-level counters. Every frame loss the transport can locally
+/// observe is counted here (as well as `log::warn!`ed), so tests and
+/// operators assert on numbers instead of scraping logs; the idle-probe
+/// outcomes make the TCP peer-close detector observable too.
+///
+/// Shared by [`Transport::net_stats`]: per endpoint for TCP, mesh-wide
+/// for the in-process transport (an InProc drop is a cluster-level event
+/// — the destination is not registered).
+#[derive(Default)]
+pub struct NetStats {
+    /// frames this side observably lost (warned, never silent): sends
+    /// that could not be put on the wire, and received frames that
+    /// failed framing/decoding (the reader then abandons the stream, so
+    /// trailing frames on that connection die with the peer's retransmit
+    /// timers as the backstop)
+    pub dropped_frames: AtomicU64,
+    /// idle-probe verdicts on cached TCP connections: still healthy
+    pub probes_alive: AtomicU64,
+    /// idle-probe verdicts: peer closed / error — the connection is torn
+    /// down and re-established before the frame is written
+    pub probes_dead: AtomicU64,
 }
 
 /// The send half of a transport, usable from a thread other than the
@@ -61,6 +86,10 @@ pub trait Transport: Send {
     fn send(&mut self, from: Pid, to: Pid, wire: Wire);
     /// Blocking receive with timeout; `None` on timeout.
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming>;
+    /// Shared transport counters (drops, probe outcomes). The handle is
+    /// also updated by every [`Transport::sender`] half, so cloning it
+    /// before handing the transport to a runtime observes all traffic.
+    fn net_stats(&self) -> Arc<NetStats>;
 }
 
 // ---------------- in-process mesh ----------------
@@ -70,11 +99,17 @@ pub trait Transport: Send {
 #[derive(Clone, Default)]
 pub struct InProcMesh {
     inner: Arc<Mutex<HashMap<Pid, Sender<(Pid, Pid, Wire)>>>>,
+    stats: Arc<NetStats>,
 }
 
 impl InProcMesh {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Mesh-wide transport counters (all endpoints and send halves).
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Create the endpoint for a single `pid`.
@@ -106,12 +141,27 @@ pub struct InProcSender {
     mesh: InProcMesh,
 }
 
+impl InProcMesh {
+    /// Deliver one frame, counting (and warning about) a destination
+    /// that is not registered or whose endpoint is gone — a disconnected
+    /// peer, never a healthy one.
+    fn deliver(&self, from: Pid, to: Pid, wire: Wire) {
+        let guard = self.inner.lock().unwrap();
+        let delivered = match guard.get(&to) {
+            Some(tx) => tx.send((from, to, wire)).is_ok(),
+            None => false,
+        };
+        if !delivered {
+            drop(guard);
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            log::warn!("inproc: dropping frame {from:?}->{to:?}: destination disconnected");
+        }
+    }
+}
+
 impl TransportTx for InProcSender {
     fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
-        let guard = self.mesh.inner.lock().unwrap();
-        if let Some(tx) = guard.get(&to) {
-            let _ = tx.send((from, to, wire)); // dead peer: drop
-        }
+        self.mesh.deliver(from, to, wire);
     }
 }
 
@@ -126,10 +176,7 @@ impl Transport for InProcTransport {
     }
 
     fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
-        let guard = self.mesh.inner.lock().unwrap();
-        if let Some(tx) = guard.get(&to) {
-            let _ = tx.send((from, to, wire));
-        }
+        self.mesh.deliver(from, to, wire);
     }
 
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
@@ -138,6 +185,10 @@ impl Transport for InProcTransport {
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
         }
+    }
+
+    fn net_stats(&self) -> Arc<NetStats> {
+        self.mesh.net_stats()
     }
 }
 
@@ -152,6 +203,7 @@ impl Transport for InProcTransport {
 /// endpoint's queue.
 pub struct TcpTransport {
     addrs: Arc<HashMap<Pid, SocketAddr>>,
+    stats: Arc<NetStats>,
     tx_half: TcpSender,
     rx: Receiver<(Pid, Pid, Wire)>,
     _listener_thread: std::thread::JoinHandle<()>,
@@ -173,19 +225,26 @@ impl TcpTransport {
     pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addrs[&pid])?;
         let (tx, rx) = mpsc::channel::<(Pid, Pid, Wire)>();
+        let stats = Arc::new(NetStats::default());
         let accept_tx = tx.clone();
+        let accept_stats = Arc::clone(&stats);
         let listener_thread = std::thread::Builder::new()
             .name(format!("wbam-listen-{}", pid.0))
             .spawn(move || {
                 for stream in listener.incoming() {
                     let Ok(stream) = stream else { break };
                     let tx = accept_tx.clone();
+                    let stats = Arc::clone(&accept_stats);
                     std::thread::spawn(move || {
                         let mut r = BufReader::new(stream);
                         loop {
                             match read_frame(&mut r) {
                                 Ok(bytes) => {
                                     if bytes.len() < 8 {
+                                        // receive-side loss is a loss too:
+                                        // count it, then abandon the stream
+                                        // (framing is unrecoverable)
+                                        stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
                                         log::warn!("runt frame ({} bytes)", bytes.len());
                                         return;
                                     }
@@ -198,6 +257,7 @@ impl TcpTransport {
                                             }
                                         }
                                         Err(e) => {
+                                            stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
                                             log::warn!("bad frame from {from:?}: {e}");
                                             return;
                                         }
@@ -212,7 +272,8 @@ impl TcpTransport {
         let addrs = Arc::new(addrs);
         Ok(TcpTransport {
             addrs: Arc::clone(&addrs),
-            tx_half: TcpSender::new(addrs),
+            stats: Arc::clone(&stats),
+            tx_half: TcpSender::new(addrs, stats),
             rx,
             _listener_thread: listener_thread,
         })
@@ -221,7 +282,7 @@ impl TcpTransport {
 
 impl Transport for TcpTransport {
     fn sender(&self) -> Box<dyn TransportTx> {
-        Box::new(TcpSender::new(Arc::clone(&self.addrs)))
+        Box::new(TcpSender::new(Arc::clone(&self.addrs), Arc::clone(&self.stats)))
     }
 
     fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
@@ -234,6 +295,10 @@ impl Transport for TcpTransport {
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
         }
+    }
+
+    fn net_stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
     }
 }
 
@@ -249,28 +314,50 @@ struct Conn {
     last_used: std::time::Instant,
 }
 
+/// RAII guard restoring a probed stream to blocking mode. The probe
+/// toggles `set_nonblocking(true)`; restoring through a guard (instead
+/// of a trailing call) means no early return or panic path can leave the
+/// stream nonblocking — which would turn every subsequent buffered send
+/// into a spurious `WouldBlock` failure and a warned "drop" on a
+/// perfectly healthy connection.
+struct BlockingGuard<'a>(&'a TcpStream);
+
+impl Drop for BlockingGuard<'_> {
+    fn drop(&mut self) {
+        if let Err(e) = self.0.set_nonblocking(false) {
+            // the stream is unusable either way; the caller's next write
+            // fails and tears the connection down
+            log::warn!("tcp: failed to restore blocking mode after probe: {e}");
+        }
+    }
+}
+
 /// TCP send half: per-address connection cache + a reused encode buffer
 /// (`u32 length ++ from ++ to ++ codec bytes`, written with a single
 /// `write_all` per frame — encode-once, one syscall per frame).
 pub struct TcpSender {
     addrs: Arc<HashMap<Pid, SocketAddr>>,
+    stats: Arc<NetStats>,
     conns: HashMap<SocketAddr, Conn>,
     enc: codec::Enc,
 }
 
 impl TcpSender {
-    fn new(addrs: Arc<HashMap<Pid, SocketAddr>>) -> Self {
-        TcpSender { addrs, conns: HashMap::new(), enc: codec::Enc::new() }
+    fn new(addrs: Arc<HashMap<Pid, SocketAddr>>, stats: Arc<NetStats>) -> Self {
+        TcpSender { addrs, stats, conns: HashMap::new(), enc: codec::Enc::new() }
     }
 
     /// Eager liveness probe on a cached, write-only connection: a peer
     /// close shows up as readable-EOF long before a write fails, so
     /// checking here closes (most of) the window in which a frame could
     /// be buffered into a connection the peer has already torn down.
-    fn conn_is_dead(stream: &TcpStream) -> bool {
+    /// Every outcome is counted in [`NetStats`].
+    fn conn_is_dead(stream: &TcpStream, stats: &NetStats) -> bool {
         if stream.set_nonblocking(true).is_err() {
+            stats.probes_dead.fetch_add(1, Ordering::Relaxed);
             return true;
         }
+        let _restore = BlockingGuard(stream);
         let mut probe = [0u8; 1];
         let mut r: &TcpStream = stream;
         let dead = match r.read(&mut probe) {
@@ -279,7 +366,11 @@ impl TcpSender {
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,   // healthy and idle
             Err(_) => true,
         };
-        let _ = stream.set_nonblocking(false);
+        if dead {
+            stats.probes_dead.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.probes_alive.fetch_add(1, Ordering::Relaxed);
+        }
         dead
     }
 
@@ -289,7 +380,7 @@ impl TcpSender {
     fn try_write(&mut self, addr: SocketAddr, probe: bool) -> bool {
         if probe {
             if let Some(c) = self.conns.get(&addr) {
-                if c.last_used.elapsed() >= PROBE_AFTER_IDLE && Self::conn_is_dead(c.w.get_ref()) {
+                if c.last_used.elapsed() >= PROBE_AFTER_IDLE && Self::conn_is_dead(c.w.get_ref(), &self.stats) {
                     self.conns.remove(&addr);
                 }
             }
@@ -322,6 +413,7 @@ impl TransportTx for TcpSender {
         let n = (self.enc.buf.len() - 4) as u32;
         self.enc.buf[..4].copy_from_slice(&n.to_le_bytes());
         let Some(&addr) = self.addrs.get(&to) else {
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
             log::warn!("tcp: dropping {tag} {from:?}->{to:?}: destination has no address");
             return;
         };
@@ -330,6 +422,7 @@ impl TransportTx for TcpSender {
         if self.try_write(addr, true) || self.try_write(addr, false) {
             return;
         }
+        self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
         log::warn!("tcp: dropping {tag} {from:?}->{to:?} ({addr}) after reconnect retry");
     }
 }
@@ -348,28 +441,6 @@ mod tests {
     fn next_port() -> u16 {
         static NEXT: AtomicU16 = AtomicU16::new(0);
         42000 + (std::process::id() % 400) as u16 * 32 + NEXT.fetch_add(1, Ordering::Relaxed)
-    }
-
-    /// Capture `log::warn!` output so tests can assert frames are never
-    /// *silently* dropped.
-    struct CaptureLog(Mutex<Vec<String>>);
-    impl log::Log for CaptureLog {
-        fn enabled(&self, _: &log::Metadata) -> bool {
-            true
-        }
-        fn log(&self, record: &log::Record) {
-            self.0.lock().unwrap().push(format!("{}", record.args()));
-        }
-        fn flush(&self) {}
-    }
-    static CAPTURE: CaptureLog = CaptureLog(Mutex::new(Vec::new()));
-    fn install_capture() -> &'static CaptureLog {
-        static ONCE: std::sync::Once = std::sync::Once::new();
-        ONCE.call_once(|| {
-            let _ = log::set_logger(&CAPTURE);
-            log::set_max_level(log::LevelFilter::Warn);
-        });
-        &CAPTURE
     }
 
     #[test]
@@ -493,11 +564,10 @@ mod tests {
     }
 
     /// Acceptance: frames sent across a dropped-then-reconnected link are
-    /// either delivered in FIFO order or visibly logged as dropped —
-    /// never silently lost.
+    /// either delivered in FIFO order or visibly counted as dropped in
+    /// [`NetStats`] — never silently lost.
     #[test]
     fn tcp_dropped_link_reconnects_or_warns() {
-        let capture = install_capture();
         let a_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
         let b_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
         let mut addrs = HashMap::new();
@@ -529,6 +599,7 @@ mod tests {
         });
 
         let mut a = TcpTransport::bind(Pid(1), addrs).unwrap();
+        let stats = a.net_stats();
         for i in 0..3 {
             a.send(Pid(1), Pid(2), mcast(i));
         }
@@ -543,38 +614,84 @@ mod tests {
         let got = server.join().unwrap();
 
         // every frame is accounted for: delivered (in FIFO order) or
-        // visibly warned about — never silently lost. (The capture is
-        // process-global; filter to this test's link.)
-        let warned = capture.0.lock().unwrap();
-        let warned_ids: Vec<String> =
-            warned.iter().filter(|w| w.contains("dropping") && w.contains("p1->p2")).cloned().collect();
+        // visibly counted as dropped — never silently lost
+        let dropped = stats.dropped_frames.load(Ordering::Relaxed) as usize;
         let mut sorted = got.clone();
         sorted.sort_unstable();
         assert_eq!(got, sorted, "redelivered frames out of FIFO order: {got:?}");
-        assert_eq!(
-            got.len() + warned_ids.len(),
-            8,
-            "silently lost frames: delivered {got:?}, warned {warned_ids:?}"
-        );
+        assert_eq!(got.len() + dropped, 8, "silently lost frames: delivered {got:?}, dropped {dropped}");
         // the happy path of the probe: everything made it
         assert!(got.len() >= 3, "first connection frames lost: {got:?}");
+        // the idle probe observed the peer close before the first
+        // post-close write could vanish into the dead socket
+        assert!(stats.probes_dead.load(Ordering::Relaxed) >= 1, "peer close never probed");
     }
 
-    /// A destination that never accepts is warned about, not ignored.
+    /// A destination that never accepts is counted as a drop, not
+    /// ignored.
     #[test]
-    fn tcp_unreachable_destination_is_warned() {
-        let capture = install_capture();
+    fn tcp_unreachable_destination_is_counted_dropped() {
         let mut addrs = HashMap::new();
         addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
         addrs.insert(Pid(7), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
         let mut a = TcpTransport::bind(Pid(1), addrs).unwrap();
-        let before = capture.0.lock().unwrap().len();
+        let stats = a.net_stats();
         a.send(Pid(1), Pid(7), mcast(99)); // nothing listens on p7's port
-        let warned = capture.0.lock().unwrap();
+        assert_eq!(stats.dropped_frames.load(Ordering::Relaxed), 1, "unreachable send not counted");
+        // and a pid with no address at all counts too
+        a.send(Pid(1), Pid(42), mcast(100));
+        assert_eq!(stats.dropped_frames.load(Ordering::Relaxed), 2, "address-less send not counted");
+    }
+
+    /// The idle probe must leave the stream in blocking mode on every
+    /// path (RAII guard) and count its verdicts.
+    #[test]
+    fn idle_probe_restores_blocking_mode_and_counts_outcomes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // live peer: accept and hold the connection open
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let stream = TcpStream::connect(addr).unwrap();
+        let held = hold.join().unwrap().unwrap();
+
+        let stats = NetStats::default();
+        assert!(!TcpSender::conn_is_dead(&stream, &stats), "open connection probed dead");
+        assert_eq!(stats.probes_alive.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.probes_dead.load(Ordering::Relaxed), 0);
+
+        // blocking mode restored: a read with a timeout must actually
+        // block for the timeout instead of failing instantly with
+        // WouldBlock (which is what a leaked nonblocking flag causes)
+        stream.set_read_timeout(Some(Duration::from_millis(60))).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut buf = [0u8; 1];
+        let mut r: &TcpStream = &stream;
+        assert!(r.read(&mut buf).is_err(), "nothing was sent; the read must time out");
         assert!(
-            warned[before..].iter().any(|w| w.contains("dropping") && w.contains("p7")),
-            "no visible drop warning: {:?}",
-            &warned[before..]
+            t0.elapsed() >= Duration::from_millis(40),
+            "read returned instantly: the probe left the stream nonblocking"
         );
+
+        // peer closes: the next probe reports dead (and still restores)
+        drop(held);
+        std::thread::sleep(Duration::from_millis(50)); // let the FIN land
+        assert!(TcpSender::conn_is_dead(&stream, &stats), "closed connection probed alive");
+        assert_eq!(stats.probes_dead.load(Ordering::Relaxed), 1);
+    }
+
+    /// The InProc mesh counts sends to unregistered/disconnected pids.
+    #[test]
+    fn inproc_drops_are_counted() {
+        let mesh = InProcMesh::new();
+        let mut a = mesh.endpoint(Pid(1));
+        let b = mesh.endpoint(Pid(2));
+        a.send(Pid(1), Pid(99), mcast(1)); // never registered
+        assert_eq!(mesh.net_stats().dropped_frames.load(Ordering::Relaxed), 1);
+        mesh.disconnect(Pid(2));
+        drop(b);
+        a.send(Pid(1), Pid(2), mcast(2)); // disconnected
+        assert_eq!(mesh.net_stats().dropped_frames.load(Ordering::Relaxed), 2);
+        // a healthy registered pid still counts nothing
+        let _ = a.net_stats();
     }
 }

@@ -317,7 +317,14 @@ mod tests {
         World::new(
             topo,
             nodes,
-            SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true, coalesce: true },
+            SimConfig {
+                delay: Box::new(crate::sim::ConstDelay(D)),
+                cpu: CpuCost::zero(),
+                seed,
+                record_full: true,
+                coalesce: true,
+                flush: crate::types::FlushPolicy::default(),
+            },
         )
     }
 

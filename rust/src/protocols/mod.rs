@@ -9,9 +9,12 @@
 //! ([`crate::net`], [`crate::coordinator`]).
 //!
 //! The [`Outbox`] buffers are reused across events (no per-event effect
-//! allocation), and the runtimes coalesce same-destination sends into
-//! [`Wire::Batch`](crate::types::Wire::Batch) frames via [`Coalescer`] —
-//! see [`outbox`] for the full design.
+//! allocation), and every runtime (inline loop, sharded flusher thread,
+//! simulator) coalesces same-destination sends into
+//! [`Wire::Batch`](crate::types::Wire::Batch) frames via the stateful
+//! [`LinkCoalescer`] under a [`FlushPolicy`](crate::types::FlushPolicy)
+//! — see [`outbox`] for the full design. ([`Coalescer`] is the stateless
+//! per-cycle reference model the unit tests compare against.)
 //!
 //! * [`skeen`] — folklore Skeen's protocol among singleton reliable
 //!   groups (paper Fig. 1); collision-free 2δ, failure-free 4δ.
@@ -27,7 +30,7 @@ pub mod outbox;
 pub mod skeen;
 pub mod wbcast;
 
-pub use outbox::{Coalescer, Outbox};
+pub use outbox::{Coalescer, LinkCoalescer, Outbox};
 
 use crate::types::{MsgId, Pid, Wire};
 

@@ -12,17 +12,22 @@
 //!   clones made by [`Outbox::send_to_many`] / [`Outbox::send_staged`]
 //!   never copy payload bytes (the last recipient receives the original,
 //!   so `n` recipients cost `n - 1` shallow clones).
-//! * **`Coalescer`** groups a drained send list by destination,
-//!   preserving per-destination FIFO order, and wraps multi-wire
-//!   destinations into a single [`Wire::Batch`] frame. One frame means
-//!   one arrival event (and one CPU charge) in the simulator and one
-//!   encode + one length-prefixed write (one syscall) in the TCP
-//!   transport. Frames are emitted in first-occurrence order of their
-//!   destination, which keeps schedules deterministic and — for
-//!   single-wire destinations — identical to the uncoalesced order.
+//! * **`LinkCoalescer`** is the production flush point: a stateful
+//!   per-link buffer enforcing a [`FlushPolicy`] (immediate per-cycle
+//!   frames by default; optionally an adaptive delay/byte window), used
+//!   identically by the inline single-shard runtime, the sharded
+//!   flusher thread and the simulator. One frame means one arrival
+//!   event (and one CPU charge) in the simulator and one encode + one
+//!   length-prefixed write (one syscall) in the TCP transport. Frames
+//!   are emitted in first-push order of their destination, which keeps
+//!   schedules deterministic and — for single-wire destinations —
+//!   identical to the uncoalesced order.
+//! * **`Coalescer`** is the original stateless per-cycle grouper, kept
+//!   as the reference model the unit tests compare `LinkCoalescer`'s
+//!   immediate policy against.
 
 use super::TimerKind;
-use crate::types::{MsgId, Pid, Ts, Wire};
+use crate::types::{FlushPolicy, MsgId, Pid, Ts, Wire};
 use crate::util::FxHashMap;
 
 /// Effects sink passed to every [`Node`](super::Node) handler. Buffers
@@ -236,6 +241,160 @@ fn emit_batch_bounded<K: Copy, F: FnMut(K, Wire)>(to: K, batch: Vec<Wire>, emit:
     }
 }
 
+/// One link's pending, not-yet-flushed wires.
+struct PendingLink {
+    wires: Vec<Wire>,
+    /// summed [`Wire::size`] estimate of `wires`
+    bytes: usize,
+    /// enqueue time of the oldest pending wire (the `max_delay` clock)
+    since: u64,
+}
+
+/// Stateful per-link coalescing buffer enforcing a
+/// [`FlushPolicy`]: wires pushed for the same destination accumulate
+/// until the policy says the link must flush — immediately (the default
+/// policy), when the oldest pending wire has waited `max_delay_us`, when
+/// the link's estimated bytes reach `max_bytes`, or when the owning event
+/// loop goes quiet (`flush_on_quiet`).
+///
+/// This is the single flush point shared by the inline single-shard
+/// runtime, the sharded runtime's flusher thread and the simulator, so
+/// all three exhibit the same batching behaviour for a given policy.
+/// Per-link FIFO order is preserved unconditionally: wires leave in push
+/// order, multi-wire flushes as one [`Wire::Batch`] frame (split below
+/// [`MAX_FRAME_BYTES`], consecutive chunks on the same link).
+///
+/// The destination key `K` is a [`Pid`] for the simulator and the inline
+/// runtime; the sharded flusher coalesces per `(from, to)` link because
+/// one endpoint's flush carries wires originating at several local shard
+/// nodes.
+pub struct LinkCoalescer<K = Pid> {
+    policy: FlushPolicy,
+    /// `policy.max_bytes` clamped to the frame cap
+    max_bytes: usize,
+    pending: FxHashMap<K, PendingLink>,
+    /// first-occurrence emission order; may hold stale keys (links that
+    /// overflowed out early), skipped and dropped at the next flush
+    order: Vec<K>,
+    /// retired single-wire `Vec`s, reused so steady-state single-wire
+    /// links allocate nothing
+    pool: Vec<Vec<Wire>>,
+}
+
+impl<K: std::hash::Hash + Eq + Copy> LinkCoalescer<K> {
+    pub fn new(policy: FlushPolicy) -> Self {
+        LinkCoalescer {
+            policy,
+            max_bytes: policy.max_bytes.clamp(1, MAX_FRAME_BYTES),
+            pending: FxHashMap::default(),
+            order: Vec::new(),
+            pool: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> FlushPolicy {
+        self.policy
+    }
+
+    /// Queue one wire for `to`, stamped with the caller's clock. If the
+    /// link's pending bytes reach the policy's `max_bytes` the link is
+    /// flushed through `emit` right away (FIFO preserved — everything
+    /// pending goes out ahead of any later push).
+    pub fn push<F: FnMut(K, Wire)>(&mut self, now: u64, to: K, wire: Wire, emit: &mut F) {
+        let sz = wire.size();
+        let link = match self.pending.entry(to) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                self.order.push(to);
+                e.insert(PendingLink { wires: self.pool.pop().unwrap_or_default(), bytes: 0, since: now })
+            }
+        };
+        link.bytes += sz;
+        link.wires.push(wire);
+        if link.bytes >= self.max_bytes {
+            self.emit_link(to, emit);
+        }
+    }
+
+    /// The unified flush point, called once per event-loop cycle.
+    /// `quiet` means the caller has no further input immediately pending
+    /// (`flush_on_quiet` links flush on it). Links whose oldest wire has
+    /// waited `max_delay` also flush; under the immediate policy every
+    /// pending link flushes. Emission is in first-push order of the
+    /// destinations.
+    pub fn flush_cycle<F: FnMut(K, Wire)>(&mut self, now: u64, quiet: bool, emit: &mut F) {
+        if self.pending.is_empty() {
+            self.order.clear();
+            return;
+        }
+        let all = self.policy.is_immediate() || (quiet && self.policy.flush_on_quiet);
+        let delay = self.policy.max_delay_ns();
+        let mut order = std::mem::take(&mut self.order);
+        order.retain(|&to| {
+            let Some(link) = self.pending.get(&to) else { return false };
+            if all || now.saturating_sub(link.since) >= delay {
+                self.emit_link(to, emit);
+                false
+            } else {
+                true
+            }
+        });
+        self.order = order;
+    }
+
+    /// Unconditionally drain every pending link (shutdown; never drop a
+    /// wire that was handed to the coalescer).
+    pub fn flush_all<F: FnMut(K, Wire)>(&mut self, emit: &mut F) {
+        let mut order = std::mem::take(&mut self.order);
+        for to in order.drain(..) {
+            self.emit_link(to, emit);
+        }
+        self.order = order;
+        debug_assert!(self.pending.is_empty(), "pending link missing from emission order");
+    }
+
+    /// Earliest `max_delay` expiry among pending links — the bound event
+    /// loops put on their sleeps so held wires never outwait the policy.
+    pub fn next_deadline(&self) -> Option<u64> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if self.policy.is_immediate() {
+            return Some(0); // should have been flushed already; wake now
+        }
+        let delay = self.policy.max_delay_ns();
+        self.pending.values().map(|l| l.since.saturating_add(delay)).min()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drop everything pending (crash simulation: unflushed wires die
+    /// with the process).
+    pub fn clear(&mut self) {
+        for (_, mut link) in self.pending.drain() {
+            link.wires.clear();
+            self.pool.push(link.wires);
+        }
+        self.order.clear();
+    }
+
+    /// Emit one link's pending wires: a lone wire goes out unwrapped, a
+    /// multi-wire link as [`Wire::Batch`] frames bounded by
+    /// [`MAX_FRAME_BYTES`].
+    fn emit_link<F: FnMut(K, Wire)>(&mut self, to: K, emit: &mut F) {
+        let Some(mut link) = self.pending.remove(&to) else { return };
+        if link.wires.len() == 1 {
+            let w = link.wires.pop().expect("single pending wire");
+            self.pool.push(link.wires);
+            emit(to, w);
+        } else {
+            emit_batch_bounded(to, link.wires, emit);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +502,131 @@ mod tests {
                 w => panic!("expected batch, got {w:?}"),
             }
         }
+    }
+
+    #[test]
+    fn link_coalescer_immediate_matches_classic_coalescer() {
+        let sends = vec![(Pid(1), hb(10)), (Pid(2), hb(20)), (Pid(1), hb(11)), (Pid(1), hb(12))];
+        let mut classic = Coalescer::new();
+        let mut want = Vec::new();
+        classic.drain(&mut sends.clone(), true, |to, w| want.push((to, w)));
+
+        let mut lc = LinkCoalescer::new(FlushPolicy::immediate());
+        let mut got = Vec::new();
+        for (to, w) in sends {
+            lc.push(7, to, w, &mut |to, f| got.push((to, f)));
+        }
+        lc.flush_cycle(7, true, &mut |to, f| got.push((to, f)));
+        assert_eq!(got, want, "immediate policy must reproduce the per-cycle coalescer");
+        assert!(lc.is_empty());
+    }
+
+    #[test]
+    fn link_coalescer_quiet_flush_beats_the_delay_window() {
+        let mut lc = LinkCoalescer::new(FlushPolicy::adaptive(1_000));
+        let mut got = Vec::new();
+        lc.push(0, Pid(1), hb(1), &mut |to, f| got.push((to, f)));
+        // not quiet, delay not expired: the wire is held
+        lc.flush_cycle(0, false, &mut |to, f| got.push((to, f)));
+        assert!(got.is_empty());
+        assert_eq!(lc.next_deadline(), Some(1_000_000));
+        // quiet: flush_on_quiet releases it before the deadline
+        lc.flush_cycle(10, true, &mut |to, f| got.push((to, f)));
+        assert_eq!(got, vec![(Pid(1), hb(1))]);
+        assert_eq!(lc.next_deadline(), None);
+    }
+
+    #[test]
+    fn link_coalescer_holds_until_deadline_without_quiet_flush() {
+        let policy = FlushPolicy { max_delay_us: 100, max_bytes: usize::MAX, flush_on_quiet: false };
+        let mut lc = LinkCoalescer::new(policy);
+        let mut got = Vec::new();
+        lc.push(0, Pid(3), hb(1), &mut |to, f| got.push((to, f)));
+        lc.push(40_000, Pid(3), hb(2), &mut |to, f| got.push((to, f)));
+        // quiet flushes are ignored by this policy; the window keeps filling
+        lc.flush_cycle(60_000, true, &mut |to, f| got.push((to, f)));
+        assert!(got.is_empty(), "flush_on_quiet=false must hold the link");
+        // the deadline runs from the OLDEST pending wire
+        assert_eq!(lc.next_deadline(), Some(100_000));
+        lc.flush_cycle(100_000, false, &mut |to, f| got.push((to, f)));
+        assert_eq!(got.len(), 1);
+        match &got[0].1 {
+            Wire::Batch(inner) => assert_eq!(inner.as_slice(), &[hb(1), hb(2)]),
+            w => panic!("expected batch, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn link_coalescer_max_bytes_overflow_flushes_early_in_fifo_order() {
+        let unit = hb(0).size();
+        let policy = FlushPolicy { max_delay_us: 1_000_000, max_bytes: 2 * unit, flush_on_quiet: false };
+        let mut lc = LinkCoalescer::new(policy);
+        let mut got = Vec::new();
+        for i in 0..5u32 {
+            lc.push(0, Pid(1), hb(i), &mut |to, f| got.push((to, f)));
+        }
+        // pushes 0..2 and 2..4 overflowed out as two batches; wire 4 is held
+        assert_eq!(got.len(), 2);
+        let mut seen = Vec::new();
+        for (_, f) in &got {
+            match f {
+                Wire::Batch(inner) => seen.extend(inner.iter().cloned()),
+                w => seen.push(w.clone()),
+            }
+        }
+        assert_eq!(seen, (0..4).map(hb).collect::<Vec<_>>(), "overflow flushes must preserve FIFO");
+        assert!(!lc.is_empty());
+        lc.flush_all(&mut |to, f| got.push((to, f)));
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[2], (Pid(1), hb(4)));
+        assert!(lc.is_empty());
+    }
+
+    #[test]
+    fn link_coalescer_respects_the_frame_cap_at_max_bytes_boundaries() {
+        use crate::types::{GidSet, MsgId, MsgMeta};
+        // 5 x 3 MiB wires with max_bytes at the frame cap: overflow fires
+        // at >= 8 MiB pending, and the splitter still bounds every frame
+        let big = |i: u32| Wire::Multicast {
+            meta: MsgMeta::new(MsgId::new(1, i), GidSet::single(Gid(0)), vec![0u8; 3 << 20]),
+        };
+        let policy = FlushPolicy { max_delay_us: 1_000_000, max_bytes: MAX_FRAME_BYTES, flush_on_quiet: false };
+        let mut lc = LinkCoalescer::new(policy);
+        let mut got = Vec::new();
+        for i in 0..5 {
+            lc.push(0, Pid(9), big(i), &mut |to, f| got.push((to, f)));
+        }
+        lc.flush_all(&mut |to, f| got.push((to, f)));
+        assert!(got.len() > 1, "15 MiB pending must not leave as one frame");
+        let mut seen = Vec::new();
+        for (to, frame) in &got {
+            assert_eq!(*to, Pid(9));
+            assert!(frame.size() <= MAX_FRAME_BYTES, "frame over cap: {}", frame.size());
+            match frame {
+                Wire::Batch(inner) => {
+                    for w in inner {
+                        let Wire::Multicast { meta } = w else { panic!() };
+                        seen.push(meta.id.seq());
+                    }
+                }
+                Wire::Multicast { meta } => seen.push(meta.id.seq()),
+                w => panic!("unexpected {}", w.tag()),
+            }
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4], "FIFO across overflow + splitter frames");
+    }
+
+    #[test]
+    fn link_coalescer_clear_drops_pending() {
+        let mut lc = LinkCoalescer::new(FlushPolicy::adaptive(1_000));
+        let mut got = Vec::new();
+        lc.push(0, Pid(1), hb(1), &mut |to, f| got.push((to, f)));
+        lc.flush_cycle(0, false, &mut |to, f| got.push((to, f)));
+        assert!(!lc.is_empty());
+        lc.clear();
+        assert!(lc.is_empty());
+        lc.flush_all(&mut |to, f| got.push((to, f)));
+        assert!(got.is_empty());
     }
 
     #[test]

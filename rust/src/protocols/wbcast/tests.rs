@@ -26,7 +26,14 @@ fn world(k: usize, f: usize, n_clients: usize, dest_groups: usize, wb: WbConfig,
     World::new(
         topo,
         nodes,
-        SimConfig { delay: Box::new(crate::sim::ConstDelay(D)), cpu: CpuCost::zero(), seed, record_full: true, coalesce: true },
+        SimConfig {
+            delay: Box::new(crate::sim::ConstDelay(D)),
+            cpu: CpuCost::zero(),
+            seed,
+            record_full: true,
+            coalesce: true,
+            flush: crate::types::FlushPolicy::default(),
+        },
     )
 }
 

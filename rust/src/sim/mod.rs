@@ -12,8 +12,8 @@ pub mod trace;
 pub use delay::{ConstDelay, DelayModel, LanDelay, WanDelay, MS, US};
 pub use trace::{DeliveryEv, Trace};
 
-use crate::protocols::{Coalescer, Node, Outbox, TimerKind};
-use crate::types::{Pid, ShardMap, Topology, Wire};
+use crate::protocols::{LinkCoalescer, Node, Outbox, TimerKind};
+use crate::types::{FlushPolicy, Pid, ShardMap, Topology, Wire};
 use crate::util::{FxHashMap, Rng};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -56,6 +56,10 @@ enum EventKind {
     Crash,
     /// wake a busy process to work through its backlog queue
     Drain,
+    /// a held link's [`FlushPolicy`] delay window expired — emit what is
+    /// due (the virtual-time analogue of the real runtimes' bounded
+    /// sleep on the coalescer deadline)
+    FlushDue,
 }
 
 #[derive(Clone, Debug)]
@@ -90,16 +94,26 @@ pub struct SimConfig {
     pub seed: u64,
     /// record full delivery trace (correctness checks)
     pub record_full: bool,
-    /// coalesce same-destination sends of one event into a single
-    /// [`Wire::Batch`] arrival (one frame = one arrival event, one
-    /// `recv_ns` + `send_ns` charge). Off models the seed's
-    /// message-at-a-time server.
+    /// coalesce same-destination sends into [`Wire::Batch`] arrivals
+    /// (one frame = one arrival event, one `recv_ns` + `send_ns`
+    /// charge). Off models the seed's message-at-a-time server.
     pub coalesce: bool,
+    /// per-link flush policy applied when coalescing (the same
+    /// [`LinkCoalescer`] semantics the real runtimes use; the default
+    /// flushes every event's sends immediately)
+    pub flush: FlushPolicy,
 }
 
 impl SimConfig {
     pub fn theory(delta: u64) -> Self {
-        SimConfig { delay: Box::new(ConstDelay(delta)), cpu: CpuCost::zero(), seed: 0, record_full: true, coalesce: true }
+        SimConfig {
+            delay: Box::new(ConstDelay(delta)),
+            cpu: CpuCost::zero(),
+            seed: 0,
+            record_full: true,
+            coalesce: true,
+            flush: FlushPolicy::default(),
+        }
     }
 }
 
@@ -129,8 +143,12 @@ pub struct World {
     /// reusable effects sink shared by all node handlers (one event runs
     /// at a time, so a single outbox suffices — zero per-event allocs)
     outbox: Outbox,
-    /// reusable destination-coalescing scratch for the outbox flush
-    coalescer: Coalescer,
+    /// per-node link coalescers enforcing the flush policy (under the
+    /// default immediate policy they drain fully at every event, exactly
+    /// the old one-frame-per-cycle behaviour)
+    links: Vec<LinkCoalescer<Pid>>,
+    /// earliest outstanding [`EventKind::FlushDue`] per node (dedup)
+    flush_scheduled: Vec<Option<u64>>,
     /// reusable per-event frame buffer (coalesced sends awaiting emission)
     frames: Vec<(Pid, Wire)>,
     /// wire batching on/off (SimConfig::coalesce)
@@ -171,7 +189,8 @@ impl World {
             trace,
             started: false,
             outbox: Outbox::new(),
-            coalescer: Coalescer::new(),
+            links: (0..n).map(|_| LinkCoalescer::new(cfg.flush)).collect(),
+            flush_scheduled: vec![None; n],
             frames: Vec::new(),
             coalesce: cfg.coalesce,
             log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
@@ -210,20 +229,35 @@ impl World {
     }
 
     /// Settle the shared outbox after node `idx`'s handler ran at `time`
-    /// with input-side cost `cost_in`: coalesce sends into
-    /// per-destination frames (one pass, into a reusable buffer), charge
-    /// `send_ns` per *frame* (the syscall/framing amortisation batching
-    /// buys), then emit deliveries/timers/arrivals stamped with the
-    /// completion time. Outbox and frame buffers are retained for reuse.
+    /// with input-side cost `cost_in`: feed the sends through the node's
+    /// [`LinkCoalescer`] (per-destination frames, policy-held links stay
+    /// pending), charge `send_ns` per emitted *frame* (the
+    /// syscall/framing amortisation batching buys), then emit
+    /// deliveries/timers/arrivals stamped with the completion time.
+    /// Outbox and frame buffers are retained for reuse.
     fn finish_event(&mut self, idx: usize, pid: Pid, time: u64, cost_in: u64, charge_sends: bool) {
-        let mut sends = std::mem::take(&mut self.outbox.sends);
+        let t0 = time + cost_in;
         let mut frames = std::mem::take(&mut self.frames);
-        let coalesce = self.coalesce;
-        self.coalescer.drain(&mut sends, coalesce, |to, frame| frames.push((to, frame)));
-        self.outbox.sends = sends; // drained, capacity retained
+        if self.coalesce {
+            // "quiet" mirrors the real event loops: no more input is
+            // immediately pending for this process
+            let quiet = self.backlog[idx].is_empty();
+            let links = &mut self.links[idx];
+            let mut sends = std::mem::take(&mut self.outbox.sends);
+            for (to, wire) in sends.drain(..) {
+                links.push(t0, to, wire, &mut |to, frame| frames.push((to, frame)));
+            }
+            self.outbox.sends = sends; // drained, capacity retained
+            links.flush_cycle(t0, quiet, &mut |to, frame| frames.push((to, frame)));
+        } else {
+            // message-at-a-time server: every send is its own frame
+            for (to, wire) in self.outbox.sends.drain(..) {
+                frames.push((to, wire));
+            }
+        }
 
         let send_cost = if charge_sends { self.cpu.send_ns * frames.len() as u64 } else { 0 };
-        let done_at = time + cost_in + send_cost;
+        let done_at = t0 + send_cost;
         self.busy_until[idx] = done_at;
 
         for i in 0..self.outbox.delivers.len() {
@@ -237,6 +271,13 @@ impl World {
         }
         self.outbox.timers.clear();
 
+        self.ship(pid, done_at, &mut frames);
+        self.frames = frames;
+        self.schedule_flush_due(idx, pid, done_at);
+    }
+
+    /// Account and schedule the emitted frames' arrivals from `done_at`.
+    fn ship(&mut self, pid: Pid, done_at: u64, frames: &mut Vec<(Pid, Wire)>) {
         for (to, frame) in frames.drain(..) {
             // per-wire accounting: a batch frame still carries n messages
             match &frame {
@@ -260,7 +301,36 @@ impl World {
             self.fifo_last.insert(key, arr);
             self.push(arr, to, EventKind::Arrival { from: pid, wire: frame });
         }
+    }
+
+    /// Emit node `idx`'s links whose policy deadline has passed, charging
+    /// `send_ns` per frame from the later of `now` and the node's busy
+    /// time (the flush point the real runtimes reach via their bounded
+    /// sleep on the coalescer deadline).
+    fn flush_due(&mut self, idx: usize, pid: Pid, now: u64) {
+        let mut frames = std::mem::take(&mut self.frames);
+        self.links[idx].flush_cycle(now, false, &mut |to, frame| frames.push((to, frame)));
+        if !frames.is_empty() {
+            let done_at = now.max(self.busy_until[idx]) + self.cpu.send_ns * frames.len() as u64;
+            self.busy_until[idx] = done_at;
+            self.ship(pid, done_at, &mut frames);
+        }
         self.frames = frames;
+        self.schedule_flush_due(idx, pid, now);
+    }
+
+    /// Make sure a [`EventKind::FlushDue`] wake-up exists no later than
+    /// the node's earliest pending-link deadline.
+    fn schedule_flush_due(&mut self, idx: usize, pid: Pid, now: u64) {
+        let Some(d) = self.links[idx].next_deadline() else { return };
+        let d = d.max(now);
+        match self.flush_scheduled[idx] {
+            Some(t) if t <= d => {} // an earlier wake-up already covers it
+            _ => {
+                self.flush_scheduled[idx] = Some(d);
+                self.push(d, pid, EventKind::FlushDue);
+            }
+        }
     }
 
     fn account_wire(&mut self, at: u64, w: &Wire) {
@@ -283,6 +353,9 @@ impl World {
             EventKind::Crash => {
                 self.crashed[idx] = true;
                 self.backlog[idx].clear();
+                // unflushed coalescing wires die with the process
+                self.links[idx].clear();
+                self.flush_scheduled[idx] = None;
                 // a crashed pid's links can never be consulted again:
                 // prune its FIFO watermarks and arrival count, or long
                 // crash-injection runs grow these maps without bound
@@ -291,10 +364,20 @@ impl World {
                 self.trace.on_crash(ev.time, ev.to);
                 self.nodes[idx].on_crash(ev.time);
             }
+            EventKind::FlushDue => {
+                if self.flush_scheduled[idx] == Some(ev.time) {
+                    self.flush_scheduled[idx] = None;
+                }
+                self.flush_due(idx, ev.to, ev.time);
+            }
             EventKind::Drain => {
                 self.drain_scheduled[idx] = false;
                 if let Some(kind) = self.backlog[idx].pop_front() {
-                    self.process(idx, ev.to, ev.time, kind);
+                    // a FlushDue may have pushed busy_until past this
+                    // wake-up's scheduled time; never start work (or
+                    // rewind busy_until) before the flush charge ends
+                    let t = ev.time.max(self.busy_until[idx]);
+                    self.process(idx, ev.to, t, kind);
                 }
                 if !self.backlog[idx].is_empty() {
                     self.drain_scheduled[idx] = true;
@@ -487,6 +570,7 @@ mod tests {
             seed: 0,
             record_full: true,
             coalesce: false,
+            flush: FlushPolicy::default(),
         };
         let mut w = World::new(topo, nodes, cfg);
         w.run_to_quiescence(1000);
@@ -513,6 +597,7 @@ mod tests {
             seed: 0,
             record_full: true,
             coalesce: true,
+            flush: FlushPolicy::default(),
         };
         let mut w = World::new(topo, nodes, cfg);
         w.run_to_quiescence(1000);
@@ -525,6 +610,87 @@ mod tests {
         // protocol-message accounting is per inner message, not per frame
         assert_eq!(w.arrivals[&Pid(0)], 3);
         assert!(w.trace.sends >= 3);
+    }
+
+    /// A kick at t=0 and another at t=200µs toward the same destination,
+    /// under a 500µs delay window with quiet-flush off: both wires ride
+    /// one Batch frame emitted at the deadline, FIFO preserved.
+    #[test]
+    fn adaptive_flush_coalesces_across_events_until_the_deadline() {
+        struct Stagger {
+            pid: Pid,
+            to: Pid,
+        }
+        impl Node for Stagger {
+            fn pid(&self) -> Pid {
+                self.pid
+            }
+            fn on_start(&mut self, _n: u64, out: &mut Outbox) {
+                out.send(
+                    self.to,
+                    Wire::Multicast { meta: MsgMeta::new(MsgId::new(1, 0), GidSet::single(Gid(0)), vec![]) },
+                );
+                out.timer(TimerKind::ClientNext, 200_000);
+            }
+            fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64, _o: &mut Outbox) {}
+            fn on_timer(&mut self, _t: TimerKind, _n: u64, out: &mut Outbox) {
+                out.send(
+                    self.to,
+                    Wire::Multicast { meta: MsgMeta::new(MsgId::new(1, 1), GidSet::single(Gid(0)), vec![]) },
+                );
+            }
+        }
+        let topo = Topology::new(1, 0);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(Stagger { pid: Pid(1), to: Pid(0) }),
+            Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+        ];
+        let cfg = SimConfig {
+            delay: Box::new(ConstDelay(1000)),
+            cpu: CpuCost::zero(),
+            seed: 0,
+            record_full: true,
+            coalesce: true,
+            flush: FlushPolicy { max_delay_us: 500, max_bytes: usize::MAX, flush_on_quiet: false },
+        };
+        let mut w = World::new(topo, nodes, cfg);
+        w.run_to_quiescence(1000);
+        let echo = w.node_as::<Echo>(Pid(0));
+        // one frame at the 500µs deadline + 1µs link delay, both inner
+        // messages processed together, FIFO within the batch
+        let times: Vec<u64> = echo.got.iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![501_000, 501_000]);
+        let seqs: Vec<u32> = echo.got.iter().map(|&(_, m)| m.seq()).collect();
+        assert_eq!(seqs, vec![0, 1]);
+        assert_eq!(w.arrivals[&Pid(0)], 2);
+    }
+
+    /// With quiet-flush on and zero CPU cost, every event's loop goes
+    /// quiet immediately, so ANY delay window produces schedules
+    /// identical to the immediate policy.
+    #[test]
+    fn quiet_flush_matches_immediate_below_saturation() {
+        let run_one = |flush: FlushPolicy| {
+            let topo = Topology::new(1, 0);
+            let nodes: Vec<Box<dyn Node>> = vec![
+                Box::new(Kick { pid: Pid(1), to: Pid(0), n: 5 }),
+                Box::new(Echo { pid: Pid(0), peer: Pid(1), got: vec![] }),
+            ];
+            let cfg = SimConfig {
+                delay: Box::new(ConstDelay(1000)),
+                cpu: CpuCost::zero(),
+                seed: 0,
+                record_full: true,
+                coalesce: true,
+                flush,
+            };
+            let mut w = World::new(topo, nodes, cfg);
+            w.run_to_quiescence(1000);
+            w.node_as::<Echo>(Pid(0)).got.clone()
+        };
+        let immediate = run_one(FlushPolicy::immediate());
+        let adaptive = run_one(FlushPolicy::adaptive(10_000));
+        assert_eq!(immediate, adaptive, "quiet-flush must reproduce the immediate schedule when idle");
     }
 
     #[test]

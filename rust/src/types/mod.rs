@@ -401,6 +401,63 @@ impl ShardMap {
     }
 }
 
+/// Adaptive per-link wire-coalescing policy, applied identically by the
+/// inline single-shard runtime, the sharded runtime's flusher thread and
+/// the simulator (so simulated traces stay predictive of real-transport
+/// behaviour). Enforced by
+/// [`LinkCoalescer`](crate::protocols::outbox::LinkCoalescer); configured
+/// via `RunCfg::flush` / the `--flush-*` CLI flags.
+///
+/// The default is [`FlushPolicy::immediate`]: one coalesced frame per
+/// destination per event-loop cycle, byte-identical to the fixed policy
+/// the runtimes used before adaptive coalescing existed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlushPolicy {
+    /// Longest a queued wire may wait for companions before its link is
+    /// flushed, in microseconds. `0` disables the delay window entirely:
+    /// every flush cycle emits everything (the classic
+    /// one-frame-per-cycle policy).
+    pub max_delay_us: u64,
+    /// Flush a link as soon as its pending wires reach this many
+    /// estimated encoded bytes. Clamped to
+    /// [`MAX_FRAME_BYTES`](crate::protocols::outbox::MAX_FRAME_BYTES) by
+    /// the coalescer; frames above that cap are split regardless.
+    pub max_bytes: usize,
+    /// Flush every pending link whenever the event loop goes quiet (no
+    /// further input immediately available), even before `max_delay_us`
+    /// expires. Off trades latency for strictly time/size-driven batching.
+    pub flush_on_quiet: bool,
+}
+
+impl Default for FlushPolicy {
+    fn default() -> Self {
+        Self::immediate()
+    }
+}
+
+impl FlushPolicy {
+    /// Flush everything at every cycle (the pre-adaptive behaviour).
+    pub fn immediate() -> Self {
+        FlushPolicy { max_delay_us: 0, max_bytes: usize::MAX, flush_on_quiet: true }
+    }
+
+    /// A time-windowed policy: links may coalesce for up to
+    /// `max_delay_us`, but still flush early when the loop goes quiet.
+    pub fn adaptive(max_delay_us: u64) -> Self {
+        FlushPolicy { max_delay_us, max_bytes: usize::MAX, flush_on_quiet: true }
+    }
+
+    /// True when the delay window is disabled (every cycle flushes all).
+    pub fn is_immediate(&self) -> bool {
+        self.max_delay_us == 0
+    }
+
+    /// The delay window in the nanosecond clock the runtimes use.
+    pub fn max_delay_ns(&self) -> u64 {
+        self.max_delay_us.saturating_mul(1000)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

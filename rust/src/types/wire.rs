@@ -122,8 +122,8 @@ pub enum Wire {
     // ---------- transport framing ----------
     /// Destination-coalesced frame: every protocol message a flush cycle
     /// produced for one destination, in FIFO order. Produced only by the
-    /// runtime flush ([`crate::protocols::Coalescer`]) and unpacked by
-    /// the receiving runtime — protocol nodes never see one. Never
+    /// runtime flush ([`crate::protocols::LinkCoalescer`]) and unpacked
+    /// by the receiving runtime — protocol nodes never see one. Never
     /// nested, never empty (the codec rejects both).
     Batch(Vec<Wire>),
 }

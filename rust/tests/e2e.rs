@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{spawn, spawn_sharded, Cluster, DeliverFn, NodeRuntime};
-use wbam::net::{InProcMesh, TcpTransport};
+use wbam::net::{InProcMesh, TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::types::{MsgId, Pid, ShardMap, Topology, Ts};
@@ -97,11 +97,13 @@ fn tcp_cluster_end_to_end() {
     let stop = Arc::new(AtomicBool::new(false));
     let delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let mut handles = Vec::new();
+    let mut nets = Vec::new();
     let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
     for g in topo.gids() {
         for &p in topo.members(g) {
             let node: Box<dyn Node> = Box::new(WbNode::new(p, topo.clone(), wb));
             let t = TcpTransport::bind(p, addrs.clone()).expect("bind");
+            nets.push(t.net_stats());
             let d = Arc::clone(&delivered);
             let cb: DeliverFn = Box::new(move |_pid, _m, _gts, _t| {
                 d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -117,6 +119,7 @@ fn tcp_cluster_end_to_end() {
         let cfg = ClientCfg { dest_groups: 2, max_requests: Some(10), resend_after: 500_000_000, ..Default::default() };
         let node: Box<dyn Node> = Box::new(Client::new(pid, topo.clone(), cfg, 3 + c as u64));
         let t = TcpTransport::bind(pid, addrs.clone()).expect("bind client");
+        nets.push(t.net_stats());
         let stop2 = Arc::clone(&stop);
         client_handles.push(std::thread::spawn(move || {
             let rt = NodeRuntime::new(node, t);
@@ -125,6 +128,10 @@ fn tcp_cluster_end_to_end() {
     }
     // 2 clients x 10 requests x 2 groups x 3 replicas = 120 deliveries
     wait_for(|| delivered.load(std::sync::atomic::Ordering::Relaxed) >= 120, 60, "120 TCP deliveries");
+    // happy path: no endpoint dropped a frame (checked before stop —
+    // shutdown order can legitimately drop a final heartbeat)
+    let dropped: u64 = nets.iter().map(|n| n.dropped_frames.load(std::sync::atomic::Ordering::Relaxed)).sum();
+    assert_eq!(dropped, 0, "TCP transport dropped frames on the happy path");
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     let mut completed = 0;
     for h in client_handles {
@@ -164,6 +171,7 @@ fn tcp_sharded_cluster_end_to_end() {
     let delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
     let mut handles = Vec::new();
+    let mut nets = Vec::new();
     for e in 0..6u32 {
         let mut nodes: Vec<Box<dyn Node>> = Vec::new();
         for p in map.hosted_by(Pid(e)) {
@@ -171,6 +179,7 @@ fn tcp_sharded_cluster_end_to_end() {
             nodes.push(Box::new(WbNode::new(p, map.topo(s), wb)));
         }
         let t = TcpTransport::bind(Pid(e), addrs.clone()).expect("bind endpoint");
+        nets.push(t.net_stats());
         let d = Arc::clone(&delivered);
         let cb: DeliverFn = Box::new(move |_pid, _m, _gts, _t| {
             d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -184,11 +193,15 @@ fn tcp_sharded_cluster_end_to_end() {
         let cfg = ClientCfg { dest_groups: 2, max_requests: Some(10), resend_after: 500_000_000, ..Default::default() };
         let node: Box<dyn Node> = Box::new(Client::new(pid, map.topo(map.client_shard(pid)), cfg, 3 + c as u64));
         let t = TcpTransport::bind(pid, addrs.clone()).expect("bind client");
+        nets.push(t.net_stats());
         let stop2 = Arc::clone(&stop);
         client_handles.push(std::thread::spawn(move || NodeRuntime::new(node, t).run(stop2)));
     }
     // 2 clients x 10 requests x 2 groups x 3 replicas = 120 deliveries
     wait_for(|| delivered.load(std::sync::atomic::Ordering::Relaxed) >= 120, 60, "120 sharded TCP deliveries");
+    // happy path: no endpoint dropped a frame
+    let dropped: u64 = nets.iter().map(|n| n.dropped_frames.load(std::sync::atomic::Ordering::Relaxed)).sum();
+    assert_eq!(dropped, 0, "sharded TCP transport dropped frames on the happy path");
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     let mut completed = 0;
     for h in client_handles {

@@ -182,6 +182,147 @@ fn batching_preserves_delivery_order() {
     }
 }
 
+/// Adaptive coalescing is FIFO-transparent per link: under ANY
+/// [`FlushPolicy`](wbam::types::FlushPolicy) every receiver observes
+/// every sender's wires in exactly the send order produced by the
+/// flush-every-cycle baseline, no matter how the policy carves them into
+/// frames (delay windows, `max_bytes` overflow, quiet flushes; the 8 MiB
+/// splitter/`max_bytes` boundary interaction is pinned at unit level in
+/// `protocols::outbox`). Reuses the PR 1 batching-equivalence harness
+/// idea with open-loop senders so both runs generate identical traffic.
+#[test]
+fn flush_policies_preserve_per_link_fifo() {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
+    use wbam::protocols::{Node, Outbox, TimerKind};
+    use wbam::sim::{ConstDelay, CpuCost, SimConfig, World};
+    use wbam::types::{FlushPolicy, MsgId, MsgMeta, Topology, Wire};
+    use wbam::util::Rng;
+
+    /// Open-loop sender: random bursts to random peers on a fixed timer
+    /// cadence — its traffic is a pure function of its seed, so the
+    /// baseline and adaptive runs see identical send sequences.
+    struct Blaster {
+        pid: Pid,
+        peers: Vec<Pid>,
+        rng: Rng,
+        bursts: u32,
+        seq: u32,
+    }
+    impl Node for Blaster {
+        fn pid(&self) -> Pid {
+            self.pid
+        }
+        fn on_start(&mut self, _n: u64, out: &mut Outbox) {
+            out.timer(TimerKind::ClientNext, 50_000);
+        }
+        fn on_wire(&mut self, _f: Pid, _w: Wire, _n: u64, _o: &mut Outbox) {}
+        fn on_timer(&mut self, _t: TimerKind, _n: u64, out: &mut Outbox) {
+            if self.bursts == 0 {
+                return;
+            }
+            self.bursts -= 1;
+            for _ in 0..self.rng.range(1, 6) {
+                let to = *self.rng.choose(&self.peers);
+                self.seq += 1;
+                let payload = vec![0u8; self.rng.below(200) as usize];
+                out.send(
+                    to,
+                    Wire::Multicast {
+                        meta: MsgMeta::new(MsgId::new(self.pid.0, self.seq), GidSet::single(Gid(0)), payload),
+                    },
+                );
+            }
+            out.timer(TimerKind::ClientNext, 30_000);
+        }
+    }
+    /// Records the per-link order in which inner wires reach it.
+    struct Recorder {
+        pid: Pid,
+        seen: Arc<Mutex<BTreeMap<(Pid, Pid), Vec<u64>>>>,
+    }
+    impl Node for Recorder {
+        fn pid(&self) -> Pid {
+            self.pid
+        }
+        fn on_start(&mut self, _n: u64, _o: &mut Outbox) {}
+        fn on_wire(&mut self, from: Pid, wire: Wire, _n: u64, _o: &mut Outbox) {
+            if let Wire::Multicast { meta } = wire {
+                self.seen.lock().unwrap().entry((from, self.pid)).or_default().push(meta.id.0);
+            }
+        }
+        fn on_timer(&mut self, _t: TimerKind, _n: u64, _o: &mut Outbox) {}
+    }
+
+    let run_one = |policy: FlushPolicy, seed: u64| -> BTreeMap<(Pid, Pid), Vec<u64>> {
+        let seen = Arc::new(Mutex::new(BTreeMap::new()));
+        let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+        for p in [Pid(0), Pid(1), Pid(2)] {
+            nodes.push(Box::new(Recorder { pid: p, seen: Arc::clone(&seen) }));
+        }
+        for p in [Pid(10), Pid(11)] {
+            nodes.push(Box::new(Blaster {
+                pid: p,
+                peers: vec![Pid(0), Pid(1), Pid(2)],
+                rng: Rng::new(seed ^ p.0 as u64),
+                bursts: 30,
+                seq: 0,
+            }));
+        }
+        let cfg = SimConfig {
+            delay: Box::new(ConstDelay(1_000_000)),
+            cpu: CpuCost::lan_server(),
+            seed,
+            record_full: false,
+            coalesce: true,
+            flush: policy,
+        };
+        let mut w = World::new(Topology::new(1, 0), nodes, cfg);
+        w.run_to_quiescence(10_000_000);
+        let recorded = seen.lock().unwrap().clone();
+        drop(w); // the recorders hold clones of `seen`; drop before return
+        recorded
+    };
+
+    prop::check(8, |r| {
+        let seed = r.next_u64();
+        let baseline = run_one(FlushPolicy::immediate(), seed);
+        assert!(!baseline.is_empty(), "blasters produced no traffic");
+        let policy = FlushPolicy {
+            max_delay_us: r.range(1, 400),
+            // sometimes small enough that single wires overflow the link
+            // instantly — the other boundary of the max_bytes knob
+            max_bytes: if r.chance(0.5) { r.range(32, 600) as usize } else { usize::MAX },
+            flush_on_quiet: r.chance(0.5),
+        };
+        let adaptive = run_one(policy, seed);
+        assert_eq!(baseline, adaptive, "per-link arrival order diverged under {policy:?}");
+    });
+}
+
+/// WbCast end-to-end safety (Validity/Integrity/Ordering + termination)
+/// is preserved under random adaptive flush policies — held frames delay
+/// protocol messages but never reorder a link or lose a wire.
+#[test]
+fn wbcast_safe_under_random_flush_policies() {
+    use wbam::types::FlushPolicy;
+    prop::check(12, |r| {
+        let policy = FlushPolicy {
+            max_delay_us: r.range(1, 500),
+            max_bytes: if r.chance(0.3) { r.range(64, 4096) as usize } else { usize::MAX },
+            flush_on_quiet: r.chance(0.5),
+        };
+        let mut cfg = RunCfg::new(Proto::WbCast, 3, 4, 2, Net::Lan);
+        cfg.seed = r.next_u64();
+        cfg.max_requests = Some(12);
+        cfg.record_full = true;
+        cfg.flush = policy;
+        let mut w = build_world(&cfg);
+        w.run_to_quiescence(60_000_000);
+        invariants::assert_correct(&w.trace);
+    });
+}
+
 /// The public codec round-trips every wire message, including
 /// destination-coalesced `BATCH` frames (the codec unit tests cover the
 /// nested/empty rejections; this drives the integration surface).
