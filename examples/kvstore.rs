@@ -12,6 +12,13 @@
 //! concurrency control. Transfers never cross shards — each client and
 //! each account belongs to exactly one shard.
 //!
+//! The bank is **durable**: every replica journals its protocol state
+//! into simulated storage ([`wbam::storage::MemWal`], the exact on-disk
+//! record codec), one replica is killed mid-run and restarted from its
+//! journal after the workload drains — it rejoins through the recovery
+//! protocol, catches up on every transfer it missed, and the final
+//! replica-agreement and conservation checks include it.
+//!
 //!     cargo run --release --example kvstore
 
 use std::collections::HashMap;
@@ -175,12 +182,14 @@ fn main() {
     let map = ShardMap::new(GROUPS, 1, SHARDS);
     let registry: Arc<Mutex<HashMap<MsgId, Op>>> = Arc::new(Mutex::new(HashMap::new()));
 
+    // durable replicas: every member journals into simulated storage
+    let wb = WbConfig { durability: true, ..WbConfig::default() };
     let mut nodes: Vec<Box<dyn Node>> = Vec::new();
     for s in 0..map.shards {
         let topo = map.topo(s);
         for g in topo.gids() {
             for &p in topo.members(g) {
-                nodes.push(Box::new(WbNode::new(p, topo.clone(), WbConfig::default())));
+                nodes.push(Box::new(WbNode::new(p, topo.clone(), wb)));
             }
         }
     }
@@ -210,17 +219,40 @@ fn main() {
         ..SimConfig::theory(MS)
     };
     let mut world = World::new_sharded(map, nodes, sim);
+    // every member can be rebuilt from its journal on a Restart event
+    for s in 0..map.shards {
+        wbam::harness::enable_wb_storage(&mut world, &map.topo(s), wb);
+    }
+    // kill one replica (a follower of shard 0, group 0) mid-run: its
+    // clients keep completing (followers send no client notifications),
+    // but it misses a chunk of the committed transfer history
+    let victim = Pid(1);
+    world.crash_at(victim, 20 * MS);
+    world.run_to_quiescence(10_000_000);
+    // ...then restart it from its journal: it replays the WAL fold,
+    // rejoins via the recovery protocol and catches up on every missed
+    // delivery before the books are audited below
+    let journaled = world.store(victim).unwrap().len();
+    world.restart_at(victim, world.now() + 10 * MS);
     world.run_to_quiescence(10_000_000);
     invariants::assert_correct_sharded(&world.trace);
     for c in 0..n_clients {
         let t = world.node_as::<TxClient>(Pid(map.first_client_pid().0 + c));
         assert_eq!(t.done, tx_per_client, "client {c} stalled");
     }
+    let revived = world.node_as::<WbNode>(victim);
+    assert!(revived.stats.recoveries_started >= 1, "restarted replica never rejoined");
+    assert!(revived.stats.delivered > 0, "restarted replica caught up nothing");
 
     let registry = registry.lock().unwrap();
     println!(
-        "kvstore — {SHARDS} shards x {GROUPS} partitions x 3 replicas, {} cross-partition transfers\n",
+        "kvstore — {SHARDS} shards x {GROUPS} partitions x 3 replicas, {} cross-partition transfers",
         registry.len()
+    );
+    println!(
+        "durable restart: {victim:?} killed at t=20ms with {journaled} journal records, \
+         restarted from its WAL, rejoined (recoveries={}) and re-delivered {} transfers\n",
+        revived.stats.recoveries_completed, revived.stats.delivered
     );
 
     // rebuild every replica's state from its delivery sequence

@@ -1,16 +1,25 @@
-//! Leader-failure demo: crash the leader of group 0 mid-run and watch
-//! the white-box recovery protocol (Fig. 4 lines 35–66) elect a new
-//! leader, resynchronise a quorum and resume delivery — with the
-//! safety checker verifying that the total order survived.
+//! Leader-failure demo, in two acts:
+//!
+//! 1. **Leader change** (the paper's crash-stop model): crash the
+//!    leader of group 0 mid-run and watch the white-box recovery
+//!    protocol (Fig. 4 lines 35–66) elect a new leader, resynchronise a
+//!    quorum and resume delivery — with the safety checker verifying
+//!    that the total order survived.
+//! 2. **Process rejoin from disk** (beyond crash-stop): the same crash,
+//!    but the victim journaled every promise into durable storage
+//!    ([`wbam::storage`]); it restarts from the WAL fold, rejoins
+//!    through the *same* recovery protocol, catches up on everything it
+//!    missed, and the strict checker (which now counts it as a correct
+//!    process again) stays green.
 //!
 //!     cargo run --release --example recovery_demo
 
 use wbam::client::ClientCfg;
-use wbam::harness::{build_world, Net, Proto, RunCfg};
+use wbam::harness::{build_world, enable_wb_storage, Net, Proto, RunCfg};
 use wbam::invariants;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::sim::MS;
-use wbam::types::{Pid, Status};
+use wbam::types::{Pid, Status, Topology};
 
 fn main() {
     let delta = MS;
@@ -59,4 +68,39 @@ fn main() {
     let term = invariants::check_termination(&world.trace);
     assert!(term.is_empty(), "{term:?}");
     println!("\nsafety + termination across the crash: OK");
+
+    // ---- Act 2: kill -9 and rejoin from the journal ----
+    println!("\n--- Act 2: the victim restarts from durable storage ---\n");
+    cfg.wb.durability = true;
+    let mut world = build_world(&cfg);
+    enable_wb_storage(&mut world, &Topology::new(2, 1), cfg.wb);
+    world.crash_at(Pid(0), crash_at);
+    world.restart_at(Pid(0), 400 * delta);
+    world.run_until(3_000 * delta);
+
+    let journaled = world.store(Pid(0)).unwrap().len();
+    let revived = world.node_as::<WbNode>(Pid(0));
+    println!("  p0 journaled {journaled} records before/after the crash");
+    println!(
+        "  p0 after restart: status={:?} cballot={:?} recoveries: started={} completed={} re-delivered={}",
+        revived.status(),
+        revived.cballot(),
+        revived.stats.recoveries_started,
+        revived.stats.recoveries_completed,
+        revived.stats.delivered,
+    );
+    assert!(revived.stats.recoveries_started >= 1, "p0 never rejoined");
+    assert!(revived.stats.delivered > 0, "p0 caught up nothing");
+    println!(
+        "  completed multicasts: {} / 200; restarts recorded: {:?}",
+        world.trace.completions.len(),
+        world.trace.restarts.iter().map(|&(t, p)| (t / delta, p)).collect::<Vec<_>>(),
+    );
+
+    // the restart withdrew p0's crash entry: the STRICT checker applies —
+    // safety spans both incarnations and termination demands a full
+    // quorum including the reborn p0
+    assert!(world.trace.crashes.is_empty());
+    invariants::assert_correct(&world.trace);
+    println!("\nstrict safety + termination across kill and rejoin: OK");
 }

@@ -7,7 +7,10 @@
 //! clear the interrupted messages. We regenerate the throughput timeline
 //! in the paper's 0.3 s bins and report the same phase breakdown.
 //!
-//! `cargo bench --bench fig11_recovery` (WBAM_BENCH_FULL=1: 6000 clients)
+//! `cargo bench --bench fig11_recovery` (WBAM_BENCH_FULL=1: 6000 clients;
+//! WBAM_SMOKE=1: a minutes-to-seconds CI mode — fewer clients, shorter
+//! horizon, same crash → election → catch-up pipeline and the same
+//! safety assertions, so the recovery path cannot bit-rot unnoticed)
 
 use wbam::harness::{build_world, Net, Proto, RunCfg};
 use wbam::invariants;
@@ -17,9 +20,16 @@ use wbam::types::{Gid, Status};
 
 fn main() {
     let full = std::env::var("WBAM_BENCH_FULL").is_ok();
-    let clients = if full { 6000 } else { 1500 };
-    let crash_t = 6_000 * MS;
-    let horizon = 20_000 * MS;
+    let smoke = std::env::var("WBAM_SMOKE").is_ok();
+    let clients = if full {
+        6000
+    } else if smoke {
+        300
+    } else {
+        1500
+    };
+    let crash_t = if smoke { 3_000 * MS } else { 6_000 * MS };
+    let horizon = if smoke { 12_000 * MS } else { 20_000 * MS };
     let bin = 300 * MS;
 
     // failure detector sized like the paper's WAN deployment: the first
@@ -36,7 +46,11 @@ fn main() {
     cfg.record_full = true;
     cfg.seed = 11;
 
-    println!("== Fig. 11 — WAN recovery: leader of group 3 crashes at t = 6 s ({clients} clients) ==\n");
+    println!(
+        "== Fig. 11 — WAN recovery: leader of group 3 crashes at t = {} s ({clients} clients{}) ==\n",
+        crash_t / MS / 1000,
+        if smoke { ", smoke mode" } else { "" }
+    );
     let mut world = build_world(&cfg);
     let victim = world.trace.topo().initial_leader(Gid(2)); // "group 3" (paper is 1-indexed)
     world.crash_at(victim, crash_t);

@@ -103,20 +103,20 @@ impl<'a> Dec<'a> {
     }
 }
 
-// ---------- field codecs ----------
+// ---------- field codecs (shared with the storage record codec) ----------
 
-fn put_ts(e: &mut Enc, ts: Ts) {
+pub(crate) fn put_ts(e: &mut Enc, ts: Ts) {
     e.u64(ts.t);
     e.u32(ts.g.0);
 }
-fn get_ts(d: &mut Dec) -> Result<Ts> {
+pub(crate) fn get_ts(d: &mut Dec) -> Result<Ts> {
     Ok(Ts { t: d.u64()?, g: Gid(d.u32()?) })
 }
-fn put_ballot(e: &mut Enc, b: Ballot) {
+pub(crate) fn put_ballot(e: &mut Enc, b: Ballot) {
     e.u32(b.n);
     e.u32(b.p.0);
 }
-fn get_ballot(d: &mut Dec) -> Result<Ballot> {
+pub(crate) fn get_ballot(d: &mut Dec) -> Result<Ballot> {
     Ok(Ballot { n: d.u32()?, p: Pid(d.u32()?) })
 }
 fn put_meta(e: &mut Enc, m: &MsgMeta) {
@@ -144,13 +144,13 @@ fn get_phase(d: &mut Dec) -> Result<Phase> {
         v => return Err(CodecError::BadTag { what: "Phase", value: v }),
     })
 }
-fn put_state(e: &mut Enc, s: &MsgState) {
+pub(crate) fn put_state(e: &mut Enc, s: &MsgState) {
     put_meta(e, &s.meta);
     put_phase(e, s.phase);
     put_ts(e, s.lts);
     put_ts(e, s.gts);
 }
-fn get_state(d: &mut Dec) -> Result<MsgState> {
+pub(crate) fn get_state(d: &mut Dec) -> Result<MsgState> {
     Ok(MsgState { meta: get_meta(d)?, phase: get_phase(d)?, lts: get_ts(d)?, gts: get_ts(d)? })
 }
 fn put_cmd(e: &mut Enc, c: &RsmCmd) {

@@ -33,6 +33,7 @@
 
 use crate::net::{Incoming, Transport, TransportTx};
 use crate::protocols::{LinkCoalescer, Node, Outbox, TimerKind};
+use crate::storage::Storage;
 use crate::types::{FlushPolicy, MsgId, Pid, Ts, Wire};
 use crate::util::FxHashMap;
 use std::cmp::Reverse;
@@ -76,9 +77,43 @@ pub struct CoordStats {
     pub dropped_frames: AtomicU64,
 }
 
+/// Append the records a node handler just journaled (buffered; the
+/// group commit happens once per cycle via [`commit_records`], before
+/// the cycle's frames reach the transport). A failed append poisons the
+/// storage itself (logged there): the node carries on in-memory,
+/// degrading to the crash-stop guarantees the protocol already
+/// tolerates — and the poisoned directory refuses any future restore.
+fn append_records(storage: &mut Option<Storage>, outbox: &mut Outbox) {
+    if outbox.records.is_empty() {
+        return;
+    }
+    if let Some(store) = storage.as_mut() {
+        for rec in &outbox.records {
+            if store.append(rec).is_err() {
+                break; // poisoned; later records are discarded anyway
+            }
+        }
+    }
+    outbox.records.clear();
+}
+
+/// The group-commit point: flush + fsync per the [`SyncPolicy`]. Run
+/// (a) before deliver callbacks fire (deliveries are app-visible
+/// output) and (b) at each cycle's flush, before frames reach the
+/// transport — so one fsync under `SyncPolicy::Always` covers every
+/// record the cycle produced.
+fn commit_records(storage: &mut Option<Storage>) {
+    if let Some(store) = storage.as_mut() {
+        // commit errors poison the storage and are logged there
+        let _ = store.commit();
+    }
+}
+
 /// One shard's event loop state (runs on its own worker thread).
 struct ShardWorker {
     node: Box<dyn Node>,
+    /// per-shard durable WAL (None: durability off for this node)
+    storage: Option<Storage>,
     rx: Receiver<(Pid, Pid, Wire)>,
     /// channels of every locally hosted shard (cross-shard in-process
     /// routing); includes our own pid, which is short-circuited inline.
@@ -139,7 +174,12 @@ impl ShardWorker {
         let me = self.node.pid();
         loop {
             let now = self.now();
+            // journal records first: appended ahead of this iteration's
+            // other effects, committed before anything app-visible
+            append_records(&mut self.storage, &mut self.outbox);
             if !self.outbox.delivers.is_empty() {
+                // output commit: the delivery callback is app-visible
+                commit_records(&mut self.storage);
                 if let Some(cb) = &self.on_deliver {
                     let mut f = cb.lock().unwrap();
                     for i in 0..self.outbox.delivers.len() {
@@ -178,8 +218,10 @@ impl ShardWorker {
     }
 
     /// Hand the cycle's remote sends to the flusher (one channel message
-    /// per cycle; the flusher coalesces per link).
+    /// per cycle; the flusher coalesces per link), after group-committing
+    /// the records that back them.
     fn flush(&mut self) {
+        commit_records(&mut self.storage);
         if !self.outgoing.is_empty() {
             let batch = std::mem::take(&mut self.outgoing);
             let _ = self.out_tx.send(batch);
@@ -227,7 +269,11 @@ impl ShardWorker {
                     }
                     self.flush();
                 }
-                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    // idle tick: let an IntervalUs policy fsync the tail
+                    // of a burst once traffic stops
+                    commit_records(&mut self.storage);
+                }
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
@@ -293,6 +339,8 @@ fn run_flusher(mut tx: Box<dyn TransportTx>, rx: Receiver<Vec<(Link, Wire)>>, po
 struct InlineLoop<T: Transport> {
     me: Pid,
     node: Box<dyn Node>,
+    /// durable WAL of the hosted node (None: durability off)
+    storage: Option<Storage>,
     transport: T,
     outbox: Outbox,
     scratch: Vec<(Pid, Wire)>,
@@ -346,7 +394,15 @@ impl<T: Transport> InlineLoop<T> {
         let me = self.me;
         loop {
             let now = self.now();
+            // journal records first: appended ahead of this iteration's
+            // other effects, committed before anything app-visible (the
+            // cycle's transport frames commit at `flush`; the one
+            // pre-commit escape is a >8 MiB link overflowing out of the
+            // coalescer mid-drain, which no protocol cycle approaches)
+            append_records(&mut self.storage, &mut self.outbox);
             if !self.outbox.delivers.is_empty() {
+                // output commit: the delivery callback is app-visible
+                commit_records(&mut self.storage);
                 if let Some(cb) = &self.on_deliver {
                     let mut f = cb.lock().unwrap();
                     for i in 0..self.outbox.delivers.len() {
@@ -382,8 +438,10 @@ impl<T: Transport> InlineLoop<T> {
     }
 
     /// The cycle's flush point (same [`LinkCoalescer`] semantics as the
-    /// sharded flusher thread and the simulator).
+    /// sharded flusher thread and the simulator): group-commit the
+    /// cycle's records, then emit its frames.
     fn flush(&mut self, quiet: bool) {
+        commit_records(&mut self.storage);
         let now = self.now();
         let me = self.me;
         let links = &mut self.links;
@@ -446,10 +504,15 @@ impl<T: Transport> InlineLoop<T> {
                     self.flush(quiet);
                 }
                 Some(Incoming::Closed) => break,
-                None => self.flush(true), // idle tick / flush deadline
+                // idle tick / flush deadline — `flush` also lets an
+                // IntervalUs policy fsync the tail of a burst once
+                // traffic stops
+                None => self.flush(true),
             }
         }
-        // shutdown drain: ship anything still coalescing
+        // shutdown drain: ship anything still coalescing (records first;
+        // the storage fsyncs once more when it drops with the loop)
+        commit_records(&mut self.storage);
         let me = self.me;
         let links = &mut self.links;
         let transport = &mut self.transport;
@@ -464,6 +527,8 @@ impl<T: Transport> InlineLoop<T> {
 pub struct ShardedRuntime<T: Transport> {
     transport: T,
     nodes: Vec<Box<dyn Node>>,
+    /// per-hosted-pid durable WALs ([`ShardedRuntime::attach_storage`])
+    storage: FxHashMap<Pid, Storage>,
     on_deliver: Option<Arc<Mutex<DeliverFn>>>,
     stats: Arc<CoordStats>,
     epoch: Instant,
@@ -477,12 +542,21 @@ impl<T: Transport> ShardedRuntime<T> {
         ShardedRuntime {
             transport,
             nodes,
+            storage: FxHashMap::default(),
             on_deliver: None,
             stats: Arc::new(CoordStats::default()),
             epoch: Instant::now(),
             flush: FlushPolicy::default(),
             force_threaded: false,
         }
+    }
+
+    /// Attach a durable WAL for hosted pid `p` (one log per shard; see
+    /// [`crate::storage`]). The owning event loop appends the node's
+    /// journal records and group-commits them ahead of each cycle's
+    /// sends; on shutdown the log is fsynced.
+    pub fn attach_storage(&mut self, p: Pid, store: Storage) {
+        self.storage.insert(p, store);
     }
 
     /// Install the delivery callback (invoked from shard worker threads,
@@ -521,9 +595,11 @@ impl<T: Transport> ShardedRuntime<T> {
     pub fn run(mut self, stop: Arc<AtomicBool>) -> Vec<Box<dyn Node>> {
         if self.nodes.len() == 1 && !self.force_threaded {
             let node = self.nodes.pop().expect("one node");
+            let me = node.pid();
             let inline = InlineLoop {
-                me: node.pid(),
+                me,
                 node,
+                storage: self.storage.remove(&me),
                 transport: self.transport,
                 outbox: Outbox::new(),
                 scratch: Vec::new(),
@@ -570,11 +646,13 @@ impl<T: Transport> ShardedRuntime<T> {
         let mut workers = Vec::new();
         let mut senders: FxHashMap<Pid, Sender<(Pid, Pid, Wire)>> = FxHashMap::default();
         let nodes = std::mem::take(&mut self.nodes);
+        let mut storage = std::mem::take(&mut self.storage);
         for (node, (tx, rx)) in nodes.into_iter().zip(inboxes) {
             let pid = node.pid();
             senders.insert(pid, tx);
             let worker = ShardWorker {
                 node,
+                storage: storage.remove(&pid),
                 rx,
                 peers: peers.clone(),
                 out_tx: out_tx.clone(),
@@ -633,6 +711,13 @@ pub struct NodeRuntime<T: Transport> {
 impl<T: Transport> NodeRuntime<T> {
     pub fn new(node: Box<dyn Node>, transport: T) -> Self {
         NodeRuntime { inner: ShardedRuntime::new(vec![node], transport) }
+    }
+
+    /// Attach the node's durable WAL (see
+    /// [`ShardedRuntime::attach_storage`]).
+    pub fn attach_storage(&mut self, store: Storage) {
+        let pid = self.inner.nodes[0].pid();
+        self.inner.attach_storage(pid, store);
     }
 
     pub fn on_deliver(&mut self, f: DeliverFn) {

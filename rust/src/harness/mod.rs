@@ -212,6 +212,26 @@ pub fn build_world(cfg: &RunCfg) -> World {
     )
 }
 
+/// Give every member of `topo` simulated durable storage plus a
+/// rebuilder that restores a [`WbNode`] from its journal fold — after
+/// this, [`World::restart_at`] can bring any crashed member of the
+/// topology back through the recovery protocol (`wb` should have
+/// `durability` set, or the journals stay empty). Call once per shard
+/// topology for sharded worlds.
+pub fn enable_wb_storage(world: &mut World, topo: &Topology, wb: WbConfig) {
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            let t = topo.clone();
+            world.enable_storage(
+                p,
+                Box::new(move |snap: crate::storage::Snapshot| -> Box<dyn Node> {
+                    Box::new(WbNode::restore(p, t.clone(), wb, &snap))
+                }),
+            );
+        }
+    }
+}
+
 /// Run `cfg` and summarise. With `max_requests` set the run goes to
 /// quiescence; otherwise it simulates `duration` and measures after the
 /// warm-up window.

@@ -51,6 +51,18 @@
 //!   resolution + delivery-frontier check) and executes it from the leader
 //!   hot path; a bit-exact native fallback lives alongside it (and stands
 //!   in entirely when built without the optional `xla` feature).
+//! * [`storage`] — the durable per-node storage subsystem: a segmented,
+//!   CRC-checksummed write-ahead log with a group-commit fsync policy
+//!   ([`storage::SyncPolicy`]), compacted snapshots and torn-tail
+//!   truncation on open. Behind `WbConfig::durability` a `WbNode`
+//!   journals its ballot promises, acknowledged accepts, commits and
+//!   deliveries *before* they are externally acknowledged; a killed
+//!   process restores from log + snapshot
+//!   (`WbNode::restore`) and rejoins its group through the existing
+//!   recovery path. Wired through the coordinator (one log per hosted
+//!   shard, `--data-dir`/`--sync` on `serve`) and the simulator
+//!   ([`storage::MemWal`] + the `Restart` event), so crash-restart
+//!   schedules run under the same invariant checks.
 //! * [`paxos`], [`lss`] — substrates: multi-Paxos (for the black-box
 //!   baselines) and an Ω-style leader selection service.
 //! * [`client`], [`stats`], [`harness`] — closed-loop workload generator,
@@ -72,6 +84,7 @@ pub mod protocols;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod storage;
 pub mod types;
 pub mod util;
 

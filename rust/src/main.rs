@@ -6,9 +6,19 @@
 //!            [--seed 42]                       # simulated deployment
 //! wbam table                                   # §V latency table (T-lat)
 //! wbam serve --pid 0 --config cluster.toml [--shards 4]   # TCP member endpoint
+//!            [--data-dir DIR] [--sync always|never|interval|interval:<us>]
 //! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100 [--shards 4]
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
+//!
+//! Durable storage (`serve`): with `--data-dir` every hosted shard node
+//! journals its protocol state into a segmented, CRC-checksummed WAL
+//! under `DIR/p<pid>/` (group-commit fsync policy per `--sync`,
+//! default `interval` = at most one fsync per 5 ms). A killed `serve`
+//! restarted with the same `--data-dir` replays log + snapshot and
+//! rejoins its group through the recovery protocol. Type `quit` (or
+//! `q`) on stdin to stop cleanly; the final `CoordStats`/`NetStats`
+//! counter summary prints on shutdown.
 //!
 //! Adaptive wire coalescing (`sim`, `serve` and `client` accept all
 //! three; the default flushes one frame per link per event-loop cycle):
@@ -38,11 +48,12 @@ use wbam::client::{Client, ClientCfg};
 use wbam::config::{Args, Config};
 use wbam::coordinator::{NodeRuntime, ShardedRuntime};
 use wbam::harness::{run, Net, Proto, RunCfg};
-use wbam::net::TcpTransport;
+use wbam::net::{TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
-use wbam::runtime::{spawn_engine, XlaBackend};
+use wbam::runtime::{spawn_engine, CommitBackend, NativeBackend, XlaBackend};
 use wbam::sim::MS;
+use wbam::storage::{Storage, SyncPolicy};
 use wbam::types::{FlushPolicy, Pid, ShardMap};
 
 fn parse_proto(s: &str) -> Result<Proto> {
@@ -147,29 +158,95 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let mut wb = WbConfig::with_failures(5 * MS);
     wb.batch_threshold = a.usize_opt("batch", 1);
     wb.batch_flush_after = a.u64_opt("flush-us", 200) * 1000;
+    // durable storage: one WAL per hosted shard node under --data-dir
+    let data_dir = a.opt("data-dir").map(std::path::PathBuf::from);
+    let sync_spec = a.str_opt("sync", "interval");
+    let sync = SyncPolicy::parse(&sync_spec)
+        .with_context(|| format!("--sync {sync_spec:?} (always | never | interval | interval:<us>)"))?;
+    wb.durability = data_dir.is_some();
     let engine = if a.flag("xla") { Some(spawn_engine(wbam::runtime::engine::artifacts_dir())?) } else { None };
     let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    let mut stores: Vec<(Pid, Storage)> = Vec::new();
     for p in map.hosted_by(pid) {
         let topo = map.topo(map.shard_of(p).expect("hosted pid is a member"));
-        let node: Box<dyn Node> = match &engine {
-            Some(h) => Box::new(WbNode::with_backend(p, topo, wb, Box::new(XlaBackend::new(h.clone())))),
-            None => Box::new(WbNode::new(p, topo, wb)),
+        let backend: Box<dyn CommitBackend> = match &engine {
+            Some(h) => Box::new(XlaBackend::new(h.clone())),
+            None => Box::new(NativeBackend),
+        };
+        let node: Box<dyn Node> = match &data_dir {
+            Some(dir) => {
+                let store = Storage::open(dir.join(format!("p{}", p.0)), sync)
+                    .with_context(|| format!("opening storage for {p:?}"))?;
+                let node: Box<dyn Node> = if store.image().is_blank() {
+                    Box::new(WbNode::with_backend(p, topo, wb, backend))
+                } else {
+                    println!(
+                        "  {p:?}: restored {} journal records from {:?}; rejoining via recovery",
+                        store.record_count(),
+                        store.dir()
+                    );
+                    Box::new(WbNode::restore_with_backend(p, topo, wb, store.image(), backend))
+                };
+                stores.push((p, store));
+                node
+            }
+            None => Box::new(WbNode::with_backend(p, topo, wb, backend)),
         };
         nodes.push(node);
     }
     let transport = TcpTransport::bind(pid, addrs)?;
+    let net = transport.net_stats();
     println!(
-        "serving endpoint {pid:?}: {} shard node(s){}",
+        "serving endpoint {pid:?}: {} shard node(s){}{}",
         nodes.len(),
-        if nodes.len() == 1 { " (inline fast path)" } else { "" }
+        if nodes.len() == 1 { " (inline fast path)" } else { "" },
+        if wb.durability { " [durable]" } else { "" }
     );
     let stop = Arc::new(AtomicBool::new(false));
+    // clean-shutdown trigger: a `quit` line on stdin (the offline image
+    // has no signal-handling crate); EOF leaves the server running
+    {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match std::io::stdin().read_line(&mut line) {
+                    Ok(0) | Err(_) => return, // EOF/closed stdin: keep serving
+                    Ok(_) if matches!(line.trim(), "quit" | "q") => break,
+                    Ok(_) => {}
+                }
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+    }
     let mut rt = ShardedRuntime::new(nodes, transport);
+    for (p, s) in stores {
+        rt.attach_storage(p, s);
+    }
     rt.flush_policy(parse_flush(a));
+    let stats = rt.stats();
     rt.on_deliver(Box::new(|pid, m, gts, _| {
         log::info!("{pid:?} deliver {m:?} gts {gts:?}");
     }));
     rt.run(stop);
+    // final counter summary (storage WALs fsync as the runtime drops)
+    use std::sync::atomic::Ordering::Relaxed;
+    println!("endpoint {pid:?} shut down:");
+    println!(
+        "  coord: wires_in={} wires_out={} self_wires={} delivered={} dropped_frames={}",
+        stats.wires_in.load(Relaxed),
+        stats.wires_out.load(Relaxed),
+        stats.self_wires.load(Relaxed),
+        stats.delivered.load(Relaxed),
+        stats.dropped_frames.load(Relaxed),
+    );
+    println!(
+        "  net:   dropped_frames={} probes_alive={} probes_dead={}",
+        net.dropped_frames.load(Relaxed),
+        net.probes_alive.load(Relaxed),
+        net.probes_dead.load(Relaxed),
+    );
     Ok(())
 }
 

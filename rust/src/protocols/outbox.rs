@@ -37,6 +37,11 @@ pub struct Outbox {
     pub(crate) sends: Vec<(Pid, Wire)>,
     pub(crate) delivers: Vec<(MsgId, Ts)>,
     pub(crate) timers: Vec<(TimerKind, u64)>,
+    /// durable journal records ([`crate::storage::Record`]); the owning
+    /// runtime appends them to the node's WAL and commits them *before*
+    /// the same cycle's sends reach the transport, so no promise leaves
+    /// the process before it is recoverable
+    pub(crate) records: Vec<crate::storage::Record>,
     /// staged recipient list for [`Outbox::send_staged`] (reused scratch)
     staged: Vec<Pid>,
 }
@@ -105,10 +110,22 @@ impl Outbox {
         self.timers.push((kind, after_ns));
     }
 
+    /// Journal a durable record. The runtime persists it (and its
+    /// cycle-mates) at the group-commit point ahead of the cycle's
+    /// sends; runtimes without attached storage discard records.
+    #[inline]
+    pub fn record(&mut self, rec: crate::storage::Record) {
+        self.records.push(rec);
+    }
+
     pub fn is_empty(&self) -> bool {
         // staged counts: recipients staged without a send_staged would
         // otherwise leak invisibly into the next event's staged send
-        self.sends.is_empty() && self.delivers.is_empty() && self.timers.is_empty() && self.staged.is_empty()
+        self.sends.is_empty()
+            && self.delivers.is_empty()
+            && self.timers.is_empty()
+            && self.records.is_empty()
+            && self.staged.is_empty()
     }
 
     /// Drop all staged effects (buffers keep their capacity).
@@ -116,6 +133,7 @@ impl Outbox {
         self.sends.clear();
         self.delivers.clear();
         self.timers.clear();
+        self.records.clear();
         self.staged.clear();
     }
 
@@ -128,6 +146,9 @@ impl Outbox {
     }
     pub fn timers(&self) -> &[(TimerKind, u64)] {
         &self.timers
+    }
+    pub fn records(&self) -> &[crate::storage::Record] {
+        &self.records
     }
 }
 

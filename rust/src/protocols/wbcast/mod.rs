@@ -48,6 +48,13 @@ pub struct WbConfig {
     pub batch_threshold: usize,
     /// flush a non-empty stage after this long even if below threshold
     pub batch_flush_after: u64,
+    /// journal ballot promises, acknowledged accepts, commits and
+    /// deliveries into the runtime-attached [`crate::storage`] WAL
+    /// *before* they are externally acknowledged, so a killed process
+    /// can restore from disk ([`WbNode::restore`]) and rejoin through
+    /// the recovery path. Off by default: the hot path then emits no
+    /// records at all (a single branch per journal point).
+    pub durability: bool,
 }
 
 impl Default for WbConfig {
@@ -60,6 +67,7 @@ impl Default for WbConfig {
             gc: false,
             batch_threshold: 1,
             batch_flush_after: 0,
+            durability: false,
         }
     }
 }
@@ -75,6 +83,7 @@ impl WbConfig {
             gc: true,
             batch_threshold: 1,
             batch_flush_after: 0,
+            durability: false,
         }
     }
 }
@@ -163,6 +172,12 @@ pub struct WbNode {
     /// became leader (0 = initial leader / never)
     pub leader_since: u64,
 
+    /// restored from disk ([`WbNode::restore`]): `on_start` immediately
+    /// runs the recovery protocol to rejoin the group — the process may
+    /// have missed arbitrary traffic while down, and only a NEW_STATE
+    /// round resynchronises it (and fills its delivery gaps) safely
+    pub(crate) rejoin: bool,
+
     pub stats: WbStats,
 }
 
@@ -208,7 +223,86 @@ impl WbNode {
             gc_reports: HashMap::new(),
             gc_client_seq: HashMap::new(),
             leader_since: 0,
+            rejoin: false,
             stats: WbStats::default(),
+        }
+    }
+
+    /// Rebuild a node from its durable [`crate::storage::Snapshot`]
+    /// (WAL + snapshot replay, see [`crate::storage::Storage::image`]).
+    /// The node comes back as a FOLLOWER regardless of its pre-crash
+    /// status and, on start, rejoins through the existing recovery path
+    /// (Fig. 4 lines 35–66): a fresh candidacy resynchronises it with a
+    /// quorum and re-delivers everything it missed while down —
+    /// `max_delivered_gts` (journaled per delivery) deduplicates, so
+    /// nothing is delivered twice.
+    pub fn restore(pid: Pid, topo: Topology, cfg: WbConfig, snap: &crate::storage::Snapshot) -> Self {
+        Self::restore_with_backend(pid, topo, cfg, snap, Box::new(crate::runtime::NativeBackend))
+    }
+
+    /// [`WbNode::restore`] with an explicit commit backend.
+    pub fn restore_with_backend(
+        pid: Pid,
+        topo: Topology,
+        cfg: WbConfig,
+        snap: &crate::storage::Snapshot,
+        backend: Box<dyn crate::runtime::CommitBackend>,
+    ) -> Self {
+        let mut n = Self::with_backend(pid, topo, cfg, backend);
+        if snap.is_blank() {
+            return n; // nothing was ever journaled: a genuinely fresh node
+        }
+        n.status = Status::Follower;
+        n.rejoin = true;
+        n.ballot = n.ballot.max(snap.ballot);
+        n.cballot = n.cballot.max(snap.cballot);
+        n.clock = n.clock.max(snap.clock);
+        n.max_delivered_gts = snap.max_delivered_gts;
+        n.cur_leader[n.gid.0 as usize] = n.cballot.leader();
+        n.delivered_log = snap.delivered.iter().map(|(&g, &m)| (g, m)).collect();
+        n.gc_client_seq = snap.client_seq.iter().map(|(&c, &s)| (c, s)).collect();
+        let delivered: HashSet<MsgId> = snap.delivered.values().copied().collect();
+        for (&m, s) in &snap.state {
+            let mut e = Entry::new(s.meta.clone());
+            e.phase = s.phase;
+            e.lts = s.lts;
+            e.gts = s.gts;
+            match s.phase {
+                Phase::Accepted => {
+                    n.pending.insert((s.lts, m));
+                }
+                Phase::Committed => {
+                    e.delivered = delivered.contains(&m);
+                    if !e.delivered {
+                        n.committed.insert((s.gts, m));
+                    }
+                }
+                _ => {}
+            }
+            // `accepts` (remote leaders' proposals) is deliberately not
+            // journaled: it is re-learned from ACCEPT resends, and the
+            // rejoin recovery round supersedes our own group's proposal
+            n.entries.insert(m, e);
+        }
+        n
+    }
+
+    /// Journal `m`'s current replicated state (durability on only);
+    /// drained by the runtime ahead of this cycle's sends.
+    fn journal_state(&self, m: MsgId, out: &mut Outbox) {
+        if !self.cfg.durability {
+            return;
+        }
+        if let Some(e) = self.entries.get(&m) {
+            out.record(crate::storage::Record::State {
+                state: crate::types::wire::MsgState {
+                    meta: e.meta.clone(),
+                    phase: e.phase,
+                    lts: e.lts,
+                    gts: e.gts,
+                },
+                clock: self.clock,
+            });
         }
     }
 
@@ -394,8 +488,12 @@ impl WbNode {
         let gts = e.accepts.values().map(|&(_, l)| l).max().unwrap();
         self.clock = self.clock.max(gts.time());
         // line 16: acknowledge to every proposing leader (the ballot
-        // vector ends up owned by the wire, so recipients are staged)
+        // vector ends up owned by the wire, so recipients are staged).
+        // The acknowledged (lts, phase) pair is journaled first: the
+        // runtime commits it before the ACK can leave, so a restarted
+        // process still reports it in NEWLEADER_ACK (Invariant 2).
         let bals = Self::ballot_vector(e);
+        self.journal_state(m, out);
         for &(_, b) in &bals {
             out.stage(b.leader());
         }
@@ -488,6 +586,9 @@ impl WbNode {
             e.gts = o.gts;
             self.committed.insert((o.gts, o.m));
             self.stats.committed += 1;
+            // the resolved (lts, gts) pair is durable before any DELIVER
+            // or client notification for it leaves this cycle
+            self.journal_state(o.m, out);
         }
         self.try_deliver(out);
     }
@@ -524,6 +625,9 @@ impl WbNode {
             let c = m.client();
             let seq = self.gc_client_seq.entry(c).or_insert(0);
             *seq = (*seq).max(m.seq());
+            if self.cfg.durability {
+                out.record(crate::storage::Record::Deliver { m, lts, gts });
+            }
         }
         if notify {
             out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
@@ -558,6 +662,9 @@ impl WbNode {
         let seq = self.gc_client_seq.entry(c).or_insert(0);
         *seq = (*seq).max(m.seq());
         self.stats.delivered += 1;
+        if self.cfg.durability {
+            out.record(crate::storage::Record::Deliver { m, lts, gts });
+        }
         out.deliver(m, gts);
     }
 
@@ -584,7 +691,7 @@ impl WbNode {
     /// group member, so (a) its entry can never be needed again — every
     /// member's clock and `max_delivered_gts` already exceed it — and
     /// (b) duplicates are caught by the per-client sequence watermark.
-    fn gc_sweep(&mut self) -> Option<Ts> {
+    fn gc_sweep(&mut self, out: &mut Outbox) -> Option<Ts> {
         if !self.cfg.gc || self.status != Status::Leader {
             return None;
         }
@@ -598,7 +705,7 @@ impl WbNode {
         if wm.is_bot() {
             return None;
         }
-        self.trim_below(wm);
+        self.trim_below(wm, out);
         Some(wm)
     }
 
@@ -608,7 +715,11 @@ impl WbNode {
     /// still need its local timestamp / ACCEPT resend to finish their own
     /// commit — only once a *later* message of the same client is
     /// delivered is the previous one globally complete.
-    pub(crate) fn trim_below(&mut self, wm: Ts) {
+    pub(crate) fn trim_below(&mut self, wm: Ts, out: &mut Outbox) {
+        if self.cfg.durability {
+            // journal the watermark so a restart compacts identically
+            out.record(crate::storage::Record::Trim { wm });
+        }
         let drop: Vec<(Ts, MsgId)> = self
             .delivered_log
             .range(..=wm)
@@ -628,9 +739,16 @@ impl Node for WbNode {
         self.pid
     }
 
-    fn on_start(&mut self, _now: u64, out: &mut Outbox) {
+    fn on_start(&mut self, now: u64, out: &mut Outbox) {
         if self.cfg.hb_interval > 0 {
             out.timer(TimerKind::LssTick, self.cfg.hb_interval);
+        }
+        if self.rejoin {
+            // restored from disk: rejoin through the recovery protocol —
+            // a fresh candidacy resynchronises us with a quorum and
+            // resends the deliveries we missed while down
+            self.rejoin = false;
+            self.recover(now, out);
         }
     }
 
@@ -668,7 +786,7 @@ impl Node for WbNode {
                 if self.status == Status::Leader {
                     // follower report: update watermark, sweep, announce
                     self.gc_reports.insert(from, max_gts);
-                    if let Some(wm) = self.gc_sweep() {
+                    if let Some(wm) = self.gc_sweep(out) {
                         let me = self.pid;
                         out.send_to_many(
                             self.group().iter().copied().filter(|&p| p != me),
@@ -677,7 +795,7 @@ impl Node for WbNode {
                     }
                 } else if from == self.cballot.leader() {
                     // leader's group-wide watermark announcement
-                    self.trim_below(max_gts);
+                    self.trim_below(max_gts, out);
                 }
             }
             _ => {}

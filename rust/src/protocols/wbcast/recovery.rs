@@ -54,6 +54,15 @@ impl WbNode {
         self.nl_acks.clear();
         self.ns_acks.clear();
         self.last_hb = now; // give the candidate time before suspecting it
+        if self.cfg.durability {
+            // the ballot promise must survive a restart: journaled (and
+            // committed by the runtime) before the vote leaves
+            out.record(crate::storage::Record::Promote {
+                ballot: b,
+                cballot: self.cballot,
+                clock: self.clock,
+            });
+        }
         out.send(
             from,
             Wire::NewLeaderAck { bal: b, cbal: self.cballot, clock: self.clock, state: self.snapshot() },
@@ -114,6 +123,17 @@ impl WbNode {
         self.adopt(&merged.values().cloned().collect::<Vec<_>>(), new_clock);
         self.cballot = b; // line 55
         let state_out: Vec<MsgState> = self.snapshot();
+        if self.cfg.durability {
+            // the merged state replaces the journal image wholesale (an
+            // Adopt record, not per-entry upserts): a restart must not
+            // resurrect entries the merge dropped (Invariant 2)
+            out.record(crate::storage::Record::Adopt {
+                ballot: b,
+                cballot: b,
+                clock: new_clock,
+                state: state_out.clone(),
+            });
+        }
         self.ns_acks.clear();
         self.ns_acks.insert(self.pid);
         for &p in self.group() {
@@ -182,6 +202,11 @@ impl WbNode {
         self.cballot = b;
         self.cur_leader[self.gid.0 as usize] = b.leader();
         self.last_hb = now;
+        if self.cfg.durability {
+            // adopted state + completed promotion, durable before the ACK
+            // confirms the synchronisation (Invariant 5)
+            out.record(crate::storage::Record::Adopt { ballot: b, cballot: b, clock, state });
+        }
         out.send(from, Wire::NewStateAck { bal: b });
     }
 
@@ -206,10 +231,14 @@ impl WbNode {
         self.last_hb = now;
 
         // lines 66-68: re-deliver all committed messages "starting from
-        // the beginning" — followers deduplicate via max_delivered_gts
+        // the beginning" — followers deduplicate via max_delivered_gts.
+        // A delivered message may lack an entry: GC (or an adoption from
+        // peers that already GC'd it) can trim the entry while the local
+        // delivery record survives — then every member has it delivered
+        // and there is nothing to resend.
         let resend: Vec<(Ts, MsgId)> = self.delivered_log.iter().map(|(&g, &m)| (g, m)).collect();
         for (gts, m) in resend {
-            let e = &self.entries[&m];
+            let Some(e) = self.entries.get(&m) else { continue };
             let (lts, bal) = (e.lts, self.cballot);
             let me = self.pid;
             out.send_to_many(

@@ -54,6 +54,11 @@ enum EventKind {
     Arrival { from: Pid, wire: Wire },
     Timer(TimerKind),
     Crash,
+    /// restart a crashed process from its simulated durable storage
+    /// ([`World::enable_storage`]): the node is rebuilt from the
+    /// [`crate::storage::MemWal`] fold — state round-trips through the
+    /// on-disk record codec — and rejoins via `on_start`
+    Restart,
     /// wake a busy process to work through its backlog queue
     Drain,
     /// a held link's [`FlushPolicy`] delay window expired — emit what is
@@ -61,6 +66,10 @@ enum EventKind {
     /// sleep on the coalescer deadline)
     FlushDue,
 }
+
+/// Rebuilds a node from its recovered storage image at restart
+/// (registered per pid via [`World::enable_storage`]).
+pub type RestartFn = Box<dyn FnMut(crate::storage::Snapshot) -> Box<dyn Node>>;
 
 #[derive(Clone, Debug)]
 struct Event {
@@ -153,6 +162,12 @@ pub struct World {
     frames: Vec<(Pid, Wire)>,
     /// wire batching on/off (SimConfig::coalesce)
     coalesce: bool,
+    /// per-pid simulated durable storage (journal records persist here
+    /// at the end of the event that produced them — the sim's events
+    /// are atomic, so this matches the runtimes' commit-before-send)
+    stores: FxHashMap<Pid, crate::storage::MemWal>,
+    /// per-pid node factories consulted by [`EventKind::Restart`]
+    rebuilders: FxHashMap<Pid, RestartFn>,
     /// debug: print every handled event (env `WBAM_SIM_LOG=1`)
     pub log_events: bool,
 }
@@ -193,6 +208,8 @@ impl World {
             flush_scheduled: vec![None; n],
             frames: Vec::new(),
             coalesce: cfg.coalesce,
+            stores: FxHashMap::default(),
+            rebuilders: FxHashMap::default(),
             log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
         }
     }
@@ -213,6 +230,30 @@ impl World {
     /// Schedule a crash of `pid` at virtual time `time`.
     pub fn crash_at(&mut self, pid: Pid, time: u64) {
         self.push(time, pid, EventKind::Crash);
+    }
+
+    /// Give `pid` simulated durable storage: its journal records
+    /// ([`crate::protocols::Outbox::record`]) persist into a
+    /// [`crate::storage::MemWal`] — the identical record framing the
+    /// file-backed WAL uses — and a later [`World::restart_at`] rebuilds
+    /// the node from the decoded fold via `rebuild`.
+    pub fn enable_storage(&mut self, pid: Pid, rebuild: RestartFn) {
+        self.stores.insert(pid, crate::storage::MemWal::new());
+        self.rebuilders.insert(pid, rebuild);
+    }
+
+    /// Schedule a restart of `pid` at virtual time `time`. Only takes
+    /// effect if the pid has crashed by then and
+    /// [`World::enable_storage`] registered a rebuilder; the node is
+    /// reconstructed from its storage fold and `on_start` runs (a
+    /// restored `WbNode` rejoins through the recovery protocol).
+    pub fn restart_at(&mut self, pid: Pid, time: u64) {
+        self.push(time, pid, EventKind::Restart);
+    }
+
+    /// Inspect a pid's simulated storage (tests).
+    pub fn store(&self, pid: Pid) -> Option<&crate::storage::MemWal> {
+        self.stores.get(&pid)
     }
 
     fn start(&mut self) {
@@ -237,6 +278,17 @@ impl World {
     /// Outbox and frame buffers are retained for reuse.
     fn finish_event(&mut self, idx: usize, pid: Pid, time: u64, cost_in: u64, charge_sends: bool) {
         let t0 = time + cost_in;
+        // persist journal records before the event's sends ship: events
+        // are atomic in the sim, so this is the virtual-time analogue of
+        // the runtimes' commit-before-flush group-commit point
+        if !self.outbox.records.is_empty() {
+            if let Some(store) = self.stores.get_mut(&pid) {
+                for rec in &self.outbox.records {
+                    store.append(rec);
+                }
+            }
+            self.outbox.records.clear();
+        }
         let mut frames = std::mem::take(&mut self.frames);
         if self.coalesce {
             // "quiet" mirrors the real event loops: no more input is
@@ -346,6 +398,11 @@ impl World {
         let Some(Reverse(ev)) = self.heap.pop() else { return false };
         self.now = ev.time;
         let Some(&idx) = self.pid_index.get(&ev.to) else { return true };
+        if let EventKind::Restart = ev.kind {
+            // the only event a crashed process reacts to
+            self.do_restart(idx, ev.to, ev.time);
+            return true;
+        }
         if self.crashed[idx] {
             return true; // drop events to crashed processes
         }
@@ -353,6 +410,11 @@ impl World {
             EventKind::Crash => {
                 self.crashed[idx] = true;
                 self.backlog[idx].clear();
+                // the pending Drain wake-up (if any) will be dropped by
+                // the crashed-process filter: clear the flag too, or a
+                // later Restart could never schedule another drain and
+                // the reborn node would backlog events forever
+                self.drain_scheduled[idx] = false;
                 // unflushed coalescing wires die with the process
                 self.links[idx].clear();
                 self.flush_scheduled[idx] = None;
@@ -384,6 +446,7 @@ impl World {
                     self.push(self.busy_until[idx], ev.to, EventKind::Drain);
                 }
             }
+            EventKind::Restart => unreachable!("restarts are handled before the crash filter"),
             EventKind::Arrival { .. } | EventKind::Timer(_) => {
                 // single-threaded server: queue behind in-progress work
                 // (FIFO backlog + one Drain wake-up keeps this O(1) per
@@ -400,6 +463,28 @@ impl World {
             }
         }
         true
+    }
+
+    /// Rebuild a crashed process from its simulated storage: decode the
+    /// [`crate::storage::MemWal`] fold (the exact on-disk codec path),
+    /// hand it to the registered rebuilder, and start the reborn node —
+    /// a restored `WbNode` immediately rejoins via the recovery
+    /// protocol. No-op if the pid never crashed or has no storage.
+    fn do_restart(&mut self, idx: usize, pid: Pid, time: u64) {
+        if !self.crashed[idx] {
+            return;
+        }
+        let Some(store) = self.stores.get(&pid) else { return };
+        let snap = store.recover();
+        let Some(rebuild) = self.rebuilders.get_mut(&pid) else { return };
+        let node = rebuild(snap);
+        assert_eq!(node.pid(), pid, "rebuilder returned a different pid");
+        self.crashed[idx] = false;
+        self.busy_until[idx] = time;
+        self.nodes[idx] = node;
+        self.trace.on_restart(time, pid);
+        self.nodes[idx].on_start(time, &mut self.outbox);
+        self.finish_event(idx, pid, time, 0, false);
     }
 
     /// Execute one node event at `time`, charging the CPU cost model.

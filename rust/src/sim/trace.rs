@@ -37,6 +37,11 @@ pub struct Trace {
     pub multicasts: HashMap<MsgId, (u64, GidSet)>,
     pub deliveries: Vec<DeliveryEv>,
     pub crashes: Vec<(u64, Pid)>,
+    /// processes that crashed and later restarted from durable storage:
+    /// they are *correct* again, so [`Trace::on_restart`] removes them
+    /// from `crashes` — the termination checker then holds them to the
+    /// full quorum obligations (the strictest possible restart check)
+    pub restarts: Vec<(u64, Pid)>,
     /// first-delivery latency samples (ns), one per (message, dest group)
     pub latencies: Vec<u64>,
     /// completion times of fully (partially-per-§II) delivered multicasts
@@ -66,6 +71,7 @@ impl Trace {
             multicasts: HashMap::new(),
             deliveries: Vec::new(),
             crashes: Vec::new(),
+            restarts: Vec::new(),
             latencies: Vec::new(),
             completions: Vec::new(),
             inflight: HashMap::new(),
@@ -114,6 +120,15 @@ impl Trace {
 
     pub fn on_crash(&mut self, time: u64, pid: Pid) {
         self.crashes.push((time, pid));
+    }
+
+    /// `pid` restarted from durable storage and is correct again: its
+    /// crash entries are withdrawn, so every checker treats it exactly
+    /// like a process that never failed (it must catch up on everything
+    /// it missed — the recovery protocol's job).
+    pub fn on_restart(&mut self, time: u64, pid: Pid) {
+        self.crashes.retain(|&(_, p)| p != pid);
+        self.restarts.push((time, pid));
     }
 
     /// Messages multicast but not yet delivered in all destination groups.
@@ -189,6 +204,11 @@ impl Trace {
         for &(time, pid) in &self.crashes {
             if self.map.shard_of(pid) == Some(s) {
                 t.on_crash(time, pid);
+            }
+        }
+        for &(time, pid) in &self.restarts {
+            if self.map.shard_of(pid) == Some(s) {
+                t.restarts.push((time, pid));
             }
         }
         t
