@@ -9,21 +9,49 @@
 //!     make artifacts && cargo run --release --example e2e_cluster
 //!
 //! Env knobs: WBAM_E2E_SECS (default 10), WBAM_E2E_CLIENTS (default 40),
-//! WBAM_E2E_DEST (default 3), WBAM_E2E_BACKEND=xla|native.
+//! WBAM_E2E_DEST (default 3), WBAM_E2E_BACKEND=xla|native, and
+//! WBAM_E2E_TRANSPORT=inproc|tcp|epoll (default inproc) — tcp/epoll run
+//! every endpoint over real localhost sockets through the same
+//! transport-generic cluster launcher the benches use.
 
 use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{Cluster, DeliverFn};
+use wbam::net::{TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, QuantileEngine, XlaBackend};
 use wbam::stats::Histogram;
-use wbam::types::{MsgId, Pid, Topology, Ts};
+use wbam::types::{FlushPolicy, MsgId, Pid, Topology, Ts};
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Launch the node set over the transport named by WBAM_E2E_TRANSPORT:
+/// the in-process mesh (default), or real localhost sockets over the
+/// threaded TCP transport / the epoll event loop (one endpoint per
+/// node, ports from 39000).
+fn launch(kind: &str, nodes: Vec<Box<dyn Node>>, cb: Arc<Mutex<DeliverFn>>) -> Cluster {
+    if kind == "inproc" {
+        return Cluster::launch(nodes, Some(cb));
+    }
+    let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        addrs.insert(n.pid(), format!("127.0.0.1:{}", 39000 + i as u16).parse().unwrap());
+    }
+    let hosts: Vec<Vec<Box<dyn Node>>> = nodes.into_iter().map(|n| vec![n]).collect();
+    Cluster::launch_hosts_over(hosts, Some(cb), FlushPolicy::default(), |pids| -> Box<dyn Transport> {
+        match kind {
+            "tcp" => Box::new(TcpTransport::bind(pids[0], addrs.clone()).expect("bind tcp")),
+            #[cfg(target_os = "linux")]
+            "epoll" => Box::new(wbam::net::EpollTransport::bind(pids[0], addrs.clone()).expect("bind epoll")),
+            other => panic!("WBAM_E2E_TRANSPORT={other}: unknown transport (inproc|tcp|epoll)"),
+        }
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -31,15 +59,17 @@ fn main() -> anyhow::Result<()> {
     let n_clients = env_u64("WBAM_E2E_CLIENTS", 40) as u32;
     let dest_groups = env_u64("WBAM_E2E_DEST", 3) as usize;
     let backend = std::env::var("WBAM_E2E_BACKEND").unwrap_or_else(|_| "xla".into());
+    let transport = std::env::var("WBAM_E2E_TRANSPORT").unwrap_or_else(|_| "inproc".into());
 
     let topo = Topology::new(10, 1);
     println!(
-        "e2e cluster: {} groups x {} replicas + {} clients (dest={}, backend={}, {}s)",
+        "e2e cluster: {} groups x {} replicas + {} clients (dest={}, backend={}, transport={}, {}s)",
         topo.num_groups(),
         topo.group_size(),
         n_clients,
         dest_groups,
         backend,
+        transport,
         secs
     );
 
@@ -91,7 +121,7 @@ fn main() -> anyhow::Result<()> {
     })));
 
     let t0 = Instant::now();
-    let cluster = Cluster::launch(nodes, Some(cb));
+    let cluster = launch(&transport, nodes, cb);
     std::thread::sleep(Duration::from_secs(secs));
     let nodes = cluster.shutdown();
     let wall = t0.elapsed().as_secs_f64();

@@ -6,10 +6,16 @@
 //! directly visible: WbCast (3δ) < FastCast (4δ) < FT-Skeen (6δ); the
 //! paper reports a ~2x average win over FastCast at 8000 clients.
 //!
+//! The trailing section sweeps the adaptive [`FlushPolicy`] on/off at
+//! WAN delays (EXPERIMENTS.md §Coalescing knees, Fig. 8 rows): below
+//! the CPU knee the δ-dominated latency hides the policy entirely; at
+//! the knee the 200 µs window fattens frames and shifts it right.
+//!
 //! `cargo bench --bench fig8_wan` (WBAM_BENCH_FULL=1 for the full sweep).
 
 use wbam::harness::{run, Net, Proto, RunCfg};
 use wbam::sim::MS;
+use wbam::types::FlushPolicy;
 
 fn main() {
     let full = std::env::var("WBAM_BENCH_FULL").is_ok();
@@ -41,5 +47,26 @@ fn main() {
             fc.1 / wb.1,
             wb.2 / fc.2
         );
+    }
+
+    // adaptive flush policy on/off at WAN delays (WbCast, dest=4): the
+    // rows EXPERIMENTS.md §Coalescing knees records. Quiet-flush keeps
+    // the sub-knee runs identical to immediate by construction; the
+    // interesting delta is at the largest client counts.
+    println!("\n== Fig. 8 adaptive-flush ablation (WbCast, 10 groups, dest=4) ==");
+    let policies: [(&str, FlushPolicy); 2] = [
+        ("immediate     ", FlushPolicy::immediate()),
+        ("adaptive 200us", FlushPolicy { max_delay_us: 200, max_bytes: 1 << 20, flush_on_quiet: true }),
+    ];
+    for (name, policy) in policies {
+        for &c in clients {
+            let mut cfg = RunCfg::new(Proto::WbCast, 10, c, 4, Net::Wan);
+            cfg.duration = 3_000 * MS;
+            cfg.warmup_frac = 0.3;
+            cfg.seed = 8;
+            cfg.flush = policy;
+            let r = run(&cfg);
+            println!("flush={name} {}", r.row());
+        }
     }
 }

@@ -2,16 +2,20 @@
 //! commit path driven through the reusable [`Outbox`] (zero per-event
 //! effect allocations), the simulator event loop, the headline wire
 //! batching / sharding ablations at saturation, the inline-vs-threaded
-//! 1-shard runtime latency comparison, and the adaptive flush-policy
-//! ablation.
+//! 1-shard runtime latency comparison, the adaptive flush-policy
+//! ablation, and the thread-per-connection vs epoll transport ablation
+//! over real localhost sockets (EXPERIMENTS.md §Transport ablation).
 //!
 //! Set `WBAM_SMOKE=1` for a seconds-long bit-rot check (tiny iteration
 //! counts; the printed numbers are meaningless) — CI runs this mode.
 
+use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::time::Instant;
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{one_shard_round_trip_ns, Cluster};
 use wbam::harness::{run, Net, Proto, RunCfg};
+use wbam::net::{TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox};
 use wbam::sim::MS;
@@ -166,6 +170,37 @@ fn main() {
         println!("  shards={s:<2} {thru:.0} multicasts/s");
     }
 
+    // transport ablation (EXPERIMENTS.md §Transport ablation): the same
+    // closed-loop deployment over real localhost sockets, once on the
+    // thread-per-connection TCP transport and once on the epoll event
+    // loop. The thread column is the O(connections)-vs-O(1) cost made
+    // visible: tcp holds one reader thread per accepted connection,
+    // epoll exactly one loop thread per endpoint. Acceptance bar for
+    // the epoll transport: >= 1x the threaded throughput at the
+    // saturation knee (it must not cost throughput to save the threads).
+    let tcli = if smoke { 8 } else { 32 };
+    println!("\ntransport ablation (real sockets, 2 groups x 3 replicas, {tcli} clients, dest=2, {secs}s):");
+    let mut tthru = [0f64; 2];
+    for (i, &kind) in ["tcp", "epoll"].iter().enumerate() {
+        if kind == "epoll" && !cfg!(target_os = "linux") {
+            println!("  epoll  (skipped: requires linux)");
+            continue;
+        }
+        // process-keyed bases (like the unit tests' next_port) so a
+        // concurrent or back-to-back run cannot collide on a listener
+        let base = 33000 + (std::process::id() % 300) as u16 * 96 + (i as u16) * 48;
+        let (thru, threads) = socket_cluster_throughput(kind, tcli, secs, base);
+        tthru[i] = thru;
+        println!("  {kind:<6} {thru:.0} multicasts/s   ({threads} process threads at steady state)");
+    }
+    if tthru[0] > 0.0 && tthru[1] > 0.0 {
+        let gain = tthru[1] / tthru[0];
+        println!(
+            "  => epoll vs thread-per-conn throughput: {gain:.2}x {}",
+            if gain >= 1.0 { "(≥1x target met)" } else { "(below 1x target)" }
+        );
+    }
+
     // inline 1-shard fast path vs the threaded worker/flusher pipeline
     // on single-message latency: the inline loop removes two channel
     // hops and two thread wakeups per message. Acceptance bar: >= 20%
@@ -252,6 +287,74 @@ fn real_cluster_throughput(shards: usize, n_clients: u32, secs: u64) -> f64 {
         }
     }
     completed as f64 / wall
+}
+
+/// Closed-loop throughput of the same deployment over real localhost
+/// sockets: 6 single-node member endpoints + `n_clients` client
+/// endpoints, all bound through transport `kind`. Returns
+/// `(multicasts/s, process thread count at steady state)` — the thread
+/// count is the thread-per-connection vs event-loop comparison.
+fn socket_cluster_throughput(kind: &str, n_clients: u32, secs: u64, base: u16) -> (f64, usize) {
+    let topo = Topology::new(2, 1);
+    let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
+    let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+    for i in 0..6u32 {
+        addrs.insert(Pid(i), format!("127.0.0.1:{}", base + i as u16).parse().unwrap());
+    }
+    for c in 0..n_clients {
+        let pid = Pid(topo.first_client_pid().0 + c);
+        addrs.insert(pid, format!("127.0.0.1:{}", base + 6 + c as u16).parse().unwrap());
+    }
+    let mut hosts: Vec<Vec<Box<dyn Node>>> = Vec::new();
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            hosts.push(vec![Box::new(WbNode::new(p, topo.clone(), wb))]);
+        }
+    }
+    for c in 0..n_clients {
+        let pid = Pid(topo.first_client_pid().0 + c);
+        let cfg = ClientCfg { dest_groups: 2, resend_after: 2_000_000_000, ..Default::default() };
+        hosts.push(vec![Box::new(Client::new(pid, topo.clone(), cfg, 0xEB011 + c as u64))]);
+    }
+    let t0 = Instant::now();
+    let cluster =
+        Cluster::launch_hosts_over(hosts, None, FlushPolicy::default(), |pids| bind_kind(kind, pids[0], &addrs));
+    std::thread::sleep(std::time::Duration::from_millis(500)); // listeners up, loop warm
+    let threads = process_threads();
+    std::thread::sleep(std::time::Duration::from_secs(secs));
+    let nodes = cluster.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    let mut completed = 0usize;
+    for n in &nodes {
+        let any: &dyn Node = &**n;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            completed += c.completed.len();
+        }
+    }
+    (completed as f64 / wall, threads)
+}
+
+/// Bind one endpoint over the named transport.
+fn bind_kind(kind: &str, pid: Pid, addrs: &HashMap<Pid, SocketAddr>) -> Box<dyn Transport> {
+    match kind {
+        "tcp" => Box::new(TcpTransport::bind(pid, addrs.clone()).expect("bind tcp")),
+        #[cfg(target_os = "linux")]
+        "epoll" => Box::new(wbam::net::EpollTransport::bind(pid, addrs.clone()).expect("bind epoll")),
+        other => panic!("unknown transport {other}"),
+    }
+}
+
+/// This process's thread count per /proc (0 where unavailable).
+fn process_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
 }
 
 /// run() with an overridden client payload size.

@@ -1,6 +1,9 @@
 //! Coordinator runtime: drives the same [`Node`] state machines that run
 //! under the simulator on *real threads* over a [`Transport`]
-//! (in-process or TCP).
+//! (in-process mesh, threaded TCP, or the Linux epoll event loop —
+//! both runtime shapes below are transport-generic, so the ablation in
+//! the `hotpath` bench swaps transports without touching protocol or
+//! runtime code).
 //!
 //! One [`ShardedRuntime`] per transport endpoint. An endpoint hosting
 //! **exactly one node** — every client, the CLI `serve` of an unsharded
@@ -537,6 +540,9 @@ pub struct ShardedRuntime<T: Transport> {
 }
 
 impl<T: Transport> ShardedRuntime<T> {
+    /// Host `nodes` (at least one) on `transport`. Nothing runs until
+    /// [`ShardedRuntime::run`]; configure callbacks, storage and the
+    /// flush policy in between.
     pub fn new(nodes: Vec<Box<dyn Node>>, transport: T) -> Self {
         assert!(!nodes.is_empty(), "an endpoint must host at least one node");
         ShardedRuntime {
@@ -709,6 +715,7 @@ pub struct NodeRuntime<T: Transport> {
 }
 
 impl<T: Transport> NodeRuntime<T> {
+    /// Host one `node` on `transport` (the inline fast path).
     pub fn new(node: Box<dyn Node>, transport: T) -> Self {
         NodeRuntime { inner: ShardedRuntime::new(vec![node], transport) }
     }
@@ -720,6 +727,8 @@ impl<T: Transport> NodeRuntime<T> {
         self.inner.attach_storage(pid, store);
     }
 
+    /// Install the delivery callback (see
+    /// [`ShardedRuntime::on_deliver`]).
     pub fn on_deliver(&mut self, f: DeliverFn) {
         self.inner.on_deliver(f);
     }
@@ -735,6 +744,7 @@ impl<T: Transport> NodeRuntime<T> {
         self.inner.force_threaded();
     }
 
+    /// Shared counters handle (see [`ShardedRuntime::stats`]).
     pub fn stats(&self) -> Arc<CoordStats> {
         self.inner.stats()
     }
@@ -870,14 +880,24 @@ pub fn one_shard_round_trip_ns(trips: u64, threaded: bool) -> f64 {
     elapsed.as_nanos() as f64 / trips as f64
 }
 
-/// A whole in-process cluster: endpoints (each hosting one or more
-/// nodes) on threads over a fresh [`crate::net::InProcMesh`].
+/// A whole cluster on threads: endpoints (each hosting one or more
+/// nodes), by default over a fresh in-process
+/// [`InProcMesh`](crate::net::InProcMesh), or over any [`Transport`]
+/// via [`Cluster::launch_hosts_over`] (real TCP / epoll sockets).
 pub struct Cluster {
+    /// raise to stop every endpoint (what [`Cluster::shutdown`] does)
     pub stop: Arc<AtomicBool>,
+    /// one join handle per endpoint, yielding its nodes back
     pub handles: Vec<std::thread::JoinHandle<Vec<Box<dyn Node>>>>,
-    /// mesh-wide transport counters (`dropped_frames` is zero on a
-    /// healthy run — only disconnects make the mesh drop)
+    /// transport counters: mesh-wide for in-process launches
+    /// (`dropped_frames` is zero on a healthy run — only disconnects
+    /// make the mesh drop); the first endpoint's for
+    /// [`Cluster::launch_hosts_over`] launches, where each endpoint has
+    /// its own counters — see [`Cluster::nets`]
     pub net: Arc<crate::net::NetStats>,
+    /// per-endpoint transport counters, in host order (all clones of
+    /// one mesh-wide handle for in-process launches)
+    pub nets: Vec<Arc<crate::net::NetStats>>,
 }
 
 impl Cluster {
@@ -892,6 +912,38 @@ impl Cluster {
     /// sharing endpoint `i` (e.g. one machine's shard counterparts per
     /// [`crate::types::ShardMap::hosted_by`], clients as singleton
     /// hosts).
+    ///
+    /// ```
+    /// use wbam::coordinator::Cluster;
+    /// use wbam::protocols::{Node, Outbox, TimerKind};
+    /// use wbam::types::{Ballot, Pid, Wire};
+    ///
+    /// // a minimal Node: greets its peer once at startup
+    /// struct Hello {
+    ///     pid: Pid,
+    ///     peer: Pid,
+    /// }
+    /// impl Node for Hello {
+    ///     fn pid(&self) -> Pid {
+    ///         self.pid
+    ///     }
+    ///     fn on_start(&mut self, _now: u64, out: &mut Outbox) {
+    ///         out.send(self.peer, Wire::Heartbeat { bal: Ballot::new(1, self.pid) });
+    ///     }
+    ///     fn on_wire(&mut self, _from: Pid, _w: Wire, _now: u64, _out: &mut Outbox) {}
+    ///     fn on_timer(&mut self, _t: TimerKind, _now: u64, _out: &mut Outbox) {}
+    /// }
+    ///
+    /// // two single-node hosts over a fresh in-process mesh
+    /// let hosts: Vec<Vec<Box<dyn Node>>> = vec![
+    ///     vec![Box::new(Hello { pid: Pid(1), peer: Pid(2) })],
+    ///     vec![Box::new(Hello { pid: Pid(2), peer: Pid(1) })],
+    /// ];
+    /// let cluster = Cluster::launch_hosts(hosts, None);
+    /// std::thread::sleep(std::time::Duration::from_millis(100));
+    /// let nodes = cluster.shutdown();
+    /// assert_eq!(nodes.len(), 2); // the nodes come back for inspection
+    /// ```
     pub fn launch_hosts(
         hosts: Vec<Vec<Box<dyn Node>>>,
         on_deliver: Option<Arc<Mutex<DeliverFn>>>,
@@ -908,16 +960,39 @@ impl Cluster {
     ) -> Cluster {
         let mesh = crate::net::InProcMesh::new();
         let net = mesh.net_stats();
+        let mut cluster = Self::launch_hosts_over(hosts, on_deliver, flush, |pids| mesh.endpoint_hosting(pids));
+        cluster.net = net; // mesh-wide counters, even with zero hosts
+        cluster
+    }
+
+    /// The transport-generic launcher behind the in-process variants:
+    /// `endpoint(&pids)` builds the transport for each host (the slice
+    /// holds the pids that host serves), so the same deployment code
+    /// runs over the mesh, threaded TCP or epoll sockets — the
+    /// `hotpath` bench's transport ablation and the epoll parity e2e
+    /// use exactly this. Every endpoint is created (bound, listening)
+    /// before any node starts, so early sends have somewhere to go.
+    pub fn launch_hosts_over<T, F>(
+        hosts: Vec<Vec<Box<dyn Node>>>,
+        on_deliver: Option<Arc<Mutex<DeliverFn>>>,
+        flush: FlushPolicy,
+        mut endpoint: F,
+    ) -> Cluster
+    where
+        T: Transport + 'static,
+        F: FnMut(&[Pid]) -> T,
+    {
         let stop = Arc::new(AtomicBool::new(false));
-        // register all endpoints before starting any node so early sends
-        // have somewhere to go
-        let endpoints: Vec<_> = hosts
+        // create all endpoints before starting any node
+        let endpoints: Vec<T> = hosts
             .iter()
             .map(|ns| {
                 let pids: Vec<Pid> = ns.iter().map(|n| n.pid()).collect();
-                mesh.endpoint_hosting(&pids)
+                endpoint(&pids)
             })
             .collect();
+        let nets: Vec<Arc<crate::net::NetStats>> = endpoints.iter().map(|e| e.net_stats()).collect();
+        let net = nets.first().cloned().unwrap_or_default();
         let mut handles = Vec::new();
         for (ns, ep) in hosts.into_iter().zip(endpoints) {
             // hand every endpoint the same shared callback handle: one
@@ -939,7 +1014,7 @@ impl Cluster {
                     .expect("spawn host thread"),
             );
         }
-        Cluster { stop, handles, net }
+        Cluster { stop, handles, net, nets }
     }
 
     /// Stop all endpoint threads and collect the nodes.

@@ -6,6 +6,12 @@
 //! obtained by weaving Skeen's timestamp protocol across groups together
 //! with a Paxos-style quorum replication within each group.
 //!
+//! The repo-level `ARCHITECTURE.md` is the map of this crate: the layer
+//! stack (types/codec → net → coordinator → protocols → storage →
+//! sim/harness), a message-lifecycle walkthrough cross-referenced to
+//! the paper's message-delay counts, and the runtime shapes. Perf
+//! methodology and history live in `EXPERIMENTS.md`.
+//!
 //! The crate contains:
 //!
 //! * [`protocols`] — event-driven state machines for the paper's protocol
@@ -27,7 +33,9 @@
 //!   regenerate every figure of the paper's evaluation and to validate the
 //!   latency theorems of §V. Batch frames arrive as one event with one
 //!   frame-level CPU charge ([`sim::SimConfig::coalesce`]).
-//! * [`net`] + [`coordinator`] — real transports (in-process, TCP) and
+//! * [`net`] + [`coordinator`] — real transports (in-process mesh,
+//!   thread-per-connection TCP, and a Linux epoll event-loop transport
+//!   that serves every connection from one thread per endpoint) and
 //!   the runtimes that drive the same state machines on actual threads.
 //!   A 1-node endpoint (every client, unsharded `serve`) runs an
 //!   **inline fast path** — dispatch, timers and flush on the receive
@@ -44,8 +52,9 @@
 //!   an adaptive delay/byte window. TCP encodes each frame once into a
 //!   reused buffer, writes it with a single length-prefixed write,
 //!   repairs dead connections with a reconnect-and-retry before
-//!   (visibly) dropping a frame, and counts drops and idle-probe
-//!   verdicts in [`net::NetStats`].
+//!   (visibly) dropping a frame, and counts drops, dead-link verdicts
+//!   and reconnects in [`net::NetStats`]. The CLI picks the socket
+//!   transport per endpoint (`--transport tcp|epoll`).
 //! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
 //!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
 //!   resolution + delivery-frontier check) and executes it from the leader

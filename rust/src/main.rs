@@ -7,9 +7,18 @@
 //! wbam table                                   # §V latency table (T-lat)
 //! wbam serve --pid 0 --config cluster.toml [--shards 4]   # TCP member endpoint
 //!            [--data-dir DIR] [--sync always|never|interval|interval:<us>]
+//!            [--transport tcp|epoll]
 //! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100 [--shards 4]
+//!            [--transport tcp|epoll]
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
+//!
+//! `--transport` picks the real transport (`serve` and `client`; both
+//! sides may differ — the wire format is identical): `tcp` (default) is
+//! the threaded transport with one reader thread per accepted
+//! connection; `epoll` (Linux) multiplexes every connection on one
+//! event-loop thread — the choice for endpoints serving many peers. See
+//! `ARCHITECTURE.md` §Transports.
 //!
 //! Durable storage (`serve`): with `--data-dir` every hosted shard node
 //! journals its protocol state into a segmented, CRC-checksummed WAL
@@ -83,6 +92,22 @@ fn parse_flush(a: &Args) -> FlushPolicy {
         max_bytes: a.usize_opt("flush-max-bytes", usize::MAX),
         flush_on_quiet: !a.flag("flush-no-quiet"),
     }
+}
+
+/// The `--transport` flag (`serve`, `client`): bind the endpoint over
+/// the threaded TCP transport (default) or the Linux epoll event loop.
+/// Both speak the same wire format, so a deployment may mix them.
+fn bind_transport(a: &Args, pid: Pid, addrs: HashMap<Pid, std::net::SocketAddr>) -> Result<Box<dyn Transport>> {
+    let kind = a.str_opt("transport", "tcp");
+    Ok(match kind.as_str() {
+        "tcp" => Box::new(TcpTransport::bind(pid, addrs)?),
+        #[cfg(target_os = "linux")]
+        "epoll" => Box::new(wbam::net::EpollTransport::bind(pid, addrs)?),
+        s => bail!(
+            "unknown transport {s:?} (tcp|epoll{})",
+            if cfg!(target_os = "linux") { "" } else { "; epoll requires linux" }
+        ),
+    })
 }
 
 fn cmd_sim(a: &Args) -> Result<()> {
@@ -194,13 +219,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
         };
         nodes.push(node);
     }
-    let transport = TcpTransport::bind(pid, addrs)?;
+    let transport = bind_transport(a, pid, addrs)?;
     let net = transport.net_stats();
     println!(
-        "serving endpoint {pid:?}: {} shard node(s){}{}",
+        "serving endpoint {pid:?}: {} shard node(s){}{} [{} transport]",
         nodes.len(),
         if nodes.len() == 1 { " (inline fast path)" } else { "" },
-        if wb.durability { " [durable]" } else { "" }
+        if wb.durability { " [durable]" } else { "" },
+        a.str_opt("transport", "tcp"),
     );
     let stop = Arc::new(AtomicBool::new(false));
     // clean-shutdown trigger: a `quit` line on stdin (the offline image
@@ -265,7 +291,7 @@ fn cmd_client(a: &Args) -> Result<()> {
         ..Default::default()
     };
     let node = Box::new(Client::new(pid, topo, ccfg, a.u64_opt("seed", 7)));
-    let transport = TcpTransport::bind(pid, addrs)?;
+    let transport = bind_transport(a, pid, addrs)?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
     let mut rt = NodeRuntime::new(node, transport);

@@ -1,0 +1,1005 @@
+//! Readiness-driven TCP transport on raw `epoll` (Linux only, no new
+//! dependencies): **one event-loop thread per endpoint** multiplexes the
+//! listener, every accepted connection and every dialed connection,
+//! retiring the thread-per-connection cost of [`super::TcpTransport`].
+//!
+//! Design:
+//!
+//! * All sockets are nonblocking. The loop sleeps in `epoll_wait` and is
+//!   woken by readiness events or by an `eventfd` the send halves write
+//!   after queueing a frame.
+//! * **Sends** are encoded by the calling [`EpollSender`] into a
+//!   complete `u32 len ++ from ++ to ++ codec` frame (the exact wire
+//!   format of the threaded TCP transport, so the two interoperate) and
+//!   handed to the loop over a channel. The loop appends the frame to
+//!   the destination connection's queue and writes as much as the
+//!   socket accepts; a partial write parks the remainder and arms
+//!   `EPOLLOUT` — **backpressure never blocks a sender thread**. A
+//!   connection whose unwritten backlog exceeds [`MAX_PENDING_BYTES`]
+//!   drops further frames *visibly* ([`NetStats::dropped_frames`]).
+//! * **Dialing** is a nonblocking `connect`: frames queue while the
+//!   connect is in flight and flush when `EPOLLOUT` reports completion
+//!   (`SO_ERROR` checked). Outgoing connections are cached per remote
+//!   *address* — all shard traffic to one endpoint shares a socket.
+//! * **Receives** run through the shared [`FrameAssembler`]: reads land
+//!   in a per-connection buffer and every *complete* frame is decoded
+//!   and forwarded, so frames split across arbitrary read boundaries
+//!   reassemble exactly (property-tested in `tests/properties.rs`).
+//! * **Dead links** need no probe: a peer close is delivered as
+//!   `EPOLLRDHUP`/EOF the moment the FIN arrives, counted in
+//!   [`NetStats::probes_dead`] (the readiness analogue of the threaded
+//!   transport's idle-probe verdict). The connection's pending whole
+//!   frames are requeued on one fresh connection
+//!   ([`NetStats::reconnects_attempted`]/`reconnects_succeeded`) — the
+//!   same reconnect-and-retry-once contract as the threaded transport —
+//!   and dropped (counted, warned) if the retry fails too. A frame whose
+//!   prefix was already written is resent whole: the receiver abandons a
+//!   torn stream with its connection, so no byte ever duplicates.
+//!
+//! Shutdown: dropping the [`EpollTransport`] raises a stop flag, wakes
+//! the loop and joins it (bounded by the 50 ms idle tick), closing every
+//! connection. Frames already handed to the loop are written if the
+//! sockets accept them before the stop is observed; per-link FIFO order
+//! is preserved to the end.
+
+use super::{FrameAssembler, Incoming, NetStats, Transport, TransportTx};
+use crate::codec;
+use crate::types::{Pid, Wire};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Upper bound on one connection's unwritten send backlog. A peer that
+/// stops reading (or a WAN link slower than the offered load) fills the
+/// queue up to here; frames beyond it are dropped visibly instead of
+/// blocking the event loop or growing without bound.
+pub const MAX_PENDING_BYTES: usize = 64 << 20;
+
+/// How long `epoll_wait` may sleep before rechecking the stop flag.
+const IDLE_TICK_MS: i32 = 50;
+
+/// Readiness events fetched per `epoll_wait` call.
+const EVENTS_CAP: usize = 64;
+
+/// Raw Linux syscall shims (glibc symbols; the offline image has no
+/// `libc` crate). Only what the event loop needs: epoll, `eventfd` for
+/// cross-thread wakeups, and a nonblocking `socket`/`connect` pair std
+/// does not expose.
+mod sys {
+    use std::io;
+    use std::net::{SocketAddr, TcpStream};
+    use std::os::fd::{FromRawFd, RawFd};
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_MOD: i32 = 3;
+    /// == `O_CLOEXEC`; `EFD_NONBLOCK` == `O_NONBLOCK`.
+    const CLOEXEC: i32 = 0o2000000;
+    const NONBLOCK: i32 = 0o4000;
+
+    const AF_INET: i32 = 2;
+    const AF_INET6: i32 = 10;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_ERROR: i32 = 4;
+    const EINPROGRESS: i32 = 115;
+
+    /// One readiness event, matching the kernel ABI: x86-64 packs
+    /// `struct epoll_event` to 12 bytes, every other architecture uses
+    /// the natural 16-byte layout (`data` at offset 8). Fields are read
+    /// by value only (no references into the packed variant).
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    /// One readiness event (non-x86-64 layout; see above).
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn connect(fd: i32, addr: *const u8, len: u32) -> i32;
+        fn getsockopt(fd: i32, level: i32, optname: i32, optval: *mut i32, optlen: *mut u32) -> i32;
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub fn epoll_create() -> io::Result<RawFd> {
+        cvt(unsafe { epoll_create1(CLOEXEC) })
+    }
+
+    pub fn new_eventfd() -> io::Result<RawFd> {
+        cvt(unsafe { eventfd(0, CLOEXEC | NONBLOCK) })
+    }
+
+    pub fn add(epfd: RawFd, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        cvt(unsafe { epoll_ctl(epfd, EPOLL_CTL_ADD, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    pub fn modify(epfd: RawFd, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        cvt(unsafe { epoll_ctl(epfd, EPOLL_CTL_MOD, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// `epoll_wait` restarted over `EINTR`.
+    pub fn wait(epfd: RawFd, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe { epoll_wait(epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms) };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+
+    /// Start a nonblocking TCP connect. Returns the stream (owned by a
+    /// std `TcpStream` so it closes on drop) and whether the connect
+    /// already completed; when `false`, completion is reported by
+    /// `EPOLLOUT` and must be confirmed with [`take_socket_error`].
+    ///
+    /// The sockaddr is assembled by byte layout (`sockaddr_in` /
+    /// `sockaddr_in6`): family in host order, port/flowinfo/address in
+    /// network order — the kernel copies it, so a stack buffer suffices.
+    pub fn connect_nonblocking(addr: &SocketAddr) -> io::Result<(TcpStream, bool)> {
+        let mut sa = [0u8; 28];
+        let (domain, len): (i32, u32) = match addr {
+            SocketAddr::V4(v4) => {
+                sa[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+                sa[2..4].copy_from_slice(&v4.port().to_be_bytes());
+                sa[4..8].copy_from_slice(&v4.ip().octets());
+                (AF_INET, 16)
+            }
+            SocketAddr::V6(v6) => {
+                sa[0..2].copy_from_slice(&(AF_INET6 as u16).to_ne_bytes());
+                sa[2..4].copy_from_slice(&v6.port().to_be_bytes());
+                sa[4..8].copy_from_slice(&v6.flowinfo().to_be_bytes());
+                sa[8..24].copy_from_slice(&v6.ip().octets());
+                sa[24..28].copy_from_slice(&v6.scope_id().to_ne_bytes());
+                (AF_INET6, 28)
+            }
+        };
+        let fd = cvt(unsafe { socket(domain, SOCK_STREAM | NONBLOCK | CLOEXEC, 0) })?;
+        let stream = unsafe { TcpStream::from_raw_fd(fd) };
+        if unsafe { connect(fd, sa.as_ptr(), len) } == 0 {
+            return Ok((stream, true));
+        }
+        let err = io::Error::last_os_error();
+        if err.raw_os_error() == Some(EINPROGRESS) {
+            Ok((stream, false))
+        } else {
+            Err(err)
+        }
+    }
+
+    /// Fetch and clear the pending socket error (`SO_ERROR`): `Ok` means
+    /// the nonblocking connect completed successfully.
+    pub fn take_socket_error(fd: RawFd) -> io::Result<()> {
+        let mut val: i32 = 0;
+        let mut len: u32 = std::mem::size_of::<i32>() as u32;
+        cvt(unsafe { getsockopt(fd, SOL_SOCKET, SO_ERROR, &mut val, &mut len) })?;
+        if val == 0 {
+            Ok(())
+        } else {
+            Err(io::Error::from_raw_os_error(val))
+        }
+    }
+}
+
+/// Reserved tokens; connection tokens count up from [`TOK_CONN0`] and
+/// are never reused, so a stale readiness event can only miss a lookup.
+const TOK_LISTENER: u64 = 0;
+const TOK_WAKE: u64 = 1;
+const TOK_CONN0: u64 = 2;
+
+/// One frame handed from a send half to the event loop, already encoded
+/// in the wire format (`from`/`to`/`tag` ride along for drop warnings).
+struct SendCmd {
+    from: Pid,
+    to: Pid,
+    tag: &'static str,
+    frame: Vec<u8>,
+}
+
+/// An accepted (inbound) connection: read-only, like the threaded
+/// transport's reader threads.
+struct InState {
+    stream: TcpStream,
+    asm: FrameAssembler,
+}
+
+/// A dialed (outbound) connection with its unwritten frame queue.
+struct OutState {
+    stream: TcpStream,
+    addr: SocketAddr,
+    token: u64,
+    /// nonblocking connect completed (writes are allowed)
+    connected: bool,
+    /// whole frames not yet fully written, FIFO
+    queue: VecDeque<Vec<u8>>,
+    /// unwritten bytes across `queue` (the backpressure gauge)
+    queued_bytes: usize,
+    /// bytes of `queue[0]` already written
+    front_written: usize,
+    /// `EPOLLOUT` currently armed
+    want_out: bool,
+    /// this connection IS the one-shot reconnect retry: if it dies with
+    /// frames still pending they are dropped, not requeued again.
+    /// Cleared once a whole frame lands (the link visibly repaired).
+    retry: bool,
+    /// inbound bytes on a dialed link (stray frames are forwarded; EOF
+    /// is the readiness-driven peer-close detector)
+    asm: FrameAssembler,
+}
+
+enum Conn {
+    In(InState),
+    Out(OutState),
+}
+
+/// What a readiness event did to a connection.
+enum Act {
+    Keep,
+    /// accepted connection finished (EOF) or went bad: just drop it
+    Close,
+    /// dialed connection died: run the reconnect/drop policy
+    Died(SocketAddr),
+}
+
+enum FlushRes {
+    /// queue fully written, `EPOLLOUT` disarmed
+    Idle,
+    /// socket full, remainder parked, `EPOLLOUT` armed
+    Blocked,
+    /// write error: the connection is dead
+    Dead,
+}
+
+enum ReadRes {
+    Open,
+    Eof,
+    /// framing/decode error: the stream is unrecoverable
+    Bad,
+}
+
+/// Drain the socket into the assembler, forwarding every complete frame.
+fn read_into(
+    stream: &TcpStream,
+    asm: &mut FrameAssembler,
+    incoming: &Sender<(Pid, Pid, Wire)>,
+    stats: &NetStats,
+) -> ReadRes {
+    let mut buf = [0u8; 16384];
+    loop {
+        let mut s = stream;
+        match s.read(&mut buf) {
+            Ok(0) => return ReadRes::Eof,
+            Ok(n) => {
+                let ok = asm.push(&buf[..n], &mut |from, to, wire| {
+                    let _ = incoming.send((from, to, wire));
+                });
+                if let Err(e) = ok {
+                    // receive-side loss is a loss too: count it, then
+                    // abandon the stream (framing is unrecoverable)
+                    stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("epoll: abandoning stream: {e}");
+                    return ReadRes::Bad;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return ReadRes::Open,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return ReadRes::Eof,
+        }
+    }
+}
+
+/// Arm or disarm `EPOLLOUT` on a dialed connection.
+fn set_interest(epfd: RawFd, o: &mut OutState, out: bool) {
+    if o.want_out == out {
+        return;
+    }
+    let ev = sys::EPOLLIN | sys::EPOLLRDHUP | if out { sys::EPOLLOUT } else { 0 };
+    if sys::modify(epfd, o.stream.as_raw_fd(), ev, o.token).is_ok() {
+        o.want_out = out;
+    }
+}
+
+/// Write as much of the queue as the socket accepts right now.
+fn flush_out(o: &mut OutState, epfd: RawFd) -> FlushRes {
+    while !o.queue.is_empty() {
+        let r = {
+            let front = o.queue.front().expect("nonempty queue");
+            let mut s = &o.stream;
+            s.write(&front[o.front_written..])
+        };
+        match r {
+            Ok(0) => return FlushRes::Dead,
+            Ok(n) => {
+                o.front_written += n;
+                o.queued_bytes -= n;
+                let done = o.front_written == o.queue.front().expect("nonempty queue").len();
+                if done {
+                    o.queue.pop_front();
+                    o.front_written = 0;
+                    o.retry = false; // a whole frame landed: link healthy
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                set_interest(epfd, o, true);
+                return FlushRes::Blocked;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return FlushRes::Dead,
+        }
+    }
+    set_interest(epfd, o, false);
+    FlushRes::Idle
+}
+
+/// Handle one readiness event on a dialed connection.
+fn out_event(
+    o: &mut OutState,
+    bits: u32,
+    epfd: RawFd,
+    incoming: &Sender<(Pid, Pid, Wire)>,
+    stats: &NetStats,
+    dead: &mut HashSet<SocketAddr>,
+) -> Act {
+    if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+        return Act::Died(o.addr);
+    }
+    if !o.connected && bits & sys::EPOLLOUT != 0 {
+        if sys::take_socket_error(o.stream.as_raw_fd()).is_err() {
+            return Act::Died(o.addr);
+        }
+        o.connected = true;
+        if o.retry {
+            stats.reconnects_succeeded.fetch_add(1, Ordering::Relaxed);
+        }
+        dead.remove(&o.addr);
+    }
+    if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+        match read_into(&o.stream, &mut o.asm, incoming, stats) {
+            ReadRes::Open => {}
+            // EOF or garbage on a dialed link: the peer is gone — the
+            // readiness-driven analogue of a dead idle-probe verdict
+            _ => return Act::Died(o.addr),
+        }
+    }
+    if o.connected && matches!(flush_out(o, epfd), FlushRes::Dead) {
+        return Act::Died(o.addr);
+    }
+    Act::Keep
+}
+
+/// The endpoint's event loop: owns the epoll instance, the listener and
+/// every connection; runs on one dedicated thread.
+struct EventLoop {
+    /// keeps the epoll fd open for the loop's lifetime
+    _ep: File,
+    epfd: RawFd,
+    wake: Arc<File>,
+    listener: TcpListener,
+    addrs: Arc<HashMap<Pid, SocketAddr>>,
+    stats: Arc<NetStats>,
+    incoming: Sender<(Pid, Pid, Wire)>,
+    cmds: Receiver<SendCmd>,
+    stop: Arc<AtomicBool>,
+    conns: HashMap<u64, Conn>,
+    /// dialed connection per remote address
+    out_tokens: HashMap<SocketAddr, u64>,
+    /// addresses whose previous connection died: the next dial to one is
+    /// a *reconnect* and is counted as such
+    dead: HashSet<SocketAddr>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events = [sys::EpollEvent { events: 0, data: 0 }; EVENTS_CAP];
+        'outer: loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let n = match sys::wait(self.epfd, &mut events, IDLE_TICK_MS) {
+                Ok(n) => n,
+                Err(e) => {
+                    log::warn!("epoll: wait failed, transport stopping: {e}");
+                    break;
+                }
+            };
+            for ev in events.iter().take(n) {
+                let token = ev.data;
+                let bits = ev.events;
+                match token {
+                    TOK_LISTENER => self.accept_all(),
+                    TOK_WAKE => self.drain_wake(),
+                    t => self.conn_event(t, bits),
+                }
+            }
+            // drain queued sends (whether woken by the eventfd or not)
+            loop {
+                match self.cmds.try_recv() {
+                    Ok(cmd) => self.handle_send(cmd),
+                    Err(TryRecvError::Empty) => break,
+                    // every handle and send half is gone: nothing can
+                    // ever queue a frame or read an incoming one again
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut b = [0u8; 8];
+        let mut r: &File = &self.wake;
+        let _ = r.read(&mut b); // reading an eventfd clears its counter
+    }
+
+    fn accept_all(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if sys::add(self.epfd, stream.as_raw_fd(), sys::EPOLLIN | sys::EPOLLRDHUP, token).is_ok() {
+                        self.conns.insert(token, Conn::In(InState { stream, asm: FrameAssembler::new() }));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, bits: u32) {
+        let epfd = self.epfd;
+        let act = match self.conns.get_mut(&token) {
+            None => return, // stale event for a closed connection
+            Some(Conn::In(i)) => {
+                let hup = bits & (sys::EPOLLHUP | sys::EPOLLERR) != 0;
+                match read_into(&i.stream, &mut i.asm, &self.incoming, &self.stats) {
+                    ReadRes::Open if !hup => Act::Keep,
+                    _ => Act::Close,
+                }
+            }
+            Some(Conn::Out(o)) => out_event(o, bits, epfd, &self.incoming, &self.stats, &mut self.dead),
+        };
+        match act {
+            Act::Keep => {}
+            Act::Close => {
+                self.conns.remove(&token);
+            }
+            Act::Died(addr) => self.conn_failed(addr),
+        }
+    }
+
+    /// A dialed connection died: tear it down, then either requeue its
+    /// pending whole frames on one fresh connection (retry-once) or drop
+    /// them visibly.
+    fn conn_failed(&mut self, addr: SocketAddr) {
+        let Some(token) = self.out_tokens.remove(&addr) else { return };
+        let Some(Conn::Out(o)) = self.conns.remove(&token) else { return };
+        self.stats.probes_dead.fetch_add(1, Ordering::Relaxed);
+        self.dead.insert(addr);
+        let OutState { stream, queue, retry, .. } = o;
+        drop(stream); // closing the fd deregisters it from epoll
+        if queue.is_empty() {
+            return;
+        }
+        if retry {
+            let n = queue.len() as u64;
+            self.stats.dropped_frames.fetch_add(n, Ordering::Relaxed);
+            log::warn!("epoll: dropping {n} queued frame(s) to {addr} after reconnect retry");
+            return;
+        }
+        // one-shot link repair: the partially written front frame is
+        // resent whole — the receiver abandoned the torn stream with the
+        // connection, so nothing duplicates
+        if let Err(q) = self.dial(addr, queue) {
+            let n = q.len() as u64;
+            self.stats.dropped_frames.fetch_add(n, Ordering::Relaxed);
+            log::warn!("epoll: dropping {n} queued frame(s) to {addr}: reconnect failed");
+        }
+    }
+
+    /// Open a nonblocking connection to `addr` carrying `queue`. On an
+    /// immediate failure the queue is handed back for accounting.
+    fn dial(&mut self, addr: SocketAddr, queue: VecDeque<Vec<u8>>) -> Result<(), VecDeque<Vec<u8>>> {
+        let reconnect = self.dead.contains(&addr);
+        if reconnect {
+            self.stats.reconnects_attempted.fetch_add(1, Ordering::Relaxed);
+        }
+        let (stream, connected) = match sys::connect_nonblocking(&addr) {
+            Ok(x) => x,
+            Err(e) => {
+                log::warn!("epoll: connect to {addr} failed: {e}");
+                return Err(queue);
+            }
+        };
+        stream.set_nodelay(true).ok();
+        let token = self.next_token;
+        self.next_token += 1;
+        // EPOLLOUT stays armed until the connect completes and the queue
+        // drains; level-triggered, so nothing is missed
+        if sys::add(self.epfd, stream.as_raw_fd(), sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLOUT, token).is_err() {
+            return Err(queue);
+        }
+        if connected {
+            if reconnect {
+                self.stats.reconnects_succeeded.fetch_add(1, Ordering::Relaxed);
+            }
+            self.dead.remove(&addr);
+        }
+        let queued_bytes = queue.iter().map(|f| f.len()).sum();
+        let state = OutState {
+            stream,
+            addr,
+            token,
+            connected,
+            queue,
+            queued_bytes,
+            front_written: 0,
+            want_out: true,
+            retry: reconnect,
+            asm: FrameAssembler::new(),
+        };
+        self.conns.insert(token, Conn::Out(state));
+        self.out_tokens.insert(addr, token);
+        if connected {
+            let epfd = self.epfd;
+            let mut died = false;
+            if let Some(Conn::Out(o)) = self.conns.get_mut(&token) {
+                died = matches!(flush_out(o, epfd), FlushRes::Dead);
+            }
+            if died {
+                self.conn_failed(addr);
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_send(&mut self, cmd: SendCmd) {
+        let SendCmd { from, to, tag, frame } = cmd;
+        let Some(&addr) = self.addrs.get(&to) else {
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            log::warn!("epoll: dropping {tag} {from:?}->{to:?}: destination has no address");
+            return;
+        };
+        let epfd = self.epfd;
+        if let Some(&token) = self.out_tokens.get(&addr) {
+            let Some(Conn::Out(o)) = self.conns.get_mut(&token) else { return };
+            if o.queued_bytes + frame.len() > MAX_PENDING_BYTES {
+                self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                log::warn!("epoll: dropping {tag} {from:?}->{to:?} ({addr}): send backlog full");
+                return;
+            }
+            o.queued_bytes += frame.len();
+            o.queue.push_back(frame);
+            let died = o.connected && matches!(flush_out(o, epfd), FlushRes::Dead);
+            if died {
+                self.conn_failed(addr);
+            }
+            return;
+        }
+        let mut queue = VecDeque::with_capacity(4);
+        queue.push_back(frame);
+        if let Err(q) = self.dial(addr, queue) {
+            self.stats.dropped_frames.fetch_add(q.len() as u64, Ordering::Relaxed);
+            log::warn!("epoll: dropping {tag} {from:?}->{to:?} ({addr}): connect failed");
+        }
+    }
+}
+
+/// Send half of the epoll transport: encodes each wire into a complete
+/// frame in a reused buffer and hands it to the event loop (which owns
+/// every socket). Usable from any thread; all of a runtime's traffic
+/// should flow through one half so per-link FIFO order is preserved.
+pub struct EpollSender {
+    cmds: Sender<SendCmd>,
+    wake: Arc<File>,
+    stats: Arc<NetStats>,
+    enc: codec::Enc,
+}
+
+impl TransportTx for EpollSender {
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        let tag = wire.tag();
+        super::encode_frame(&mut self.enc, from, to, &wire);
+        let cmd = SendCmd { from, to, tag, frame: self.enc.buf.clone() };
+        if self.cmds.send(cmd).is_err() {
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            log::warn!("epoll: dropping {tag} {from:?}->{to:?}: event loop stopped");
+            return;
+        }
+        let mut w: &File = &self.wake;
+        let _ = w.write(&1u64.to_ne_bytes());
+    }
+}
+
+/// The event-loop TCP endpoint: implements [`Transport`] with the exact
+/// on-wire format and reliability contract of [`super::TcpTransport`]
+/// while spawning **one thread total** instead of a listener thread plus
+/// one reader thread per accepted connection. See the module docs.
+pub struct EpollTransport {
+    tx_half: EpollSender,
+    cmds: Sender<SendCmd>,
+    rx: Receiver<(Pid, Pid, Wire)>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    wake: Arc<File>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EpollTransport {
+    /// Bind the endpoint for `pid` at `addrs[&pid]` and start its event
+    /// loop. Like [`super::TcpTransport::bind`], `addrs` must map every
+    /// addressable pid (including shard counterparts aliased to their
+    /// endpoint's address) to the address of the endpoint hosting it.
+    pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> io::Result<Self> {
+        let listener = TcpListener::bind(addrs[&pid])?;
+        listener.set_nonblocking(true)?;
+        let ep = unsafe { File::from_raw_fd(sys::epoll_create()?) };
+        let epfd = ep.as_raw_fd();
+        let wake = Arc::new(unsafe { File::from_raw_fd(sys::new_eventfd()?) });
+        sys::add(epfd, listener.as_raw_fd(), sys::EPOLLIN, TOK_LISTENER)?;
+        sys::add(epfd, wake.as_raw_fd(), sys::EPOLLIN, TOK_WAKE)?;
+        let (in_tx, in_rx) = mpsc::channel();
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let lp = EventLoop {
+            _ep: ep,
+            epfd,
+            wake: Arc::clone(&wake),
+            listener,
+            addrs: Arc::new(addrs),
+            stats: Arc::clone(&stats),
+            incoming: in_tx,
+            cmds: cmd_rx,
+            stop: Arc::clone(&stop),
+            conns: HashMap::new(),
+            out_tokens: HashMap::new(),
+            dead: HashSet::new(),
+            next_token: TOK_CONN0,
+        };
+        let handle = std::thread::Builder::new().name(format!("wbam-epoll-{}", pid.0)).spawn(move || lp.run())?;
+        let tx_half = EpollSender {
+            cmds: cmd_tx.clone(),
+            wake: Arc::clone(&wake),
+            stats: Arc::clone(&stats),
+            enc: codec::Enc::new(),
+        };
+        Ok(EpollTransport { tx_half, cmds: cmd_tx, rx: in_rx, stats, stop, wake, handle: Some(handle) })
+    }
+}
+
+impl Transport for EpollTransport {
+    fn sender(&self) -> Box<dyn TransportTx> {
+        Box::new(EpollSender {
+            cmds: self.cmds.clone(),
+            wake: Arc::clone(&self.wake),
+            stats: Arc::clone(&self.stats),
+            enc: codec::Enc::new(),
+        })
+    }
+
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        self.tx_half.send(from, to, wire)
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
+        match self.rx.recv_timeout(d) {
+            Ok((from, to, wire)) => Some(Incoming::Wire(from, to, wire)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
+        }
+    }
+
+    fn net_stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl Drop for EpollTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let mut w: &File = &self.wake;
+        let _ = w.write(&1u64.to_ne_bytes());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // exits within one idle tick
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::read_frame;
+    use crate::types::{Ballot, GidSet, MsgId, MsgMeta};
+    use std::io::BufReader;
+    use std::sync::atomic::{AtomicU16, Ordering};
+    use std::time::Instant;
+
+    fn mcast(id: u64) -> Wire {
+        Wire::Multicast { meta: MsgMeta::new(MsgId(id), GidSet::single(crate::types::Gid(0)), vec![1, 2, 3]) }
+    }
+
+    /// Per-process unique localhost ports, disjoint from the ranges the
+    /// threaded-TCP tests use (tests run concurrently).
+    fn next_port() -> u16 {
+        static NEXT: AtomicU16 = AtomicU16::new(0);
+        56000 + (std::process::id() % 250) as u16 * 32 + NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn wait_until(what: &str, mut pred: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !pred() {
+            assert!(Instant::now() < deadline, "timeout waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn epoll_roundtrip_and_fifo() {
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = EpollTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = EpollTransport::bind(Pid(2), addrs).unwrap();
+        for i in 0..50 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        for i in 0..50 {
+            match b.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
+                    assert_eq!(from, Pid(1));
+                    assert_eq!(to, Pid(2));
+                    assert_eq!(meta.id, MsgId(i));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // bidirectional: b replies over its own dialed connection
+        b.send(Pid(2), Pid(1), Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Heartbeat { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // a clean run drops nothing
+        assert_eq!(a.net_stats().dropped_frames.load(Ordering::Relaxed), 0);
+        assert_eq!(b.net_stats().dropped_frames.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn epoll_interoperates_with_threaded_tcp() {
+        // same wire format: an epoll endpoint and a threaded endpoint
+        // converse transparently
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = EpollTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = crate::net::TcpTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(7));
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(7)),
+            other => panic!("unexpected {other:?}"),
+        }
+        b.send(Pid(2), Pid(1), mcast(8));
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(8)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn epoll_carries_batch_frames_intact() {
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = EpollTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = EpollTransport::bind(Pid(2), addrs).unwrap();
+        let frame = Wire::Batch((0..5).map(mcast).collect());
+        a.send(Pid(1), Pid(2), frame.clone());
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), w)) => assert_eq!(w, frame),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn epoll_shard_pids_share_one_connection_per_address() {
+        let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+        let host_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), host_addr);
+        addrs.insert(Pid(12), host_addr);
+        let mut a = EpollTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut host = EpollTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(1));
+        a.send(Pid(11), Pid(12), mcast(2)); // different source shard, same socket
+        for expect in [(Pid(1), Pid(2), 1u64), (Pid(11), Pid(12), 2)] {
+            match host.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
+                    assert_eq!((from, to, meta.id.0), expect);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // detached sender half: works from another thread's state
+        let mut tx = host.sender();
+        tx.send(Pid(2), Pid(1), mcast(3));
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(3)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// A destination that refuses connections is counted dropped (after
+    /// the async reconnect retry), and an address-less pid immediately.
+    #[test]
+    fn epoll_unreachable_destination_is_counted_dropped() {
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        addrs.insert(Pid(7), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        let mut a = EpollTransport::bind(Pid(1), addrs).unwrap();
+        let stats = a.net_stats();
+        a.send(Pid(1), Pid(7), mcast(99)); // nothing listens on p7's port
+        wait_until("unreachable send counted", || stats.dropped_frames.load(Ordering::Relaxed) >= 1);
+        // connection-refused surfaces asynchronously; the one-shot
+        // reconnect retry ran (and failed) before the frame was dropped
+        assert!(stats.reconnects_attempted.load(Ordering::Relaxed) >= 1, "refused connect never retried");
+        a.send(Pid(1), Pid(42), mcast(100)); // no address at all
+        wait_until("address-less send counted", || stats.dropped_frames.load(Ordering::Relaxed) >= 2);
+    }
+
+    /// Acceptance (kill-one-connection): frames sent across a
+    /// dropped-then-reconnected link are either delivered in FIFO order
+    /// or visibly counted as dropped — never silently lost — and the
+    /// repair shows up in [`NetStats::reconnects_attempted`]/
+    /// [`NetStats::reconnects_succeeded`].
+    #[test]
+    fn epoll_dropped_link_reconnects_or_warns() {
+        let a_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let b_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), a_addr);
+        addrs.insert(Pid(2), b_addr);
+
+        // raw receiver we can kill: read 3 frames on the first
+        // connection, hard-close it, then collect everything resent
+        let listener = TcpListener::bind(b_addr).unwrap();
+        let server = std::thread::spawn(move || -> Vec<u64> {
+            let mut got = Vec::new();
+            let (s1, _) = listener.accept().unwrap();
+            let mut r1 = BufReader::new(s1);
+            for _ in 0..3 {
+                let bytes = read_frame(&mut r1).unwrap();
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            drop(r1);
+            let (s2, _) = listener.accept().unwrap();
+            let mut r2 = BufReader::new(s2);
+            while let Ok(bytes) = read_frame(&mut r2) {
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            got
+        });
+
+        let mut a = EpollTransport::bind(Pid(1), addrs).unwrap();
+        let stats = a.net_stats();
+        for i in 0..3 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        // let the server read + close; the event loop observes the FIN
+        // as EPOLLRDHUP and tears the connection down eagerly
+        std::thread::sleep(Duration::from_millis(300));
+        for i in 3..8 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        // close our side so the server's second read loop terminates
+        drop(a);
+        let got = server.join().unwrap();
+
+        let dropped = stats.dropped_frames.load(Ordering::Relaxed) as usize;
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "redelivered frames out of FIFO order: {got:?}");
+        assert_eq!(got.len() + dropped, 8, "silently lost frames: delivered {got:?}, dropped {dropped}");
+        assert!(got.len() >= 3, "first connection frames lost: {got:?}");
+        // the peer close was observed (readiness-driven probe verdict)
+        // and repaired through a counted reconnect
+        assert!(stats.probes_dead.load(Ordering::Relaxed) >= 1, "peer close never observed");
+        assert!(stats.reconnects_attempted.load(Ordering::Relaxed) >= 1, "reconnect not counted");
+        assert!(stats.reconnects_succeeded.load(Ordering::Relaxed) >= 1, "successful reconnect not counted");
+    }
+
+    /// One endpoint serving many dialing peers stays at exactly one
+    /// event-loop thread (the tentpole's O(connections) -> O(1) claim,
+    /// asserted structurally via thread names on /proc).
+    #[test]
+    fn epoll_single_thread_serves_many_connections() {
+        let host_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+        addrs.insert(Pid(0), host_addr);
+        let n_peers = 6u32;
+        for i in 1..=n_peers {
+            addrs.insert(Pid(i), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        }
+        let mut host = EpollTransport::bind(Pid(0), addrs.clone()).unwrap();
+        let before = count_threads_named("wbam-epoll-0");
+        assert_eq!(before, 1, "one endpoint must run one event-loop thread");
+        let mut peers: Vec<EpollTransport> =
+            (1..=n_peers).map(|i| EpollTransport::bind(Pid(i), addrs.clone()).unwrap()).collect();
+        for (i, p) in peers.iter_mut().enumerate() {
+            let pid = Pid(i as u32 + 1);
+            p.send(pid, Pid(0), mcast(i as u64));
+        }
+        let mut seen = Vec::new();
+        for _ in 0..n_peers {
+            match host.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(_, Pid(0), Wire::Multicast { meta })) => seen.push(meta.id.0),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_peers as u64).collect::<Vec<_>>());
+        // still exactly one thread for the host despite 6 live inbound
+        // connections (the threaded transport would hold 6 readers)
+        assert_eq!(count_threads_named("wbam-epoll-0"), 1);
+    }
+
+    /// Count this process's threads whose name starts with `prefix`.
+    fn count_threads_named(prefix: &str) -> usize {
+        let Ok(tasks) = std::fs::read_dir("/proc/self/task") else { return 0 };
+        tasks
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                std::fs::read_to_string(e.path().join("comm")).map(|c| c.trim().starts_with(prefix)).unwrap_or(false)
+            })
+            .count()
+    }
+}

@@ -1,36 +1,53 @@
 //! Real transports for the coordinator runtime (the request path never
-//! touches Python): an in-process channel mesh for single-machine
-//! deployments and tests, and a TCP transport (std::net; the offline
-//! image has no tokio — one reader thread per peer connection).
+//! touches Python). Three implementations of one [`Transport`] contract:
 //!
-//! Both preserve the protocol's channel assumptions: reliable FIFO
-//! per-link delivery, where a *link* is an ordered `(from, to)` pid
-//! pair. One endpoint may host several local pids (the shards of a
+//! * [`InProcMesh`] / [`InProcTransport`] — an in-process channel mesh
+//!   for single-machine deployments and tests.
+//! * [`TcpTransport`] — blocking `std::net` TCP (the offline image has
+//!   no tokio): one listener thread plus **one reader thread per
+//!   accepted connection**; sends are blocking writes guarded by an
+//!   idle-connection liveness probe.
+//! * [`EpollTransport`] (Linux) — the same wire format driven by **one
+//!   event-loop thread per endpoint** over raw `epoll`: nonblocking
+//!   connects, per-connection reassembly buffers, `EPOLLOUT`-driven
+//!   backpressure. Retires the O(connections) thread cost; see
+//!   [`epoll`] for the loop design.
+//!
+//! All of them preserve the protocol's channel assumptions: reliable
+//! FIFO per-link delivery, where a *link* is an ordered `(from, to)`
+//! pid pair. One endpoint may host several local pids (the shards of a
 //! [`crate::types::ShardMap`]): every frame carries its source and
 //! destination pid so the receiving runtime can demux to the right
-//! shard, and outgoing TCP connections are shared per remote *address*,
-//! not per pid.
+//! shard, and outgoing socket connections are shared per remote
+//! *address*, not per pid.
 //!
-//! A TCP send that hits a dead connection re-establishes the connection
-//! and retries once; a frame that still cannot be *written* is
-//! `log::warn!`ed **and counted** ([`NetStats::dropped_frames`]) rather
-//! than vanishing, and an idle-connection probe (outcomes counted too)
-//! closes most of the window in which a peer death could swallow a
-//! frame buffered into a dead socket. The residual TCP in-flight loss
-//! (peer dies mid-stream with writes succeeding into the kernel buffer)
-//! is inherent to TCP without application acks — that is exactly what
-//! the protocol's retransmit timers (§IV message recovery) absorb; the
+//! A send that hits a dead connection re-establishes the connection and
+//! retries once (counted: [`NetStats::reconnects_attempted`] /
+//! [`NetStats::reconnects_succeeded`]); a frame that still cannot be
+//! *written* is `log::warn!`ed **and counted**
+//! ([`NetStats::dropped_frames`]) rather than vanishing. The threaded
+//! transport detects peer death with an idle-connection probe (outcomes
+//! counted too); the epoll transport sees the FIN as a readiness event
+//! the moment it arrives. The residual TCP in-flight loss (peer dies
+//! mid-stream with writes succeeding into the kernel buffer) is
+//! inherent to TCP without application acks — that is exactly what the
+//! protocol's retransmit timers (§IV message recovery) absorb; the
 //! transport's job is to make every *locally observed* failure visible.
 
 use crate::codec;
 use crate::types::{Pid, Wire};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+#[cfg(target_os = "linux")]
+pub mod epoll;
+#[cfg(target_os = "linux")]
+pub use epoll::{EpollSender, EpollTransport};
 
 /// Incoming event at an endpoint.
 #[derive(Debug)]
@@ -60,22 +77,63 @@ pub struct NetStats {
     pub dropped_frames: AtomicU64,
     /// idle-probe verdicts on cached TCP connections: still healthy
     pub probes_alive: AtomicU64,
-    /// idle-probe verdicts: peer closed / error — the connection is torn
-    /// down and re-established before the frame is written
+    /// dead-link verdicts: the idle probe found the peer closed (TCP),
+    /// or the event loop observed EOF/`EPOLLRDHUP`/an error on a dialed
+    /// connection (epoll) — the connection is torn down before another
+    /// frame can vanish into it
     pub probes_dead: AtomicU64,
+    /// re-establishment attempts for an address whose previous
+    /// connection was observed dead (the retry-once link repair); a
+    /// first-ever connect is not a reconnect
+    pub reconnects_attempted: AtomicU64,
+    /// reconnect attempts that produced a working connection again
+    pub reconnects_succeeded: AtomicU64,
 }
 
 /// The send half of a transport, usable from a thread other than the
 /// receiver's (the sharded runtime's flusher thread). `send` takes the
 /// wire by value: the flush hands each per-link frame over exactly once,
-/// so the in-process mesh forwards it without a clone and TCP encodes it
-/// once into a reused buffer.
+/// so the in-process mesh forwards it without a clone and the socket
+/// transports encode it once into a reused buffer.
+///
+/// `send` never blocks on a slow peer beyond the kernel's socket buffer
+/// (TCP) or at all (epoll, in-proc), and never returns failure: a frame
+/// the transport cannot put on the wire after the reconnect retry is
+/// dropped *visibly* — warned and counted in
+/// [`NetStats::dropped_frames`] — because the protocol's retransmit
+/// timers, not the transport, own end-to-end reliability.
 pub trait TransportTx: Send {
+    /// Queue/write one frame on the `(from, to)` link.
     fn send(&mut self, from: Pid, to: Pid, wire: Wire);
 }
 
 /// Endpoint handle: send to any peer, receive the traffic of every
 /// locally hosted pid.
+///
+/// # Contract (what every implementation — and [`EpollTransport`] in
+/// particular — must honor)
+///
+/// * **Ordering:** frames sent through one send half on one `(from,
+///   to)` link arrive in send order (reliable FIFO per link) for as
+///   long as the underlying connection lives; after a reconnect, the
+///   retried frames continue in order. A receiver never observes a
+///   reordering, only a (counted) gap.
+/// * **Drop visibility:** any frame the transport locally knows it lost
+///   — no route, connect failed after the retry, decode error on
+///   receive, send backlog over its bound — increments
+///   [`NetStats::dropped_frames`] and logs a warning. Losses the
+///   transport *cannot* observe (bytes in a dead peer's kernel buffer)
+///   are the protocol's retransmit timers' job.
+/// * **Reconnect:** a send hitting a connection observed dead
+///   re-establishes it and retries once
+///   ([`NetStats::reconnects_attempted`]/`reconnects_succeeded`);
+///   frames still pending when the retry fails are dropped visibly.
+/// * **Shutdown:** dropping the transport stops its helper threads and
+///   closes its connections; frames already accepted by `send` are
+///   written if the sockets accept them promptly but are *not* awaited
+///   (stopping never blocks on a dead peer). After shutdown,
+///   [`Transport::recv_timeout`] reports [`Incoming::Closed`] to any
+///   remaining receiver and further sends count as drops.
 pub trait Transport: Send {
     /// An independent send half (own connection/encode state) for use on
     /// another thread. All of a runtime's outgoing traffic should flow
@@ -86,10 +144,117 @@ pub trait Transport: Send {
     fn send(&mut self, from: Pid, to: Pid, wire: Wire);
     /// Blocking receive with timeout; `None` on timeout.
     fn recv_timeout(&mut self, d: Duration) -> Option<Incoming>;
-    /// Shared transport counters (drops, probe outcomes). The handle is
-    /// also updated by every [`Transport::sender`] half, so cloning it
-    /// before handing the transport to a runtime observes all traffic.
+    /// Shared transport counters (drops, probe outcomes, reconnects).
+    /// The handle is also updated by every [`Transport::sender`] half,
+    /// so cloning it before handing the transport to a runtime observes
+    /// all traffic.
     fn net_stats(&self) -> Arc<NetStats>;
+}
+
+/// Forwarding impl so callers can pick a transport at runtime (the CLI's
+/// `--transport tcp|epoll`) and still drive the generic runtimes.
+impl Transport for Box<dyn Transport> {
+    fn sender(&self) -> Box<dyn TransportTx> {
+        (**self).sender()
+    }
+
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        (**self).send(from, to, wire)
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
+        (**self).recv_timeout(d)
+    }
+
+    fn net_stats(&self) -> Arc<NetStats> {
+        (**self).net_stats()
+    }
+}
+
+/// Receive-side cap: frames claiming more than this are rejected and
+/// the stream abandoned (a corrupt length field would otherwise
+/// allocate gigabytes). The send-side splitter
+/// ([`crate::protocols::outbox::MAX_FRAME_BYTES`], 8 MiB) keeps honest
+/// frames far below it.
+pub const MAX_RX_FRAME_BYTES: usize = 64 << 20;
+
+/// Encode one socket-transport frame into `enc` (cleared first):
+/// `u32 len ++ u32 from ++ u32 to ++ codec bytes`, with `len` covering
+/// everything after itself. The single definition of the wire framing —
+/// [`TcpTransport`] and [`EpollTransport`] both send through it (which
+/// is what makes them interoperable), and [`FrameAssembler`] /
+/// `read_frame` are its receive-side inverses.
+pub fn encode_frame(enc: &mut codec::Enc, from: Pid, to: Pid, wire: &Wire) {
+    enc.buf.clear();
+    enc.u32(0); // length placeholder
+    enc.u32(from.0);
+    enc.u32(to.0);
+    codec::encode_into(enc, wire);
+    let n = (enc.buf.len() - 4) as u32;
+    enc.buf[..4].copy_from_slice(&n.to_le_bytes());
+}
+
+/// Incremental reassembly of the length-prefixed wire format
+/// (`u32 len ++ u32 from ++ u32 to ++ codec bytes`) from an arbitrary
+/// byte-chunk stream — the receive path of [`EpollTransport`], where
+/// reads return whatever the socket has and frames routinely split
+/// across read boundaries.
+///
+/// [`FrameAssembler::push`] buffers the chunk and emits every complete
+/// frame, in order; bytes of a trailing partial frame stay buffered for
+/// the next push. Any framing violation (oversized or runt frame,
+/// undecodable payload) is an error: the caller must abandon the stream,
+/// exactly like the threaded transport's reader thread does — trailing
+/// frames die with the connection and the protocol's retransmit timers
+/// recover them. Property-tested against arbitrary split points in
+/// `tests/properties.rs`.
+#[derive(Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+}
+
+impl FrameAssembler {
+    /// An empty assembler (fresh connection).
+    pub fn new() -> Self {
+        FrameAssembler { buf: Vec::new() }
+    }
+
+    /// Bytes buffered for a not-yet-complete frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append `chunk`, emitting every frame it completes. On `Err` the
+    /// stream is unrecoverable and must be abandoned (the caller counts
+    /// the loss).
+    pub fn push<F: FnMut(Pid, Pid, Wire)>(&mut self, chunk: &[u8], emit: &mut F) -> std::io::Result<()> {
+        self.buf.extend_from_slice(chunk);
+        let mut pos = 0usize;
+        while self.buf.len() - pos >= 4 {
+            let n = u32::from_le_bytes(self.buf[pos..pos + 4].try_into().unwrap()) as usize;
+            if n > MAX_RX_FRAME_BYTES {
+                return Err(std::io::Error::other("frame too large"));
+            }
+            if n < 8 {
+                return Err(std::io::Error::other(format!("runt frame ({n} bytes)")));
+            }
+            if self.buf.len() - pos < 4 + n {
+                break; // partial frame: wait for more bytes
+            }
+            let body = &self.buf[pos + 4..pos + 4 + n];
+            let from = Pid(u32::from_le_bytes(body[0..4].try_into().unwrap()));
+            let to = Pid(u32::from_le_bytes(body[4..8].try_into().unwrap()));
+            match codec::decode(&body[8..]) {
+                Ok(wire) => emit(from, to, wire),
+                Err(e) => return Err(std::io::Error::other(format!("bad frame from {from:?}: {e}"))),
+            }
+            pos += 4 + n;
+        }
+        if pos > 0 {
+            self.buf.drain(..pos);
+        }
+        Ok(())
+    }
 }
 
 // ---------------- in-process mesh ----------------
@@ -103,6 +268,7 @@ pub struct InProcMesh {
 }
 
 impl InProcMesh {
+    /// A fresh, empty mesh (no endpoints registered yet).
     pub fn new() -> Self {
         Self::default()
     }
@@ -165,6 +331,8 @@ impl TransportTx for InProcSender {
     }
 }
 
+/// One endpoint of an [`InProcMesh`]: receives the traffic of every pid
+/// it was registered for, sends to any registered peer.
 pub struct InProcTransport {
     mesh: InProcMesh,
     rx: Receiver<(Pid, Pid, Wire)>,
@@ -209,11 +377,14 @@ pub struct TcpTransport {
     _listener_thread: std::thread::JoinHandle<()>,
 }
 
+/// Read one whole `u32 len ++ body` frame from a blocking stream (the
+/// threaded transport's reader threads; the epoll transport reassembles
+/// through [`FrameAssembler`] instead).
 fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
-    if n > 64 << 20 {
+    if n > MAX_RX_FRAME_BYTES {
         return Err(std::io::Error::other("frame too large"));
     }
     let mut buf = vec![0u8; n];
@@ -222,6 +393,10 @@ fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
 }
 
 impl TcpTransport {
+    /// Bind the endpoint for `pid` at `addrs[&pid]` (panics if absent)
+    /// and start its listener thread. `addrs` must map every
+    /// addressable pid — including shard counterparts aliased to their
+    /// endpoint's address — to the address of the endpoint hosting it.
     pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addrs[&pid])?;
         let (tx, rx) = mpsc::channel::<(Pid, Pid, Wire)>();
@@ -339,12 +514,16 @@ pub struct TcpSender {
     addrs: Arc<HashMap<Pid, SocketAddr>>,
     stats: Arc<NetStats>,
     conns: HashMap<SocketAddr, Conn>,
+    /// addresses whose cached connection was observed dead (probe or
+    /// write failure): the next establishment is a *reconnect* and is
+    /// counted in [`NetStats::reconnects_attempted`]/`_succeeded`
+    dead: HashSet<SocketAddr>,
     enc: codec::Enc,
 }
 
 impl TcpSender {
     fn new(addrs: Arc<HashMap<Pid, SocketAddr>>, stats: Arc<NetStats>) -> Self {
-        TcpSender { addrs, stats, conns: HashMap::new(), enc: codec::Enc::new() }
+        TcpSender { addrs, stats, conns: HashMap::new(), dead: HashSet::new(), enc: codec::Enc::new() }
     }
 
     /// Eager liveness probe on a cached, write-only connection: a peer
@@ -382,11 +561,22 @@ impl TcpSender {
             if let Some(c) = self.conns.get(&addr) {
                 if c.last_used.elapsed() >= PROBE_AFTER_IDLE && Self::conn_is_dead(c.w.get_ref(), &self.stats) {
                     self.conns.remove(&addr);
+                    self.dead.insert(addr);
                 }
             }
         }
         if !self.conns.contains_key(&addr) {
+            // re-establishing after an observed death is a reconnect;
+            // a first-ever connect to this address is not
+            let reconnect = self.dead.contains(&addr);
+            if reconnect {
+                self.stats.reconnects_attempted.fetch_add(1, Ordering::Relaxed);
+            }
             let Ok(stream) = TcpStream::connect(addr) else { return false };
+            if reconnect {
+                self.stats.reconnects_succeeded.fetch_add(1, Ordering::Relaxed);
+                self.dead.remove(&addr);
+            }
             stream.set_nodelay(true).ok();
             self.conns.insert(addr, Conn { w: BufWriter::new(stream), last_used: std::time::Instant::now() });
         }
@@ -396,6 +586,7 @@ impl TcpSender {
             true
         } else {
             self.conns.remove(&addr);
+            self.dead.insert(addr);
             false
         }
     }
@@ -405,13 +596,7 @@ impl TransportTx for TcpSender {
     fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
         let tag = wire.tag();
         // encode once into the reused buffer, length prefix in-band
-        self.enc.buf.clear();
-        self.enc.u32(0); // length placeholder
-        self.enc.u32(from.0);
-        self.enc.u32(to.0);
-        codec::encode_into(&mut self.enc, &wire);
-        let n = (self.enc.buf.len() - 4) as u32;
-        self.enc.buf[..4].copy_from_slice(&n.to_le_bytes());
+        encode_frame(&mut self.enc, from, to, &wire);
         let Some(&addr) = self.addrs.get(&to) else {
             self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
             log::warn!("tcp: dropping {tag} {from:?}->{to:?}: destination has no address");
@@ -625,6 +810,58 @@ mod tests {
         // the idle probe observed the peer close before the first
         // post-close write could vanish into the dead socket
         assert!(stats.probes_dead.load(Ordering::Relaxed) >= 1, "peer close never probed");
+        // ...and the link repair is counted, not just warn-logged
+        assert!(stats.reconnects_attempted.load(Ordering::Relaxed) >= 1, "reconnect attempt not counted");
+        assert!(stats.reconnects_succeeded.load(Ordering::Relaxed) >= 1, "successful reconnect not counted");
+    }
+
+    /// A first-ever connect is not a reconnect: only re-establishment
+    /// after an observed death counts.
+    #[test]
+    fn tcp_first_connect_is_not_a_reconnect() {
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = TcpTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = TcpTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(1));
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), Wire::Multicast { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(a.net_stats().reconnects_attempted.load(Ordering::Relaxed), 0);
+        assert_eq!(a.net_stats().reconnects_succeeded.load(Ordering::Relaxed), 0);
+    }
+
+    /// The assembler emits exactly the frames of the stream no matter
+    /// how the bytes are chunked (the epoll read path's contract; the
+    /// arbitrary-boundary property test lives in tests/properties.rs).
+    #[test]
+    fn frame_assembler_reassembles_split_frames() {
+        // build a byte stream of three framed wires
+        let wires: Vec<Wire> = (0..3).map(mcast).collect();
+        let mut stream = Vec::new();
+        let mut e = codec::Enc::new();
+        for (i, w) in wires.iter().enumerate() {
+            encode_frame(&mut e, Pid(10 + i as u32), Pid(20 + i as u32), w);
+            stream.extend_from_slice(&e.buf);
+        }
+        // feed it one byte at a time: every frame still comes out whole
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            asm.push(&[b], &mut |from, to, wire| got.push((from, to, wire))).expect("valid stream");
+        }
+        assert_eq!(asm.pending(), 0);
+        assert_eq!(got.len(), 3);
+        for (i, (from, to, wire)) in got.iter().enumerate() {
+            assert_eq!(*from, Pid(10 + i as u32));
+            assert_eq!(*to, Pid(20 + i as u32));
+            assert_eq!(*wire, wires[i]);
+        }
+        // a runt frame poisons the stream
+        let mut bad = FrameAssembler::new();
+        assert!(bad.push(&3u32.to_le_bytes(), &mut |_, _, _| {}).is_err());
     }
 
     /// A destination that never accepts is counted as a drop, not

@@ -415,10 +415,12 @@ pub struct MemWal {
 }
 
 impl MemWal {
+    /// An empty in-memory log.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one framed record (infallible — memory is the disk here).
     pub fn append(&mut self, rec: &Record) {
         append_frame(&mut self.buf, rec);
         self.records += 1;
@@ -429,6 +431,7 @@ impl MemWal {
         self.records
     }
 
+    /// True when nothing was ever appended.
     pub fn is_empty(&self) -> bool {
         self.records == 0
     }
@@ -699,6 +702,7 @@ impl Storage {
         self.seq
     }
 
+    /// The storage directory this handle owns.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -361,42 +361,36 @@ fn codec_roundtrips_batched_and_plain_frames() {
     });
 }
 
-/// `Wire::size()` must be an upper bound on the actual encoded length
-/// for every variant, including nested `Batch` frames: the 8 MiB
-/// `MAX_FRAME_BYTES` split uses the estimate to keep frames under the
-/// TCP receiver's 64 MiB reject cap, so an under-estimate would let an
-/// oversized frame through and kill the connection. The estimate must
-/// also stay tight (small fixed slack per wire) to keep the simulator's
-/// per-byte CPU/bandwidth model honest.
-#[test]
-fn wire_size_bounds_encoded_length_for_every_variant() {
-    use wbam::codec::{decode, encode};
+/// Random wire generators shared by the codec-surface property tests
+/// (`wire_size_bounds_encoded_length_for_every_variant` and the
+/// transport frame-reassembly test below).
+mod wire_gen {
     use wbam::types::wire::{MsgState, PaxosMsg, RsmCmd};
-    use wbam::types::{Ballot, MsgId, MsgMeta, Phase, Ts, Wire};
+    use wbam::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts, Wire};
     use wbam::util::Rng;
 
-    fn rnd_meta(r: &mut Rng) -> MsgMeta {
+    pub fn rnd_meta(r: &mut Rng) -> MsgMeta {
         let payload = (0..r.below(64) as usize).map(|_| r.below(256) as u8).collect();
         MsgMeta::new(MsgId::new(r.below(1000) as u32, r.below(1000) as u32), GidSet(r.next_u64()), payload)
     }
-    fn rnd_ts(r: &mut Rng) -> Ts {
+    pub fn rnd_ts(r: &mut Rng) -> Ts {
         Ts::new(r.below(1 << 40), Gid(r.below(64) as u32))
     }
-    fn rnd_bal(r: &mut Rng) -> Ballot {
+    pub fn rnd_bal(r: &mut Rng) -> Ballot {
         Ballot::new(r.below(100) as u32, Pid(r.below(100) as u32))
     }
-    fn rnd_state(r: &mut Rng) -> MsgState {
+    pub fn rnd_state(r: &mut Rng) -> MsgState {
         let phase = *r.choose(&[Phase::Start, Phase::Proposed, Phase::Accepted, Phase::Committed]);
         MsgState { meta: rnd_meta(r), phase, lts: rnd_ts(r), gts: rnd_ts(r) }
     }
-    fn rnd_cmd(r: &mut Rng) -> RsmCmd {
+    pub fn rnd_cmd(r: &mut Rng) -> RsmCmd {
         if r.chance(0.5) {
             RsmCmd::AssignLts { meta: rnd_meta(r), lts: rnd_ts(r) }
         } else {
             RsmCmd::Commit { m: MsgId(r.next_u64()), gts: rnd_ts(r) }
         }
     }
-    fn rnd_paxos(r: &mut Rng) -> PaxosMsg {
+    pub fn rnd_paxos(r: &mut Rng) -> PaxosMsg {
         match r.below(5) {
             0 => PaxosMsg::P1a { bal: rnd_bal(r) },
             1 => PaxosMsg::P1b {
@@ -409,7 +403,7 @@ fn wire_size_bounds_encoded_length_for_every_variant() {
         }
     }
     /// A random wire of the given non-batch variant (0..14).
-    fn wire_of_tag(tag: u64, r: &mut Rng) -> Wire {
+    pub fn wire_of_tag(tag: u64, r: &mut Rng) -> Wire {
         match tag {
             0 => Wire::Multicast { meta: rnd_meta(r) },
             1 => Wire::Delivered { m: MsgId(r.next_u64()), g: Gid(r.below(64) as u32), gts: rnd_ts(r) },
@@ -440,6 +434,20 @@ fn wire_size_bounds_encoded_length_for_every_variant() {
             _ => Wire::GcReport { max_gts: rnd_ts(r) },
         }
     }
+}
+
+/// `Wire::size()` must be an upper bound on the actual encoded length
+/// for every variant, including nested `Batch` frames: the 8 MiB
+/// `MAX_FRAME_BYTES` split uses the estimate to keep frames under the
+/// TCP receiver's 64 MiB reject cap, so an under-estimate would let an
+/// oversized frame through and kill the connection. The estimate must
+/// also stay tight (small fixed slack per wire) to keep the simulator's
+/// per-byte CPU/bandwidth model honest.
+#[test]
+fn wire_size_bounds_encoded_length_for_every_variant() {
+    use wbam::codec::{decode, encode};
+    use wbam::types::Wire;
+    use wire_gen::wire_of_tag;
 
     // per-wire slack the estimate may leave over the true encoding; 0
     // today (the estimate mirrors the codec), but the property only
@@ -475,6 +483,52 @@ fn wire_size_bounds_encoded_length_for_every_variant() {
         assert!(enc.len() <= frame.size(), "batch under-estimated: {} > {}", enc.len(), frame.size());
         assert!(frame.size() <= enc.len() + SLACK_PER_WIRE * (n + 1), "batch over-estimated");
         assert_eq!(decode(&enc).expect("batch roundtrip"), frame);
+    });
+}
+
+/// The epoll transport's partial-frame reassembly: a valid length-
+/// prefixed frame stream chopped at arbitrary byte boundaries must
+/// reassemble to exactly the original `(from, to, wire)` sequence —
+/// every frame whole, in order, nothing left over. This is the
+/// receive-path contract nonblocking reads depend on (a read returns
+/// whatever the socket has, so frames routinely split mid-header and
+/// mid-payload); generators shared with the codec size-bound test.
+#[test]
+fn frame_reassembly_survives_arbitrary_split_points() {
+    use wbam::codec;
+    use wbam::net::FrameAssembler;
+    use wbam::types::Wire;
+
+    prop::check(150, |r| {
+        // a random frame stream: plain wires and coalesced batches, with
+        // random link endpoints, encoded exactly as the socket transports
+        // frame them (u32 len ++ u32 from ++ u32 to ++ codec bytes)
+        let mut frames: Vec<(Pid, Pid, Wire)> = Vec::new();
+        let mut stream: Vec<u8> = Vec::new();
+        let mut e = codec::Enc::new();
+        for _ in 0..r.range(1, 8) {
+            let wire = if r.chance(0.3) {
+                Wire::Batch((0..r.range(1, 4)).map(|_| wire_gen::wire_of_tag(r.below(14), r)).collect())
+            } else {
+                wire_gen::wire_of_tag(r.below(14), r)
+            };
+            let from = Pid(r.below(100) as u32);
+            let to = Pid(r.below(100) as u32);
+            wbam::net::encode_frame(&mut e, from, to, &wire);
+            stream.extend_from_slice(&e.buf);
+            frames.push((from, to, wire));
+        }
+        // feed the stream in random-sized chunks (1..40 bytes)
+        let mut asm = FrameAssembler::new();
+        let mut got: Vec<(Pid, Pid, Wire)> = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let take = (r.range(1, 40) as usize).min(stream.len() - pos);
+            asm.push(&stream[pos..pos + take], &mut |f, t, w| got.push((f, t, w))).expect("valid stream");
+            pos += take;
+        }
+        assert_eq!(asm.pending(), 0, "bytes left unconsumed after the final frame");
+        assert_eq!(got, frames, "reassembled frames diverged from the sent stream");
     });
 }
 
