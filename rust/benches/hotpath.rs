@@ -3,23 +3,110 @@
 //! effect allocations), the simulator event loop, the headline wire
 //! batching / sharding ablations at saturation, the inline-vs-threaded
 //! 1-shard runtime latency comparison, the adaptive flush-policy
-//! ablation, and the thread-per-connection vs epoll transport ablation
-//! over real localhost sockets (EXPERIMENTS.md §Transport ablation).
+//! ablation, the zero-copy decode allocation ablation, and the
+//! **three-way tcp / epoll / io_uring transport ablation** over real
+//! localhost sockets (EXPERIMENTS.md §Three-way transport ablation):
+//! throughput, p50/p99 round trip, threads, syscalls- and
+//! allocations-per-multicast for each transport at the Fig. 7
+//! operating point.
+//!
+//! Besides the human table on stdout, the run writes every row to
+//! `BENCH_hotpath.json` (in the bench's working directory) so the perf
+//! trajectory is machine-trackable across PRs.
 //!
 //! Set `WBAM_SMOKE=1` for a seconds-long bit-rot check (tiny iteration
 //! counts; the printed numbers are meaningless) — CI runs this mode.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{one_shard_round_trip_ns, Cluster};
 use wbam::harness::{run, Net, Proto, RunCfg};
-use wbam::net::{TcpTransport, Transport};
+use wbam::net::{syscalls_observed, TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox};
 use wbam::sim::MS;
 use wbam::types::{Ballot, FlushPolicy, Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Ts, Wire};
+
+/// Counting wrapper over the system allocator: the per-message
+/// allocation gauge the zero-copy acceptance bar is measured with.
+/// Frees are not counted — the gauge is allocation pressure, not live
+/// bytes.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers to the system allocator; the counters are relaxed
+// atomics with no allocation of their own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Machine-readable mirror of the printed tables, one flat row per
+/// configuration; serialized by hand (no serde in the dependency
+/// budget) into `BENCH_hotpath.json`.
+#[derive(Default)]
+struct JsonRows(Vec<String>);
+
+impl JsonRows {
+    fn push(&mut self, section: &str, config: &str, metrics: &[(&str, f64)]) {
+        let mut s = format!("    {{\"section\": \"{section}\", \"config\": \"{config}\"");
+        for (k, v) in metrics {
+            if v.is_finite() {
+                s.push_str(&format!(", \"{k}\": {v}"));
+            } else {
+                s.push_str(&format!(", \"{k}\": null"));
+            }
+        }
+        s.push('}');
+        self.0.push(s);
+    }
+
+    fn write(&self, smoke: bool) {
+        let body = self.0.join(",\n");
+        let out = format!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"smoke\": {smoke},\n  \"rows\": [\n{body}\n  ]\n}}\n"
+        );
+        match std::fs::write("BENCH_hotpath.json", &out) {
+            Ok(()) => println!("\nwrote BENCH_hotpath.json ({} rows)", self.0.len()),
+            Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+        }
+    }
+}
+
+/// One measured transport-ablation configuration.
+struct AblationRow {
+    kind: &'static str,
+    throughput: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    threads: usize,
+    allocs_per_mc: f64,
+    alloc_kb_per_mc: f64,
+    syscalls_per_mc: f64,
+}
 
 /// Drive one leader through the full ACCEPT/ACK/commit cycle in memory
 /// (no network, no sim): the pure protocol-code cost per multicast. The
@@ -73,9 +160,11 @@ fn main() {
     let dur = if smoke { 30 * MS } else { 300 * MS };
     let secs = if smoke { 1 } else { 3 };
     let trips = if smoke { 300 } else { 5_000 };
+    let mut json = JsonRows::default();
 
     let per_commit = leader_commit_path(commit_iters);
     println!("leader commit path (in-memory, 2 groups, reused outbox): {per_commit:.0} ns/multicast");
+    json.push("leader_commit", "2groups_reused_outbox", &[("ns_per_multicast", per_commit)]);
 
     // simulator event throughput under load
     let t0 = Instant::now();
@@ -107,6 +196,7 @@ fn main() {
         let r = run(&cfg);
         thru[i] = r.throughput;
         println!("  coalesce={:<5} {}", co, r.row());
+        json.push("wire_batching", &format!("coalesce={co}"), &[("throughput", r.throughput)]);
     }
     let gain = (thru[1] / thru[0] - 1.0) * 100.0;
     println!(
@@ -133,6 +223,7 @@ fn main() {
         let r = run(&cfg);
         athru[i] = r.throughput;
         println!("  {name} {}", r.row());
+        json.push("flush_policy", name.trim(), &[("throughput", r.throughput)]);
     }
     println!(
         "  => adaptive (quiet) vs immediate at saturation: {:+.1}%; strict window: {:+.1}%",
@@ -154,6 +245,7 @@ fn main() {
         let r = run(&cfg);
         sharded[i] = r.throughput;
         println!("  shards={s:<2} {}", r.row());
+        json.push("leader_sharding_sim", &format!("shards={s}"), &[("throughput", r.throughput)]);
     }
     let gain = sharded[1] / sharded[0];
     println!(
@@ -168,38 +260,118 @@ fn main() {
     for &s in &[1usize, 4] {
         let thru = real_cluster_throughput(s, 64, secs);
         println!("  shards={s:<2} {thru:.0} multicasts/s");
+        json.push("sharded_runtime_mesh", &format!("shards={s}"), &[("throughput", thru)]);
     }
 
-    // transport ablation (EXPERIMENTS.md §Transport ablation): the same
-    // closed-loop deployment over real localhost sockets, once on the
-    // thread-per-connection TCP transport and once on the epoll event
-    // loop. The thread column is the O(connections)-vs-O(1) cost made
-    // visible: tcp holds one reader thread per accepted connection,
-    // epoll exactly one loop thread per endpoint. Acceptance bar for
-    // the epoll transport: >= 1x the threaded throughput at the
-    // saturation knee (it must not cost throughput to save the threads).
+    // three-way transport ablation (EXPERIMENTS.md §Three-way transport
+    // ablation): the same closed-loop deployment over real localhost
+    // sockets on the thread-per-connection TCP transport, the epoll
+    // event loop and the io_uring completion loop. Threads make the
+    // O(connections)-vs-O(1) cost visible; syscalls/multicast make the
+    // readiness-vs-completion batching visible (io_uring submits and
+    // reaps a burst in one enter); allocations/multicast is the
+    // zero-copy payload-path gauge. io_uring self-skips (with the probe
+    // reason) where the kernel or sandbox cannot run it. Acceptance
+    // bars: epoll >= 1x tcp, io_uring >= 1x epoll at the saturation
+    // knee.
     let tcli = if smoke { 8 } else { 32 };
     println!("\ntransport ablation (real sockets, 2 groups x 3 replicas, {tcli} clients, dest=2, {secs}s):");
-    let mut tthru = [0f64; 2];
-    for (i, &kind) in ["tcp", "epoll"].iter().enumerate() {
-        if kind == "epoll" && !cfg!(target_os = "linux") {
-            println!("  epoll  (skipped: requires linux)");
+    println!(
+        "  {:<7}{:>12}  {:>9}{:>9}{:>9}{:>12}{:>12}{:>11}",
+        "", "multicasts/s", "p50 ms", "p99 ms", "threads", "allocs/mc", "allocKB/mc", "syscall/mc"
+    );
+    let mut rows: Vec<AblationRow> = Vec::new();
+    for (i, &kind) in ["tcp", "epoll", "uring"].iter().enumerate() {
+        if kind != "tcp" && !cfg!(target_os = "linux") {
+            println!("  {kind:<6} (skipped: requires linux)");
+            continue;
+        }
+        #[cfg(target_os = "linux")]
+        let skip_reason = if kind == "uring" { wbam::net::uring_probe().err() } else { None };
+        #[cfg(not(target_os = "linux"))]
+        let skip_reason: Option<String> = None;
+        if let Some(reason) = skip_reason {
+            println!("  uring  (skipped: {reason})");
             continue;
         }
         // process-keyed bases (like the unit tests' next_port) so a
         // concurrent or back-to-back run cannot collide on a listener
         let base = 33000 + (std::process::id() % 300) as u16 * 96 + (i as u16) * 48;
-        let (thru, threads) = socket_cluster_throughput(kind, tcli, secs, base);
-        tthru[i] = thru;
-        println!("  {kind:<6} {thru:.0} multicasts/s   ({threads} process threads at steady state)");
+        let r = socket_cluster_run(kind, tcli, secs, base);
+        println!(
+            "  {:<7}{:>12.0}  {:>9.3}{:>9.3}{:>9}{:>12.1}{:>12.2}{:>11.2}",
+            r.kind, r.throughput, r.p50_ms, r.p99_ms, r.threads, r.allocs_per_mc, r.alloc_kb_per_mc, r.syscalls_per_mc
+        );
+        json.push(
+            "transport_ablation",
+            r.kind,
+            &[
+                ("throughput", r.throughput),
+                ("p50_ms", r.p50_ms),
+                ("p99_ms", r.p99_ms),
+                ("threads", r.threads as f64),
+                ("allocs_per_multicast", r.allocs_per_mc),
+                ("alloc_kb_per_multicast", r.alloc_kb_per_mc),
+                ("syscalls_per_multicast", r.syscalls_per_mc),
+            ],
+        );
+        rows.push(r);
     }
-    if tthru[0] > 0.0 && tthru[1] > 0.0 {
-        let gain = tthru[1] / tthru[0];
+    let find = |k: &str| rows.iter().find(|r| r.kind == k);
+    if let (Some(t), Some(e)) = (find("tcp"), find("epoll")) {
+        let gain = e.throughput / t.throughput;
         println!(
             "  => epoll vs thread-per-conn throughput: {gain:.2}x {}",
             if gain >= 1.0 { "(≥1x target met)" } else { "(below 1x target)" }
         );
     }
+    if let (Some(e), Some(u)) = (find("epoll"), find("uring")) {
+        let gain = u.throughput / e.throughput;
+        println!(
+            "  => io_uring vs epoll throughput: {gain:.2}x {}",
+            if gain >= 1.0 { "(≥1x target met)" } else { "(below 1x target)" }
+        );
+    }
+
+    // zero-copy decode ablation: the same encoded 64-message batch
+    // frame decoded with the copying `codec::decode` (every payload a
+    // fresh Vec — the pre-zero-copy behaviour) vs `decode_shared`
+    // (payloads are refcounted views into one Arc frame). The delta is
+    // the per-frame allocation saving every transport's receive path
+    // now gets.
+    println!("\nzero-copy decode ablation (64-message batch, 200 B payloads):");
+    let batch = Wire::Batch(
+        (0..64u32)
+            .map(|i| Wire::Multicast {
+                meta: MsgMeta::new(MsgId::new(9, i), GidSet::single(Gid(0)), vec![i as u8; 200]),
+            })
+            .collect(),
+    );
+    let bytes = wbam::codec::encode(&batch);
+    let frame: Arc<[u8]> = bytes.clone().into();
+    let dec_iters = if smoke { 200u64 } else { 20_000 };
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..dec_iters {
+        std::hint::black_box(wbam::codec::decode(&bytes).expect("decode"));
+    }
+    let per_copy = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / dec_iters as f64;
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..dec_iters {
+        std::hint::black_box(wbam::codec::decode_shared(&frame, 0, frame.len()).expect("decode_shared"));
+    }
+    let per_shared = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / dec_iters as f64;
+    let saved = (1.0 - per_shared / per_copy) * 100.0;
+    println!("  copying decode: {per_copy:.1} allocs/frame");
+    println!("  shared decode:  {per_shared:.1} allocs/frame");
+    println!(
+        "  => zero-copy allocation saving: {saved:.1}% {}",
+        if per_shared < per_copy { "(reduction confirmed)" } else { "(NO reduction)" }
+    );
+    json.push(
+        "zero_copy_decode",
+        "batch64_200B",
+        &[("copying_allocs_per_frame", per_copy), ("shared_allocs_per_frame", per_shared), ("saving_pct", saved)],
+    );
 
     // inline 1-shard fast path vs the threaded worker/flusher pipeline
     // on single-message latency: the inline loop removes two channel
@@ -212,6 +384,8 @@ fn main() {
     let gain = (1.0 - inline_ns / threaded_ns) * 100.0;
     println!("  threaded pipeline: {threaded_ns:.0} ns/round-trip");
     println!("  inline fast path:  {inline_ns:.0} ns/round-trip");
+    json.push("one_shard_ping_pong", "threaded", &[("ns_per_round_trip", threaded_ns)]);
+    json.push("one_shard_ping_pong", "inline", &[("ns_per_round_trip", inline_ns)]);
     println!(
         "  => inline latency improvement: {gain:.1}% {}",
         if gain >= 20.0 { "(≥20% target met)" } else { "(below 20% target)" }
@@ -226,6 +400,7 @@ fn main() {
         cfg.wb = WbConfig { batch_threshold: bt, batch_flush_after: 200_000, ..WbConfig::default() };
         let r = run(&cfg);
         println!("  batch_threshold={bt:<3} {}", r.row());
+        json.push("commit_staging", &format!("batch_threshold={bt}"), &[("throughput", r.throughput)]);
     }
 
     // ablation: replication degree f (group size 2f+1). WbCast's quorum
@@ -238,6 +413,7 @@ fn main() {
         cfg.duration = dur;
         let r = run(&cfg);
         println!("  f={f} (groups of {}): {}", 2 * f + 1, r.row());
+        json.push("replication_degree", &format!("f={f}"), &[("throughput", r.throughput)]);
     }
 
     // ablation: payload size (the paper uses 20-byte messages; the CPU
@@ -249,7 +425,10 @@ fn main() {
         cfg.duration = dur;
         let r = run_payload(&cfg, sz);
         println!("  payload={sz:<5} {}", r.row());
+        json.push("payload_size", &format!("payload={sz}"), &[("throughput", r.throughput)]);
     }
+
+    json.write(smoke);
 }
 
 /// Closed-loop saturation throughput of the real threaded
@@ -289,12 +468,19 @@ fn real_cluster_throughput(shards: usize, n_clients: u32, secs: u64) -> f64 {
     completed as f64 / wall
 }
 
-/// Closed-loop throughput of the same deployment over real localhost
-/// sockets: 6 single-node member endpoints + `n_clients` client
-/// endpoints, all bound through transport `kind`. Returns
-/// `(multicasts/s, process thread count at steady state)` — the thread
-/// count is the thread-per-connection vs event-loop comparison.
-fn socket_cluster_throughput(kind: &str, n_clients: u32, secs: u64, base: u16) -> (f64, usize) {
+/// Closed-loop run of the same deployment over real localhost sockets:
+/// 6 single-node member endpoints + `n_clients` client endpoints, all
+/// bound through transport `kind`. Besides throughput and the steady-
+/// state thread count (the thread-per-connection vs event-loop
+/// comparison), measures client round-trip p50/p99 and the per-
+/// multicast allocation / allocated-bytes / transport-syscall gauges
+/// (counter deltas over the whole run divided by completed multicasts;
+/// setup cost amortizes into noise at these counts). The syscall gauge
+/// counts the transports' send/wake/wait paths — the threaded TCP
+/// receive side hides reads behind `BufReader`, so its true total is
+/// slightly higher than reported; epoll and io_uring are counted
+/// exactly.
+fn socket_cluster_run(kind: &'static str, n_clients: u32, secs: u64, base: u16) -> AblationRow {
     let topo = Topology::new(2, 1);
     let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
     let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
@@ -317,6 +503,9 @@ fn socket_cluster_throughput(kind: &str, n_clients: u32, secs: u64, base: u16) -
         hosts.push(vec![Box::new(Client::new(pid, topo.clone(), cfg, 0xEB011 + c as u64))]);
     }
     let t0 = Instant::now();
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let bytes0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    let sys0 = syscalls_observed();
     let cluster =
         Cluster::launch_hosts_over(hosts, None, FlushPolicy::default(), |pids| bind_kind(kind, pids[0], &addrs));
     std::thread::sleep(std::time::Duration::from_millis(500)); // listeners up, loop warm
@@ -324,14 +513,36 @@ fn socket_cluster_throughput(kind: &str, n_clients: u32, secs: u64, base: u16) -
     std::thread::sleep(std::time::Duration::from_secs(secs));
     let nodes = cluster.shutdown();
     let wall = t0.elapsed().as_secs_f64();
-    let mut completed = 0usize;
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let bytes = ALLOC_BYTES.load(Ordering::Relaxed) - bytes0;
+    let syscalls = syscalls_observed() - sys0;
+    let mut lat_ns: Vec<u64> = Vec::new();
     for n in &nodes {
         let any: &dyn Node = &**n;
         if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
-            completed += c.completed.len();
+            lat_ns.extend(c.completed.iter().map(|s| s.done_at.saturating_sub(s.sent_at)));
         }
     }
-    (completed as f64 / wall, threads)
+    lat_ns.sort_unstable();
+    let completed = lat_ns.len();
+    let pct = |p: f64| -> f64 {
+        if completed == 0 {
+            return f64::NAN;
+        }
+        let idx = ((completed - 1) as f64 * p) as usize;
+        lat_ns[idx] as f64 / 1e6
+    };
+    let per = |v: u64| if completed == 0 { f64::NAN } else { v as f64 / completed as f64 };
+    AblationRow {
+        kind,
+        throughput: completed as f64 / wall,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        threads,
+        allocs_per_mc: per(allocs),
+        alloc_kb_per_mc: per(bytes) / 1024.0,
+        syscalls_per_mc: per(syscalls),
+    }
 }
 
 /// Bind one endpoint over the named transport.
@@ -340,6 +551,8 @@ fn bind_kind(kind: &str, pid: Pid, addrs: &HashMap<Pid, SocketAddr>) -> Box<dyn 
         "tcp" => Box::new(TcpTransport::bind(pid, addrs.clone()).expect("bind tcp")),
         #[cfg(target_os = "linux")]
         "epoll" => Box::new(wbam::net::EpollTransport::bind(pid, addrs.clone()).expect("bind epoll")),
+        #[cfg(target_os = "linux")]
+        "uring" => Box::new(wbam::net::UringTransport::bind(pid, addrs.clone()).expect("bind uring")),
         other => panic!("unknown transport {other}"),
     }
 }

@@ -5,7 +5,8 @@
 //! TCP transport frames each message as `u32 length ++ bytes`.
 
 use crate::types::wire::{MsgState, PaxosMsg, RsmCmd};
-use crate::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts, Wire};
+use crate::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Payload, Phase, Pid, Ts, Wire};
+use std::sync::Arc;
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -58,15 +59,29 @@ impl Default for Enc {
     }
 }
 
-/// Byte-buffer reader.
+/// Byte-buffer reader. When constructed over a shared frame buffer
+/// ([`decode_shared`]) it additionally remembers the backing `Arc` so
+/// payload fields can be handed out as zero-copy [`Payload`] windows
+/// instead of `Vec` copies.
 pub struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// `(backing buffer, offset of buf[0] within it)` — present only on
+    /// the shared-frame decode path.
+    backing: Option<(&'a Arc<[u8]>, usize)>,
 }
 
 impl<'a> Dec<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Dec { buf, pos: 0 }
+        Dec { buf, pos: 0, backing: None }
+    }
+    /// Reader over `frame[start..end]` that remembers `frame` as the
+    /// shared backing buffer, enabling zero-copy [`Self::payload`].
+    /// Errors (rather than panics) on an out-of-range window so transport
+    /// code can feed it unvalidated frame headers.
+    pub fn with_backing(frame: &'a Arc<[u8]>, start: usize, end: usize) -> Result<Self> {
+        let buf = frame.get(start..end).ok_or(CodecError::Eof(frame.len()))?;
+        Ok(Dec { buf, pos: 0, backing: Some((frame, start)) })
     }
     #[inline]
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -93,6 +108,19 @@ impl<'a> Dec<'a> {
     pub fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;
         Ok(self.take(n)?.to_vec())
+    }
+    /// Length-prefixed payload. On the shared-frame path this is a
+    /// refcounted window into the backing buffer (zero bytes copied);
+    /// otherwise it copies like [`Self::bytes`].
+    #[inline]
+    pub fn payload(&mut self) -> Result<Payload> {
+        let n = self.u32()? as usize;
+        let start = self.pos;
+        let b = self.take(n)?;
+        Ok(match self.backing {
+            Some((frame, base)) => Payload::view(frame.clone(), base + start, n),
+            None => Payload::from(b),
+        })
     }
     pub fn finish(self) -> Result<()> {
         if self.pos != self.buf.len() {
@@ -125,7 +153,7 @@ fn put_meta(e: &mut Enc, m: &MsgMeta) {
     e.bytes(&m.payload);
 }
 fn get_meta(d: &mut Dec) -> Result<MsgMeta> {
-    Ok(MsgMeta { id: MsgId(d.u64()?), dest: GidSet(d.u64()?), payload: d.bytes()?.into() })
+    Ok(MsgMeta { id: MsgId(d.u64()?), dest: GidSet(d.u64()?), payload: d.payload()? })
 }
 fn put_phase(e: &mut Enc, p: Phase) {
     e.u8(match p {
@@ -344,6 +372,24 @@ pub fn encode_into(e: &mut Enc, w: &Wire) {
 /// batches are rejected.
 pub fn decode(buf: &[u8]) -> Result<Wire> {
     let mut d = Dec::new(buf);
+    let w = get_wire(&mut d, true)?;
+    d.finish()?;
+    Ok(w)
+}
+
+/// Deserialize a wire message from `frame[start..end]`, where `frame` is
+/// a shared receive buffer. Identical accepted language and results to
+/// [`decode`] (a property test pins this), but message payloads come out
+/// as refcounted [`Payload`] windows into `frame` instead of owned
+/// copies — the zero-copy receive path used by every transport.
+///
+/// The trade-off is lifetime, not correctness: a payload window keeps the
+/// whole frame buffer alive until the message is dropped. Frames are
+/// bounded (64 MiB receive cap) and payloads are consumed promptly by the
+/// protocol layer, so this is an easy win over two allocations plus two
+/// copies per message.
+pub fn decode_shared(frame: &Arc<[u8]>, start: usize, end: usize) -> Result<Wire> {
+    let mut d = Dec::with_backing(frame, start, end)?;
     let w = get_wire(&mut d, true)?;
     d.finish()?;
     Ok(w)
@@ -615,5 +661,43 @@ mod tests {
             let inner_size: usize = inner.iter().map(|i| i.size()).sum();
             assert_eq!(w.size(), 5 + inner_size);
         });
+    }
+
+    // ---------- zero-copy shared-frame decoding ----------
+
+    #[test]
+    fn shared_decode_equals_copying_decode() {
+        prop::check(300, |r| {
+            let w = if r.chance(0.3) { rand_batch(r) } else { rand_wire(r) };
+            let bytes = encode(&w);
+            let frame: Arc<[u8]> = bytes.clone().into();
+            let shared = decode_shared(&frame, 0, frame.len()).expect("decode_shared");
+            assert_eq!(shared, w);
+            assert_eq!(shared, decode(&bytes).expect("decode"));
+        });
+    }
+
+    #[test]
+    fn shared_decode_payloads_point_into_the_frame() {
+        let meta = MsgMeta::new(MsgId::new(1, 7), GidSet(0b11), vec![9u8; 100]);
+        let frame: Arc<[u8]> = encode(&Wire::Multicast { meta }).into();
+        let Wire::Multicast { meta } = decode_shared(&frame, 0, frame.len()).unwrap() else {
+            unreachable!()
+        };
+        // The payload is a window into the frame itself, not a copy.
+        assert_eq!(meta.payload.backing_len(), frame.len());
+        assert_eq!(&meta.payload[..], &[9u8; 100][..]);
+        // By contrast the copying decoder re-allocates exactly the payload.
+        let Wire::Multicast { meta: copied } = decode(&frame).unwrap() else { unreachable!() };
+        assert_eq!(copied.payload.backing_len(), 100);
+        assert!(!copied.payload.shares_buffer_with(&meta.payload));
+    }
+
+    #[test]
+    fn shared_decode_rejects_out_of_range_window() {
+        let frame: Arc<[u8]> = encode(&Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) }).into();
+        assert!(decode_shared(&frame, 0, frame.len() + 1).is_err());
+        assert!(decode_shared(&frame, frame.len() + 1, frame.len() + 2).is_err());
+        assert!(decode_shared(&frame, 2, 1).is_err());
     }
 }

@@ -34,8 +34,11 @@
 //!   latency theorems of §V. Batch frames arrive as one event with one
 //!   frame-level CPU charge ([`sim::SimConfig::coalesce`]).
 //! * [`net`] + [`coordinator`] — real transports (in-process mesh,
-//!   thread-per-connection TCP, and a Linux epoll event-loop transport
-//!   that serves every connection from one thread per endpoint) and
+//!   thread-per-connection TCP, a Linux epoll event-loop transport
+//!   that serves every connection from one thread per endpoint, and a
+//!   Linux io_uring completion-loop transport — multishot accept/recv,
+//!   registered buffer rings, `SEND_ZC` for large frames — that batches
+//!   all of an endpoint's IO through one `io_uring_enter` loop) and
 //!   the runtimes that drive the same state machines on actual threads.
 //!   A 1-node endpoint (every client, unsharded `serve`) runs an
 //!   **inline fast path** — dispatch, timers and flush on the receive
@@ -53,8 +56,13 @@
 //!   reused buffer, writes it with a single length-prefixed write,
 //!   repairs dead connections with a reconnect-and-retry before
 //!   (visibly) dropping a frame, and counts drops, dead-link verdicts
-//!   and reconnects in [`net::NetStats`]. The CLI picks the socket
-//!   transport per endpoint (`--transport tcp|epoll`).
+//!   and reconnects in [`net::NetStats`]. Received bursts decode
+//!   zero-copy: the reassembler freezes each burst into one shared
+//!   buffer and payloads become refcounted [`types::Payload`] views
+//!   into it instead of per-message copies. The CLI picks the socket
+//!   transport per endpoint (`--transport tcp|epoll|uring`; `uring`
+//!   probes kernel support and falls back to epoll with a counted
+//!   notice).
 //! * [`runtime`] — the XLA/PJRT batch commit engine: loads the
 //!   AOT-compiled JAX/Pallas `commit_batch` computation (global-timestamp
 //!   resolution + delivery-frontier check) and executes it from the leader

@@ -7,9 +7,9 @@
 //! wbam table                                   # §V latency table (T-lat)
 //! wbam serve --pid 0 --config cluster.toml [--shards 4]   # TCP member endpoint
 //!            [--data-dir DIR] [--sync always|never|interval|interval:<us>]
-//!            [--transport tcp|epoll]
+//!            [--transport tcp|epoll|uring]
 //! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100 [--shards 4]
-//!            [--transport tcp|epoll]
+//!            [--transport tcp|epoll|uring]
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
 //!
@@ -17,7 +17,11 @@
 //! sides may differ — the wire format is identical): `tcp` (default) is
 //! the threaded transport with one reader thread per accepted
 //! connection; `epoll` (Linux) multiplexes every connection on one
-//! event-loop thread — the choice for endpoints serving many peers. See
+//! event-loop thread; `uring` (Linux ≥ 6.0) batches all of an
+//! endpoint's IO through one io_uring submission/completion loop —
+//! where the kernel (or a seccomp sandbox) cannot run io_uring the
+//! endpoint falls back to epoll with a warning and a
+//! `transport_fallbacks` counter tick instead of dying. See
 //! `ARCHITECTURE.md` §Transports.
 //!
 //! Durable storage (`serve`): with `--data-dir` every hosted shard node
@@ -95,17 +99,32 @@ fn parse_flush(a: &Args) -> FlushPolicy {
 }
 
 /// The `--transport` flag (`serve`, `client`): bind the endpoint over
-/// the threaded TCP transport (default) or the Linux epoll event loop.
-/// Both speak the same wire format, so a deployment may mix them.
+/// the threaded TCP transport (default), the Linux epoll event loop or
+/// the Linux io_uring completion loop. All speak the same wire format,
+/// so a deployment may mix them. `uring` probes kernel support first
+/// and degrades to epoll — with a single warning and a
+/// `NetStats::transport_fallbacks` tick — instead of dying on old
+/// kernels or seccomp'd CI.
 fn bind_transport(a: &Args, pid: Pid, addrs: HashMap<Pid, std::net::SocketAddr>) -> Result<Box<dyn Transport>> {
     let kind = a.str_opt("transport", "tcp");
     Ok(match kind.as_str() {
         "tcp" => Box::new(TcpTransport::bind(pid, addrs)?),
         #[cfg(target_os = "linux")]
         "epoll" => Box::new(wbam::net::EpollTransport::bind(pid, addrs)?),
+        #[cfg(target_os = "linux")]
+        "uring" => match wbam::net::uring_probe() {
+            Ok(()) => Box::new(wbam::net::UringTransport::bind(pid, addrs)?),
+            Err(reason) => {
+                log::warn!("transport uring unavailable ({reason}); falling back to epoll");
+                eprintln!("warning: transport uring unavailable ({reason}); falling back to epoll");
+                let t = wbam::net::EpollTransport::bind(pid, addrs)?;
+                t.net_stats().transport_fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Box::new(t)
+            }
+        },
         s => bail!(
-            "unknown transport {s:?} (tcp|epoll{})",
-            if cfg!(target_os = "linux") { "" } else { "; epoll requires linux" }
+            "unknown transport {s:?} (tcp|epoll|uring{})",
+            if cfg!(target_os = "linux") { "" } else { "; epoll/uring require linux" }
         ),
     })
 }
@@ -268,10 +287,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
         stats.dropped_frames.load(Relaxed),
     );
     println!(
-        "  net:   dropped_frames={} probes_alive={} probes_dead={}",
+        "  net:   dropped_frames={} probes_alive={} probes_dead={} transport_fallbacks={}",
         net.dropped_frames.load(Relaxed),
         net.probes_alive.load(Relaxed),
         net.probes_dead.load(Relaxed),
+        net.transport_fallbacks.load(Relaxed),
     );
     Ok(())
 }

@@ -42,7 +42,7 @@
 //! sockets accept them before the stop is observed; per-link FIFO order
 //! is preserved to the end.
 
-use super::{FrameAssembler, Incoming, NetStats, Transport, TransportTx};
+use super::{count_syscalls, FrameAssembler, Incoming, NetStats, Transport, TransportTx};
 use crate::codec;
 use crate::types::{Pid, Wire};
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -307,6 +307,7 @@ fn read_into(
     let mut buf = [0u8; 16384];
     loop {
         let mut s = stream;
+        count_syscalls(1); // nonblocking read
         match s.read(&mut buf) {
             Ok(0) => return ReadRes::Eof,
             Ok(n) => {
@@ -345,6 +346,7 @@ fn flush_out(o: &mut OutState, epfd: RawFd) -> FlushRes {
         let r = {
             let front = o.queue.front().expect("nonempty queue");
             let mut s = &o.stream;
+            count_syscalls(1); // nonblocking write
             s.write(&front[o.front_written..])
         };
         match r {
@@ -436,6 +438,7 @@ impl EventLoop {
             if self.stop.load(Ordering::Relaxed) {
                 break;
             }
+            count_syscalls(1); // epoll_wait
             let n = match sys::wait(self.epfd, &mut events, IDLE_TICK_MS) {
                 Ok(n) => n,
                 Err(e) => {
@@ -468,6 +471,7 @@ impl EventLoop {
     fn drain_wake(&mut self) {
         let mut b = [0u8; 8];
         let mut r: &File = &self.wake;
+        count_syscalls(1);
         let _ = r.read(&mut b); // reading an eventfd clears its counter
     }
 
@@ -550,6 +554,7 @@ impl EventLoop {
         if reconnect {
             self.stats.reconnects_attempted.fetch_add(1, Ordering::Relaxed);
         }
+        count_syscalls(1); // nonblocking connect
         let (stream, connected) = match sys::connect_nonblocking(&addr) {
             Ok(x) => x,
             Err(e) => {
@@ -653,6 +658,7 @@ impl TransportTx for EpollSender {
             return;
         }
         let mut w: &File = &self.wake;
+        count_syscalls(1); // eventfd wake
         let _ = w.write(&1u64.to_ne_bytes());
     }
 }

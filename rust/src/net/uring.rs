@@ -1,0 +1,1688 @@
+//! Completion-driven TCP transport on raw `io_uring` (Linux only, no
+//! new dependencies): like [`super::epoll`], **one loop thread per
+//! endpoint** owns every socket — but instead of readiness + one
+//! syscall per read/write, the loop batches submissions and reaps
+//! completions through shared rings, so a burst of traffic costs one
+//! `io_uring_enter` rather than one syscall per frame per direction.
+//!
+//! Design:
+//!
+//! * One ring per endpoint ([`SQ_ENTRIES`] submission slots). The loop
+//!   sleeps in `io_uring_enter(GETEVENTS)` with a bounded timeout and
+//!   is woken early by completions or by an `eventfd` READ the send
+//!   halves write after queueing a frame.
+//! * **Accepts** are one multishot `ACCEPT` submission that keeps
+//!   producing a completion per inbound connection until cancelled.
+//! * **Receives** are multishot `RECV` with `IOSQE_BUFFER_SELECT`: the
+//!   kernel picks a buffer from a registered *buffer ring*
+//!   ([`RECV_BUFS`] × [`RECV_BUF_BYTES`], mmap'd once and registered
+//!   with `IORING_REGISTER_PBUF_RING`), so no read buffer is passed per
+//!   operation. Each completion carries a buffer id; the loop copies
+//!   the bytes into the connection's [`FrameAssembler`] (which freezes
+//!   complete frames into shared `Arc` payload backings — the zero-copy
+//!   handoff) and immediately republishes the buffer to the kernel.
+//! * **Sends** keep **one outstanding SEND per connection** and
+//!   resubmit the remainder on a short write. Linked SQE chains were
+//!   rejected deliberately: a short send does *not* cancel its linked
+//!   successors, which would transmit later frames after a gap and
+//!   corrupt the byte stream. Frames of at least [`ZC_THRESHOLD`] bytes
+//!   whose front is untouched go out as `SEND_ZC`; the frame buffer is
+//!   then kept alive until the kernel's NOTIF completion says the pages
+//!   are no longer referenced (see `zc_held`/`Dying` below).
+//! * **Contract** is identical to tcp and epoll (same wire format, so
+//!   all three interoperate): per-link FIFO, bounded backlog
+//!   ([`MAX_PENDING_BYTES`], overflow dropped visibly in
+//!   [`NetStats::dropped_frames`]), dead links repaired by exactly one
+//!   counted reconnect with whole-frame requeue, then counted drops.
+//!
+//! Buffer lifecycle around teardown: a dead connection may still have
+//! CQEs in flight (a pending `SEND_ZC` NOTIF still references the frame
+//! pages). Its buffers are parked in a `Dying` graveyard keyed by the
+//! connection token and freed only when the expected number of stale
+//! completions has been reaped — never while the kernel can still read
+//! them.
+//!
+//! Availability is probed ([`uring_probe`]) with a throwaway ring +
+//! `IORING_REGISTER_PROBE`: old kernels or seccomp'd CI return a
+//! printable reason instead of failing mid-run, and callers (CLI,
+//! tests, CI) fall back or skip on it.
+//!
+//! Shutdown: dropping the [`UringTransport`] raises a stop flag, wakes
+//! the loop via the eventfd and joins it (bounded by the 50 ms idle
+//! tick). Dropping the ring fd releases every in-flight operation.
+
+use super::{count_syscalls, FrameAssembler, Incoming, NetStats, Transport, TransportTx};
+use crate::codec;
+use crate::types::{Pid, Wire};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fs::File;
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU32, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Upper bound on one connection's unwritten send backlog (same
+/// contract as the epoll transport).
+pub const MAX_PENDING_BYTES: usize = 64 << 20;
+
+/// How long `io_uring_enter(GETEVENTS)` may sleep before rechecking the
+/// stop flag.
+const IDLE_TICK_MS: u64 = 50;
+
+/// Submission queue depth; the kernel sizes the completion queue at 2×.
+const SQ_ENTRIES: u32 = 256;
+
+/// Registered receive buffers: count (must be a power of two for the
+/// buffer-ring mask) and size of each.
+const RECV_BUFS: u32 = 32;
+const RECV_BUF_BYTES: usize = 16384;
+
+/// Buffer-group id of the one registered receive buffer ring.
+const BGID: u16 = 0;
+
+/// Frames at least this large (with nothing already written) are sent
+/// with `SEND_ZC`; smaller ones take the plain copying `SEND`, whose
+/// single copy is cheaper than pinning pages.
+const ZC_THRESHOLD: usize = 32 * 1024;
+
+/// Raw `io_uring` ABI (syscalls 425/426/427 via the glibc `syscall`
+/// shim; the offline image has no `libc` crate). Struct layouts follow
+/// `<linux/io_uring.h>`; only the fields and opcodes the loop uses.
+/// Fields exist to match the kernel ABI byte-for-byte — several are
+/// written for (or by) the kernel and never read from Rust.
+#[allow(dead_code)]
+mod sys {
+    use std::io;
+    use std::os::raw::{c_long, c_void};
+
+    pub const SYS_IO_URING_SETUP: c_long = 425;
+    pub const SYS_IO_URING_ENTER: c_long = 426;
+    pub const SYS_IO_URING_REGISTER: c_long = 427;
+
+    pub const PROT_READ: c_long = 1;
+    pub const PROT_WRITE: c_long = 2;
+    pub const MAP_SHARED: c_long = 1;
+    pub const MAP_PRIVATE: c_long = 2;
+    pub const MAP_ANONYMOUS: c_long = 0x20;
+
+    /// mmap offsets selecting which ring region to map.
+    pub const OFF_SQ_RING: i64 = 0;
+    pub const OFF_CQ_RING: i64 = 0x8000000;
+    pub const OFF_SQES: i64 = 0x10000000;
+
+    pub const OP_ACCEPT: u8 = 13;
+    pub const OP_CONNECT: u8 = 16;
+    pub const OP_READ: u8 = 22;
+    pub const OP_SEND: u8 = 26;
+    pub const OP_RECV: u8 = 27;
+    pub const OP_SEND_ZC: u8 = 47;
+
+    /// `IOSQE_BUFFER_SELECT`: pick the buffer from `buf_group`.
+    pub const SQE_BUFFER_SELECT: u8 = 1 << 5;
+
+    /// `ioprio` bits for multishot accept/recv.
+    pub const ACCEPT_MULTISHOT: u16 = 1;
+    pub const RECV_MULTISHOT: u16 = 1 << 1;
+
+    /// CQE flag bits.
+    pub const CQE_F_BUFFER: u32 = 1;
+    pub const CQE_F_MORE: u32 = 1 << 1;
+    pub const CQE_F_NOTIF: u32 = 1 << 3;
+
+    /// `io_uring_enter` flags.
+    pub const ENTER_GETEVENTS: u32 = 1;
+    pub const ENTER_EXT_ARG: u32 = 1 << 3;
+
+    /// Feature bits reported in `io_uring_params.features`.
+    pub const FEAT_SINGLE_MMAP: u32 = 1;
+    pub const FEAT_EXT_ARG: u32 = 1 << 8;
+
+    /// `io_uring_register` opcodes.
+    pub const REGISTER_PROBE: u32 = 8;
+    pub const REGISTER_PBUF_RING: u32 = 22;
+
+    pub const IO_URING_OP_SUPPORTED: u16 = 1;
+
+    pub const ENOBUFS: i32 = 105;
+    pub const ETIME: i32 = 62;
+    pub const EINTR: i32 = 4;
+    pub const EBUSY: i32 = 16;
+
+    pub const SOCK_CLOEXEC: u32 = 0o2000000;
+    pub const MSG_NOSIGNAL: u32 = 0x4000;
+
+    /// Offsets into the SQ/CQ ring mmaps (`io_sqring_offsets` /
+    /// `io_cqring_offsets`). Fields are written by the kernel at setup
+    /// and read here to locate the shared atomics.
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct SqringOffsets {
+        pub head: u32,
+        pub tail: u32,
+        pub ring_mask: u32,
+        pub ring_entries: u32,
+        pub flags: u32,
+        pub dropped: u32,
+        pub array: u32,
+        pub resv1: u32,
+        pub user_addr: u64,
+    }
+
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct CqringOffsets {
+        pub head: u32,
+        pub tail: u32,
+        pub ring_mask: u32,
+        pub ring_entries: u32,
+        pub overflow: u32,
+        pub cqes: u32,
+        pub flags: u32,
+        pub resv1: u32,
+        pub user_addr: u64,
+    }
+
+    /// `struct io_uring_params` (120 bytes).
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct IoUringParams {
+        pub sq_entries: u32,
+        pub cq_entries: u32,
+        pub flags: u32,
+        pub sq_thread_cpu: u32,
+        pub sq_thread_idle: u32,
+        pub features: u32,
+        pub wq_fd: u32,
+        pub resv: [u32; 3],
+        pub sq_off: SqringOffsets,
+        pub cq_off: CqringOffsets,
+    }
+
+    /// One submission queue entry (64 bytes). The union-heavy kernel
+    /// layout is flattened to the aliases this module uses; `rw_flags`
+    /// doubles as accept flags / send flags, `off` as the connect
+    /// addrlen, `buf_group` lives at the union offset 44.
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct Sqe {
+        pub opcode: u8,
+        pub flags: u8,
+        pub ioprio: u16,
+        pub fd: i32,
+        pub off: u64,
+        pub addr: u64,
+        pub len: u32,
+        pub rw_flags: u32,
+        pub user_data: u64,
+        pub buf_group: u16,
+        pub personality: u16,
+        pub splice_fd_in: i32,
+        pub addr3: u64,
+        pub pad2: u64,
+    }
+
+    /// One completion queue entry (16 bytes).
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct Cqe {
+        pub user_data: u64,
+        pub res: i32,
+        pub flags: u32,
+    }
+
+    /// Argument block for `ENTER_EXT_ARG` timed waits.
+    #[repr(C)]
+    pub struct GeteventsArg {
+        pub sigmask: u64,
+        pub sigmask_sz: u32,
+        pub pad: u32,
+        pub ts: u64,
+    }
+
+    #[repr(C)]
+    pub struct KernelTimespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    /// Header of the `IORING_REGISTER_PROBE` reply.
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct ProbeHeader {
+        pub last_op: u8,
+        pub ops_len: u8,
+        pub resv: u16,
+        pub resv2: [u32; 3],
+    }
+
+    /// One per-opcode probe entry following the header.
+    #[repr(C)]
+    #[derive(Clone, Copy, Default)]
+    pub struct ProbeOp {
+        pub op: u8,
+        pub resv: u8,
+        pub flags: u16,
+        pub resv2: u32,
+    }
+
+    /// `struct io_uring_buf_reg` for `REGISTER_PBUF_RING`.
+    #[repr(C)]
+    pub struct BufReg {
+        pub ring_addr: u64,
+        pub ring_entries: u32,
+        pub bgid: u16,
+        pub flags: u16,
+        pub resv: [u64; 3],
+    }
+
+    /// One entry of a registered buffer ring (`struct io_uring_buf`).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct BufRingEntry {
+        pub addr: u64,
+        pub len: u32,
+        pub bid: u16,
+        pub resv: u16,
+    }
+
+    pub const AF_INET: i32 = 2;
+    pub const AF_INET6: i32 = 10;
+    const SOCK_STREAM: i32 = 1;
+    /// == `O_CLOEXEC` (also `SOCK_CLOEXEC` / `EFD_CLOEXEC`).
+    const CLOEXEC: i32 = 0o2000000;
+    const NONBLOCK: i32 = 0o4000;
+
+    extern "C" {
+        fn syscall(num: c_long, ...) -> c_long;
+        fn mmap(addr: *mut c_void, len: usize, prot: c_long, flags: c_long, fd: i32, off: i64) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+    }
+
+    /// A plain (blocking) TCP socket fd for an io_uring CONNECT — the
+    /// ring supplies the asynchrony, so `O_NONBLOCK` is not needed.
+    pub fn tcp_socket(domain: i32) -> io::Result<i32> {
+        let fd = unsafe { socket(domain, SOCK_STREAM | CLOEXEC, 0) };
+        if fd < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(fd)
+        }
+    }
+
+    /// Assemble a `sockaddr_in`/`sockaddr_in6` by byte layout (family
+    /// in host order, port/flowinfo/address in network order); returns
+    /// `(domain, bytes, len)`. The buffer must stay at a stable address
+    /// until the CONNECT completion (the kernel reads it asynchronously).
+    pub fn sockaddr_bytes(addr: &std::net::SocketAddr) -> (i32, [u8; 28], u32) {
+        use std::net::SocketAddr;
+        let mut sa = [0u8; 28];
+        match addr {
+            SocketAddr::V4(v4) => {
+                sa[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+                sa[2..4].copy_from_slice(&v4.port().to_be_bytes());
+                sa[4..8].copy_from_slice(&v4.ip().octets());
+                (AF_INET, sa, 16)
+            }
+            SocketAddr::V6(v6) => {
+                sa[0..2].copy_from_slice(&(AF_INET6 as u16).to_ne_bytes());
+                sa[2..4].copy_from_slice(&v6.port().to_be_bytes());
+                sa[4..8].copy_from_slice(&v6.flowinfo().to_be_bytes());
+                sa[8..24].copy_from_slice(&v6.ip().octets());
+                sa[24..28].copy_from_slice(&v6.scope_id().to_ne_bytes());
+                (AF_INET6, sa, 28)
+            }
+        }
+    }
+
+    fn cvt(ret: c_long) -> io::Result<c_long> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub fn io_uring_setup(entries: u32, params: &mut IoUringParams) -> io::Result<RawFdOwned> {
+        let fd = cvt(unsafe { syscall(SYS_IO_URING_SETUP, entries as c_long, params as *mut IoUringParams) })?;
+        Ok(RawFdOwned(fd as i32))
+    }
+
+    pub fn io_uring_enter(
+        fd: i32,
+        to_submit: u32,
+        min_complete: u32,
+        flags: u32,
+        arg: *const c_void,
+        argsz: usize,
+    ) -> io::Result<u32> {
+        let ret = unsafe {
+            syscall(
+                SYS_IO_URING_ENTER,
+                fd as c_long,
+                to_submit as c_long,
+                min_complete as c_long,
+                flags as c_long,
+                arg,
+                argsz as c_long,
+            )
+        };
+        cvt(ret).map(|n| n as u32)
+    }
+
+    pub fn io_uring_register(fd: i32, opcode: u32, arg: *const c_void, nr_args: u32) -> io::Result<()> {
+        cvt(unsafe { syscall(SYS_IO_URING_REGISTER, fd as c_long, opcode as c_long, arg, nr_args as c_long) })?;
+        Ok(())
+    }
+
+    /// The ring fd, closed on drop (wrapped in `File` upstream is not
+    /// possible: it is not a regular file descriptor to hand to std IO,
+    /// but close-on-drop is all we need).
+    pub struct RawFdOwned(pub i32);
+
+    impl Drop for RawFdOwned {
+        fn drop(&mut self) {
+            extern "C" {
+                fn close(fd: i32) -> i32;
+            }
+            unsafe { close(self.0) };
+        }
+    }
+
+    pub fn map(len: usize, fd: i32, off: i64) -> io::Result<*mut u8> {
+        let p = unsafe { mmap(std::ptr::null_mut(), len, PROT_READ | PROT_WRITE, MAP_SHARED, fd, off) };
+        if p as isize == -1 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(p as *mut u8)
+        }
+    }
+
+    pub fn map_anon(len: usize) -> io::Result<*mut u8> {
+        let p = unsafe { mmap(std::ptr::null_mut(), len, PROT_READ | PROT_WRITE, MAP_PRIVATE | MAP_ANONYMOUS, -1, 0) };
+        if p as isize == -1 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(p as *mut u8)
+        }
+    }
+
+    pub fn unmap(addr: *mut u8, len: usize) {
+        unsafe { munmap(addr as *mut c_void, len) };
+    }
+
+    /// == `O_CLOEXEC` | `O_NONBLOCK` for `eventfd`.
+    pub fn new_eventfd() -> io::Result<i32> {
+        let fd = unsafe { eventfd(0, 0o2000000 | 0o4000) };
+        if fd < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(fd)
+        }
+    }
+}
+
+/// An owned memory mapping, unmapped on drop.
+struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        sys::unmap(self.ptr, self.len);
+    }
+}
+
+/// One `io_uring` instance: the ring fd, its three shared-memory
+/// regions and cached pointers to the kernel-shared head/tail atomics.
+/// Owned (and only touched) by the event-loop thread; `Send` so the
+/// loop struct can move onto that thread.
+struct Ring {
+    fd: sys::RawFdOwned,
+    _sq: Mmap,
+    /// `None` when the kernel reports `FEAT_SINGLE_MMAP` (the CQ shares
+    /// the SQ mapping).
+    _cq: Option<Mmap>,
+    _sqes: Mmap,
+    sq_khead: *const AtomicU32,
+    sq_ktail: *const AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    sqes: *mut sys::Sqe,
+    cq_khead: *const AtomicU32,
+    cq_ktail: *const AtomicU32,
+    cq_mask: u32,
+    cqes: *const sys::Cqe,
+    /// SQEs prepared but not yet published to the kernel tail.
+    local_tail: u32,
+    features: u32,
+}
+
+// SAFETY: the raw pointers target the ring mmaps owned by this struct;
+// the struct moves to the event-loop thread once and is never shared.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn new(entries: u32) -> io::Result<Ring> {
+        let mut p = sys::IoUringParams::default();
+        let fd = sys::io_uring_setup(entries, &mut p)?;
+        let sq_len = p.sq_off.array as usize + p.sq_entries as usize * std::mem::size_of::<u32>();
+        let cq_len = p.cq_off.cqes as usize + p.cq_entries as usize * std::mem::size_of::<sys::Cqe>();
+        let single = p.features & sys::FEAT_SINGLE_MMAP != 0;
+        let sq_map_len = if single { sq_len.max(cq_len) } else { sq_len };
+        let sq = Mmap { ptr: sys::map(sq_map_len, fd.0, sys::OFF_SQ_RING)?, len: sq_map_len };
+        let (cq_base, cq) = if single {
+            (sq.ptr, None)
+        } else {
+            let m = Mmap { ptr: sys::map(cq_len, fd.0, sys::OFF_CQ_RING)?, len: cq_len };
+            (m.ptr, Some(m))
+        };
+        let sqes_len = p.sq_entries as usize * std::mem::size_of::<sys::Sqe>();
+        let sqes = Mmap { ptr: sys::map(sqes_len, fd.0, sys::OFF_SQES)?, len: sqes_len };
+        // SAFETY: offsets come from the kernel for these mappings; the
+        // head/tail words are 4-aligned u32s shared with the kernel,
+        // accessed through atomics exactly as the ABI prescribes.
+        unsafe {
+            let ring = Ring {
+                sq_khead: sq.ptr.add(p.sq_off.head as usize) as *const AtomicU32,
+                sq_ktail: sq.ptr.add(p.sq_off.tail as usize) as *const AtomicU32,
+                sq_mask: *(sq.ptr.add(p.sq_off.ring_mask as usize) as *const u32),
+                sq_entries: p.sq_entries,
+                sq_array: sq.ptr.add(p.sq_off.array as usize) as *mut u32,
+                sqes: sqes.ptr as *mut sys::Sqe,
+                cq_khead: cq_base.add(p.cq_off.head as usize) as *const AtomicU32,
+                cq_ktail: cq_base.add(p.cq_off.tail as usize) as *const AtomicU32,
+                cq_mask: *(cq_base.add(p.cq_off.ring_mask as usize) as *const u32),
+                cqes: cq_base.add(p.cq_off.cqes as usize) as *const sys::Cqe,
+                local_tail: (*(sq.ptr.add(p.sq_off.tail as usize) as *const AtomicU32)).load(Ordering::Relaxed),
+                features: p.features,
+                fd,
+                _sq: sq,
+                _cq: cq,
+                _sqes: sqes,
+            };
+            Ok(ring)
+        }
+    }
+
+    fn sq_free(&self) -> u32 {
+        // SAFETY: sq_khead points into the live SQ mapping.
+        let head = unsafe { (*self.sq_khead).load(Ordering::Acquire) };
+        self.sq_entries - self.local_tail.wrapping_sub(head)
+    }
+
+    /// Claim the next SQE slot, zeroed. On a full SQ the pending batch
+    /// is flushed once; `None` only if the kernel cannot drain (the
+    /// caller treats that as a dead ring).
+    fn sqe(&mut self) -> Option<&mut sys::Sqe> {
+        if self.sq_free() == 0 {
+            let _ = self.enter(0, None);
+            if self.sq_free() == 0 {
+                return None;
+            }
+        }
+        let idx = (self.local_tail & self.sq_mask) as usize;
+        self.local_tail = self.local_tail.wrapping_add(1);
+        // SAFETY: idx is masked into the array/SQE mappings; the slot
+        // is free (checked above), so the kernel is not reading it.
+        unsafe {
+            *self.sq_array.add(idx) = idx as u32;
+            let sqe = &mut *self.sqes.add(idx);
+            *sqe = sys::Sqe::default();
+            Some(sqe)
+        }
+    }
+
+    /// Publish prepared SQEs and optionally wait for completions, with
+    /// an optional timeout (`ENTER_EXT_ARG`). `-ETIME`/`-EINTR`/`-EBUSY`
+    /// are normal outcomes (timeout, signal, CQ saturated) — the caller
+    /// just reaps and loops.
+    fn enter(&mut self, min_complete: u32, timeout_ms: Option<u64>) -> io::Result<()> {
+        // SAFETY: ring pointers are valid for the ring's lifetime.
+        unsafe { (*self.sq_ktail).store(self.local_tail, Ordering::Release) };
+        let khead = unsafe { (*self.sq_khead).load(Ordering::Acquire) };
+        let to_submit = self.local_tail.wrapping_sub(khead);
+        let mut flags = 0u32;
+        if min_complete > 0 {
+            flags |= sys::ENTER_GETEVENTS;
+        }
+        count_syscalls(1); // io_uring_enter
+        let r = match timeout_ms {
+            Some(ms) => {
+                let ts = sys::KernelTimespec { tv_sec: (ms / 1000) as i64, tv_nsec: ((ms % 1000) * 1_000_000) as i64 };
+                let arg = sys::GeteventsArg { sigmask: 0, sigmask_sz: 8, pad: 0, ts: &ts as *const _ as u64 };
+                flags |= sys::ENTER_EXT_ARG;
+                sys::io_uring_enter(
+                    self.fd.0,
+                    to_submit,
+                    min_complete,
+                    flags,
+                    &arg as *const sys::GeteventsArg as *const _,
+                    std::mem::size_of::<sys::GeteventsArg>(),
+                )
+            }
+            None => sys::io_uring_enter(self.fd.0, to_submit, min_complete, flags, std::ptr::null(), 0),
+        };
+        match r {
+            Ok(_) => Ok(()),
+            Err(e) => match e.raw_os_error() {
+                Some(sys::ETIME) | Some(sys::EINTR) | Some(sys::EBUSY) => Ok(()),
+                _ => Err(e),
+            },
+        }
+    }
+
+    /// Reap every pending completion into `out`.
+    fn take_cqes(&mut self, out: &mut Vec<sys::Cqe>) {
+        // SAFETY: CQ pointers are valid; entries below the tail were
+        // fully written by the kernel before the release-store we
+        // acquire here.
+        let tail = unsafe { (*self.cq_ktail).load(Ordering::Acquire) };
+        let mut head = unsafe { (*self.cq_khead).load(Ordering::Relaxed) };
+        while head != tail {
+            out.push(unsafe { *self.cqes.add((head & self.cq_mask) as usize) });
+            head = head.wrapping_add(1);
+        }
+        unsafe { (*self.cq_khead).store(head, Ordering::Release) };
+    }
+
+    /// Ask the kernel which opcodes it supports
+    /// (`IORING_REGISTER_PROBE`); index = opcode.
+    fn probe_ops(&self) -> io::Result<Vec<bool>> {
+        const NOPS: usize = 64;
+        #[repr(C)]
+        struct ProbeBuf {
+            hdr: sys::ProbeHeader,
+            ops: [sys::ProbeOp; NOPS],
+        }
+        let mut buf = ProbeBuf { hdr: sys::ProbeHeader::default(), ops: [sys::ProbeOp::default(); NOPS] };
+        sys::io_uring_register(self.fd.0, sys::REGISTER_PROBE, &mut buf as *mut ProbeBuf as *const _, NOPS as u32)?;
+        Ok(buf.ops.iter().map(|o| o.flags & sys::IO_URING_OP_SUPPORTED != 0).collect())
+    }
+}
+
+/// A registered provided-buffer ring (`IORING_REGISTER_PBUF_RING`):
+/// `entries` buffers of `buf_size` bytes the kernel picks from for
+/// multishot receives. Publishing is a ring write plus a release-store
+/// of the tail (a `u16` aliased over the first entry's `resv` field,
+/// per the ABI) — no syscall to return a buffer.
+struct BufRing {
+    ring: Mmap,
+    data: Mmap,
+    buf_size: usize,
+    tail: u16,
+    mask: u16,
+}
+
+// SAFETY: both mappings are anonymous and owned; moved to the loop
+// thread once, never shared.
+unsafe impl Send for BufRing {}
+
+impl BufRing {
+    fn new(ring_fd: i32, entries: u32, buf_size: usize, bgid: u16) -> io::Result<BufRing> {
+        debug_assert!(entries.is_power_of_two());
+        let ring_len = entries as usize * std::mem::size_of::<sys::BufRingEntry>();
+        let ring = Mmap { ptr: sys::map_anon(ring_len)?, len: ring_len };
+        let data = Mmap { ptr: sys::map_anon(entries as usize * buf_size)?, len: entries as usize * buf_size };
+        let reg =
+            sys::BufReg { ring_addr: ring.ptr as u64, ring_entries: entries, bgid, flags: 0, resv: [0; 3] };
+        sys::io_uring_register(ring_fd, sys::REGISTER_PBUF_RING, &reg as *const sys::BufReg as *const _, 1)?;
+        let mut br = BufRing { ring, data, buf_size, tail: 0, mask: (entries - 1) as u16 };
+        for bid in 0..entries as u16 {
+            br.publish(bid);
+        }
+        br.commit();
+        Ok(br)
+    }
+
+    /// Hand buffer `bid` (back) to the kernel; visible after `commit`.
+    fn publish(&mut self, bid: u16) {
+        let idx = (self.tail & self.mask) as usize;
+        // SAFETY: idx is masked into the ring mapping; the slot is past
+        // the published tail, so the kernel is not reading it.
+        unsafe {
+            let e = (self.ring.ptr as *mut sys::BufRingEntry).add(idx);
+            (*e).addr = self.data.ptr.add(bid as usize * self.buf_size) as u64;
+            (*e).len = self.buf_size as u32;
+            (*e).bid = bid;
+            (*e).resv = 0;
+        }
+        self.tail = self.tail.wrapping_add(1);
+    }
+
+    /// Release-store the new tail (byte offset 14 = the ABI's tail slot).
+    fn commit(&self) {
+        // SAFETY: offset 14 is within the first 16-byte entry; the ABI
+        // defines it as the ring tail, shared with the kernel.
+        let tail_ptr = unsafe { self.ring.ptr.add(14) } as *const AtomicU16;
+        unsafe { (*tail_ptr).store(self.tail, Ordering::Release) };
+    }
+
+    fn republish(&mut self, bid: u16) {
+        self.publish(bid);
+        self.commit();
+    }
+
+    /// The first `len` bytes the kernel wrote into buffer `bid`.
+    fn slice(&self, bid: u16, len: usize) -> &[u8] {
+        let len = len.min(self.buf_size);
+        // SAFETY: bid*buf_size..+len is within the data mapping; the
+        // kernel wrote these bytes before completing the recv.
+        unsafe { std::slice::from_raw_parts(self.data.ptr.add(bid as usize * self.buf_size), len) }
+    }
+}
+
+/// Probe once whether this kernel (and sandbox) can run the transport:
+/// a throwaway ring, the `EXT_ARG` timed-wait feature, every opcode the
+/// loop uses, and a registered buffer ring.
+fn probe_impl() -> Result<(), String> {
+    let ring = Ring::new(8).map_err(|e| format!("io_uring_setup unavailable: {e}"))?;
+    if ring.features & sys::FEAT_EXT_ARG == 0 {
+        return Err("kernel lacks IORING_FEAT_EXT_ARG (pre-5.11)".into());
+    }
+    let ops = ring.probe_ops().map_err(|e| format!("IORING_REGISTER_PROBE failed: {e}"))?;
+    let need: [(u8, &str); 6] = [
+        (sys::OP_ACCEPT, "ACCEPT"),
+        (sys::OP_CONNECT, "CONNECT"),
+        (sys::OP_READ, "READ"),
+        (sys::OP_SEND, "SEND"),
+        (sys::OP_RECV, "RECV"),
+        (sys::OP_SEND_ZC, "SEND_ZC"),
+    ];
+    for (op, name) in need {
+        if !ops.get(op as usize).copied().unwrap_or(false) {
+            return Err(format!("kernel does not support IORING_OP_{name}"));
+        }
+    }
+    BufRing::new(ring.fd.0, 8, 4096, BGID).map_err(|e| format!("buffer-ring registration failed: {e}"))?;
+    Ok(())
+}
+
+/// `Ok(())` if [`UringTransport`] can run here, else a printable reason
+/// (old kernel, seccomp, missing opcode). Probed once per process.
+pub fn uring_probe() -> Result<(), String> {
+    static PROBE: OnceLock<Result<(), String>> = OnceLock::new();
+    PROBE.get_or_init(probe_impl).clone()
+}
+
+/// Convenience boolean form of [`uring_probe`].
+pub fn uring_available() -> bool {
+    uring_probe().is_ok()
+}
+
+/// `user_data` encodes `(token << 3) | kind` so a completion routes to
+/// its handler without a lookup. Connection tokens count up and are
+/// never reused, so a stale completion can only miss a map lookup.
+const KIND_ACCEPT: u64 = 0;
+const KIND_WAKE: u64 = 1;
+const KIND_RECV: u64 = 2;
+const KIND_SEND: u64 = 3;
+const KIND_CONNECT: u64 = 4;
+const KIND_MASK: u64 = 7;
+
+fn ud(token: u64, kind: u64) -> u64 {
+    (token << 3) | kind
+}
+
+/// One frame handed from a send half to the event loop, already encoded
+/// in the wire format (`from`/`to`/`tag` ride along for drop warnings).
+struct SendCmd {
+    from: Pid,
+    to: Pid,
+    tag: &'static str,
+    frame: Vec<u8>,
+}
+
+/// One connection owned by the loop. Accepted (inbound) connections
+/// have `addr == None` and never send; dialed ones own the send queue
+/// and the reconnect-retry-once policy.
+struct UConn {
+    stream: TcpStream,
+    addr: Option<SocketAddr>,
+    /// stable storage the kernel reads during an async CONNECT
+    sockaddr: Option<Box<[u8; 28]>>,
+    connected: bool,
+    /// exactly one SEND/SEND_ZC outstanding at a time (see module docs
+    /// on why linked chains were rejected)
+    send_inflight: bool,
+    /// the outstanding send is a `SEND_ZC`
+    zc_inflight: bool,
+    /// the front frame's pages are pinned by a pending ZC NOTIF
+    front_zc: bool,
+    /// NOTIF completions the kernel still owes this connection
+    zc_notifs: u32,
+    /// completed frames whose pages `SEND_ZC` still references, oldest
+    /// first; popped as NOTIFs arrive
+    zc_held: VecDeque<Vec<u8>>,
+    /// whole frames not yet fully written, FIFO
+    queue: VecDeque<Vec<u8>>,
+    /// unwritten bytes across `queue` (the backpressure gauge)
+    queued_bytes: usize,
+    /// bytes of `queue[0]` already written
+    front_written: usize,
+    /// this connection IS the one-shot reconnect retry (same semantics
+    /// as the epoll transport; cleared once a whole frame lands)
+    retry: bool,
+    asm: FrameAssembler,
+}
+
+impl UConn {
+    fn new(stream: TcpStream, addr: Option<SocketAddr>, connected: bool, retry: bool) -> UConn {
+        UConn {
+            stream,
+            addr,
+            sockaddr: None,
+            connected,
+            send_inflight: false,
+            zc_inflight: false,
+            front_zc: false,
+            zc_notifs: 0,
+            zc_held: VecDeque::new(),
+            queue: VecDeque::new(),
+            queued_bytes: 0,
+            front_written: 0,
+            retry,
+            asm: FrameAssembler::new(),
+        }
+    }
+}
+
+/// Graveyard entry for a dead connection with completions still in
+/// flight: `_bufs` keeps every buffer the kernel may still reference
+/// (queued frames, ZC-pinned frames) alive until `outstanding` stale
+/// send-side completions have been reaped.
+struct Dying {
+    _bufs: Vec<Vec<u8>>,
+    outstanding: u32,
+}
+
+/// The endpoint's submission/completion loop: owns the ring, the
+/// listener and every connection; runs on one dedicated thread.
+struct EventLoop {
+    /// Declared first so it drops first: closing the ring fd releases
+    /// the kernel's in-flight operations before the buffers they
+    /// reference (`bufs`, `wake_buf`, connection queues) are freed.
+    ring: Ring,
+    bufs: BufRing,
+    listener: TcpListener,
+    wake: Arc<File>,
+    /// stable target of the pending eventfd READ
+    wake_buf: Box<[u8; 8]>,
+    addrs: Arc<HashMap<Pid, SocketAddr>>,
+    stats: Arc<NetStats>,
+    incoming: Sender<(Pid, Pid, Wire)>,
+    cmds: Receiver<SendCmd>,
+    stop: Arc<AtomicBool>,
+    conns: HashMap<u64, UConn>,
+    /// dialed connection per remote address
+    out_tokens: HashMap<SocketAddr, u64>,
+    /// addresses whose previous connection died: the next dial is a
+    /// counted *reconnect*
+    dead: HashSet<SocketAddr>,
+    dying: HashMap<u64, Dying>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        self.arm_accept();
+        self.arm_wake();
+        let mut cqes: Vec<sys::Cqe> = Vec::with_capacity(128);
+        'outer: loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            // queue sends first so the enter below submits them in the
+            // same syscall that waits for completions
+            loop {
+                match self.cmds.try_recv() {
+                    Ok(cmd) => self.handle_send(cmd),
+                    Err(TryRecvError::Empty) => break,
+                    // every handle and send half is gone: nothing can
+                    // ever queue a frame or read an incoming one again
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            }
+            if let Err(e) = self.ring.enter(1, Some(IDLE_TICK_MS)) {
+                log::warn!("uring: enter failed, transport stopping: {e}");
+                break;
+            }
+            cqes.clear();
+            self.ring.take_cqes(&mut cqes);
+            for i in 0..cqes.len() {
+                let cqe = cqes[i];
+                let kind = cqe.user_data & KIND_MASK;
+                let token = cqe.user_data >> 3;
+                match kind {
+                    KIND_ACCEPT => self.on_accept(cqe),
+                    KIND_WAKE => self.arm_wake(),
+                    KIND_RECV => self.on_recv(token, cqe),
+                    KIND_SEND => self.on_send(token, cqe),
+                    KIND_CONNECT => self.on_connect(token, cqe),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    /// One multishot ACCEPT covers the listener's lifetime (re-armed if
+    /// the kernel retires it).
+    fn arm_accept(&mut self) {
+        let fd = self.listener.as_raw_fd();
+        if let Some(sqe) = self.ring.sqe() {
+            sqe.opcode = sys::OP_ACCEPT;
+            sqe.fd = fd;
+            sqe.ioprio = sys::ACCEPT_MULTISHOT;
+            sqe.rw_flags = sys::SOCK_CLOEXEC;
+            sqe.user_data = ud(0, KIND_ACCEPT);
+        }
+    }
+
+    /// One READ on the eventfd; completes per wake, re-armed each time.
+    fn arm_wake(&mut self) {
+        let fd = self.wake.as_raw_fd();
+        let addr = self.wake_buf.as_mut_ptr() as u64;
+        if let Some(sqe) = self.ring.sqe() {
+            sqe.opcode = sys::OP_READ;
+            sqe.fd = fd;
+            sqe.addr = addr;
+            sqe.len = 8;
+            sqe.user_data = ud(0, KIND_WAKE);
+        }
+    }
+
+    /// Multishot RECV with kernel-selected registered buffers.
+    fn arm_recv(&mut self, token: u64) {
+        let Some(c) = self.conns.get(&token) else { return };
+        let fd = c.stream.as_raw_fd();
+        if let Some(sqe) = self.ring.sqe() {
+            sqe.opcode = sys::OP_RECV;
+            sqe.fd = fd;
+            sqe.ioprio = sys::RECV_MULTISHOT;
+            sqe.flags = sys::SQE_BUFFER_SELECT;
+            sqe.buf_group = BGID;
+            sqe.user_data = ud(token, KIND_RECV);
+        }
+    }
+
+    fn on_accept(&mut self, cqe: sys::Cqe) {
+        if cqe.flags & sys::CQE_F_MORE == 0 {
+            self.arm_accept(); // multishot retired (e.g. transient error)
+        }
+        if cqe.res < 0 {
+            return;
+        }
+        // SAFETY: a non-negative ACCEPT result is a fresh socket fd
+        // owned by no one else.
+        let stream = unsafe { TcpStream::from_raw_fd(cqe.res) };
+        stream.set_nodelay(true).ok();
+        let token = self.next_token;
+        self.next_token += 1;
+        self.conns.insert(token, UConn::new(stream, None, true, false));
+        self.arm_recv(token);
+    }
+
+    fn on_recv(&mut self, token: u64, cqe: sys::Cqe) {
+        let bid = (cqe.flags & sys::CQE_F_BUFFER != 0).then_some((cqe.flags >> 16) as u16);
+        if !self.conns.contains_key(&token) {
+            // stale completion for a torn-down connection: recycle the
+            // buffer, account the graveyard, done
+            if let Some(b) = bid {
+                self.bufs.republish(b);
+            }
+            self.reap_dying(token, KIND_RECV);
+            return;
+        }
+        let mut bad = false;
+        if cqe.res > 0 {
+            if let Some(b) = bid {
+                let chunk = self.bufs.slice(b, cqe.res as usize);
+                let c = self.conns.get_mut(&token).expect("presence checked");
+                let incoming = &self.incoming;
+                if let Err(e) = c.asm.push(chunk, &mut |from, to, wire| {
+                    let _ = incoming.send((from, to, wire));
+                }) {
+                    // receive-side loss is a loss too: count it, then
+                    // abandon the stream (framing is unrecoverable)
+                    self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("uring: abandoning stream: {e}");
+                    bad = true;
+                }
+            }
+        }
+        if let Some(b) = bid {
+            self.bufs.republish(b);
+        }
+        // -ENOBUFS just means the buffer ring ran dry for a moment: the
+        // republishes above refilled it, so re-arm and continue
+        if bad || cqe.res == 0 || (cqe.res < 0 && cqe.res != -sys::ENOBUFS) {
+            self.conn_dead(token);
+            return;
+        }
+        if cqe.flags & sys::CQE_F_MORE == 0 {
+            self.arm_recv(token);
+        }
+    }
+
+    fn on_connect(&mut self, token: u64, cqe: sys::Cqe) {
+        let addr = match self.conns.get_mut(&token) {
+            None => return,
+            Some(c) => {
+                c.sockaddr = None; // kernel is done with the sockaddr
+                c.addr
+            }
+        };
+        if cqe.res < 0 {
+            if let Some(a) = addr {
+                self.conn_failed(a);
+            }
+            return;
+        }
+        let retry = {
+            let c = self.conns.get_mut(&token).expect("presence checked");
+            c.connected = true;
+            c.retry
+        };
+        if retry {
+            self.stats.reconnects_succeeded.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(a) = addr {
+            self.dead.remove(&a);
+        }
+        self.arm_recv(token);
+        self.pump_send(token);
+    }
+
+    /// Submit the next SEND/SEND_ZC if the connection is idle. Exactly
+    /// one op per connection is in flight; a short write resubmits the
+    /// remainder (as a plain SEND — at most one ZC op, hence one NOTIF,
+    /// per frame, which keeps the `zc_held` accounting FIFO).
+    fn pump_send(&mut self, token: u64) {
+        let (fd, ptr, len, zc) = {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if c.send_inflight || !c.connected {
+                return;
+            }
+            let Some(front) = c.queue.front() else { return };
+            let remaining = front.len() - c.front_written;
+            let zc = c.front_written == 0 && remaining >= ZC_THRESHOLD;
+            // SAFETY: pointer into the front frame's heap buffer, which
+            // stays in `queue` (or moves whole into `zc_held`/`Dying`)
+            // until this op's completions are reaped.
+            let ptr = unsafe { front.as_ptr().add(c.front_written) } as u64;
+            (c.stream.as_raw_fd(), ptr, remaining as u32, zc)
+        };
+        let Some(sqe) = self.ring.sqe() else { return };
+        sqe.opcode = if zc { sys::OP_SEND_ZC } else { sys::OP_SEND };
+        sqe.fd = fd;
+        sqe.addr = ptr;
+        sqe.len = len;
+        sqe.rw_flags = sys::MSG_NOSIGNAL;
+        sqe.user_data = ud(token, KIND_SEND);
+        let c = self.conns.get_mut(&token).expect("still present");
+        c.send_inflight = true;
+        c.zc_inflight = zc;
+    }
+
+    fn on_send(&mut self, token: u64, cqe: sys::Cqe) {
+        if !self.conns.contains_key(&token) {
+            self.reap_dying(token, KIND_SEND);
+            return;
+        }
+        if cqe.flags & sys::CQE_F_NOTIF != 0 {
+            // the kernel released the pages of the oldest pinned frame
+            let c = self.conns.get_mut(&token).expect("presence checked");
+            c.zc_notifs = c.zc_notifs.saturating_sub(1);
+            if c.zc_held.pop_front().is_none() {
+                // NOTIF beat the frame's completion: unpin the front
+                c.front_zc = false;
+            }
+            return;
+        }
+        let (failed, addr) = {
+            let c = self.conns.get_mut(&token).expect("presence checked");
+            c.send_inflight = false;
+            let was_zc = c.zc_inflight;
+            c.zc_inflight = false;
+            if was_zc && cqe.flags & sys::CQE_F_MORE != 0 {
+                c.zc_notifs += 1; // a NOTIF will follow for this op
+                c.front_zc = true;
+            }
+            if cqe.res < 0 {
+                (true, c.addr)
+            } else {
+                let n = cqe.res as usize;
+                c.front_written += n;
+                c.queued_bytes -= n;
+                let done = c.front_written >= c.queue.front().map_or(0, |f| f.len());
+                if done {
+                    let f = c.queue.pop_front().expect("front exists");
+                    c.front_written = 0;
+                    c.retry = false; // a whole frame landed: link healthy
+                    if c.front_zc {
+                        c.zc_held.push_back(f); // pinned until its NOTIF
+                        c.front_zc = false;
+                    }
+                }
+                (false, None)
+            }
+        };
+        if failed {
+            match addr {
+                Some(a) => self.conn_failed(a),
+                None => {
+                    if let Some(c) = self.conns.remove(&token) {
+                        self.park_dying(token, c);
+                    }
+                }
+            }
+            return;
+        }
+        self.pump_send(token);
+    }
+
+    /// A connection hit EOF or an unrecoverable error.
+    fn conn_dead(&mut self, token: u64) {
+        match self.conns.get(&token).and_then(|c| c.addr) {
+            Some(addr) => self.conn_failed(addr),
+            None => {
+                if let Some(c) = self.conns.remove(&token) {
+                    self.park_dying(token, c);
+                }
+            }
+        }
+    }
+
+    /// Tear down a dead connection whose kernel-side completions may
+    /// still be in flight: park every buffer the kernel could still
+    /// read until the expected stale completions are reaped.
+    fn park_dying(&mut self, token: u64, c: UConn) {
+        let outstanding = c.zc_notifs + if c.send_inflight { 1 + c.zc_inflight as u32 } else { 0 };
+        if outstanding == 0 {
+            return; // nothing in flight: dropping `c` frees everything
+        }
+        let mut bufs: Vec<Vec<u8>> = c.zc_held.into();
+        bufs.extend(c.queue);
+        self.dying.insert(token, Dying { _bufs: bufs, outstanding });
+    }
+
+    /// A stale send-side completion (data or NOTIF) for a parked
+    /// connection arrived: one fewer reason to keep its buffers.
+    fn reap_dying(&mut self, token: u64, kind: u64) {
+        if kind != KIND_SEND {
+            return;
+        }
+        if let Some(d) = self.dying.get_mut(&token) {
+            d.outstanding = d.outstanding.saturating_sub(1);
+            if d.outstanding == 0 {
+                self.dying.remove(&token);
+            }
+        }
+    }
+
+    /// A dialed connection died: tear it down, then either requeue its
+    /// pending whole frames on one fresh connection (retry-once) or
+    /// drop them visibly. The originals ride into the graveyard whole
+    /// (the kernel may still reference them); the retry sends clones.
+    fn conn_failed(&mut self, addr: SocketAddr) {
+        let Some(token) = self.out_tokens.remove(&addr) else { return };
+        let Some(c) = self.conns.remove(&token) else { return };
+        self.stats.probes_dead.fetch_add(1, Ordering::Relaxed);
+        self.dead.insert(addr);
+        let retry = c.retry;
+        let pending: VecDeque<Vec<u8>> = c.queue.iter().cloned().collect();
+        self.park_dying(token, c);
+        if pending.is_empty() {
+            return;
+        }
+        if retry {
+            let n = pending.len() as u64;
+            self.stats.dropped_frames.fetch_add(n, Ordering::Relaxed);
+            log::warn!("uring: dropping {n} queued frame(s) to {addr} after reconnect retry");
+            return;
+        }
+        // one-shot link repair: the partially written front frame is
+        // resent whole — the receiver abandoned the torn stream with
+        // the connection, so no byte ever duplicates
+        if let Err(q) = self.dial(addr, pending) {
+            let n = q.len() as u64;
+            self.stats.dropped_frames.fetch_add(n, Ordering::Relaxed);
+            log::warn!("uring: dropping {n} queued frame(s) to {addr}: reconnect failed");
+        }
+    }
+
+    /// Open a connection to `addr` carrying `queue`: a socket now, an
+    /// async CONNECT through the ring. On an immediate failure the
+    /// queue is handed back for accounting.
+    fn dial(&mut self, addr: SocketAddr, queue: VecDeque<Vec<u8>>) -> Result<(), VecDeque<Vec<u8>>> {
+        let reconnect = self.dead.contains(&addr);
+        if reconnect {
+            self.stats.reconnects_attempted.fetch_add(1, Ordering::Relaxed);
+        }
+        let (domain, sa, sa_len) = sys::sockaddr_bytes(&addr);
+        count_syscalls(1); // socket
+        let fd = match sys::tcp_socket(domain) {
+            Ok(fd) => fd,
+            Err(e) => {
+                log::warn!("uring: socket for {addr} failed: {e}");
+                return Err(queue);
+            }
+        };
+        // SAFETY: fresh fd from socket(2), owned by no one else.
+        let stream = unsafe { TcpStream::from_raw_fd(fd) };
+        stream.set_nodelay(true).ok();
+        let sa_box = Box::new(sa);
+        let sa_ptr = sa_box.as_ptr() as u64;
+        let token = self.next_token;
+        self.next_token += 1;
+        {
+            let Some(sqe) = self.ring.sqe() else { return Err(queue) };
+            sqe.opcode = sys::OP_CONNECT;
+            sqe.fd = fd;
+            sqe.addr = sa_ptr;
+            sqe.off = sa_len as u64;
+            sqe.user_data = ud(token, KIND_CONNECT);
+        }
+        let queued_bytes = queue.iter().map(|f| f.len()).sum();
+        let mut c = UConn::new(stream, Some(addr), false, reconnect);
+        c.sockaddr = Some(sa_box);
+        c.queue = queue;
+        c.queued_bytes = queued_bytes;
+        self.conns.insert(token, c);
+        self.out_tokens.insert(addr, token);
+        Ok(())
+    }
+
+    fn handle_send(&mut self, cmd: SendCmd) {
+        let SendCmd { from, to, tag, frame } = cmd;
+        let Some(&addr) = self.addrs.get(&to) else {
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            log::warn!("uring: dropping {tag} {from:?}->{to:?}: destination has no address");
+            return;
+        };
+        if let Some(&token) = self.out_tokens.get(&addr) {
+            {
+                let Some(c) = self.conns.get_mut(&token) else { return };
+                if c.queued_bytes + frame.len() > MAX_PENDING_BYTES {
+                    self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("uring: dropping {tag} {from:?}->{to:?} ({addr}): send backlog full");
+                    return;
+                }
+                c.queued_bytes += frame.len();
+                c.queue.push_back(frame);
+            }
+            self.pump_send(token);
+            return;
+        }
+        let mut queue = VecDeque::with_capacity(4);
+        queue.push_back(frame);
+        if let Err(q) = self.dial(addr, queue) {
+            self.stats.dropped_frames.fetch_add(q.len() as u64, Ordering::Relaxed);
+            log::warn!("uring: dropping {tag} {from:?}->{to:?} ({addr}): connect failed");
+        }
+    }
+}
+
+/// Send half of the io_uring transport: encodes each wire into a
+/// complete frame in a reused buffer and hands it to the event loop
+/// (which owns the ring and every socket). Usable from any thread.
+pub struct UringSender {
+    cmds: Sender<SendCmd>,
+    wake: Arc<File>,
+    stats: Arc<NetStats>,
+    enc: codec::Enc,
+}
+
+impl TransportTx for UringSender {
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        let tag = wire.tag();
+        super::encode_frame(&mut self.enc, from, to, &wire);
+        let cmd = SendCmd { from, to, tag, frame: self.enc.buf.clone() };
+        if self.cmds.send(cmd).is_err() {
+            self.stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            log::warn!("uring: dropping {tag} {from:?}->{to:?}: event loop stopped");
+            return;
+        }
+        let mut w: &File = &self.wake;
+        count_syscalls(1); // eventfd wake
+        let _ = w.write(&1u64.to_ne_bytes());
+    }
+}
+
+/// The io_uring endpoint: implements [`Transport`] with the exact
+/// on-wire format and reliability contract of [`super::TcpTransport`]
+/// and [`super::EpollTransport`] (all three interoperate) while running
+/// one loop thread whose IO is batched through a shared ring. See the
+/// module docs.
+pub struct UringTransport {
+    tx_half: UringSender,
+    cmds: Sender<SendCmd>,
+    rx: Receiver<(Pid, Pid, Wire)>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    wake: Arc<File>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl UringTransport {
+    /// Bind the endpoint for `pid` at `addrs[&pid]` and start its loop.
+    /// Fails with [`io::ErrorKind::Unsupported`] (carrying the
+    /// [`uring_probe`] reason) where the kernel or sandbox cannot run
+    /// io_uring — callers fall back to another transport on that.
+    pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> io::Result<Self> {
+        if let Err(reason) = uring_probe() {
+            return Err(io::Error::new(io::ErrorKind::Unsupported, reason));
+        }
+        let listener = TcpListener::bind(addrs[&pid])?;
+        let ring = Ring::new(SQ_ENTRIES)?;
+        let bufs = BufRing::new(ring.fd.0, RECV_BUFS, RECV_BUF_BYTES, BGID)?;
+        // SAFETY: fresh eventfd owned by no one else.
+        let wake = Arc::new(unsafe { File::from_raw_fd(sys::new_eventfd()?) });
+        let (in_tx, in_rx) = mpsc::channel();
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let lp = EventLoop {
+            ring,
+            bufs,
+            listener,
+            wake: Arc::clone(&wake),
+            wake_buf: Box::new([0u8; 8]),
+            addrs: Arc::new(addrs),
+            stats: Arc::clone(&stats),
+            incoming: in_tx,
+            cmds: cmd_rx,
+            stop: Arc::clone(&stop),
+            conns: HashMap::new(),
+            out_tokens: HashMap::new(),
+            dead: HashSet::new(),
+            dying: HashMap::new(),
+            next_token: 1,
+        };
+        let handle = std::thread::Builder::new().name(format!("wbam-uring-{}", pid.0)).spawn(move || lp.run())?;
+        let tx_half = UringSender {
+            cmds: cmd_tx.clone(),
+            wake: Arc::clone(&wake),
+            stats: Arc::clone(&stats),
+            enc: codec::Enc::new(),
+        };
+        Ok(UringTransport { tx_half, cmds: cmd_tx, rx: in_rx, stats, stop, wake, handle: Some(handle) })
+    }
+}
+
+impl Transport for UringTransport {
+    fn sender(&self) -> Box<dyn TransportTx> {
+        Box::new(UringSender {
+            cmds: self.cmds.clone(),
+            wake: Arc::clone(&self.wake),
+            stats: Arc::clone(&self.stats),
+            enc: codec::Enc::new(),
+        })
+    }
+
+    fn send(&mut self, from: Pid, to: Pid, wire: Wire) {
+        self.tx_half.send(from, to, wire)
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Option<Incoming> {
+        match self.rx.recv_timeout(d) {
+            Ok((from, to, wire)) => Some(Incoming::Wire(from, to, wire)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Incoming::Closed),
+        }
+    }
+
+    fn net_stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl Drop for UringTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let mut w: &File = &self.wake;
+        let _ = w.write(&1u64.to_ne_bytes());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // exits within one idle tick
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::read_frame;
+    use crate::types::{Ballot, GidSet, MsgId, MsgMeta};
+    use std::io::BufReader;
+    use std::sync::atomic::{AtomicU16 as PortCounter, Ordering};
+    use std::time::Instant;
+
+    /// Every test self-gates on the runtime probe: on kernels or
+    /// sandboxes without io_uring it prints the reason and passes
+    /// vacuously (the CI `uring` job greps for these skips).
+    fn uring_or_skip(test: &str) -> bool {
+        match uring_probe() {
+            Ok(()) => true,
+            Err(reason) => {
+                eprintln!("SKIP {test}: io_uring unavailable: {reason}");
+                false
+            }
+        }
+    }
+
+    fn mcast(id: u64) -> Wire {
+        Wire::Multicast { meta: MsgMeta::new(MsgId(id), GidSet::single(crate::types::Gid(0)), vec![1, 2, 3]) }
+    }
+
+    /// Per-process unique localhost ports, disjoint from the ranges the
+    /// tcp/epoll tests use (tests run concurrently).
+    fn next_port() -> u16 {
+        static NEXT: PortCounter = PortCounter::new(0);
+        39000 + (std::process::id() % 90) as u16 * 32 + NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn wait_until(what: &str, mut pred: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !pred() {
+            assert!(Instant::now() < deadline, "timeout waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn uring_roundtrip_and_fifo() {
+        if !uring_or_skip("uring_roundtrip_and_fifo") {
+            return;
+        }
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = UringTransport::bind(Pid(2), addrs).unwrap();
+        for i in 0..50 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        for i in 0..50 {
+            match b.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
+                    assert_eq!(from, Pid(1));
+                    assert_eq!(to, Pid(2));
+                    assert_eq!(meta.id, MsgId(i));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // bidirectional: b replies over its own dialed connection
+        b.send(Pid(2), Pid(1), Wire::Heartbeat { bal: Ballot::new(1, Pid(2)) });
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Heartbeat { .. })) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // a clean run drops nothing
+        assert_eq!(a.net_stats().dropped_frames.load(Ordering::Relaxed), 0);
+        assert_eq!(b.net_stats().dropped_frames.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn uring_interoperates_with_threaded_tcp() {
+        if !uring_or_skip("uring_interoperates_with_threaded_tcp") {
+            return;
+        }
+        // same wire format: an io_uring endpoint and a threaded TCP
+        // endpoint converse transparently
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = crate::net::TcpTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(7));
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(7)),
+            other => panic!("unexpected {other:?}"),
+        }
+        b.send(Pid(2), Pid(1), mcast(8));
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(8)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uring_interoperates_with_epoll() {
+        if !uring_or_skip("uring_interoperates_with_epoll") {
+            return;
+        }
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = crate::net::EpollTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(17));
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(17)),
+            other => panic!("unexpected {other:?}"),
+        }
+        b.send(Pid(2), Pid(1), mcast(18));
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(18)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uring_carries_batch_frames_intact() {
+        if !uring_or_skip("uring_carries_batch_frames_intact") {
+            return;
+        }
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = UringTransport::bind(Pid(2), addrs).unwrap();
+        let frame = Wire::Batch((0..5).map(mcast).collect());
+        a.send(Pid(1), Pid(2), frame.clone());
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), w)) => assert_eq!(w, frame),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// A frame big enough for the `SEND_ZC` path (and larger than one
+    /// registered receive buffer) survives the zero-copy send and the
+    /// multi-buffer reassembly byte-for-byte.
+    #[test]
+    fn uring_large_frame_takes_send_zc_path_intact() {
+        if !uring_or_skip("uring_large_frame_takes_send_zc_path_intact") {
+            return;
+        }
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut b = UringTransport::bind(Pid(2), addrs).unwrap();
+        let payload: Vec<u8> = (0..(3 * ZC_THRESHOLD)).map(|i| (i % 251) as u8).collect();
+        let big = Wire::Multicast { meta: MsgMeta::new(MsgId(1), GidSet::single(crate::types::Gid(0)), payload.clone()) };
+        a.send(Pid(1), Pid(2), big);
+        match b.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(1), Pid(2), Wire::Multicast { meta })) => {
+                assert_eq!(meta.payload.as_slice(), &payload[..]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(a.net_stats().dropped_frames.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn uring_shard_pids_share_one_connection_per_address() {
+        if !uring_or_skip("uring_shard_pids_share_one_connection_per_address") {
+            return;
+        }
+        let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+        let host_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        addrs.insert(Pid(2), host_addr);
+        addrs.insert(Pid(12), host_addr);
+        let mut a = UringTransport::bind(Pid(1), addrs.clone()).unwrap();
+        let mut host = UringTransport::bind(Pid(2), addrs).unwrap();
+        a.send(Pid(1), Pid(2), mcast(1));
+        a.send(Pid(11), Pid(12), mcast(2)); // different source shard, same socket
+        for expect in [(Pid(1), Pid(2), 1u64), (Pid(11), Pid(12), 2)] {
+            match host.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(from, to, Wire::Multicast { meta })) => {
+                    assert_eq!((from, to, meta.id.0), expect);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // detached sender half: works from another thread's state
+        let mut tx = host.sender();
+        tx.send(Pid(2), Pid(1), mcast(3));
+        match a.recv_timeout(Duration::from_secs(5)) {
+            Some(Incoming::Wire(Pid(2), Pid(1), Wire::Multicast { meta })) => assert_eq!(meta.id, MsgId(3)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// A destination that refuses connections is counted dropped (after
+    /// the async reconnect retry), and an address-less pid immediately.
+    #[test]
+    fn uring_unreachable_destination_is_counted_dropped() {
+        if !uring_or_skip("uring_unreachable_destination_is_counted_dropped") {
+            return;
+        }
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        addrs.insert(Pid(7), format!("127.0.0.1:{}", next_port()).parse::<SocketAddr>().unwrap());
+        let mut a = UringTransport::bind(Pid(1), addrs).unwrap();
+        let stats = a.net_stats();
+        a.send(Pid(1), Pid(7), mcast(99)); // nothing listens on p7's port
+        wait_until("unreachable send counted", || stats.dropped_frames.load(Ordering::Relaxed) >= 1);
+        // connection-refused surfaces asynchronously; the one-shot
+        // reconnect retry ran (and failed) before the frame was dropped
+        assert!(stats.reconnects_attempted.load(Ordering::Relaxed) >= 1, "refused connect never retried");
+        a.send(Pid(1), Pid(42), mcast(100)); // no address at all
+        wait_until("address-less send counted", || stats.dropped_frames.load(Ordering::Relaxed) >= 2);
+    }
+
+    /// Acceptance (kill-one-connection): frames sent across a
+    /// dropped-then-reconnected link are either delivered in FIFO order
+    /// or visibly counted as dropped — never silently lost — and the
+    /// repair shows up in [`NetStats::reconnects_attempted`]/
+    /// [`NetStats::reconnects_succeeded`]. Exact parity with the tcp
+    /// and epoll versions of this test.
+    #[test]
+    fn uring_dropped_link_reconnects_or_warns() {
+        if !uring_or_skip("uring_dropped_link_reconnects_or_warns") {
+            return;
+        }
+        let a_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let b_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let mut addrs = HashMap::new();
+        addrs.insert(Pid(1), a_addr);
+        addrs.insert(Pid(2), b_addr);
+
+        // raw receiver we can kill: read 3 frames on the first
+        // connection, hard-close it, then collect everything resent
+        let listener = TcpListener::bind(b_addr).unwrap();
+        let server = std::thread::spawn(move || -> Vec<u64> {
+            let mut got = Vec::new();
+            let (s1, _) = listener.accept().unwrap();
+            let mut r1 = BufReader::new(s1);
+            for _ in 0..3 {
+                let bytes = read_frame(&mut r1).unwrap();
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            drop(r1);
+            let (s2, _) = listener.accept().unwrap();
+            let mut r2 = BufReader::new(s2);
+            while let Ok(bytes) = read_frame(&mut r2) {
+                let Wire::Multicast { meta } = codec::decode(&bytes[8..]).unwrap() else { panic!() };
+                got.push(meta.id.0);
+            }
+            got
+        });
+
+        let mut a = UringTransport::bind(Pid(1), addrs).unwrap();
+        let stats = a.net_stats();
+        for i in 0..3 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        // let the server read + close; the loop observes the peer close
+        // as a recv EOF/reset completion and tears the connection down
+        std::thread::sleep(Duration::from_millis(300));
+        for i in 3..8 {
+            a.send(Pid(1), Pid(2), mcast(i));
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        // close our side so the server's second read loop terminates
+        drop(a);
+        let got = server.join().unwrap();
+
+        let dropped = stats.dropped_frames.load(Ordering::Relaxed) as usize;
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "redelivered frames out of FIFO order: {got:?}");
+        assert_eq!(got.len() + dropped, 8, "silently lost frames: delivered {got:?}, dropped {dropped}");
+        assert!(got.len() >= 3, "first connection frames lost: {got:?}");
+        // the peer close was observed and repaired through a counted
+        // reconnect
+        assert!(stats.probes_dead.load(Ordering::Relaxed) >= 1, "peer close never observed");
+        assert!(stats.reconnects_attempted.load(Ordering::Relaxed) >= 1, "reconnect not counted");
+        assert!(stats.reconnects_succeeded.load(Ordering::Relaxed) >= 1, "successful reconnect not counted");
+    }
+
+    /// One endpoint serving many dialing peers stays at exactly one
+    /// loop thread (asserted structurally via thread names on /proc).
+    #[test]
+    fn uring_single_thread_serves_many_connections() {
+        if !uring_or_skip("uring_single_thread_serves_many_connections") {
+            return;
+        }
+        let host_addr: SocketAddr = format!("127.0.0.1:{}", next_port()).parse().unwrap();
+        let mut addrs: HashMap<Pid, SocketAddr> = HashMap::new();
+        addrs.insert(Pid(0), host_addr);
+        let n_peers = 6u32;
+        for i in 1..=n_peers {
+            addrs.insert(Pid(i), format!("127.0.0.1:{}", next_port()).parse().unwrap());
+        }
+        let mut host = UringTransport::bind(Pid(0), addrs.clone()).unwrap();
+        let before = count_threads_named("wbam-uring-0");
+        assert_eq!(before, 1, "one endpoint must run one loop thread");
+        let mut peers: Vec<UringTransport> =
+            (1..=n_peers).map(|i| UringTransport::bind(Pid(i), addrs.clone()).unwrap()).collect();
+        for (i, p) in peers.iter_mut().enumerate() {
+            let pid = Pid(i as u32 + 1);
+            p.send(pid, Pid(0), mcast(i as u64));
+        }
+        let mut seen = Vec::new();
+        for _ in 0..n_peers {
+            match host.recv_timeout(Duration::from_secs(5)) {
+                Some(Incoming::Wire(_, Pid(0), Wire::Multicast { meta })) => seen.push(meta.id.0),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_peers as u64).collect::<Vec<_>>());
+        // still exactly one thread for the host despite 6 live inbound
+        // connections
+        assert_eq!(count_threads_named("wbam-uring-0"), 1);
+    }
+
+    /// Count this process's threads whose name starts with `prefix`.
+    fn count_threads_named(prefix: &str) -> usize {
+        let Ok(tasks) = std::fs::read_dir("/proc/self/task") else { return 0 };
+        tasks
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                std::fs::read_to_string(e.path().join("comm")).map(|c| c.trim().starts_with(prefix)).unwrap_or(false)
+            })
+            .count()
+    }
+}

@@ -8,10 +8,12 @@
 //!   effect buffers (sends, local deliveries, timers) are owned by the
 //!   runtime and reused across events, so the steady-state hot path does
 //!   zero per-event effect-vector allocations. Payload fan-out stays
-//!   allocation-free too: `MsgMeta::payload` is an `Arc`, so the wire
-//!   clones made by [`Outbox::send_to_many`] / [`Outbox::send_staged`]
-//!   never copy payload bytes (the last recipient receives the original,
-//!   so `n` recipients cost `n - 1` shallow clones).
+//!   allocation-free too: `MsgMeta::payload` is an `Arc`-backed
+//!   [`Payload`](crate::types::Payload) view, so the wire clones made by
+//!   [`Outbox::send_to_many`] / [`Outbox::send_staged`] never copy
+//!   payload bytes (the last recipient receives the original, so `n`
+//!   recipients cost `n - 1` shallow clones), and payloads decoded from
+//!   a received frame stay views into that frame's shared buffer.
 //! * **`LinkCoalescer`** is the production flush point: a stateful
 //!   per-link buffer enforcing a [`FlushPolicy`] (immediate per-cycle
 //!   frames by default; optionally an adaptive delay/byte window), used

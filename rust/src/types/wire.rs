@@ -3,17 +3,109 @@
 //! real transports). Binary serialization lives in [`crate::codec`].
 
 use super::{Ballot, Gid, GidSet, MsgId, Phase, Ts};
+use std::sync::Arc;
+
+/// A cheaply-cloneable view of a byte range inside a shared, immutable
+/// buffer. This is the zero-copy payload type: the transports freeze each
+/// received read burst into one `Arc<[u8]>` and the codec hands out
+/// `Payload` windows into it ([`crate::codec::decode_shared`]), so a
+/// message's payload bytes are copied **zero** times between the socket
+/// read buffer and the protocol layer. Locally constructed payloads
+/// (client submit, tests) wrap their own `Vec` with `off == 0`.
+///
+/// Equality is by the viewed bytes, not by buffer identity — two views of
+/// different buffers with equal contents compare equal, which keeps
+/// `MsgMeta`/`Wire` equality (and every existing round-trip test) exact.
+#[derive(Clone)]
+pub struct Payload {
+    buf: Arc<[u8]>,
+    off: usize,
+    len: usize,
+}
+
+impl Payload {
+    /// View `buf[off..off + len]`. Panics if the range is out of bounds —
+    /// callers (the codec) have already bounds-checked the range.
+    pub fn view(buf: Arc<[u8]>, off: usize, len: usize) -> Self {
+        assert!(off + len <= buf.len(), "payload view out of bounds");
+        Payload { buf, off, len }
+    }
+    /// The viewed bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+    /// True if this view shares its backing buffer with `other` (i.e. the
+    /// decode path did **not** copy). Test/bench introspection only.
+    pub fn shares_buffer_with(&self, other: &Payload) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+    /// Bytes held alive by the backing buffer (≥ `len()` for a window
+    /// into a multi-message frame). Test/bench introspection only.
+    pub fn backing_len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Payload {
+    #[inline]
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for Payload {}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Same rendering as the old `Arc<[u8]>` payload: the byte list.
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Payload { buf: Arc::from(&[][..]), off: 0, len: 0 }
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Self {
+        let len = v.len();
+        Payload { buf: v.into(), off: 0, len }
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(v: &[u8]) -> Self {
+        Payload { buf: Arc::from(v), off: 0, len: v.len() }
+    }
+}
 
 /// Metadata of an application message: identity, destination groups and
 /// payload. The protocols order `MsgMeta`s; the payload is opaque.
 /// The payload is reference-counted: protocol fan-out clones a `MsgMeta`
-/// up to `3d` times per multicast, and an `Arc` keeps those clones
-/// allocation-free (EXPERIMENTS.md §Perf iteration 2).
+/// up to `3d` times per multicast, and the shared [`Payload`] buffer
+/// keeps those clones allocation-free (EXPERIMENTS.md §Perf iteration 2);
+/// since the zero-copy decode path it is also copy-free on receive.
 #[derive(Clone, PartialEq, Eq, Debug, Default)]
 pub struct MsgMeta {
     pub id: MsgId,
     pub dest: GidSet,
-    pub payload: std::sync::Arc<[u8]>,
+    pub payload: Payload,
 }
 
 impl MsgMeta {

@@ -311,6 +311,105 @@ fn epoll_sharded_cluster_parity() {
     assert_eq!(completed, 20, "epoll cluster did not complete all requests");
 }
 
+/// io_uring parity: the exact 2×2-shard cluster scenario of
+/// `tcp_sharded_cluster_end_to_end` / `epoll_sharded_cluster_parity`,
+/// but every endpoint bound over the `UringTransport` completion loop —
+/// same workload completion, zero `dropped_frames` on any endpoint, one
+/// ring thread per endpoint. Skips (with a printed reason) where the
+/// kernel or sandbox can't run io_uring, so CI without io_uring stays
+/// green.
+#[cfg(target_os = "linux")]
+#[test]
+fn uring_sharded_cluster_parity() {
+    use wbam::net::UringTransport;
+
+    if let Err(reason) = wbam::net::uring_probe() {
+        eprintln!("SKIP uring_sharded_cluster_parity: io_uring unavailable: {reason}");
+        return;
+    }
+
+    /// Threads of this process named like an io_uring ring loop.
+    fn uring_threads() -> usize {
+        let Ok(tasks) = std::fs::read_dir("/proc/self/task") else { return 0 };
+        tasks
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                std::fs::read_to_string(e.path().join("comm"))
+                    .map(|c| c.trim().starts_with("wbam-uring"))
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+
+    let map = ShardMap::new(2, 1, 2);
+    let base = 36000 + (std::process::id() % 90) as u16 * 16;
+    let mut addrs = std::collections::HashMap::new();
+    for e in 0..6u32 {
+        let addr = format!("127.0.0.1:{}", base + e as u16).parse().unwrap();
+        for p in map.hosted_by(Pid(e)) {
+            addrs.insert(p, addr);
+        }
+    }
+    let n_clients = 2u32;
+    for c in 0..n_clients {
+        let pid = Pid(map.first_client_pid().0 + c);
+        addrs.insert(pid, format!("127.0.0.1:{}", base + 8 + c as u16).parse().unwrap());
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
+    let mut handles = Vec::new();
+    let mut nets = Vec::new();
+    for e in 0..6u32 {
+        let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+        for p in map.hosted_by(Pid(e)) {
+            let s = map.shard_of(p).expect("hosted pid is a member");
+            nodes.push(Box::new(WbNode::new(p, map.topo(s), wb)));
+        }
+        let t = UringTransport::bind(Pid(e), addrs.clone()).expect("bind endpoint");
+        nets.push(t.net_stats());
+        let d = Arc::clone(&delivered);
+        let cb: DeliverFn = Box::new(move |_pid, _m, _gts, _t| {
+            d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        handles.push(spawn_sharded(nodes, t, Arc::clone(&stop), Some(cb)));
+    }
+    std::thread::sleep(Duration::from_millis(100)); // listeners up
+    let mut client_handles = Vec::new();
+    for c in 0..n_clients {
+        let pid = Pid(map.first_client_pid().0 + c);
+        let cfg = ClientCfg { dest_groups: 2, max_requests: Some(10), resend_after: 500_000_000, ..Default::default() };
+        let node: Box<dyn Node> = Box::new(Client::new(pid, map.topo(map.client_shard(pid)), cfg, 3 + c as u64));
+        let t = UringTransport::bind(pid, addrs.clone()).expect("bind client");
+        nets.push(t.net_stats());
+        let stop2 = Arc::clone(&stop);
+        client_handles.push(std::thread::spawn(move || NodeRuntime::new(node, t).run(stop2)));
+    }
+    // constant 1 ring thread per endpoint, however many connections the
+    // 8 endpoints hold between them
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(uring_threads(), 8, "expected exactly one ring thread per endpoint");
+    // 2 clients x 10 requests x 2 groups x 3 replicas = 120 deliveries
+    wait_for(|| delivered.load(std::sync::atomic::Ordering::Relaxed) >= 120, 60, "120 io_uring deliveries");
+    // parity with the threaded scenario: no endpoint dropped a frame
+    let dropped: u64 = nets.iter().map(|n| n.dropped_frames.load(std::sync::atomic::Ordering::Relaxed)).sum();
+    assert_eq!(dropped, 0, "io_uring transport dropped frames on the happy path");
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut completed = 0;
+    for h in client_handles {
+        let node = h.join().unwrap();
+        let any: &dyn Node = &*node;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            completed += c.completed.len();
+        }
+    }
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+    assert_eq!(completed, 20, "io_uring cluster did not complete all requests");
+}
+
 /// Real-runtime leader failure under load: the mesh disconnect behaves
 /// like a kill, the surviving members run the recovery protocol on real
 /// threads (`Status::Recovering` → a new leader), delivery resumes, and

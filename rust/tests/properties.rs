@@ -532,6 +532,63 @@ fn frame_reassembly_survives_arbitrary_split_points() {
     });
 }
 
+/// The zero-copy payload path is invisible on the wire and lossless off
+/// it: over arbitrary `Wire::Batch` frames (and every leaf variant),
+/// `decode_shared` agrees with the copying `decode`, re-encoding an
+/// `Arc`-backed wire is byte-identical to the original PR 1 codec
+/// output, and every non-empty decoded payload is a view into the one
+/// shared frame buffer — no per-payload allocation.
+#[test]
+fn zero_copy_decode_matches_copying_codec_byte_for_byte() {
+    use std::sync::Arc;
+    use wbam::codec::{decode, decode_shared, encode};
+    use wbam::types::{Payload, Wire};
+    use wire_gen::wire_of_tag;
+
+    /// Every payload a wire carries, batches and recovery state included.
+    fn payloads<'a>(w: &'a Wire, out: &mut Vec<&'a Payload>) {
+        match w {
+            Wire::Multicast { meta } => out.push(&meta.payload),
+            Wire::Accept { meta, .. } => out.push(&meta.payload),
+            Wire::NewLeaderAck { state, .. } | Wire::NewState { state, .. } => {
+                out.extend(state.iter().map(|s| &s.meta.payload));
+            }
+            Wire::Batch(inner) => {
+                for iw in inner {
+                    payloads(iw, out);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    prop::check(250, |r| {
+        // a batch of random payload-heavy leaves, or a lone leaf
+        let frame = if r.chance(0.7) {
+            Wire::Batch((0..r.range(1, 6)).map(|_| wire_of_tag(r.below(14), r)).collect())
+        } else {
+            wire_of_tag(r.below(14), r)
+        };
+        let bytes = encode(&frame);
+        // the copying decoder is the PR 1 baseline
+        assert_eq!(decode(&bytes).expect("copying decode"), frame);
+        // the shared decoder agrees with it structurally…
+        let arc: Arc<[u8]> = bytes.clone().into();
+        let shared = decode_shared(&arc, 0, arc.len()).expect("shared decode");
+        assert_eq!(shared, frame, "shared decode diverged from the copying codec");
+        // …its payloads are views into the single frame buffer…
+        let whole = Payload::view(Arc::clone(&arc), 0, arc.len());
+        let mut views = Vec::new();
+        payloads(&shared, &mut views);
+        for p in views.iter().filter(|p| !p.as_slice().is_empty()) {
+            assert!(p.shares_buffer_with(&whole), "non-empty payload was copied, not shared");
+            assert_eq!(p.backing_len(), arc.len());
+        }
+        // …and re-encoding the Arc-backed wire is byte-identical
+        assert_eq!(encode(&shared), bytes, "encode over shared payloads changed the wire format");
+    });
+}
+
 /// Two successive leader crashes in different groups: the system keeps
 /// converging (probing ballot monotonicity, Invariants 8/9, externally).
 #[test]
