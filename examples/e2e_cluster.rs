@@ -16,7 +16,6 @@
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{Cluster, DeliverFn};
@@ -25,6 +24,7 @@ use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, QuantileEngine, XlaBackend};
 use wbam::stats::Histogram;
+use wbam::sync::{Arc, Mutex};
 use wbam::types::{FlushPolicy, MsgId, Pid, Topology, Ts};
 
 fn env_u64(name: &str, default: u64) -> u64 {

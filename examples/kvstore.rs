@@ -22,11 +22,11 @@
 //!     cargo run --release --example kvstore
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
 use wbam::invariants;
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox, TimerKind};
 use wbam::sim::{SimConfig, World, MS};
+use wbam::sync::{Arc, Mutex};
 use wbam::types::{FlushPolicy, Gid, GidSet, MsgId, MsgMeta, Pid, ShardMap, Topology, Wire};
 use wbam::util::Rng;
 

@@ -37,13 +37,13 @@
 use crate::net::{Incoming, Transport, TransportTx};
 use crate::protocols::{LinkCoalescer, Node, Outbox, TimerKind};
 use crate::storage::Storage;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use crate::sync::{thread, Arc, Mutex};
 use crate::types::{FlushPolicy, MsgId, Pid, Ts, Wire};
 use crate::util::FxHashMap;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Delivery callback: `(pid, message, gts, elapsed_ns)`.
@@ -633,7 +633,7 @@ impl<T: Transport> ShardedRuntime<T> {
         let flusher = {
             let tx = self.transport.sender();
             let policy = self.flush;
-            std::thread::Builder::new()
+            thread::Builder::new()
                 .name("wbam-flush".into())
                 .spawn(move || run_flusher(tx, out_rx, policy))
                 .expect("spawn flusher thread")
@@ -674,7 +674,7 @@ impl<T: Transport> ShardedRuntime<T> {
                 halt: Arc::clone(&halt),
             };
             workers.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("wbam-shard-{}", pid.0))
                     .spawn(move || worker.run())
                     .expect("spawn shard worker"),
@@ -763,9 +763,9 @@ pub fn spawn<T: Transport + 'static>(
     transport: T,
     stop: Arc<AtomicBool>,
     on_deliver: Option<DeliverFn>,
-) -> std::thread::JoinHandle<Box<dyn Node>> {
+) -> thread::JoinHandle<Box<dyn Node>> {
     let name = format!("wbam-node-{}", node.pid().0);
-    std::thread::Builder::new()
+    thread::Builder::new()
         .name(name)
         .spawn(move || {
             let mut rt = NodeRuntime::new(node, transport);
@@ -784,9 +784,9 @@ pub fn spawn_sharded<T: Transport + 'static>(
     transport: T,
     stop: Arc<AtomicBool>,
     on_deliver: Option<DeliverFn>,
-) -> std::thread::JoinHandle<Vec<Box<dyn Node>>> {
+) -> thread::JoinHandle<Vec<Box<dyn Node>>> {
     let name = format!("wbam-host-{}", nodes.first().map(|n| n.pid().0).unwrap_or(0));
-    std::thread::Builder::new()
+    thread::Builder::new()
         .name(name)
         .spawn(move || {
             let mut rt = ShardedRuntime::new(nodes, transport);
@@ -849,7 +849,7 @@ pub fn one_shard_round_trip_ns(trips: u64, threaded: bool) -> f64 {
     let ep_b = mesh.endpoint(Pid(2));
     let stop = Arc::new(AtomicBool::new(false));
     let spawn_one = move |node: Box<dyn Node>, ep: crate::net::InProcTransport, stop: Arc<AtomicBool>| {
-        std::thread::spawn(move || {
+        thread::spawn(move || {
             let mut rt = ShardedRuntime::new(vec![node], ep);
             if threaded {
                 rt.force_threaded();
@@ -871,7 +871,7 @@ pub fn one_shard_round_trip_ns(trips: u64, threaded: bool) -> f64 {
             "ping-pong stalled at {} rounds (threaded={threaded})",
             rounds.load(Ordering::Relaxed)
         );
-        std::thread::yield_now();
+        thread::yield_now();
     }
     let elapsed = t0.elapsed();
     stop.store(true, Ordering::Relaxed);
@@ -888,7 +888,7 @@ pub struct Cluster {
     /// raise to stop every endpoint (what [`Cluster::shutdown`] does)
     pub stop: Arc<AtomicBool>,
     /// one join handle per endpoint, yielding its nodes back
-    pub handles: Vec<std::thread::JoinHandle<Vec<Box<dyn Node>>>>,
+    pub handles: Vec<thread::JoinHandle<Vec<Box<dyn Node>>>>,
     /// transport counters: mesh-wide for in-process launches
     /// (`dropped_frames` is zero on a healthy run — only disconnects
     /// make the mesh drop); the first endpoint's for
@@ -1001,7 +1001,7 @@ impl Cluster {
             let stop2 = Arc::clone(&stop);
             let name = format!("wbam-host-{}", ns.first().map(|n| n.pid().0).unwrap_or(0));
             handles.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(name)
                     .spawn(move || {
                         let mut rt = ShardedRuntime::new(ns, ep);
@@ -1070,7 +1070,7 @@ mod tests {
         let mut rt = ShardedRuntime::new(nodes, ep);
         let stats = rt.stats();
         let stop2 = Arc::clone(&stop);
-        let handle = std::thread::spawn(move || rt.run(stop2));
+        let handle = thread::spawn(move || rt.run(stop2));
 
         // exactly the two remote-bound heartbeats reach the transport
         for _ in 0..2 {
@@ -1083,7 +1083,7 @@ mod tests {
         let deadline = Instant::now() + Duration::from_secs(5);
         while stats.wires_in.load(Ordering::Relaxed) < 2 {
             assert!(Instant::now() < deadline, "cross-shard wires never delivered");
-            std::thread::sleep(Duration::from_millis(5));
+            thread::sleep(Duration::from_millis(5));
         }
         stop.store(true, Ordering::Relaxed);
         let nodes = handle.join().expect("runtime thread");
@@ -1134,7 +1134,7 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline, "timeout: {n}/600 deliveries");
-            std::thread::sleep(Duration::from_millis(20));
+            thread::sleep(Duration::from_millis(20));
         }
         // happy path: no frame was ever dropped by the transport (checked
         // before shutdown — endpoints exiting in arbitrary order may
@@ -1210,7 +1210,7 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline, "timeout: {n}/{expected} deliveries");
-            std::thread::sleep(Duration::from_millis(20));
+            thread::sleep(Duration::from_millis(20));
         }
         let nodes = cluster.shutdown();
 
@@ -1303,10 +1303,10 @@ mod tests {
         let mut rt = ShardedRuntime::new(nodes, ep); // 2 shards: threaded path
         let stats = rt.stats();
         let stop2 = Arc::clone(&stop);
-        let h = std::thread::spawn(move || rt.run(stop2));
+        let h = thread::spawn(move || rt.run(stop2));
 
         // let the pumpers build up in-flight traffic, then stop mid-stream
-        std::thread::sleep(Duration::from_millis(120));
+        thread::sleep(Duration::from_millis(120));
         stop.store(true, Ordering::Relaxed);
         h.join().expect("runtime thread");
 
@@ -1363,7 +1363,7 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline, "timeout: {n}/360 deliveries");
-            std::thread::sleep(Duration::from_millis(20));
+            thread::sleep(Duration::from_millis(20));
         }
         assert_eq!(net.dropped_frames.load(Ordering::Relaxed), 0, "mesh dropped frames");
         let nodes = cluster.shutdown();
@@ -1384,5 +1384,92 @@ mod tests {
                 assert_eq!(c.completed.len(), 15);
             }
         }
+    }
+}
+
+/// Exhaustive interleaving tests for the flusher hand-off, run under the
+/// in-tree model checker: `RUSTFLAGS="--cfg loom" cargo test --release loom_`.
+/// See `crate::sync::model` for the exploration bounds.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::model;
+    use crate::types::Ballot;
+    use std::sync::atomic::{AtomicU64 as RawU64, Ordering as RawOrdering};
+
+    /// Counts every *inner* wire handed to the transport. The tally is a
+    /// raw `std` atomic on purpose: it is the test's measurement, not
+    /// part of the modeled race, so it must not add scheduling points.
+    struct CountingTx(Arc<RawU64>);
+
+    impl TransportTx for CountingTx {
+        fn send(&mut self, _from: Pid, _to: Pid, wire: Wire) {
+            let n = match &wire {
+                Wire::Batch(inner) => inner.len() as u64,
+                _ => 1,
+            };
+            self.0.fetch_add(n, RawOrdering::Relaxed);
+        }
+    }
+
+    fn hb(n: u64) -> Wire {
+        Wire::Heartbeat { bal: Ballot::new(n, Pid(1)) }
+    }
+
+    /// Invariant: once every queue handle is dropped, `run_flusher`'s
+    /// disconnect path flushes everything still coalesced — no schedule
+    /// may lose a queued send at shutdown.
+    #[test]
+    fn loom_flusher_shutdown_drains_every_queued_send() {
+        model(|| {
+            let sent = Arc::new(RawU64::new(0));
+            let (tx, rx) = mpsc::channel::<Vec<(Link, Wire)>>();
+            let tally = sent.clone();
+            let flusher = thread::spawn(move || {
+                run_flusher(Box::new(CountingTx(tally)), rx, FlushPolicy::default())
+            });
+            let link: Link = (Pid(1), Pid(9));
+            tx.send(vec![(link, hb(1)), (link, hb(2))]).unwrap();
+            tx.send(vec![(link, hb(3))]).unwrap();
+            drop(tx);
+            flusher.join().unwrap();
+            assert_eq!(
+                sent.load(RawOrdering::Relaxed),
+                3,
+                "flusher lost queued sends at shutdown"
+            );
+        });
+    }
+
+    /// Model-checked mirror of the threaded-runtime regression
+    /// `shutdown_under_load_drains_every_queued_send`: two shard threads
+    /// hand batches to one flusher while everything shuts down; every
+    /// schedule must still deliver all queued wires to the transport.
+    #[test]
+    fn loom_shutdown_under_load_drains_every_queued_send() {
+        model(|| {
+            let sent = Arc::new(RawU64::new(0));
+            let (tx, rx) = mpsc::channel::<Vec<(Link, Wire)>>();
+            let tally = sent.clone();
+            let flusher = thread::spawn(move || {
+                run_flusher(Box::new(CountingTx(tally)), rx, FlushPolicy::default())
+            });
+            let shard_tx = tx.clone();
+            let shard = thread::spawn(move || {
+                let link: Link = (Pid(2), Pid(9));
+                shard_tx.send(vec![(link, hb(10))]).unwrap();
+                shard_tx.send(vec![(link, hb(11))]).unwrap();
+            });
+            let link: Link = (Pid(1), Pid(9));
+            tx.send(vec![(link, hb(1))]).unwrap();
+            drop(tx);
+            shard.join().unwrap();
+            flusher.join().unwrap();
+            assert_eq!(
+                sent.load(RawOrdering::Relaxed),
+                3,
+                "a queued send was lost during shutdown under load"
+            );
+        });
     }
 }

@@ -87,6 +87,14 @@
 //! * [`invariants`] — a runtime checker for the paper's correctness
 //!   properties (Validity, Integrity, Ordering) and key Invariants 1–5,
 //!   wired into the randomized tests.
+//! * [`sync`] — the concurrency facade every runtime module imports
+//!   instead of `std::sync`/`std::thread`. A normal build re-exports
+//!   `std`; under `--cfg loom` the same names resolve to an in-tree
+//!   CHESS-style model checker ([`sync::model`]) and the `loom_` tests
+//!   drive the flusher-shutdown, storage-poison and stats-accounting
+//!   races through every bounded interleaving. The repo-invariant gate
+//!   (`cargo xtask lint`) keeps migrated modules on the facade; see
+//!   ARCHITECTURE.md §Correctness tooling.
 
 pub mod client;
 pub mod codec;
@@ -102,6 +110,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod storage;
+pub mod sync;
 pub mod types;
 pub mod util;
 

@@ -55,8 +55,6 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
 use wbam::client::{Client, ClientCfg};
 use wbam::config::{Args, Config};
 use wbam::coordinator::{NodeRuntime, ShardedRuntime};
@@ -67,6 +65,8 @@ use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, CommitBackend, NativeBackend, XlaBackend};
 use wbam::sim::MS;
 use wbam::storage::{Storage, SyncPolicy};
+use wbam::sync::atomic::AtomicBool;
+use wbam::sync::{thread, Arc};
 use wbam::types::{FlushPolicy, Pid, ShardMap};
 
 fn parse_proto(s: &str) -> Result<Proto> {
@@ -252,7 +252,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     // has no signal-handling crate); EOF leaves the server running
     {
         let stop = Arc::clone(&stop);
-        std::thread::spawn(move || {
+        thread::spawn(move || {
             let mut line = String::new();
             loop {
                 line.clear();
@@ -316,11 +316,11 @@ fn cmd_client(a: &Args) -> Result<()> {
     let stop2 = Arc::clone(&stop);
     let mut rt = NodeRuntime::new(node, transport);
     rt.flush_policy(parse_flush(a));
-    let handle = std::thread::spawn(move || rt.run(stop2));
+    let handle = thread::spawn(move || rt.run(stop2));
     // the closed loop finishes when `requests` complete; give it a bounded
     // wall-clock window, then stop and report what we got
     let timeout = std::time::Duration::from_secs(a.u64_opt("timeout-s", 30));
-    std::thread::sleep(timeout);
+    thread::sleep(timeout);
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     let node = handle.join().expect("client thread");
     let any: &dyn Node = &*node;

@@ -135,21 +135,27 @@ mod sys {
     }
 
     pub fn epoll_create() -> io::Result<RawFd> {
+        // SAFETY: no pointers; kernel returns a new fd or an error code
         cvt(unsafe { epoll_create1(CLOEXEC) })
     }
 
     pub fn new_eventfd() -> io::Result<RawFd> {
+        // SAFETY: no pointers; kernel returns a new fd or an error code
         cvt(unsafe { eventfd(0, CLOEXEC | NONBLOCK) })
     }
 
     pub fn add(epfd: RawFd, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live, correctly-laid-out (#[repr(C, packed)])
+        // EpollEvent; the kernel copies it before the call returns
         cvt(unsafe { epoll_ctl(epfd, EPOLL_CTL_ADD, fd, &mut ev) })?;
         Ok(())
     }
 
     pub fn modify(epfd: RawFd, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        // SAFETY: as in `add`: `ev` is live and correctly laid out, and
+        // the kernel copies it before the call returns
         cvt(unsafe { epoll_ctl(epfd, EPOLL_CTL_MOD, fd, &mut ev) })?;
         Ok(())
     }
@@ -157,6 +163,8 @@ mod sys {
     /// `epoll_wait` restarted over `EINTR`.
     pub fn wait(epfd: RawFd, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
         loop {
+            // SAFETY: the kernel writes at most `events.len()` entries
+            // into the caller's live, mutably-borrowed buffer
             let n = unsafe { epoll_wait(epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms) };
             if n >= 0 {
                 return Ok(n as usize);
@@ -194,8 +202,13 @@ mod sys {
                 (AF_INET6, 28)
             }
         };
+        // SAFETY: no pointers; kernel returns a new fd or an error code
         let fd = cvt(unsafe { socket(domain, SOCK_STREAM | NONBLOCK | CLOEXEC, 0) })?;
+        // SAFETY: `fd` is a freshly-created, valid socket owned by nobody
+        // else; the TcpStream takes sole ownership (closes it on drop)
         let stream = unsafe { TcpStream::from_raw_fd(fd) };
+        // SAFETY: `sa` holds a sockaddr of `len` <= 28 bytes assembled
+        // above; the kernel copies it before the call returns
         if unsafe { connect(fd, sa.as_ptr(), len) } == 0 {
             return Ok((stream, true));
         }
@@ -212,6 +225,8 @@ mod sys {
     pub fn take_socket_error(fd: RawFd) -> io::Result<()> {
         let mut val: i32 = 0;
         let mut len: u32 = std::mem::size_of::<i32>() as u32;
+        // SAFETY: `val`/`len` are live stack slots sized for SO_ERROR's
+        // i32 result; the kernel writes within `len` bytes
         cvt(unsafe { getsockopt(fd, SOL_SOCKET, SO_ERROR, &mut val, &mut len) })?;
         if val == 0 {
             Ok(())
@@ -685,8 +700,11 @@ impl EpollTransport {
     pub fn bind(pid: Pid, addrs: HashMap<Pid, SocketAddr>) -> io::Result<Self> {
         let listener = TcpListener::bind(addrs[&pid])?;
         listener.set_nonblocking(true)?;
+        // SAFETY: the epoll fd was just created and is owned by nothing
+        // else; the File takes sole ownership (closes it on drop)
         let ep = unsafe { File::from_raw_fd(sys::epoll_create()?) };
         let epfd = ep.as_raw_fd();
+        // SAFETY: likewise — a fresh eventfd, solely owned by this File
         let wake = Arc::new(unsafe { File::from_raw_fd(sys::new_eventfd()?) });
         sys::add(epfd, listener.as_raw_fd(), sys::EPOLLIN, TOK_LISTENER)?;
         sys::add(epfd, wake.as_raw_fd(), sys::EPOLLIN, TOK_WAKE)?;

@@ -41,13 +41,13 @@
 //! transport's job is to make every *locally observed* failure visible.
 
 use crate::codec;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use crate::sync::{thread, Arc, Mutex};
 use crate::types::{Pid, Wire};
 use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 #[cfg(target_os = "linux")]
@@ -438,7 +438,7 @@ pub struct TcpTransport {
     stats: Arc<NetStats>,
     tx_half: TcpSender,
     rx: Receiver<(Pid, Pid, Wire)>,
-    _listener_thread: std::thread::JoinHandle<()>,
+    _listener_thread: thread::JoinHandle<()>,
 }
 
 /// Read one whole `u32 len ++ body` frame from a blocking stream (the
@@ -467,14 +467,14 @@ impl TcpTransport {
         let stats = Arc::new(NetStats::default());
         let accept_tx = tx.clone();
         let accept_stats = Arc::clone(&stats);
-        let listener_thread = std::thread::Builder::new()
+        let listener_thread = thread::Builder::new()
             .name(format!("wbam-listen-{}", pid.0))
             .spawn(move || {
                 for stream in listener.incoming() {
                     let Ok(stream) = stream else { break };
                     let tx = accept_tx.clone();
                     let stats = Arc::clone(&accept_stats);
-                    std::thread::spawn(move || {
+                    thread::spawn(move || {
                         let mut r = BufReader::new(stream);
                         loop {
                             match read_frame(&mut r) {
@@ -1044,5 +1044,53 @@ mod tests {
         assert_eq!(mesh.net_stats().dropped_frames.load(Ordering::Relaxed), 2);
         // a healthy registered pid still counts nothing
         let _ = a.net_stats();
+    }
+}
+
+/// Exhaustive interleaving tests for the transport counters, run under
+/// the in-tree model checker:
+/// `RUSTFLAGS="--cfg loom" cargo test --release loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::model;
+
+    /// [`NetStats`] counters are shared by the flusher, reader threads
+    /// and the event loop; no interleaving of concurrent senders may
+    /// under-count an observed drop or reconnect.
+    #[test]
+    fn loom_net_stats_never_under_count() {
+        model(|| {
+            let stats = Arc::new(NetStats::default());
+            let s1 = stats.clone();
+            let s2 = stats.clone();
+            let t1 = thread::spawn(move || {
+                s1.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                s1.reconnects_attempted.fetch_add(1, Ordering::Relaxed);
+            });
+            let t2 = thread::spawn(move || {
+                s2.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                s2.reconnects_succeeded.fetch_add(1, Ordering::Relaxed);
+            });
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(stats.dropped_frames.load(Ordering::Relaxed), 2, "lost a drop count");
+            assert_eq!(stats.reconnects_attempted.load(Ordering::Relaxed), 1);
+            assert_eq!(stats.reconnects_succeeded.load(Ordering::Relaxed), 1);
+        });
+    }
+
+    /// The process-wide syscall gauge takes concurrent increments from
+    /// every transport thread; none may be lost.
+    #[test]
+    fn loom_syscall_gauge_counts_concurrent_increments() {
+        model(|| {
+            let before = syscalls_observed();
+            let a = thread::spawn(|| count_syscalls(2));
+            let b = thread::spawn(|| count_syscalls(3));
+            a.join().unwrap();
+            b.join().unwrap();
+            assert_eq!(syscalls_observed() - before, 5, "syscall gauge lost increments");
+        });
     }
 }

@@ -306,6 +306,7 @@ mod sys {
     /// A plain (blocking) TCP socket fd for an io_uring CONNECT — the
     /// ring supplies the asynchrony, so `O_NONBLOCK` is not needed.
     pub fn tcp_socket(domain: i32) -> io::Result<i32> {
+        // SAFETY: no pointers; kernel returns a new fd or an error code
         let fd = unsafe { socket(domain, SOCK_STREAM | CLOEXEC, 0) };
         if fd < 0 {
             Err(io::Error::last_os_error())
@@ -348,6 +349,8 @@ mod sys {
     }
 
     pub fn io_uring_setup(entries: u32, params: &mut IoUringParams) -> io::Result<RawFdOwned> {
+        // SAFETY: `params` is a live, #[repr(C)] IoUringParams the
+        // kernel reads and fills in before the syscall returns
         let fd = cvt(unsafe { syscall(SYS_IO_URING_SETUP, entries as c_long, params as *mut IoUringParams) })?;
         Ok(RawFdOwned(fd as i32))
     }
@@ -360,6 +363,8 @@ mod sys {
         arg: *const c_void,
         argsz: usize,
     ) -> io::Result<u32> {
+        // SAFETY: callers pass either a null `arg` (argsz 0) or a live
+        // enter-argument struct of `argsz` bytes; the fd is a ring fd
         let ret = unsafe {
             syscall(
                 SYS_IO_URING_ENTER,
@@ -375,6 +380,8 @@ mod sys {
     }
 
     pub fn io_uring_register(fd: i32, opcode: u32, arg: *const c_void, nr_args: u32) -> io::Result<()> {
+        // SAFETY: callers pass an `arg` array with `nr_args` live
+        // elements of the layout the opcode dictates; kernel copies it
         cvt(unsafe { syscall(SYS_IO_URING_REGISTER, fd as c_long, opcode as c_long, arg, nr_args as c_long) })?;
         Ok(())
     }
@@ -389,11 +396,14 @@ mod sys {
             extern "C" {
                 fn close(fd: i32) -> i32;
             }
+            // SAFETY: sole owner of the fd; drop runs exactly once
             unsafe { close(self.0) };
         }
     }
 
     pub fn map(len: usize, fd: i32, off: i64) -> io::Result<*mut u8> {
+        // SAFETY: null hint + kernel-chosen address; the ring fd and
+        // offset come from io_uring_setup, so the mapping is valid
         let p = unsafe { mmap(std::ptr::null_mut(), len, PROT_READ | PROT_WRITE, MAP_SHARED, fd, off) };
         if p as isize == -1 {
             Err(io::Error::last_os_error())
@@ -403,6 +413,8 @@ mod sys {
     }
 
     pub fn map_anon(len: usize) -> io::Result<*mut u8> {
+        // SAFETY: anonymous private mapping at a kernel-chosen address;
+        // no fd involved
         let p = unsafe { mmap(std::ptr::null_mut(), len, PROT_READ | PROT_WRITE, MAP_PRIVATE | MAP_ANONYMOUS, -1, 0) };
         if p as isize == -1 {
             Err(io::Error::last_os_error())
@@ -412,11 +424,14 @@ mod sys {
     }
 
     pub fn unmap(addr: *mut u8, len: usize) {
+        // SAFETY: callers pass the exact (addr, len) pair returned by
+        // `map`/`map_anon`, unmapped at most once (owned by Mapping)
         unsafe { munmap(addr as *mut c_void, len) };
     }
 
     /// == `O_CLOEXEC` | `O_NONBLOCK` for `eventfd`.
     pub fn new_eventfd() -> io::Result<i32> {
+        // SAFETY: no pointers; kernel returns a new fd or an error code
         let fd = unsafe { eventfd(0, 0o2000000 | 0o4000) };
         if fd < 0 {
             Err(io::Error::last_os_error())
@@ -546,6 +561,7 @@ impl Ring {
     fn enter(&mut self, min_complete: u32, timeout_ms: Option<u64>) -> io::Result<()> {
         // SAFETY: ring pointers are valid for the ring's lifetime.
         unsafe { (*self.sq_ktail).store(self.local_tail, Ordering::Release) };
+        // SAFETY: sq_khead points into the same live SQ ring mapping
         let khead = unsafe { (*self.sq_khead).load(Ordering::Acquire) };
         let to_submit = self.local_tail.wrapping_sub(khead);
         let mut flags = 0u32;
@@ -584,11 +600,17 @@ impl Ring {
         // fully written by the kernel before the release-store we
         // acquire here.
         let tail = unsafe { (*self.cq_ktail).load(Ordering::Acquire) };
+        // SAFETY: cq_khead points into the live CQ ring mapping; only
+        // this thread writes it, so Relaxed suffices for our own head
         let mut head = unsafe { (*self.cq_khead).load(Ordering::Relaxed) };
         while head != tail {
+            // SAFETY: head is masked into the CQE array; entries below
+            // `tail` are fully written (acquire-load above)
             out.push(unsafe { *self.cqes.add((head & self.cq_mask) as usize) });
             head = head.wrapping_add(1);
         }
+        // SAFETY: same live CQ head pointer; release makes the reaped
+        // slots reusable by the kernel
         unsafe { (*self.cq_khead).store(head, Ordering::Release) };
     }
 
@@ -661,6 +683,8 @@ impl BufRing {
         // SAFETY: offset 14 is within the first 16-byte entry; the ABI
         // defines it as the ring tail, shared with the kernel.
         let tail_ptr = unsafe { self.ring.ptr.add(14) } as *const AtomicU16;
+        // SAFETY: tail_ptr is 2-aligned within the owned ring mapping;
+        // the release-store publishes the entries written above
         unsafe { (*tail_ptr).store(self.tail, Ordering::Release) };
     }
 

@@ -325,7 +325,7 @@ impl Node for FastCastNode {
             }
             Wire::Paxos { g, msg } => {
                 debug_assert_eq!(g, self.gid);
-                let mut decided = Vec::new();
+                let mut decided = Vec::new(); // alloc-ok: rare Paxos decision batch
                 self.paxos.on_msg(from, msg, out, &mut decided);
                 for cmd in decided {
                     self.apply(cmd, out);

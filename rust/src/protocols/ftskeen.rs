@@ -266,7 +266,7 @@ impl Node for FtSkeenNode {
             }
             Wire::Paxos { g, msg } => {
                 debug_assert_eq!(g, self.gid);
-                let mut decided = Vec::new();
+                let mut decided = Vec::new(); // alloc-ok: rare Paxos decision batch
                 self.paxos.on_msg(from, msg, out, &mut decided);
                 for cmd in decided {
                     if let RsmCmd::AssignLts { meta, .. } = &cmd {

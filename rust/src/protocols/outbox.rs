@@ -183,6 +183,7 @@ pub struct Coalescer<K = Pid> {
 impl<K: std::hash::Hash + Eq + Copy> Coalescer<K> {
     pub fn new() -> Self {
         // no `K: Default` bound needed: the maps' Default has none
+        // alloc-ok: constructor; steady state reuses these buffers
         Coalescer { counts: FxHashMap::default(), frames: FxHashMap::default(), order: Vec::new() }
     }
 
@@ -245,7 +246,7 @@ fn emit_batch_bounded<K: Copy, F: FnMut(K, Wire)>(to: K, batch: Vec<Wire>, emit:
         emit(to, Wire::Batch(batch));
         return;
     }
-    let mut chunk: Vec<Wire> = Vec::new();
+    let mut chunk: Vec<Wire> = Vec::new(); // alloc-ok: oversized-frame split slow path
     let mut bytes = 0usize;
     for w in batch {
         let sz = w.size();
@@ -310,8 +311,8 @@ impl<K: std::hash::Hash + Eq + Copy> LinkCoalescer<K> {
             policy,
             max_bytes: policy.max_bytes.clamp(1, MAX_FRAME_BYTES),
             pending: FxHashMap::default(),
-            order: Vec::new(),
-            pool: Vec::new(),
+            order: Vec::new(), // alloc-ok: constructor
+            pool: Vec::new(),  // alloc-ok: constructor
         }
     }
 
@@ -386,7 +387,7 @@ impl<K: std::hash::Hash + Eq + Copy> LinkCoalescer<K> {
             return Some(0); // should have been flushed already; wake now
         }
         let delay = self.policy.max_delay_ns();
-        self.pending.values().map(|l| l.since.saturating_add(delay)).min()
+        self.pending.values().map(|l| l.since.saturating_add(delay)).min() // unordered-ok: min() fold
     }
 
     pub fn is_empty(&self) -> bool {
@@ -396,6 +397,7 @@ impl<K: std::hash::Hash + Eq + Copy> LinkCoalescer<K> {
     /// Drop everything pending (crash simulation: unflushed wires die
     /// with the process).
     pub fn clear(&mut self) {
+        // unordered-ok: buffer recycling only; nothing reaches the wire
         for (_, mut link) in self.pending.drain() {
             link.wires.clear();
             self.pool.push(link.wires);

@@ -154,7 +154,10 @@ pub struct WbNode {
     pub(crate) delivered_log: BTreeMap<Ts, MsgId>,
 
     // --- recovery bookkeeping (see recovery.rs) ---
-    pub(crate) nl_acks: HashMap<Pid, recovery::NlAck>,
+    // BTreeMap, not HashMap: the merge in `on_new_leader_ack` folds the
+    // reporters' states in iteration order, and the adopted state reaches
+    // the wire (NEW_STATE) — reporter order must be deterministic
+    pub(crate) nl_acks: BTreeMap<Pid, recovery::NlAck>,
     pub(crate) ns_acks: HashSet<Pid>,
 
     // --- batched commit engine (L2/L1 integration; see crate::runtime::engine) ---
@@ -215,10 +218,10 @@ impl WbNode {
             pending: BTreeSet::new(),
             committed: BTreeSet::new(),
             delivered_log: BTreeMap::new(),
-            nl_acks: HashMap::new(),
+            nl_acks: BTreeMap::new(),
             ns_acks: HashSet::new(),
             backend,
-            ready: Vec::new(),
+            ready: Vec::new(), // alloc-ok: constructor
             last_hb: 0,
             gc_reports: HashMap::new(),
             gc_client_seq: HashMap::new(),
@@ -381,6 +384,7 @@ impl WbNode {
 
     /// Sorted ballot vector for the current accept set of `m`.
     fn ballot_vector(e: &Entry) -> Vec<(Gid, Ballot)> {
+        // unordered-ok: sorted by gid below
         let mut v: Vec<(Gid, Ballot)> = e.accepts.iter().map(|(&g, &(b, _))| (g, b)).collect();
         v.sort_unstable_by_key(|&(g, _)| g);
         v
@@ -485,7 +489,7 @@ impl WbNode {
             self.pending.insert((own_lts, m));
         }
         // line 14: speculative clock advance to the would-be global ts
-        let gts = e.accepts.values().map(|&(_, l)| l).max().unwrap();
+        let gts = e.accepts.values().map(|&(_, l)| l).max().unwrap(); // unordered-ok: max() fold
         self.clock = self.clock.max(gts.time());
         // line 16: acknowledge to every proposing leader (the ballot
         // vector ends up owned by the wire, so recipients are staged).

@@ -13,7 +13,7 @@ use super::{Entry, WbNode};
 use crate::protocols::{Outbox, TimerKind};
 use crate::types::wire::MsgState;
 use crate::types::{Ballot, MsgId, Phase, Pid, Status, Ts, Wire};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Contents of a NEWLEADER_ACK, kept per reporter.
 pub(crate) struct NlAck {
@@ -23,13 +23,18 @@ pub(crate) struct NlAck {
 }
 
 impl WbNode {
-    /// Snapshot of every non-START message (sent in NEWLEADER_ACK).
+    /// Snapshot of every non-START message (sent in NEWLEADER_ACK),
+    /// sorted by message id: the vector goes on the wire and into Adopt
+    /// journal records, so its order must not depend on hash iteration.
     fn snapshot(&self) -> Vec<MsgState> {
-        self.entries
-            .values()
+        let mut v: Vec<MsgState> = self
+            .entries
+            .values() // unordered-ok: sorted by id below
             .filter(|e| e.phase != Phase::Start)
             .map(|e| MsgState { meta: e.meta.clone(), phase: e.phase, lts: e.lts, gts: e.gts })
-            .collect()
+            .collect();
+        v.sort_unstable_by_key(|s| s.meta.id);
+        v
     }
 
     /// Fig. 4 line 35: start a new candidacy.
@@ -92,8 +97,10 @@ impl WbNode {
 
         // ---- lines 44-55: compute the new state ----
         let b0 = self.nl_acks.values().map(|a| a.cbal).max().unwrap();
-        // phase/lts/gts triple per message
-        let mut merged: HashMap<MsgId, MsgState> = HashMap::new();
+        // phase/lts/gts triple per message; BTreeMap so the adopted state
+        // (and the NEW_STATE wire built from it) is ordered by MsgId, not
+        // by hash-iteration accident
+        let mut merged: BTreeMap<MsgId, MsgState> = BTreeMap::new();
         for ack in self.nl_acks.values() {
             for s in &ack.state {
                 // line 47: COMMITTED anywhere wins outright

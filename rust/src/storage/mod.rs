@@ -43,6 +43,8 @@
 //! invariant checkers cover restarts; see `sim::World::enable_storage`).
 
 use crate::codec::{self, Dec, Enc};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{Arc, OnceLock};
 use crate::types::wire::MsgState;
 use crate::types::{Ballot, MsgId, Phase, Ts};
 use std::collections::BTreeMap;
@@ -120,7 +122,7 @@ pub enum Record {
 // ---------------- CRC-32 (IEEE, reflected) ----------------
 
 fn crc_table() -> &'static [u32; 256] {
-    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
     TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, slot) in t.iter_mut().enumerate() {
@@ -512,12 +514,40 @@ pub struct Storage {
     unsynced: bool,
     /// a write failed: journaling stopped, the directory carries a
     /// `POISONED` marker, and future [`Storage::open`]s refuse it
-    poisoned: bool,
+    poison_flag: PoisonFlag,
     last_sync: Instant,
 }
 
 /// Marker file written when a journal write fails ([`Storage::poison`]).
 const POISON_MARKER: &str = "POISONED";
+
+/// Cross-thread poison latch. The `Storage` is owned by one worker
+/// thread, but "did journaling fail?" must be observable from others —
+/// shutdown paths, health checks, tests — *before* any post-failure
+/// acknowledgement they receive from the worker: [`PoisonFlag::set`] is
+/// a release store and [`PoisonFlag::get`] an acquire load, so
+/// everything the worker did up to the poison (the marker file, the
+/// last good commit) happens-before a positive observation. The loom
+/// model (`loom_poison_visible_before_post_failure_ack`) checks exactly
+/// this ordering across every interleaving.
+#[derive(Clone, Debug, Default)]
+pub struct PoisonFlag(Arc<AtomicBool>);
+
+impl PoisonFlag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Latch the flag (release; never cleared).
+    pub fn set(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Observe the latch (acquire).
+    pub fn get(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 impl Storage {
     /// Open (or create) the storage directory, replaying the newest
@@ -667,7 +697,7 @@ impl Storage {
             enc: Enc::new(),
             dirty: false,
             unsynced: false,
-            poisoned: false,
+            poison_flag: PoisonFlag::new(),
             last_sync: Instant::now(),
         })
     }
@@ -710,7 +740,14 @@ impl Storage {
     /// True once a journal write failed: appends are discarded, the
     /// directory is marked, and future opens refuse to restore from it.
     pub fn is_poisoned(&self) -> bool {
-        self.poisoned
+        self.poison_flag.get()
+    }
+
+    /// A clone of the poison latch, observable from other threads (the
+    /// worker owning this `Storage` keeps journaling decisions local,
+    /// but health checks may watch the latch without a channel hop).
+    pub fn poison_flag(&self) -> PoisonFlag {
+        self.poison_flag.clone()
     }
 
     /// A journal write failed: stop journaling (a WAL with a hole is
@@ -721,10 +758,10 @@ impl Storage {
     /// the group's perspective it degrades to a crash-stop process (it
     /// just can never come back from this disk).
     pub fn poison(&mut self) {
-        if self.poisoned {
+        if self.poison_flag.get() {
             return;
         }
-        self.poisoned = true;
+        self.poison_flag.set();
         // the marker must itself be durable, or a crash after a failed
         // write could restore from the holed WAL the marker exists to
         // block — fsync the file and the directory entry
@@ -752,7 +789,7 @@ impl Storage {
     /// happens at [`Storage::commit`] per the [`SyncPolicy`]). On error
     /// the storage poisons itself — see [`Storage::poison`].
     pub fn append(&mut self, rec: &Record) -> std::io::Result<()> {
-        if self.poisoned {
+        if self.poison_flag.get() {
             return Ok(());
         }
         self.enc.buf.clear();
@@ -785,7 +822,7 @@ impl Storage {
     /// the policy, then rotates/compacts if thresholds were crossed.
     /// On error the storage poisons itself.
     pub fn commit(&mut self) -> std::io::Result<()> {
-        if self.poisoned || (!self.dirty && !self.unsynced) {
+        if self.poison_flag.get() || (!self.dirty && !self.unsynced) {
             return Ok(());
         }
         let r = self.commit_inner();
@@ -821,7 +858,7 @@ impl Storage {
 
     /// Force-flush and fsync everything (shutdown; also run on drop).
     pub fn sync(&mut self) -> std::io::Result<()> {
-        if self.poisoned {
+        if self.poison_flag.get() {
             return Ok(());
         }
         self.file.flush()?;
@@ -1130,5 +1167,36 @@ mod tests {
         assert_eq!(SyncPolicy::parse("interval"), Some(SyncPolicy::IntervalUs(5_000)));
         assert_eq!(SyncPolicy::parse("interval:250"), Some(SyncPolicy::IntervalUs(250)));
         assert_eq!(SyncPolicy::parse("bogus"), None);
+    }
+}
+
+/// Exhaustive interleaving tests for the poison latch, run under the
+/// in-tree model checker:
+/// `RUSTFLAGS="--cfg loom" cargo test --release loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::PoisonFlag;
+    use crate::sync::{model, mpsc, thread};
+
+    /// The invariant the coordinator relies on: a worker that poisons
+    /// its storage and *then* acknowledges the cycle must have the
+    /// poison visible to whoever receives that acknowledgement, in
+    /// every interleaving (release store + acquire load + the channel's
+    /// happens-before edge).
+    #[test]
+    fn loom_poison_visible_before_post_failure_ack() {
+        model(|| {
+            let latch = PoisonFlag::new();
+            let observer = latch.clone();
+            let (ack_tx, ack_rx) = mpsc::channel();
+            let worker = thread::spawn(move || {
+                // a journal write failed: latch first, ack second
+                latch.set();
+                ack_tx.send(()).unwrap();
+            });
+            ack_rx.recv().unwrap();
+            assert!(observer.get(), "post-failure ack arrived before the poison was visible");
+            worker.join().unwrap();
+        });
     }
 }

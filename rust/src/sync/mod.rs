@@ -1,0 +1,37 @@
+//! Synchronization facade: the one import path for every concurrency
+//! primitive the runtime uses.
+//!
+//! In a normal build this module is a plain re-export of `std::sync` /
+//! `std::thread`, so it costs nothing. Under `--cfg loom` the same names
+//! resolve to the model-checked equivalents in [`model`], and the
+//! `loom_`-prefixed tests drive the real runtime code (`run_flusher`,
+//! shard workers, storage poison, `NetStats`) through **every** bounded
+//! thread interleaving:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release loom_
+//! ```
+//!
+//! The migrated modules — `coordinator`, `net` (except the raw-syscall
+//! transports, see below), `storage`, `protocols::outbox` callers — must
+//! not name `std::sync`/`std::thread` primitives directly; the
+//! `cargo xtask lint` gate (rule `sync-facade`) enforces this. The
+//! epoll/uring transports are exempt: their atomics live in
+//! kernel-shared mmap'd rings and must remain real `std` atomics.
+//!
+//! `Arc` and `OnceLock` are `std`'s in both worlds: refcounting and
+//! one-time init are not the race surfaces the model explores, and
+//! keeping them `std` lets model-mode types interoperate with
+//! non-modeled code.
+
+#[cfg(loom)]
+pub mod model;
+
+#[cfg(loom)]
+pub use model::{atomic, model, mpsc, thread, Arc, Mutex, MutexGuard, OnceLock};
+
+#[cfg(not(loom))]
+pub use std::sync::{atomic, mpsc, Arc, Mutex, MutexGuard, OnceLock};
+
+#[cfg(not(loom))]
+pub use std::thread;

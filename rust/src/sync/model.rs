@@ -1,0 +1,1206 @@
+//! Miniature CHESS-style model checker backing the `cfg(loom)` build.
+//!
+//! The offline image cannot fetch the real `loom` crate, so this module
+//! provides the same *shape*: drop-in `Mutex`/atomic/`mpsc`/`thread`
+//! types (re-exported through [`crate::sync`] under `--cfg loom`) plus a
+//! [`model`] entry point that runs a closure under **every** distinct
+//! thread interleaving the scheduler can produce, up to a preemption
+//! bound.
+//!
+//! ## How it works
+//!
+//! Threads are real OS threads, but they execute one at a time: a token
+//! (`SchedState::active`) names the only thread allowed to run, and every
+//! synchronization operation (atomic access, mutex lock/unlock, channel
+//! send/recv, spawn/join/yield) is a *scheduling point* that may hand the
+//! token to a different runnable thread. Which thread runs next is a
+//! recorded `Choice`; the driver performs an iterative-deepening DFS over
+//! the choice tree: replay a prefix, take first-choices to the end,
+//! then advance the deepest non-exhausted choice and repeat. When the
+//! tree is exhausted the run prints how many interleavings it explored.
+//!
+//! Bounds (all overridable by env var):
+//!
+//! * `WBAM_LOOM_PREEMPTION_BOUND` (default 3) — maximum *involuntary*
+//!   context switches per execution, the classic CHESS bound; voluntary
+//!   switches (block on a lock/empty channel, join, finish) are free.
+//! * `WBAM_LOOM_MAX_EXECUTIONS` (default 500_000) — hard cap on explored
+//!   interleavings; exceeding it panics loudly rather than silently
+//!   truncating coverage.
+//!
+//! ## Semantics and limitations
+//!
+//! * Atomics wrap the real `std` atomics and accept `Ordering` arguments,
+//!   but the checker explores *sequentially consistent* interleavings
+//!   only — it does not model C11 weak-memory reorderings (neither does
+//!   CHESS; loom does). What it does catch: lost updates, ordering bugs
+//!   between threads, deadlocks, shutdown races, and any assertion
+//!   failure reachable by interleaving at synchronization granularity.
+//! * `mpsc::Receiver::recv_timeout` treats the timeout as a
+//!   nondeterministic choice, allowed at most once consecutively per
+//!   channel while senders are alive. This explores the idle-tick path
+//!   of `run_flusher`/`ShardWorker` exactly once per quiet stretch and
+//!   keeps the state space finite.
+//! * Outside a [`model`] run every primitive degrades to plain `std`
+//!   behavior, so a `--cfg loom` build of the whole crate (bins, tests,
+//!   examples) stays fully functional.
+//! * `Arc` and `OnceLock` are re-exported from `std` unchanged: refcounts
+//!   and one-time init are not the race surfaces under test here.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as StdOrdering};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+pub use std::sync::{Arc, OnceLock};
+
+type Tid = usize;
+
+/// Steps (scheduling points) allowed in one execution before we assume a
+/// livelock and abort the run.
+const MAX_STEPS: u64 = 1_000_000;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One recorded scheduling decision: which of `options` alternatives was
+/// taken. The DFS driver advances the deepest non-exhausted `chosen`.
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    chosen: usize,
+    options: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockedOn {
+    /// Waiting for the mutex with this object id to unlock.
+    Mutex(usize),
+    /// Waiting for a send (or disconnect) on the channel with this id.
+    Recv(usize),
+    /// Waiting for this thread to finish.
+    Join(Tid),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    Blocked(BlockedOn),
+    Finished,
+}
+
+struct SchedState {
+    statuses: Vec<Status>,
+    /// The one thread currently allowed to execute.
+    active: Tid,
+    /// Choice sequence: replayed up to `pos`, extended (first-choice) after.
+    path: Vec<Choice>,
+    pos: usize,
+    steps: u64,
+    preemptions: u64,
+    /// Set on failure/deadlock/cap: every parked thread wakes and unwinds.
+    abort: Option<String>,
+}
+
+pub(crate) struct Scheduler {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    preemption_bound: u64,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(StdArc<Scheduler>, Tid)>> = RefCell::new(None);
+}
+
+fn ctx() -> Option<(StdArc<Scheduler>, Tid)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(v: Option<(StdArc<Scheduler>, Tid)>) {
+    CURRENT.with(|c| *c.borrow_mut() = v);
+}
+
+/// A scheduling point for the calling thread, if a model run is active.
+fn point() {
+    if let Some((s, t)) = ctx() {
+        s.sched_point(t);
+    }
+}
+
+static NEXT_OBJ_ID: StdAtomicUsize = StdAtomicUsize::new(1);
+
+fn next_obj_id() -> usize {
+    NEXT_OBJ_ID.fetch_add(1, StdOrdering::Relaxed)
+}
+
+impl Scheduler {
+    /// Lock the scheduler state, shrugging off poisoning: a step-cap or
+    /// deadlock panic may unwind while holding this lock, and every other
+    /// thread still needs to observe `abort` to shut down cleanly.
+    fn st(&self) -> StdMutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn cv_wait<'a>(&self, st: StdMutexGuard<'a, SchedState>) -> StdMutexGuard<'a, SchedState> {
+        self.cv.wait(st).unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn new(prefix: Vec<Choice>, preemption_bound: u64) -> Self {
+        Scheduler {
+            state: StdMutex::new(SchedState {
+                statuses: vec![Status::Runnable], // tid 0 is the root closure
+                active: 0,
+                path: prefix,
+                pos: 0,
+                steps: 0,
+                preemptions: 0,
+                abort: None,
+            }),
+            cv: StdCondvar::new(),
+            preemption_bound,
+        }
+    }
+
+    /// Runnable tids with `prefer` (the caller) rotated to the front, so
+    /// choice 0 always means "keep running the current thread" and the
+    /// first-choice path is the sequential execution.
+    fn runnable_locked(st: &SchedState, prefer: Tid) -> Vec<Tid> {
+        let mut r: Vec<Tid> = (0..st.statuses.len())
+            .filter(|&t| st.statuses[t] == Status::Runnable)
+            .collect();
+        if let Some(i) = r.iter().position(|&t| t == prefer) {
+            r.rotate_left(i);
+        }
+        r
+    }
+
+    /// Replay or record one decision among `options` alternatives.
+    fn choose_locked(st: &mut SchedState, options: usize) -> usize {
+        debug_assert!(options >= 1);
+        if st.pos < st.path.len() {
+            let c = st.path[st.pos];
+            assert_eq!(
+                c.options, options,
+                "loom model: nondeterministic replay (program makes decisions \
+                 not controlled by the scheduler — wall clock? randomness?)"
+            );
+            st.pos += 1;
+            c.chosen
+        } else {
+            st.path.push(Choice { chosen: 0, options });
+            st.pos += 1;
+            0
+        }
+    }
+
+    fn bump_steps_locked(&self, st: &mut SchedState) {
+        st.steps += 1;
+        if st.steps > MAX_STEPS {
+            let r = format!("loom model: execution exceeded {MAX_STEPS} scheduling points (livelock?)");
+            st.abort = Some(r.clone());
+            self.cv.notify_all();
+            // Never double-panic: scheduling points run inside Drop impls,
+            // which may themselves execute during an unwind.
+            if !std::thread::panicking() {
+                panic!("{r}");
+            }
+        }
+    }
+
+    /// Park until this thread holds the token; panics if the run aborts.
+    fn wait_until_active<'a>(
+        &self,
+        mut st: StdMutexGuard<'a, SchedState>,
+        tid: Tid,
+    ) -> StdMutexGuard<'a, SchedState> {
+        loop {
+            if let Some(r) = &st.abort {
+                let r = r.clone();
+                drop(st);
+                panic!("{r}");
+            }
+            if st.active == tid && st.statuses[tid] == Status::Runnable {
+                return st;
+            }
+            st = self.cv_wait(st);
+        }
+    }
+
+    /// The heart of the checker: maybe hand the token to another runnable
+    /// thread. Quiet (no panic) when the run is aborting, because this is
+    /// called from `Drop` impls on unwind paths.
+    fn sched_point(&self, tid: Tid) {
+        let mut st = self.st();
+        if st.abort.is_some() {
+            return;
+        }
+        self.bump_steps_locked(&mut st);
+        if st.abort.is_some() {
+            return;
+        }
+        let runnable = Self::runnable_locked(&st, tid);
+        if runnable.len() <= 1 || st.preemptions >= self.preemption_bound {
+            return;
+        }
+        let idx = Self::choose_locked(&mut st, runnable.len());
+        let next = runnable[idx];
+        if next != tid {
+            st.preemptions += 1;
+            st.active = next;
+            self.cv.notify_all();
+            let st = self.wait_until_active(st, tid);
+            drop(st);
+        }
+    }
+
+    /// An explicit data choice (e.g. "does this recv_timeout fire?").
+    /// Not a context switch; never counts as a preemption.
+    fn choice(&self, _tid: Tid, options: usize) -> usize {
+        let mut st = self.st();
+        if st.abort.is_some() {
+            return 0;
+        }
+        self.bump_steps_locked(&mut st);
+        if st.abort.is_some() {
+            return 0;
+        }
+        Self::choose_locked(&mut st, options)
+    }
+
+    /// Block the calling thread on `on` and hand the token to some
+    /// runnable thread (a free, non-preemptive switch). Returns once a
+    /// waker marks us runnable and a scheduling decision picks us.
+    fn block_on(&self, tid: Tid, on: BlockedOn) {
+        let mut st = self.st();
+        if let Some(r) = &st.abort {
+            let r = r.clone();
+            drop(st);
+            panic!("{r}");
+        }
+        self.bump_steps_locked(&mut st);
+        if let Some(r) = &st.abort {
+            let r = r.clone();
+            drop(st);
+            panic!("{r}");
+        }
+        st.statuses[tid] = Status::Blocked(on);
+        let runnable = Self::runnable_locked(&st, tid);
+        if runnable.is_empty() {
+            let r = format!(
+                "loom model: deadlock — thread {tid} blocked on {on:?} with no runnable thread left"
+            );
+            st.abort = Some(r.clone());
+            self.cv.notify_all();
+            drop(st);
+            panic!("{r}");
+        }
+        let idx = if runnable.len() > 1 { Self::choose_locked(&mut st, runnable.len()) } else { 0 };
+        st.active = runnable[idx];
+        self.cv.notify_all();
+        let st = self.wait_until_active(st, tid);
+        drop(st);
+    }
+
+    /// Mark every thread blocked on `on` runnable again (they run when a
+    /// later scheduling decision picks them). Quiet on abort: called from
+    /// `Drop` impls.
+    fn wake(&self, on: BlockedOn) {
+        let mut st = self.st();
+        for s in st.statuses.iter_mut() {
+            if *s == Status::Blocked(on) {
+                *s = Status::Runnable;
+            }
+        }
+    }
+
+    /// Register a newly spawned thread; it starts Runnable but parks in
+    /// `wait_for_start` until a scheduling decision gives it the token.
+    fn register_thread(&self) -> Tid {
+        let mut st = self.st();
+        st.statuses.push(Status::Runnable);
+        st.statuses.len() - 1
+    }
+
+    fn wait_for_start(&self, tid: Tid) {
+        let st = self.st();
+        let st = self.wait_until_active(st, tid);
+        drop(st);
+    }
+
+    /// Terminal bookkeeping for a finished thread: wake joiners, hand the
+    /// token onward. Never panics — runs after the closure's result is
+    /// already stored, including on abort paths.
+    fn finish(&self, tid: Tid) {
+        let mut st = self.st();
+        st.statuses[tid] = Status::Finished;
+        for s in st.statuses.iter_mut() {
+            if *s == Status::Blocked(BlockedOn::Join(tid)) {
+                *s = Status::Runnable;
+            }
+        }
+        if st.abort.is_none() {
+            let runnable = Self::runnable_locked(&st, tid);
+            if let Some(&first) = runnable.first() {
+                let idx =
+                    if runnable.len() > 1 { Self::choose_locked(&mut st, runnable.len()) } else { 0 };
+                st.active = if idx == 0 { first } else { runnable[idx] };
+            } else if st.statuses.iter().any(|s| matches!(s, Status::Blocked(_))) {
+                st.abort = Some(
+                    "loom model: deadlock — a thread finished leaving only blocked threads".into(),
+                );
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Wait (as thread `me`) until `target` has finished.
+    fn join_wait(&self, me: Tid, target: Tid) {
+        self.sched_point(me);
+        loop {
+            {
+                let st = self.st();
+                if let Some(r) = &st.abort {
+                    let r = r.clone();
+                    drop(st);
+                    panic!("{r}");
+                }
+                if st.statuses[target] == Status::Finished {
+                    return;
+                }
+            }
+            // Only one thread runs at a time, so `target` cannot finish
+            // between the check above and blocking here.
+            self.block_on(me, BlockedOn::Join(target));
+        }
+    }
+
+    /// Root closure returned normally: mark tid 0 finished and drive the
+    /// remaining threads until everyone has finished.
+    fn finish_root(&self) {
+        let mut st = self.st();
+        st.statuses[0] = Status::Finished;
+        loop {
+            if let Some(r) = &st.abort {
+                let r = r.clone();
+                drop(st);
+                panic!("{r}");
+            }
+            if st.statuses.iter().all(|s| *s == Status::Finished) {
+                self.cv.notify_all();
+                return;
+            }
+            let runnable = Self::runnable_locked(&st, st.active);
+            if runnable.is_empty() {
+                let r = "loom model: deadlock — root finished but other threads are blocked"
+                    .to_string();
+                st.abort = Some(r.clone());
+                self.cv.notify_all();
+                drop(st);
+                panic!("{r}");
+            }
+            if st.statuses[st.active] != Status::Runnable {
+                let idx =
+                    if runnable.len() > 1 { Self::choose_locked(&mut st, runnable.len()) } else { 0 };
+                st.active = runnable[idx];
+            }
+            self.cv.notify_all();
+            st = self.cv_wait(st);
+        }
+    }
+
+    /// Root closure panicked: abort the run and reap every worker thread
+    /// (they wake from their park loops, unwind, and mark Finished).
+    fn abort_all(&self) {
+        let mut st = self.st();
+        st.statuses[0] = Status::Finished;
+        if st.abort.is_none() {
+            st.abort = Some("loom model: run aborted (failure on another thread)".into());
+        }
+        self.cv.notify_all();
+        while !st.statuses.iter().all(|s| *s == Status::Finished) {
+            st = self.cv_wait(st);
+        }
+    }
+}
+
+/// Advance to the next unexplored schedule: bump the deepest
+/// non-exhausted choice, dropping exhausted tails. `None` = done.
+fn next_prefix(mut path: Vec<Choice>) -> Option<Vec<Choice>> {
+    while let Some(last) = path.last_mut() {
+        if last.chosen + 1 < last.options {
+            last.chosen += 1;
+            return Some(path);
+        }
+        path.pop();
+    }
+    None
+}
+
+fn run_one<F: Fn()>(f: &F, prefix: Vec<Choice>, bound: u64) -> (std::thread::Result<()>, Vec<Choice>) {
+    let sched = StdArc::new(Scheduler::new(prefix, bound));
+    set_ctx(Some((sched.clone(), 0)));
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        f();
+        sched.finish_root();
+    }));
+    if r.is_err() {
+        sched.abort_all();
+    }
+    set_ctx(None);
+    let path = sched.st().path.clone();
+    (r, path)
+}
+
+/// Run `f` under every schedule the bounded DFS can produce. Panics (by
+/// re-raising `f`'s panic) on the first failing interleaving; prints the
+/// number of interleavings explored on success.
+pub fn model<F: Fn()>(f: F) {
+    let max_execs = env_u64("WBAM_LOOM_MAX_EXECUTIONS", 500_000);
+    let bound = env_u64("WBAM_LOOM_PREEMPTION_BOUND", 3);
+    let mut prefix = Vec::new();
+    let mut execs: u64 = 0;
+    loop {
+        execs += 1;
+        if execs > max_execs {
+            panic!(
+                "loom model: exceeded {max_execs} executions without exhausting the schedule \
+                 space; shrink the test or raise WBAM_LOOM_MAX_EXECUTIONS"
+            );
+        }
+        let (r, path) = run_one(&f, prefix, bound);
+        if let Err(e) = r {
+            eprintln!(
+                "loom model: FAILED on interleaving {execs} (after {} passing)",
+                execs - 1
+            );
+            resume_unwind(e);
+        }
+        match next_prefix(path) {
+            Some(p) => prefix = p,
+            None => break,
+        }
+    }
+    eprintln!("loom model: explored {execs} interleavings");
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+pub use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+/// Model-checked mutex: `std::sync::Mutex` plus a scheduling point on
+/// lock/unlock and blocking via the scheduler instead of the OS.
+pub struct Mutex<T> {
+    id: usize,
+    inner: StdMutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    sched: Option<(StdArc<Scheduler>, Tid)>,
+    id: usize,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Self {
+        Mutex { id: next_obj_id(), inner: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((s, tid)) = ctx() {
+            s.sched_point(tid);
+            loop {
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        return Ok(MutexGuard {
+                            sched: Some((s, tid)),
+                            id: self.id,
+                            inner: Some(g),
+                        })
+                    }
+                    Err(TryLockError::Poisoned(p)) => {
+                        return Err(PoisonError::new(MutexGuard {
+                            sched: Some((s, tid)),
+                            id: self.id,
+                            inner: Some(p.into_inner()),
+                        }))
+                    }
+                    // Held by another (suspended) thread: block until its
+                    // guard drop wakes us.
+                    Err(TryLockError::WouldBlock) => s.block_on(tid, BlockedOn::Mutex(self.id)),
+                }
+            }
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { sched: None, id: self.id, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    sched: None,
+                    id: self.id,
+                    inner: Some(p.into_inner()),
+                })),
+            }
+        }
+    }
+
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        let sched = ctx();
+        if let Some((s, tid)) = &sched {
+            s.sched_point(*tid);
+        }
+        match self.inner.try_lock() {
+            Ok(g) => Ok(MutexGuard { sched, id: self.id, inner: Some(g) }),
+            Err(TryLockError::Poisoned(p)) => {
+                Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                    sched,
+                    id: self.id,
+                    inner: Some(p.into_inner()),
+                })))
+            }
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").field("inner", &self.inner).finish()
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().unwrap()
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().unwrap()
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the OS lock first, then let blocked threads race for it.
+        drop(self.inner.take());
+        if let Some((s, t)) = self.sched.take() {
+            s.wake(BlockedOn::Mutex(self.id));
+            s.sched_point(t); // quiet on abort: safe during unwind
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+pub mod atomic {
+    //! Model-checked atomics. Each operation is one scheduling point; the
+    //! underlying op is the real `std` atomic, explored under sequential
+    //! consistency regardless of the `Ordering` passed.
+    pub use std::sync::atomic::Ordering;
+
+    use super::point;
+
+    macro_rules! int_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name($std);
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    Self(<$std>::new(v))
+                }
+                pub fn load(&self, o: Ordering) -> $prim {
+                    point();
+                    self.0.load(o)
+                }
+                pub fn store(&self, v: $prim, o: Ordering) {
+                    point();
+                    self.0.store(v, o)
+                }
+                pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                    point();
+                    self.0.swap(v, o)
+                }
+                pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_add(v, o)
+                }
+                pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_sub(v, o)
+                }
+                pub fn fetch_max(&self, v: $prim, o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_max(v, o)
+                }
+                pub fn compare_exchange(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    point();
+                    self.0.compare_exchange(current, new, success, failure)
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU16, std::sync::atomic::AtomicU16, u16);
+    int_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self(std::sync::atomic::AtomicBool::new(v))
+        }
+        pub fn load(&self, o: Ordering) -> bool {
+            point();
+            self.0.load(o)
+        }
+        pub fn store(&self, v: bool, o: Ordering) {
+            point();
+            self.0.store(v, o)
+        }
+        pub fn swap(&self, v: bool, o: Ordering) -> bool {
+            point();
+            self.0.swap(v, o)
+        }
+        pub fn fetch_or(&self, v: bool, o: Ordering) -> bool {
+            point();
+            self.0.fetch_or(v, o)
+        }
+        pub fn compare_exchange(
+            &self,
+            current: bool,
+            new: bool,
+            success: Ordering,
+            failure: Ordering,
+        ) -> Result<bool, bool> {
+            point();
+            self.0.compare_exchange(current, new, success, failure)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mpsc
+// ---------------------------------------------------------------------------
+
+pub mod mpsc {
+    //! Model-checked unbounded channel with `std::sync::mpsc`'s API and
+    //! error types. In a model run, blocking goes through the scheduler
+    //! and `recv_timeout` is a bounded nondeterministic choice; outside
+    //! one it is a plain condvar queue.
+    pub use std::sync::mpsc::{RecvError, RecvTimeoutError, SendError, TryRecvError};
+
+    use super::{ctx, next_obj_id, BlockedOn};
+    use std::collections::VecDeque;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::{Duration, Instant};
+
+    struct Inner<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        receiver_alive: bool,
+        /// True right after a model-mode recv_timeout chose to time out;
+        /// suppresses a second consecutive timeout so idle-tick loops
+        /// stay finite. Reset by every send and successful recv.
+        timeout_streak: bool,
+    }
+
+    struct Shared<T> {
+        id: usize,
+        m: Mutex<Inner<T>>,
+        cv: Condvar,
+    }
+
+    pub struct Sender<T>(Arc<Shared<T>>);
+    pub struct Receiver<T>(Arc<Shared<T>>);
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let shared = Arc::new(Shared {
+            id: next_obj_id(),
+            m: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                senders: 1,
+                receiver_alive: true,
+                timeout_streak: false,
+            }),
+            cv: Condvar::new(),
+        });
+        (Sender(shared.clone()), Receiver(shared))
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            super::point();
+            let mut q = self.0.m.lock().unwrap();
+            if !q.receiver_alive {
+                return Err(SendError(t));
+            }
+            q.queue.push_back(t);
+            q.timeout_streak = false;
+            drop(q);
+            if let Some((s, _)) = ctx() {
+                s.wake(BlockedOn::Recv(self.0.id));
+            }
+            self.0.cv.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            self.0.m.lock().unwrap().senders += 1;
+            Sender(self.0.clone())
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut q = self.0.m.lock().unwrap();
+            q.senders -= 1;
+            let last = q.senders == 0;
+            drop(q);
+            if last {
+                // Disconnect is observable: wake any parked receiver.
+                if let Some((s, _)) = ctx() {
+                    s.wake(BlockedOn::Recv(self.0.id));
+                }
+                self.0.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            if let Some((s, tid)) = ctx() {
+                s.sched_point(tid);
+                loop {
+                    {
+                        let mut q = self.0.m.lock().unwrap();
+                        if let Some(v) = q.queue.pop_front() {
+                            q.timeout_streak = false;
+                            return Ok(v);
+                        }
+                        if q.senders == 0 {
+                            return Err(RecvError);
+                        }
+                    }
+                    s.block_on(tid, BlockedOn::Recv(self.0.id));
+                }
+            } else {
+                let mut q = self.0.m.lock().unwrap();
+                loop {
+                    if let Some(v) = q.queue.pop_front() {
+                        return Ok(v);
+                    }
+                    if q.senders == 0 {
+                        return Err(RecvError);
+                    }
+                    q = self.0.cv.wait(q).unwrap();
+                }
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            super::point();
+            let mut q = self.0.m.lock().unwrap();
+            if let Some(v) = q.queue.pop_front() {
+                q.timeout_streak = false;
+                return Ok(v);
+            }
+            if q.senders == 0 {
+                Err(TryRecvError::Disconnected)
+            } else {
+                Err(TryRecvError::Empty)
+            }
+        }
+
+        pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+            if let Some((s, tid)) = ctx() {
+                s.sched_point(tid);
+                loop {
+                    {
+                        let mut q = self.0.m.lock().unwrap();
+                        if let Some(v) = q.queue.pop_front() {
+                            q.timeout_streak = false;
+                            return Ok(v);
+                        }
+                        if q.senders == 0 {
+                            return Err(RecvTimeoutError::Disconnected);
+                        }
+                        // Model time: "did the timeout fire before a send?"
+                        // is a schedule choice, allowed at most once in a
+                        // row so idle loops terminate.
+                        if !q.timeout_streak && s.choice(tid, 2) == 1 {
+                            q.timeout_streak = true;
+                            return Err(RecvTimeoutError::Timeout);
+                        }
+                    }
+                    s.block_on(tid, BlockedOn::Recv(self.0.id));
+                }
+            } else {
+                let deadline = Instant::now() + timeout;
+                let mut q = self.0.m.lock().unwrap();
+                loop {
+                    if let Some(v) = q.queue.pop_front() {
+                        return Ok(v);
+                    }
+                    if q.senders == 0 {
+                        return Err(RecvTimeoutError::Disconnected);
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(RecvTimeoutError::Timeout);
+                    }
+                    let (g, _) = self.0.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = g;
+                }
+            }
+        }
+
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+
+        pub fn try_iter(&self) -> TryIter<'_, T> {
+            TryIter { rx: self }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            self.0.m.lock().unwrap().receiver_alive = false;
+        }
+    }
+
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    pub struct TryIter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for TryIter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.try_recv().ok()
+        }
+    }
+
+    impl<'a, T> IntoIterator for &'a Receiver<T> {
+        type Item = T;
+        type IntoIter = Iter<'a, T>;
+        fn into_iter(self) -> Iter<'a, T> {
+            self.iter()
+        }
+    }
+
+    impl<T> std::fmt::Debug for Sender<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("Sender { .. }")
+        }
+    }
+
+    impl<T> std::fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("Receiver { .. }")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    //! Model-checked threads. Inside a model run, spawned closures run on
+    //! real OS threads but only when the scheduler hands them the token;
+    //! `sleep` is a pure scheduling point (model time does not pass).
+    pub use std::thread::{current, Result};
+
+    use super::{ctx, set_ctx, Scheduler, Tid};
+    use std::io;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc as StdArc, Mutex as StdMutex};
+    use std::time::Duration;
+
+    pub struct Builder {
+        inner: std::thread::Builder,
+    }
+
+    enum Imp<T> {
+        Model {
+            tid: Tid,
+            slot: StdArc<StdMutex<Option<Result<T>>>>,
+            real: Option<std::thread::JoinHandle<()>>,
+            sched: StdArc<Scheduler>,
+        },
+        Real(std::thread::JoinHandle<T>),
+    }
+
+    pub struct JoinHandle<T>(Imp<T>);
+
+    impl Builder {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Builder {
+            Builder { inner: std::thread::Builder::new() }
+        }
+
+        pub fn name(self, name: String) -> Builder {
+            Builder { inner: self.inner.name(name) }
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match ctx() {
+                Some((sched, me)) => {
+                    sched.sched_point(me);
+                    let tid = sched.register_thread();
+                    let slot: StdArc<StdMutex<Option<Result<T>>>> =
+                        StdArc::new(StdMutex::new(None));
+                    let slot2 = slot.clone();
+                    let sched2 = sched.clone();
+                    let real = self.inner.spawn(move || {
+                        set_ctx(Some((sched2.clone(), tid)));
+                        // Everything — including the park-for-token, which
+                        // panics on abort — stays inside catch_unwind so
+                        // `finish` always runs and the driver can reap us.
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            sched2.wait_for_start(tid);
+                            f()
+                        }));
+                        *slot2.lock().unwrap() = Some(r);
+                        set_ctx(None);
+                        sched2.finish(tid);
+                    })?;
+                    Ok(JoinHandle(Imp::Model { tid, slot, real: Some(real), sched }))
+                }
+                None => self.inner.spawn(f).map(|h| JoinHandle(Imp::Real(h))),
+            }
+        }
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> Result<T> {
+            match self.0 {
+                Imp::Model { tid, slot, real, sched } => {
+                    let (_, me) = ctx().expect("model JoinHandle joined outside the model run");
+                    sched.join_wait(me, tid);
+                    if let Some(r) = real {
+                        // Logically finished; the OS thread exits momentarily.
+                        let _ = r.join();
+                    }
+                    slot.lock().unwrap().take().expect("joined thread stored no result")
+                }
+                Imp::Real(h) => h.join(),
+            }
+        }
+
+        pub fn is_finished(&self) -> bool {
+            match &self.0 {
+                Imp::Model { real, .. } => {
+                    real.as_ref().map(|r| r.is_finished()).unwrap_or(true)
+                }
+                Imp::Real(h) => h.is_finished(),
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for JoinHandle<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("JoinHandle { .. }")
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    pub fn yield_now() {
+        if let Some((s, t)) = ctx() {
+            s.sched_point(t);
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn sleep(d: Duration) {
+        if let Some((s, t)) = ctx() {
+            let _ = d; // model time does not pass
+            s.sched_point(t);
+        } else {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests for the checker itself
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize as RawUsize, Ordering as RawOrdering};
+    use std::sync::Arc as StdArc;
+
+    /// Two communicating threads must yield more than one interleaving.
+    #[test]
+    fn loom_model_explores_multiple_interleavings() {
+        let execs = StdArc::new(RawUsize::new(0));
+        let execs2 = execs.clone();
+        model(move || {
+            execs2.fetch_add(1, RawOrdering::Relaxed);
+            let a = StdArc::new(atomic::AtomicU64::new(0));
+            let a2 = a.clone();
+            let h = thread::spawn(move || {
+                a2.store(1, atomic::Ordering::SeqCst);
+            });
+            // Load may see 0 or 1 depending on schedule.
+            let _ = a.load(atomic::Ordering::SeqCst);
+            h.join().unwrap();
+        });
+        assert!(
+            execs.load(RawOrdering::Relaxed) > 1,
+            "expected >1 explored interleavings, got {}",
+            execs.load(RawOrdering::Relaxed)
+        );
+    }
+
+    /// The classic lost-update: unsynchronized read-modify-write on an
+    /// atomic. The checker must find the schedule where an increment is
+    /// lost.
+    #[test]
+    fn loom_model_finds_lost_update() {
+        let r = std::panic::catch_unwind(|| {
+            model(|| {
+                let a = StdArc::new(atomic::AtomicU64::new(0));
+                let a2 = a.clone();
+                let h = thread::spawn(move || {
+                    let v = a2.load(atomic::Ordering::SeqCst);
+                    a2.store(v + 1, atomic::Ordering::SeqCst);
+                });
+                let v = a.load(atomic::Ordering::SeqCst);
+                a.store(v + 1, atomic::Ordering::SeqCst);
+                h.join().unwrap();
+                assert_eq!(a.load(atomic::Ordering::SeqCst), 2, "lost update");
+            });
+        });
+        assert!(r.is_err(), "model failed to find the lost-update interleaving");
+    }
+
+    /// ABBA lock ordering must be reported as a deadlock, not a hang.
+    #[test]
+    fn loom_model_detects_deadlock() {
+        let r = std::panic::catch_unwind(|| {
+            model(|| {
+                let a = StdArc::new(Mutex::new(0u32));
+                let b = StdArc::new(Mutex::new(0u32));
+                let (a2, b2) = (a.clone(), b.clone());
+                let h = thread::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    let _gb = b2.lock().unwrap();
+                });
+                {
+                    let _gb = b.lock().unwrap();
+                    let _ga = a.lock().unwrap();
+                }
+                h.join().unwrap();
+            });
+        });
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "<non-string panic>".into()),
+            Ok(()) => panic!("model failed to find the ABBA deadlock"),
+        };
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    /// Channel send/recv plus disconnect: every sent value is received
+    /// in every schedule, and disconnect is seen after drain.
+    #[test]
+    fn loom_model_channel_drains_before_disconnect() {
+        model(|| {
+            let (tx, rx) = mpsc::channel();
+            let h = thread::spawn(move || {
+                for i in 0..3u32 {
+                    tx.send(i).unwrap();
+                }
+            });
+            let mut got = Vec::new();
+            loop {
+                match rx.recv() {
+                    Ok(v) => got.push(v),
+                    Err(mpsc::RecvError) => break,
+                }
+            }
+            h.join().unwrap();
+            assert_eq!(got, vec![0, 1, 2]);
+        });
+    }
+
+    /// recv_timeout in the model: timeout is explored but bounded, so
+    /// this terminates and still always drains the queued value.
+    #[test]
+    fn loom_model_recv_timeout_is_bounded() {
+        model(|| {
+            let (tx, rx) = mpsc::channel();
+            let h = thread::spawn(move || {
+                tx.send(7u32).unwrap();
+            });
+            let mut got = None;
+            loop {
+                match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                    Ok(v) => got = Some(v),
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            h.join().unwrap();
+            assert_eq!(got, Some(7));
+        });
+    }
+}

@@ -31,10 +31,24 @@ fn cases_mul() -> u64 {
         .unwrap_or(1)
 }
 
-/// Run `prop` over `cases` random cases. Panics with the failing seed.
+/// Under Miri (CI runs the codec + MemWal property tests through it),
+/// each case costs ~100-1000x native: run a small deterministic slice
+/// of the case space instead of the full count. The interpreter checks
+/// UB per operation, so shrinking the case count loses random-input
+/// breadth (the native run keeps it) but not UB coverage.
+fn cases_cap() -> u64 {
+    if cfg!(miri) {
+        8
+    } else {
+        u64::MAX
+    }
+}
+
+/// Run `prop` over `cases` random cases (capped under Miri — see
+/// [`cases_cap`]). Panics with the failing seed.
 pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
     let base = base_seed();
-    for i in 0..cases * cases_mul() {
+    for i in 0..(cases * cases_mul()).min(cases_cap()) {
         let seed = base ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
         let result = catch_unwind(AssertUnwindSafe(|| {
             let mut rng = Rng::new(seed);

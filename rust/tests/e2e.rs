@@ -2,14 +2,14 @@
 //! runtime with the XLA commit backend, and the TCP transport cluster.
 #![cfg_attr(not(feature = "xla"), allow(unused_imports))]
 
-use std::sync::atomic::AtomicBool;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use wbam::client::{Client, ClientCfg};
 use wbam::coordinator::{spawn, spawn_sharded, Cluster, DeliverFn, NodeRuntime};
 use wbam::net::{InProcMesh, TcpTransport, Transport};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
+use wbam::sync::atomic::AtomicBool;
+use wbam::sync::{Arc, Mutex};
 use wbam::types::{MsgId, Pid, ShardMap, Topology, Ts};
 
 fn wait_for<F: Fn() -> bool>(pred: F, secs: u64, what: &str) {

@@ -1,0 +1,637 @@
+//! Repo-invariant lint gate: `cargo xtask lint`.
+//!
+//! Five plain source-scanning rules (no parser, no dependencies — the
+//! offline build image cannot fetch crates), each encoding an invariant
+//! the compiler cannot check and CI must not regress. See
+//! ARCHITECTURE.md §Correctness tooling.
+//!
+//! 1. **safety-comments** — every `unsafe` token in `rust/src/net/`
+//!    must carry a `// SAFETY:` comment on the same line or on the
+//!    comment/attribute block immediately above it. (Clippy's
+//!    `undocumented_unsafe_blocks` covers unsafe *blocks*; this rule
+//!    also covers `unsafe impl`/`unsafe fn` and runs without a
+//!    toolchain-version dependency.)
+//! 2. **sync-facade** — modules migrated onto the `crate::sync` facade
+//!    (`coordinator/mod.rs`, `net/mod.rs`, `storage/mod.rs`,
+//!    `protocols/outbox.rs`) must not name `std::sync::` /
+//!    `std::thread` directly outside `#[cfg(test)]` blocks, or the
+//!    loom model (`--cfg loom`) silently loses coverage of that code.
+//!    `net/epoll.rs` and `net/uring.rs` are exempt by design: their
+//!    atomics live in kernel-shared mmap'd memory and must stay real.
+//! 3. **codec-tags** — wire/record tag bytes in the decode matches
+//!    (`get_wire`, `get_paxos`, `get_cmd`, `get_phase` in
+//!    `codec/mod.rs`; `get_record` in `storage/mod.rs`) must be unique
+//!    per function. A duplicated tag silently shadows a variant.
+//! 4. **payload-alloc** — protocol hot-path code must not materialise
+//!    payload bytes or allocate per-event vectors (`.to_vec()`,
+//!    `.to_owned()`, `Vec::new()`, `payload.clone()`). Audited cold
+//!    sites carry an `// alloc-ok: <reason>` marker on the same or the
+//!    preceding line.
+//! 5. **unordered-iter** — identifiers declared as
+//!    `HashMap`/`FxHashMap` in a protocol-core file must not be
+//!    iterated (`.iter()`, `.values()`, `.keys()`, `.drain()`, …):
+//!    hash-iteration order is nondeterministic, and in the protocol
+//!    core it tends to reach the wire or the delivery order. Audited
+//!    order-insensitive sites (min/max folds, collects into maps)
+//!    carry an `// unordered-ok: <reason>` marker.
+//!
+//! Exit status 1 with one line per violation; 0 on a clean tree.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug, PartialEq)]
+struct Violation {
+    file: String,
+    line: usize, // 1-based
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        None | Some("lint") => lint(),
+        Some(other) => {
+            eprintln!("unknown xtask command {other:?} (commands: lint)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// xtask lives at `<repo>/rust/xtask`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().parent().unwrap().to_path_buf()
+}
+
+fn lint() -> ExitCode {
+    let root = repo_root();
+    let read = |rel: &str| -> String {
+        std::fs::read_to_string(root.join(rel)).unwrap_or_else(|e| panic!("read {rel}: {e}"))
+    };
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut files = 0usize;
+
+    // 1. safety-comments over everything under rust/src/net/
+    for rel in rs_files_under(&root, "rust/src/net") {
+        files += 1;
+        violations.extend(lint_safety_comments(&rel, &read(&rel)));
+    }
+
+    // 2. sync-facade over the migrated modules (epoll/uring exempt)
+    for rel in FACADE_FILES {
+        files += 1;
+        violations.extend(lint_sync_facade(rel, &read(rel)));
+    }
+
+    // 3. codec-tags
+    files += 2;
+    violations.extend(lint_codec_tags(
+        "rust/src/codec/mod.rs",
+        &read("rust/src/codec/mod.rs"),
+        &["get_wire", "get_paxos", "get_cmd", "get_phase"],
+    ));
+    violations.extend(lint_codec_tags(
+        "rust/src/storage/mod.rs",
+        &read("rust/src/storage/mod.rs"),
+        &["get_record"],
+    ));
+
+    // 4 + 5. payload-alloc and unordered-iter over the protocol core
+    for rel in rs_files_under(&root, "rust/src/protocols") {
+        if rel.ends_with("tests.rs") {
+            continue; // test-only file: allocation and order freedom
+        }
+        files += 1;
+        let src = read(&rel);
+        violations.extend(lint_payload_alloc(&rel, &src));
+        violations.extend(lint_unordered_iter(&rel, &src));
+    }
+
+    if violations.is_empty() {
+        println!("xtask lint: {files} files checked, 0 violations");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        }
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Modules under the sync-facade rule. `net/epoll.rs` / `net/uring.rs`
+/// are deliberately absent (kernel-shared atomics must stay `std`).
+const FACADE_FILES: &[&str] = &[
+    "rust/src/coordinator/mod.rs",
+    "rust/src/net/mod.rs",
+    "rust/src/storage/mod.rs",
+    "rust/src/protocols/outbox.rs",
+];
+
+/// All `.rs` files under `root/rel`, as repo-relative `/`-separated
+/// paths, sorted for deterministic output.
+fn rs_files_under(root: &Path, rel: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join(rel)];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir).unwrap_or_else(|e| panic!("read_dir {dir:?}: {e}"));
+        for entry in entries {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path.strip_prefix(root).expect("under root");
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+// ---------------------------------------------------------------------
+// line helpers
+// ---------------------------------------------------------------------
+
+/// The code portion of a line: everything before a `//` comment. Naive
+/// about `//` inside string literals, which this codebase avoids on the
+/// lines these rules look at.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Index of the first line opening a `#[cfg(test)]` /
+/// `#[cfg(all(test, ...))]` region. Test modules sit at the bottom of
+/// their files in this repo, so everything from here to EOF is skipped
+/// by the rules that exempt test code.
+fn test_mod_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| {
+            let t = l.trim_start();
+            t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")
+        })
+        .unwrap_or(lines.len())
+}
+
+/// Does `hay` contain `word` delimited by non-identifier characters?
+fn has_word(hay: &str, word: &str) -> bool {
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(word) {
+        let start = from + i;
+        let end = start + word.len();
+        let pre_ok = start == 0 || !hay[..start].chars().next_back().is_some_and(is_ident);
+        let post_ok = end == hay.len() || !hay[end..].chars().next().is_some_and(is_ident);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// The identifier ending right before byte offset `end` (exclusive).
+fn ident_before(line: &str, end: usize) -> &str {
+    let bytes = line.as_bytes();
+    let mut start = end;
+    while start > 0 && (bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_') {
+        start -= 1;
+    }
+    &line[start..end]
+}
+
+/// Marker (e.g. `alloc-ok`, `unordered-ok`) on this line or the one above.
+fn has_marker(lines: &[&str], idx: usize, marker: &str) -> bool {
+    lines[idx].contains(marker) || (idx > 0 && lines[idx - 1].contains(marker))
+}
+
+// ---------------------------------------------------------------------
+// rule 1: safety-comments
+// ---------------------------------------------------------------------
+
+fn lint_safety_comments(file: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if !has_word(code_part(line), "unsafe") {
+            continue;
+        }
+        if line.contains("SAFETY:") {
+            continue;
+        }
+        // walk the contiguous comment/attribute block directly above
+        let mut documented = false;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let t = lines[j].trim_start();
+            if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") {
+                if t.contains("SAFETY:") {
+                    documented = true;
+                    break;
+                }
+            } else {
+                break;
+            }
+        }
+        if !documented {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                rule: "safety-comments",
+                msg: "`unsafe` without a `// SAFETY:` comment on or above it".to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 2: sync-facade
+// ---------------------------------------------------------------------
+
+fn lint_sync_facade(file: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let limit = test_mod_start(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate().take(limit) {
+        let code = code_part(line);
+        if code.contains("std::sync::") || code.contains("std::thread") {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                rule: "sync-facade",
+                msg: "direct std::sync/std::thread use in a facade-migrated module \
+                      (import from crate::sync so `--cfg loom` models it)"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 3: codec-tags
+// ---------------------------------------------------------------------
+
+fn lint_codec_tags(file: &str, src: &str, fns: &[&str]) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for name in fns {
+        let needle = format!("fn {name}(");
+        let Some(start) = lines.iter().position(|l| code_part(l).contains(&needle)) else {
+            out.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: "codec-tags",
+                msg: format!("decoder fn `{name}` not found (renamed? update xtask)"),
+            });
+            continue;
+        };
+        // brace-matched body of the fn
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut tags: Vec<(u64, usize)> = Vec::new();
+        for (i, line) in lines.iter().enumerate().skip(start) {
+            let code = code_part(line);
+            // `N => ...` match arms with an integer literal pattern
+            let t = code.trim_start();
+            let digits: String = t.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() && t[digits.len()..].trim_start().starts_with("=>") {
+                tags.push((digits.parse().unwrap(), i + 1));
+            }
+            for c in code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+        }
+        if tags.is_empty() {
+            out.push(Violation {
+                file: file.to_string(),
+                line: start + 1,
+                rule: "codec-tags",
+                msg: format!("decoder fn `{name}` has no integer tag arms (rule gone stale?)"),
+            });
+        }
+        let mut seen: Vec<u64> = Vec::new();
+        for (tag, line) in tags {
+            if seen.contains(&tag) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line,
+                    rule: "codec-tags",
+                    msg: format!("duplicate wire tag {tag} in `{name}` shadows an earlier arm"),
+                });
+            } else {
+                seen.push(tag);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 4: payload-alloc
+// ---------------------------------------------------------------------
+
+const ALLOC_PATTERNS: &[&str] = &[".to_vec()", ".to_owned()", "Vec::new()", "payload.clone()"];
+
+fn lint_payload_alloc(file: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let limit = test_mod_start(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate().take(limit) {
+        let code = code_part(line);
+        for pat in ALLOC_PATTERNS {
+            if code.contains(pat) && !has_marker(&lines, i, "alloc-ok") {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "payload-alloc",
+                    msg: format!(
+                        "`{pat}` in protocol hot-path code (mark audited cold sites \
+                         with `// alloc-ok: <reason>`)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 5: unordered-iter
+// ---------------------------------------------------------------------
+
+const ITER_METHODS: &[&str] =
+    &[".iter()", ".iter_mut()", ".values()", ".values_mut()", ".keys()", ".drain(", ".into_iter()"];
+
+/// Identifiers declared in this file with a `HashMap`/`FxHashMap` type
+/// annotation or initialiser.
+fn hash_map_idents(lines: &[&str], limit: usize) -> Vec<String> {
+    let mut idents = Vec::new();
+    for line in lines.iter().take(limit) {
+        let code = code_part(line);
+        // `ident: [pfx::]HashMap<...>` / `ident: [pfx::]FxHashMap<...>`
+        let mut from = 0;
+        while let Some(rel) = code[from..].find("HashMap<") {
+            let at = from + rel;
+            from = at + "HashMap<".len();
+            // full type token (may be FxHashMap / crate::util::FxHashMap)
+            let mut ty_start = at;
+            let bytes = code.as_bytes();
+            while ty_start > 0
+                && (bytes[ty_start - 1].is_ascii_alphanumeric()
+                    || bytes[ty_start - 1] == b'_'
+                    || bytes[ty_start - 1] == b':')
+            {
+                ty_start -= 1;
+            }
+            let before = code[..ty_start].trim_end();
+            if let Some(stripped) = before.strip_suffix(':') {
+                let ident = ident_before(stripped, stripped.len());
+                if !ident.is_empty() {
+                    idents.push(ident.to_string());
+                }
+            }
+        }
+        // `ident = HashMap::new()` / `= FxHashMap::default()`
+        for init in ["HashMap::new()", "HashMap::default()", "FxHashMap::default()"] {
+            if let Some(at) = code.find(init) {
+                let before = code[..at].trim_end();
+                let before = before.strip_suffix("crate::util::").unwrap_or(before).trim_end();
+                if let Some(stripped) = before.strip_suffix('=') {
+                    let stripped = stripped.trim_end();
+                    let ident = ident_before(stripped, stripped.len());
+                    if !ident.is_empty() && ident != "mut" {
+                        idents.push(ident.to_string());
+                    }
+                }
+            }
+        }
+    }
+    idents.sort();
+    idents.dedup();
+    idents
+}
+
+fn lint_unordered_iter(file: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let limit = test_mod_start(&lines);
+    let tracked = hash_map_idents(&lines, limit);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate().take(limit) {
+        let code = code_part(line);
+        for m in ITER_METHODS {
+            let mut from = 0;
+            while let Some(rel) = code[from..].find(m) {
+                let at = from + rel;
+                from = at + m.len();
+                let ident = ident_before(code, at);
+                if tracked.iter().any(|t| t == ident) && !has_marker(&lines, i, "unordered-ok") {
+                    out.push(Violation {
+                        file: file.to_string(),
+                        line: i + 1,
+                        rule: "unordered-iter",
+                        msg: format!(
+                            "hash-order iteration `{ident}{m}..` in the protocol core \
+                             (sort first, use BTreeMap, or mark the audited site with \
+                             `// unordered-ok: <reason>`)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// tests: every rule must fire on a minimal fixture violation and stay
+// quiet on the corresponding clean fixture
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // --- rule 1 ---
+
+    #[test]
+    fn safety_fires_on_undocumented_unsafe() {
+        let src = "fn f() {\n    let p = unsafe { libc::epoll_create1(0) };\n}\n";
+        let vs = lint_safety_comments("net/x.rs", src);
+        assert_eq!(rules_of(&vs), ["safety-comments"]);
+        assert_eq!(vs[0].line, 2);
+    }
+
+    #[test]
+    fn safety_accepts_comment_above_or_inline() {
+        let above = "// SAFETY: fd is owned\nlet p = unsafe { close(fd) };\n";
+        assert!(lint_safety_comments("f", above).is_empty());
+        let inline = "let p = unsafe { close(fd) }; // SAFETY: fd is owned\n";
+        assert!(lint_safety_comments("f", inline).is_empty());
+        // attribute between comment and item is allowed
+        let attr = "// SAFETY: alloc contract upheld\n#[global_allocator]\nunsafe impl A for B {}\n";
+        assert!(lint_safety_comments("f", attr).is_empty());
+    }
+
+    #[test]
+    fn safety_ignores_unsafe_in_comments_and_words() {
+        let src = "// this fn is unsafe to call twice\nlet unsafety = 1;\n";
+        assert!(lint_safety_comments("f", src).is_empty());
+    }
+
+    // --- rule 2 ---
+
+    #[test]
+    fn facade_fires_on_direct_std_sync() {
+        let src = "use std::sync::Mutex;\nfn f() { std::thread::spawn(|| {}); }\n";
+        let vs = lint_sync_facade("coordinator/mod.rs", src);
+        assert_eq!(rules_of(&vs), ["sync-facade", "sync-facade"]);
+    }
+
+    #[test]
+    fn facade_skips_test_modules_and_comments() {
+        let src = "use crate::sync::{Arc, Mutex};\n\
+                   // std::thread::sleep is fine to *mention*\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    use std::sync::atomic::AtomicU16;\n}\n";
+        assert!(lint_sync_facade("f", src).is_empty());
+        let loom = "#[cfg(all(test, loom))]\nmod loom_tests {\n    use std::sync::atomic::AtomicU64;\n}\n";
+        assert!(lint_sync_facade("f", loom).is_empty());
+    }
+
+    // --- rule 3 ---
+
+    #[test]
+    fn codec_tags_fire_on_duplicate() {
+        let src = "fn get_wire(d: &mut Dec) -> Result<Wire> {\n\
+                       Ok(match d.u8()? {\n\
+                           0 => Wire::A,\n\
+                           1 => Wire::B,\n\
+                           1 => Wire::C,\n\
+                           _ => return Err(e),\n\
+                       })\n\
+                   }\n";
+        let vs = lint_codec_tags("codec/mod.rs", src, &["get_wire"]);
+        assert_eq!(rules_of(&vs), ["codec-tags"]);
+        assert_eq!(vs[0].line, 5);
+    }
+
+    #[test]
+    fn codec_tags_accept_unique_and_flag_missing_fn() {
+        let src = "fn get_wire(d: &mut Dec) -> Result<Wire> {\n\
+                       Ok(match d.u8()? {\n        0 => Wire::A,\n        1 => Wire::B,\n\
+                           _ => return Err(e),\n    })\n}\n";
+        assert!(lint_codec_tags("f", src, &["get_wire"]).is_empty());
+        // a renamed decoder must fail loudly, not silently pass
+        assert_eq!(rules_of(&lint_codec_tags("f", src, &["get_gone"])), ["codec-tags"]);
+    }
+
+    // --- rule 4 ---
+
+    #[test]
+    fn payload_alloc_fires_without_marker() {
+        let src = "fn handle(&mut self) {\n    let copy = wire.payload.to_vec();\n}\n";
+        let vs = lint_payload_alloc("protocols/x.rs", src);
+        assert_eq!(rules_of(&vs), ["payload-alloc"]);
+    }
+
+    #[test]
+    fn payload_alloc_respects_marker_and_tests() {
+        let marked = "let buf = Vec::new(); // alloc-ok: constructor\n";
+        assert!(lint_payload_alloc("f", marked).is_empty());
+        let above = "// alloc-ok: split slow path\nlet chunk: Vec<Wire> = Vec::new();\n";
+        assert!(lint_payload_alloc("f", above).is_empty());
+        let test_mod = "#[cfg(test)]\nmod tests {\n    fn f() { let v = x.to_vec(); }\n}\n";
+        assert!(lint_payload_alloc("f", test_mod).is_empty());
+    }
+
+    // --- rule 5 ---
+
+    #[test]
+    fn unordered_iter_fires_on_hashmap_iteration() {
+        let src = "struct S { entries: HashMap<MsgId, Entry> }\n\
+                   impl S {\n\
+                       fn f(&self) { for e in self.entries.values() { use_(e); } }\n\
+                   }\n";
+        let vs = lint_unordered_iter("protocols/x.rs", src);
+        assert_eq!(rules_of(&vs), ["unordered-iter"]);
+        assert_eq!(vs[0].line, 3);
+    }
+
+    #[test]
+    fn unordered_iter_tracks_fx_maps_and_initialisers() {
+        let fx = "struct S { counts: FxHashMap<K, u32> }\nfn f(s: &S) { s.counts.keys(); }\n";
+        assert_eq!(rules_of(&lint_unordered_iter("f", fx)), ["unordered-iter"]);
+        let init = "let mut proposals = HashMap::new();\nfor p in proposals.drain() {}\n";
+        assert_eq!(rules_of(&lint_unordered_iter("f", init)), ["unordered-iter"]);
+    }
+
+    #[test]
+    fn unordered_iter_allows_btree_markers_and_other_idents() {
+        let btree = "let merged: BTreeMap<MsgId, MsgState> = BTreeMap::new();\nmerged.values();\n";
+        assert!(lint_unordered_iter("f", btree).is_empty());
+        let marked = "struct S { m: HashMap<A, B> }\n\
+                      fn f(s: &S) { s.m.values().max(); } // unordered-ok: max() fold\n";
+        assert!(lint_unordered_iter("f", marked).is_empty());
+        let other = "struct S { m: HashMap<A, B> }\nfn f(v: &[u8]) { v.iter(); }\n";
+        assert!(lint_unordered_iter("f", other).is_empty());
+    }
+
+    // --- the gate passes on the real tree (the binary's own acceptance) ---
+
+    #[test]
+    fn clean_tree_has_no_violations() {
+        let root = repo_root();
+        assert!(root.join("rust/src/lib.rs").exists(), "repo root misdetected: {root:?}");
+        // run the same scans main() runs, collecting everything
+        let read = |rel: &str| std::fs::read_to_string(root.join(rel)).unwrap();
+        let mut vs = Vec::new();
+        for rel in rs_files_under(&root, "rust/src/net") {
+            vs.extend(lint_safety_comments(&rel, &read(&rel)));
+        }
+        for rel in FACADE_FILES {
+            vs.extend(lint_sync_facade(rel, &read(rel)));
+        }
+        vs.extend(lint_codec_tags(
+            "rust/src/codec/mod.rs",
+            &read("rust/src/codec/mod.rs"),
+            &["get_wire", "get_paxos", "get_cmd", "get_phase"],
+        ));
+        vs.extend(lint_codec_tags(
+            "rust/src/storage/mod.rs",
+            &read("rust/src/storage/mod.rs"),
+            &["get_record"],
+        ));
+        for rel in rs_files_under(&root, "rust/src/protocols") {
+            if rel.ends_with("tests.rs") {
+                continue;
+            }
+            let src = read(&rel);
+            vs.extend(lint_payload_alloc(&rel, &src));
+            vs.extend(lint_unordered_iter(&rel, &src));
+        }
+        assert!(vs.is_empty(), "clean-tree violations: {vs:#?}");
+    }
+}
