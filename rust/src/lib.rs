@@ -96,6 +96,13 @@
 //!   (`cargo xtask lint`) keeps migrated modules on the facade; see
 //!   ARCHITECTURE.md §Correctness tooling.
 
+// Library code reports through `log` / returned stats, never the process
+// streams (which belong to the binaries). The two audited exceptions
+// carry `#[allow]`s at the site: `WbNode::debug_dump` (a diagnostic
+// printer by contract) and the simulator's opt-in WBAM_SIM_LOG trace.
+// CI's `-D warnings` promotes these to errors.
+#![cfg_attr(not(test), warn(clippy::print_stdout, clippy::print_stderr))]
+
 pub mod client;
 pub mod codec;
 pub mod config;

@@ -378,6 +378,8 @@ impl InProcMesh {
     fn deliver(&self, from: Pid, to: Pid, wire: Wire) {
         let guard = self.inner.lock().unwrap();
         let delivered = match guard.get(&to) {
+            // lock-ok: mpsc Sender::send, not InProcSender::send — the
+            // channel never re-enters the mesh, so `inner` is not re-taken
             Some(tx) => tx.send((from, to, wire)).is_ok(),
             None => false,
         };

@@ -88,6 +88,9 @@ impl Paxos {
                 }
                 self.bal = bal;
                 self.accepted.insert(slot, (bal, cmd));
+                // durability-ok: the black-box baselines are deliberately
+                // in-memory (crash-stop, no restart path) — this P2b vote is
+                // never journaled, unlike wbcast's woven AcceptAck promise
                 out.send(from, Wire::Paxos { g: self.gid, msg: PaxosMsg::P2b { bal, slot } });
             }
             PaxosMsg::P2b { bal, slot } => {

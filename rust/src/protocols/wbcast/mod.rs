@@ -310,6 +310,9 @@ impl WbNode {
     }
 
     /// Diagnostic dump (probe binaries / debugging).
+    // printing is this function's contract; everything else in the
+    // library reports through `log` or returned stats
+    #[allow(clippy::print_stdout)]
     pub fn debug_dump(&self, tag: &str) {
         println!(
             "{tag}: status={:?} cballot={:?} clock={} entries={} pending={} committed={} ready={} max_dgts={:?}",

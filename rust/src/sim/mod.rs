@@ -497,7 +497,11 @@ impl World {
             EventKind::Arrival { from, wire } => {
                 let bytes = wire.size() as u64;
                 if self.log_events {
-                    eprintln!("[{:>12}] {:?} -> {:?}: {:?}", time, from, to, wire);
+                    // opt-in trace (WBAM_SIM_LOG), deliberately on stderr
+                    #[allow(clippy::print_stderr)]
+                    {
+                        eprintln!("[{:>12}] {:?} -> {:?}: {:?}", time, from, to, wire);
+                    }
                 }
                 let mut extra = 0;
                 match wire {

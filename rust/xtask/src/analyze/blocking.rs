@@ -1,0 +1,200 @@
+//! Blocking calls reachable from event-loop poll paths.
+//!
+//! The epoll/io_uring event loops and the coordinator's `InlineLoop`
+//! dispatch must never block: an fsync on the poll thread stalls every
+//! connection. Durability I/O is allowed only behind the designated
+//! commit points (`append_records` / `commit_records` / `commit`),
+//! which batch and amortize their syncs by design — the reachability
+//! walk stops at those names.
+//!
+//! The walk is a DFS over the name-based call graph from each
+//! configured entry function, preferring same-file candidates when a
+//! name is ambiguous, and reports every `sync_all`/`sync_data`/
+//! `fsync_dir`/`sleep` call site it can reach together with the call
+//! chain that reaches it. `// blocking-ok: <reason>` on the site (or on
+//! a call line, to prune that edge) suppresses.
+
+use crate::lexer::Kind;
+use crate::parser::{calls_in, FnInfo, ParsedFile};
+use crate::Violation;
+use std::collections::BTreeMap;
+
+const BLOCKING: &[&str] = &["sync_all", "sync_data", "fsync_dir", "sleep"];
+const DESIGNATED: &[&str] = &["append_records", "commit_records", "commit"];
+
+type FnKey = (usize, usize);
+
+/// `(name, line)` of unannotated blocking call sites in the body.
+fn direct_blocking(f: &ParsedFile, func: &FnInfo) -> Vec<(String, usize)> {
+    let toks = &f.toks;
+    let mut out = Vec::new();
+    for i in func.body.0..func.body.1.min(toks.len()) {
+        let t = &toks[i];
+        if t.kind == Kind::Ident
+            && BLOCKING.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "("
+        {
+            if f.has_marker(t.line, "blocking-ok") {
+                continue;
+            }
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    out
+}
+
+/// Run the blocking-in-loop analysis. `entries` is a list of
+/// `(path suffix, qualified fn name)` event-loop entry points.
+pub fn check(files: &[ParsedFile], entries: &[(&str, &str)]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut by_name: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (fni, func) in f.fns.iter().enumerate() {
+            if func.in_test {
+                continue;
+            }
+            by_name.entry(func.name.clone()).or_default().push((fi, fni));
+        }
+    }
+
+    let resolve = |caller_fi: usize, name: &str| -> Vec<FnKey> {
+        if DESIGNATED.contains(&name) {
+            return Vec::new();
+        }
+        let Some(cands) = by_name.get(name) else { return Vec::new() };
+        let same: Vec<FnKey> = cands.iter().copied().filter(|c| c.0 == caller_fi).collect();
+        if same.is_empty() {
+            cands.clone()
+        } else {
+            same
+        }
+    };
+
+    for (suffix, qname) in entries {
+        let mut entry: Option<FnKey> = None;
+        for (fi, f) in files.iter().enumerate() {
+            if !f.path.ends_with(suffix) {
+                continue;
+            }
+            for (fni, func) in f.fns.iter().enumerate() {
+                if !func.in_test && func.qname == *qname {
+                    entry = Some((fi, fni));
+                }
+            }
+        }
+        let Some(entry) = entry else {
+            out.push(Violation {
+                file: suffix.to_string(),
+                line: 1,
+                rule: "blocking-in-loop",
+                msg: format!("entry fn `{qname}` not found (renamed? update xtask)"),
+            });
+            continue;
+        };
+        let mut stack: Vec<(FnKey, Vec<String>)> = vec![(entry, vec![qname.to_string()])];
+        let mut visited: Vec<FnKey> = vec![entry];
+        while let Some(((fi, fni), chain)) = stack.pop() {
+            let f = &files[fi];
+            let func = &f.fns[fni];
+            for (name, line) in direct_blocking(f, func) {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line,
+                    rule: "blocking-in-loop",
+                    msg: format!(
+                        "blocking `{name}()` reachable from event loop: {}",
+                        chain.join(" -> ")
+                    ),
+                });
+            }
+            for (cname, ci) in calls_in(&f.toks, func.body) {
+                if f.has_marker(f.toks[ci].line, "blocking-ok") {
+                    continue;
+                }
+                for key in resolve(fi, &cname) {
+                    if !visited.contains(&key) {
+                        visited.push(key);
+                        let mut c2 = chain.clone();
+                        c2.push(files[key.0].fns[key.1].qname.clone());
+                        stack.push((key, c2));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(path: &str, src: &str) -> ParsedFile {
+        ParsedFile::parse(path, src)
+    }
+
+    #[test]
+    fn fsync_reachable_from_run_fires_with_chain() {
+        let src = "
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            self.on_readable();
+        }
+    }
+    fn on_readable(&mut self) {
+        self.file.sync_data().unwrap();
+    }
+}
+";
+        let vs =
+            check(&[pf("net/epoll.rs", src)], &[("net/epoll.rs", "EventLoop::run")]);
+        assert_eq!(vs.len(), 1, "{vs:#?}");
+        assert_eq!(vs[0].rule, "blocking-in-loop");
+        assert!(
+            vs[0].msg.contains("EventLoop::run -> EventLoop::on_readable"),
+            "chain missing: {}",
+            vs[0].msg
+        );
+    }
+
+    #[test]
+    fn designated_commit_point_stops_the_walk() {
+        let src = "
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            commit_records(&mut self.storage);
+        }
+    }
+}
+fn commit_records(s: &mut Storage) {
+    s.file.sync_data().unwrap();
+}
+";
+        assert!(check(&[pf("net/epoll.rs", src)], &[("net/epoll.rs", "EventLoop::run")])
+            .is_empty());
+    }
+
+    #[test]
+    fn missing_entry_is_loud_not_silent() {
+        let vs = check(&[pf("net/epoll.rs", "fn other() {}")], &[("net/epoll.rs", "EventLoop::run")]);
+        assert_eq!(vs.len(), 1);
+        assert!(vs[0].msg.contains("not found"));
+    }
+
+    #[test]
+    fn blocking_ok_marker_suppresses_site() {
+        let src = "
+impl EventLoop {
+    fn run(mut self) {
+        // blocking-ok: startup only, before the loop is entered
+        std::thread::sleep(d);
+    }
+}
+";
+        assert!(check(&[pf("net/epoll.rs", src)], &[("net/epoll.rs", "EventLoop::run")])
+            .is_empty());
+    }
+}

@@ -1,0 +1,327 @@
+//! Journal-before-ack dataflow (§"the ACCEPT_ACK is a promise").
+//!
+//! In the white-box protocol an ACCEPT_ACK doubles as a Paxos phase-2b
+//! promise, NEWLEADER_ACK as a phase-1b promise, and NEWSTATE_ACK as
+//! adopting a new epoch — all three bind the sender across a
+//! crash-recover, so the corresponding journal record must hit the
+//! outbox's record stage *before* the send on every path:
+//!
+//! | reply               | required record   |
+//! |---------------------|-------------------|
+//! | `Wire::AcceptAck`   | `Record::State`   |
+//! | `Wire::NewLeaderAck`| `Record::Promote` |
+//! | `Wire::NewStateAck` | `Record::Adopt`   |
+//!
+//! Black-box Paxos promises (`PaxosMsg::P1b`/`P2b`) require *some*
+//! record on the path (the baselines journal nothing by design and
+//! carry a `// durability-ok:` annotation instead).
+//!
+//! The check is a linear scan of each function body in token order,
+//! accumulating record kinds seen so far — both direct `out.record(..)`
+//! calls and calls into functions that (transitively) record, resolved
+//! through a name-based call-graph fixpoint. `let`-bound acks
+//! (`let ack = Wire::AcceptAck {..}; out.send(to, ack)`) are tracked
+//! through the binding.
+
+use super::{close_over_calls, is_method, matching_paren, FnKey, SENDS};
+use crate::lexer::{Kind, Tok};
+use crate::parser::{calls_in, path_variants, FnInfo, ParsedFile};
+use crate::Violation;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Promise-carrying acks and the record kind each requires.
+const ACK_RECORD: &[(&str, &str)] =
+    &[("AcceptAck", "State"), ("NewLeaderAck", "Promote"), ("NewStateAck", "Adopt")];
+
+/// Black-box Paxos promise replies: require *any* record on the path.
+const PAXOS_PROMISES: &[&str] = &["P1b", "P2b"];
+
+fn ack_record(variant: &str) -> Option<&'static str> {
+    ACK_RECORD.iter().find(|(v, _)| *v == variant).map(|(_, r)| *r)
+}
+
+/// `toks[i]` is a `record` ident with `(` next: `Record::K` kinds in
+/// the argument list.
+fn record_kinds_at(toks: &[Tok], i: usize) -> Vec<String> {
+    let close = matching_paren(toks, i + 1);
+    path_variants(toks, (i + 1, close), "Record").into_iter().map(|(k, _)| k).collect()
+}
+
+/// Per-function-name union of record kinds each function transitively
+/// emits (through the call graph).
+fn record_closure(files: &[ParsedFile]) -> BTreeMap<String, BTreeSet<String>> {
+    let mut direct: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut callees: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (fni, func) in f.fns.iter().enumerate() {
+            let key = (fi, fni);
+            let mut kinds = BTreeSet::new();
+            for i in func.body.0..func.body.1.min(f.toks.len()) {
+                let t = &f.toks[i];
+                if t.kind == Kind::Ident
+                    && t.text == "record"
+                    && i + 1 < f.toks.len()
+                    && f.toks[i + 1].text == "("
+                    && is_method(&f.toks, i)
+                {
+                    kinds.extend(record_kinds_at(&f.toks, i));
+                }
+            }
+            direct.insert(key, kinds);
+            callees.insert(key, calls_in(&f.toks, func.body).into_iter().map(|(n, _)| n).collect());
+            by_name.entry(func.name.clone()).or_default().push(key);
+        }
+    }
+    let emits = close_over_calls(direct, &callees, &by_name);
+    let mut name_emits: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for ((fi, fni), kinds) in &emits {
+        let nm = &files[*fi].fns[*fni].name;
+        name_emits.entry(nm.clone()).or_default().extend(kinds.iter().cloned());
+    }
+    name_emits
+}
+
+/// Idents `let`-bound to an ack-bearing `Wire::` construction in this
+/// function body: `name -> variant`.
+fn wire_let_bindings(f: &ParsedFile, func: &FnInfo) -> BTreeMap<String, String> {
+    let mut bound = BTreeMap::new();
+    let toks = &f.toks;
+    let (start, end) = func.body;
+    let end = end.min(toks.len());
+    let mut i = start;
+    while i < end {
+        if toks[i].kind == Kind::Ident && toks[i].text == "let" {
+            // let [mut] name = ... ;
+            let mut j = i + 1;
+            if j < end && toks[j].text == "mut" {
+                j += 1;
+            }
+            if j < end && toks[j].kind == Kind::Ident && j + 1 < end && toks[j + 1].text == "=" {
+                let name = toks[j].text.clone();
+                let mut k = j + 2;
+                let mut d = 0i64;
+                while k < end {
+                    let t = toks[k].text.as_str();
+                    if t == "(" || t == "[" || t == "{" {
+                        d += 1;
+                    } else if t == ")" || t == "]" || t == "}" {
+                        d -= 1;
+                    } else if t == ";" && d == 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                for (v, _) in path_variants(toks, (j + 2, k), "Wire") {
+                    if ack_record(&v).is_some() {
+                        bound.insert(name.clone(), v);
+                    }
+                }
+                i = k;
+            }
+        }
+        i += 1;
+    }
+    bound
+}
+
+/// Run the journal-before-ack analysis over a file set.
+pub fn check(files: &[ParsedFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let name_emits = record_closure(files);
+    for f in files {
+        if f.path.ends_with("tests.rs") {
+            continue;
+        }
+        for func in &f.fns {
+            if func.in_test {
+                continue;
+            }
+            let bound = wire_let_bindings(f, func);
+            let mut seen: BTreeSet<String> = BTreeSet::new();
+            let toks = &f.toks;
+            for i in func.body.0..func.body.1.min(toks.len()) {
+                let t = &toks[i];
+                if t.kind != Kind::Ident || i + 1 >= toks.len() || toks[i + 1].text != "(" {
+                    continue;
+                }
+                if t.text == "record" && is_method(toks, i) {
+                    seen.extend(record_kinds_at(toks, i));
+                    seen.insert("*any*".to_string());
+                    continue;
+                }
+                if SENDS.contains(&t.text.as_str()) && is_method(toks, i) {
+                    let close = matching_paren(toks, i + 1);
+                    let mut sent: Vec<String> = path_variants(toks, (i + 1, close), "Wire")
+                        .into_iter()
+                        .map(|(v, _)| v)
+                        .collect();
+                    for k in (i + 2)..close {
+                        if toks[k].kind == Kind::Ident {
+                            if let Some(v) = bound.get(&toks[k].text) {
+                                sent.push(v.clone());
+                            }
+                        }
+                    }
+                    for v in &sent {
+                        let Some(need) = ack_record(v) else { continue };
+                        if seen.contains(need) {
+                            continue;
+                        }
+                        if f.has_marker(t.line, "durability-ok") {
+                            continue;
+                        }
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "journal-before-ack",
+                            msg: format!(
+                                "Wire::{v} sent in `{}` without a preceding \
+                                 out.record(Record::{need}) on this path",
+                                func.qname
+                            ),
+                        });
+                    }
+                    for (p, _) in path_variants(toks, (i + 1, close), "PaxosMsg") {
+                        if !PAXOS_PROMISES.contains(&p.as_str()) {
+                            continue;
+                        }
+                        if !seen.is_empty() {
+                            continue;
+                        }
+                        if f.has_marker(t.line, "durability-ok") {
+                            continue;
+                        }
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "journal-before-ack",
+                            msg: format!(
+                                "PaxosMsg::{p} promise reply sent in `{}` with no \
+                                 journaling on this path",
+                                func.qname
+                            ),
+                        });
+                    }
+                    continue;
+                }
+                // a call into a fn that (transitively) records
+                if let Some(ks) = name_emits.get(&t.text) {
+                    if !ks.is_empty() {
+                        seen.extend(ks.iter().cloned());
+                        seen.insert("*any*".to_string());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(path: &str, src: &str) -> ParsedFile {
+        ParsedFile::parse(path, src)
+    }
+
+    fn rules(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    const CLEAN: &str = "
+impl Node {
+    fn journal_state(&mut self, out: &mut Outbox) {
+        if self.cfg.durability {
+            out.record(Record::State { s: 1 });
+        }
+    }
+    fn try_ack(&mut self, out: &mut Outbox) {
+        self.journal_state(out);
+        out.send_staged(Wire::AcceptAck { m, g, bals });
+    }
+}
+";
+
+    #[test]
+    fn record_via_helper_call_counts() {
+        assert!(check(&[pf("p/x.rs", CLEAN)]).is_empty());
+    }
+
+    #[test]
+    fn record_after_send_fires() {
+        let src = "
+impl Node {
+    fn try_ack(&mut self, out: &mut Outbox) {
+        out.send_staged(Wire::AcceptAck { m, g, bals });
+        out.record(Record::State { s: 1 });
+    }
+}
+";
+        let vs = check(&[pf("p/x.rs", src)]);
+        assert_eq!(rules(&vs), ["journal-before-ack"]);
+        assert_eq!(vs[0].line, 4, "flag the send line");
+    }
+
+    #[test]
+    fn durability_ok_marker_suppresses() {
+        let src = "
+impl Node {
+    fn try_ack(&mut self, out: &mut Outbox) {
+        // durability-ok: in-memory baseline, crash-stop only
+        out.send(to, Wire::AcceptAck { m, g, bals });
+    }
+}
+";
+        assert!(check(&[pf("p/x.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn let_bound_ack_is_tracked() {
+        let src = "
+impl Node {
+    fn try_ack(&mut self, out: &mut Outbox) {
+        let ack = Wire::AcceptAck { m, g, bals };
+        out.send(to, ack);
+    }
+}
+";
+        assert_eq!(rules(&check(&[pf("p/x.rs", src)])), ["journal-before-ack"]);
+    }
+
+    #[test]
+    fn paxos_promise_without_any_record_fires() {
+        let src = "
+impl Paxos {
+    fn on_p2a(&mut self, out: &mut Outbox) {
+        out.send(from, Wire::Paxos { g, msg: PaxosMsg::P2b { bal, slot } });
+    }
+}
+";
+        let vs = check(&[pf("p/x.rs", src)]);
+        assert_eq!(rules(&vs), ["journal-before-ack"]);
+        assert!(vs[0].msg.contains("P2b"));
+    }
+
+    #[test]
+    fn tests_rs_and_test_fns_are_skipped() {
+        let src = "
+impl Node {
+    fn try_ack(&mut self, out: &mut Outbox) {
+        out.send(to, Wire::AcceptAck { m });
+    }
+}
+";
+        assert!(check(&[pf("p/tests.rs", src)]).is_empty());
+        let in_test = "
+#[cfg(test)]
+mod tests {
+    fn try_ack(out: &mut Outbox) {
+        out.send(to, Wire::AcceptAck { m });
+    }
+}
+";
+        assert!(check(&[pf("p/x.rs", in_test)]).is_empty());
+    }
+}

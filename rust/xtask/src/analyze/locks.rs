@@ -1,0 +1,361 @@
+//! Lock-order deadlock freedom over the `crate::sync` facade.
+//!
+//! Builds the *held-while-acquiring* graph: an edge `a -> b` means some
+//! code path acquires lock `b` (directly or via a call chain) while
+//! holding lock `a`. Lock identity is the receiver identifier of
+//! `.lock(` (`inner`, `cb`, ...). Guard lifetimes are approximated
+//! structurally:
+//!
+//! * `let g = <chain>.lock()...;` — held until `drop(g)` or the end of
+//!   the enclosing brace;
+//! * a temporary (`x.lock().unwrap().touch();`) — held to the end of
+//!   the statement.
+//!
+//! Cycles in the graph (including self-loops, i.e. re-acquiring the
+//! same lock while holding it) are reported. Audited non-edges carry
+//! `// lock-ok: <reason>` on the acquisition line or on a call line to
+//! exclude that call from the held-scope walk (e.g. a callee that
+//! shares a method name with a lock-taking function but never takes
+//! the lock).
+
+use super::{close_over_calls, FnKey};
+use crate::lexer::Kind;
+use crate::parser::{calls_in, FnInfo, ParsedFile};
+use crate::Violation;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// `(lock ident, token idx of `lock`, scope end token idx, line)` for
+/// every unannotated `.lock(` acquisition in the function body.
+fn lock_acquisitions(f: &ParsedFile, func: &FnInfo) -> Vec<(String, usize, usize, usize)> {
+    let toks = &f.toks;
+    let (start, end) = func.body;
+    let end = end.min(toks.len());
+    let mut out = Vec::new();
+    for i in start..end {
+        let t = &toks[i];
+        if t.kind != Kind::Ident || t.text != "lock" {
+            continue;
+        }
+        if i + 1 >= end || toks[i + 1].text != "(" {
+            continue;
+        }
+        if !(i > 0 && toks[i - 1].text == ".") {
+            continue;
+        }
+        if i < 2 || toks[i - 2].kind != Kind::Ident {
+            continue;
+        }
+        let ident = toks[i - 2].text.clone();
+        if f.has_marker(t.line, "lock-ok") {
+            continue;
+        }
+        // walk back over the receiver chain (`a . b . lock`) to find a
+        // possible `let [mut] g =` guard binding
+        let mut j = i - 2;
+        while j >= 2 && toks[j - 1].text == "." && toks[j - 2].kind == Kind::Ident {
+            j -= 2;
+        }
+        let mut guard: Option<String> = None;
+        if j >= 2 && toks[j - 1].text == "=" && toks[j - 2].kind == Kind::Ident {
+            let g = toks[j - 2].text.clone();
+            let mut k2 = j as i64 - 3;
+            if k2 >= 0 && toks[k2 as usize].text == "mut" {
+                k2 -= 1;
+            }
+            if k2 >= 0 && toks[k2 as usize].text == "let" {
+                guard = Some(g);
+            }
+        }
+        let scope_end;
+        if let Some(g) = guard {
+            // held until `drop(g)` or the end of the enclosing brace
+            let mut d = 0i64;
+            let mut se = end;
+            let mut k = i;
+            while k < end {
+                let tx = toks[k].text.as_str();
+                if tx == "{" {
+                    d += 1;
+                } else if tx == "}" {
+                    d -= 1;
+                    if d < 0 {
+                        se = k;
+                        break;
+                    }
+                } else if toks[k].kind == Kind::Ident
+                    && tx == "drop"
+                    && k + 2 < end
+                    && toks[k + 1].text == "("
+                    && toks[k + 2].text == g
+                {
+                    se = k;
+                    break;
+                }
+                k += 1;
+            }
+            scope_end = se;
+        } else {
+            // temporary: dropped at the end of the statement
+            let mut d = 0i64;
+            let mut se = end;
+            let mut k = i;
+            while k < end {
+                let tx = toks[k].text.as_str();
+                if tx == "(" || tx == "[" || tx == "{" {
+                    d += 1;
+                } else if tx == ")" || tx == "]" || tx == "}" {
+                    d -= 1;
+                    if d < 0 {
+                        se = k;
+                        break;
+                    }
+                } else if tx == ";" && d == 0 {
+                    se = k;
+                    break;
+                }
+                k += 1;
+            }
+            scope_end = se;
+        }
+        out.push((ident, i, scope_end, t.line));
+    }
+    out
+}
+
+/// The held-while-acquiring edge set: `(held, acquired, witness)`.
+pub(crate) fn edges(files: &[ParsedFile]) -> BTreeSet<(String, String, String)> {
+    // per-name transitive lock sets
+    let mut direct: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut callees: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (fni, func) in f.fns.iter().enumerate() {
+            if func.in_test {
+                continue;
+            }
+            let key = (fi, fni);
+            direct.insert(key, lock_acquisitions(f, func).into_iter().map(|a| a.0).collect());
+            callees.insert(key, calls_in(&f.toks, func.body).into_iter().map(|(n, _)| n).collect());
+            by_name.entry(func.name.clone()).or_default().push(key);
+        }
+    }
+    let locks = close_over_calls(direct, &callees, &by_name);
+    let mut name_locks: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for ((fi, fni), ls) in &locks {
+        let nm = &files[*fi].fns[*fni].name;
+        name_locks.entry(nm.clone()).or_default().extend(ls.iter().cloned());
+    }
+
+    let mut edges: BTreeSet<(String, String, String)> = BTreeSet::new();
+    for f in files {
+        for func in &f.fns {
+            if func.in_test {
+                continue;
+            }
+            let acqs = lock_acquisitions(f, func);
+            for (ident, i, scope_end, _line) in &acqs {
+                // nested direct acquisitions inside the held scope
+                for (ident2, i2, _, line2) in &acqs {
+                    if *i < *i2 && *i2 < *scope_end {
+                        edges.insert((
+                            ident.clone(),
+                            ident2.clone(),
+                            format!("{}:{} in {}", f.path, line2, func.qname),
+                        ));
+                    }
+                }
+                // calls made while held (lock-ok on the call line excludes)
+                for (name, ci) in calls_in(&f.toks, (*i, *scope_end)) {
+                    if f.has_marker(f.toks[ci].line, "lock-ok") {
+                        continue;
+                    }
+                    if let Some(ls) = name_locks.get(&name) {
+                        for l2 in ls {
+                            edges.insert((
+                                ident.clone(),
+                                l2.clone(),
+                                format!(
+                                    "{}:{} in {} via {}()",
+                                    f.path,
+                                    f.toks[ci].line,
+                                    func.qname,
+                                    name
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    edges
+}
+
+fn dfs(
+    node: &str,
+    path: &[(String, String)],
+    names: &[String],
+    adj: &BTreeMap<String, Vec<(String, String)>>,
+    seen: &mut BTreeSet<Vec<String>>,
+    out: &mut Vec<Violation>,
+) {
+    let Some(nbrs) = adj.get(node) else { return };
+    for (b, w) in nbrs {
+        if let Some(pos) = names.iter().position(|n| n == b) {
+            let mut cyc: Vec<(String, String)> = path[pos..].to_vec();
+            cyc.push((b.clone(), w.clone()));
+            let mut sig: Vec<String> = cyc.iter().map(|x| x.0.clone()).collect();
+            sig.sort();
+            sig.dedup();
+            if seen.insert(sig) {
+                let desc = cyc.iter().map(|x| x.0.as_str()).collect::<Vec<_>>().join(" -> ");
+                let wits = cyc
+                    .iter()
+                    .filter(|x| !x.1.is_empty())
+                    .map(|x| x.1.as_str())
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                out.push(Violation {
+                    file: "(lock graph)".to_string(),
+                    line: 1,
+                    rule: "lock-order",
+                    msg: format!("lock acquisition cycle {desc}: {wits}"),
+                });
+            }
+            continue;
+        }
+        let mut p2 = path.to_vec();
+        p2.push((b.clone(), w.clone()));
+        let mut n2 = names.to_vec();
+        n2.push(b.clone());
+        dfs(b, &p2, &n2, adj, seen, out);
+    }
+}
+
+/// Run the lock-order analysis: report every acquisition cycle once.
+pub fn check(files: &[ParsedFile]) -> Vec<Violation> {
+    let e = edges(files);
+    let mut adj: BTreeMap<String, Vec<(String, String)>> = BTreeMap::new();
+    for (a, b, w) in &e {
+        adj.entry(a.clone()).or_default().push((b.clone(), w.clone()));
+    }
+    let mut out = Vec::new();
+    let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+    for start in adj.keys() {
+        dfs(
+            start,
+            &[(start.clone(), String::new())],
+            &[start.clone()],
+            &adj,
+            &mut seen,
+            &mut out,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(src: &str) -> ParsedFile {
+        ParsedFile::parse("l.rs", src)
+    }
+
+    const CYCLE: &str = "
+impl S {
+    fn a(&self) {
+        let g = self.x.lock().unwrap();
+        self.helper_y();
+    }
+    fn helper_y(&self) {
+        self.y.lock().unwrap().touch();
+    }
+    fn b(&self) {
+        let g = self.y.lock().unwrap();
+        self.helper_x();
+    }
+    fn helper_x(&self) {
+        self.x.lock().unwrap().touch();
+    }
+}
+";
+
+    #[test]
+    fn two_lock_cycle_via_calls_fires_once() {
+        let vs = check(&[pf(CYCLE)]);
+        assert_eq!(vs.len(), 1, "{vs:#?}");
+        assert_eq!(vs[0].rule, "lock-order");
+        assert!(vs[0].msg.contains('x') && vs[0].msg.contains('y'));
+    }
+
+    #[test]
+    fn one_direction_only_is_clean() {
+        let no_cycle = CYCLE.replace("self.helper_x();", "");
+        assert!(check(&[pf(&no_cycle)]).is_empty());
+    }
+
+    const SELF_CYCLE: &str = "
+impl S {
+    fn a(&self) {
+        let g = self.x.lock().unwrap();
+        self.helper();
+    }
+    fn helper(&self) {
+        self.x.lock().unwrap().touch();
+    }
+}
+";
+
+    #[test]
+    fn double_acquire_is_a_self_cycle() {
+        let vs = check(&[pf(SELF_CYCLE)]);
+        assert_eq!(vs.len(), 1, "{vs:#?}");
+    }
+
+    #[test]
+    fn drop_releases_the_guard() {
+        let src = "
+impl S {
+    fn a(&self) {
+        let g = self.x.lock().unwrap();
+        drop(g);
+        self.helper();
+    }
+    fn helper(&self) {
+        self.x.lock().unwrap().touch();
+    }
+}
+";
+        assert!(check(&[pf(src)]).is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        let src = "
+impl S {
+    fn a(&self) {
+        self.x.lock().unwrap().touch();
+        self.helper();
+    }
+    fn helper(&self) {
+        self.y.lock().unwrap().touch();
+        self.back();
+    }
+    fn back(&self) {
+        self.x.lock().unwrap().touch();
+    }
+}
+";
+        assert!(check(&[pf(src)]).is_empty());
+    }
+
+    #[test]
+    fn lock_ok_on_the_call_line_suppresses() {
+        let marked = SELF_CYCLE.replace(
+            "self.helper();",
+            "// lock-ok: not a reentry\n        self.helper();",
+        );
+        assert!(check(&[pf(&marked)]).is_empty());
+    }
+}

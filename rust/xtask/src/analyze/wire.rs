@@ -1,0 +1,341 @@
+//! Wire exhaustiveness: enum ↔ codec ↔ dispatch cross-check.
+//!
+//! For every variant of `enum Wire`:
+//!
+//! * exactly one encoder arm in `codec::encode_into`, whose tag byte is
+//!   the first `u8(N)` literal in the arm body;
+//! * exactly one decoder arm in `codec::get_wire`, keyed by a unique
+//!   integer tag, whose constructed variant is the last `Wire::V` path
+//!   in the arm body (arms may build nested values first);
+//! * encoder tag == decoder tag;
+//! * some protocol `on_wire` dispatches the variant (match arm or
+//!   `let Wire::V .. else` binding), unless it is in the exempt list
+//!   (runtime framing like `Batch` that nodes never see).
+//!
+//! This subsumes the old duplicate-tag lint and catches the
+//! add-a-variant-forget-a-site class of bug at lint time instead of at
+//! the first decode error in a cluster.
+
+use crate::lexer::{Kind, Tok};
+use crate::parser::{match_arms, matching_brace, path_variants, Arm, FnInfo, ParsedFile};
+use crate::Violation;
+use std::collections::BTreeMap;
+
+/// Variant names of `enum <enum_name>` in `f`: idents at brace depth 1
+/// and paren depth 0 followed by `,` `{` `(` `}` or `=`.
+pub(crate) fn enum_variants(f: &ParsedFile, enum_name: &str) -> Vec<String> {
+    let toks = &f.toks;
+    if toks.len() < 3 {
+        return Vec::new();
+    }
+    for i in 0..toks.len() - 2 {
+        if !(toks[i].kind == Kind::Ident
+            && toks[i].text == "enum"
+            && toks[i + 1].kind == Kind::Ident
+            && toks[i + 1].text == enum_name)
+        {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < toks.len() && toks[j].text != "{" {
+            j += 1;
+        }
+        if j >= toks.len() {
+            return Vec::new();
+        }
+        let close = matching_brace(toks, j);
+        let mut variants = Vec::new();
+        let mut d = 0i64;
+        let mut pd = 0i64;
+        let mut k = j + 1;
+        while k < close {
+            let t = &toks[k];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "{" => d += 1,
+                    "}" => d -= 1,
+                    "(" | "[" => pd += 1,
+                    ")" | "]" => pd -= 1,
+                    _ => {}
+                }
+            } else if t.kind == Kind::Ident
+                && d == 0
+                && pd == 0
+                && k + 1 < close
+                && matches!(toks[k + 1].text.as_str(), "," | "{" | "(" | "}" | "=")
+            {
+                variants.push(t.text.clone());
+            }
+            k += 1;
+        }
+        return variants;
+    }
+    Vec::new()
+}
+
+fn find_fn<'a>(f: &'a ParsedFile, name: &str) -> Option<&'a FnInfo> {
+    f.fns.iter().find(|fn_| fn_.name == name && !fn_.in_test)
+}
+
+fn first_match_arms(f: &ParsedFile, func: &FnInfo) -> Vec<Arm> {
+    let toks = &f.toks;
+    for i in func.body.0..func.body.1.min(toks.len()) {
+        if toks[i].kind == Kind::Ident && toks[i].text == "match" {
+            return match_arms(toks, i, func.body.1);
+        }
+    }
+    Vec::new()
+}
+
+/// Leading decimal digits of a numeric token (`14`, `14u8` -> 14).
+fn tag_of(tok: &Tok) -> Option<u64> {
+    let digits: String = tok.text.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() {
+        None
+    } else {
+        digits.parse().ok()
+    }
+}
+
+/// Cross-check `enum Wire` (in `wire_f`) against the codec (`codec_f`)
+/// and the protocol dispatchers. `exempt` variants skip the dispatch
+/// requirement only.
+pub fn check(
+    wire_f: &ParsedFile,
+    codec_f: &ParsedFile,
+    dispatch_files: &[ParsedFile],
+    exempt: &[&str],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let viol = |file: &str, line: usize, msg: String| Violation {
+        file: file.to_string(),
+        line,
+        rule: "wire-exhaustive",
+        msg,
+    };
+    let variants = enum_variants(wire_f, "Wire");
+    if variants.is_empty() {
+        return vec![viol(&wire_f.path, 1, "enum Wire not found".to_string())];
+    }
+
+    // encoder arms: Wire::V pattern -> first u8(N) tag in the body
+    let mut enc: BTreeMap<String, (Option<u64>, usize)> = BTreeMap::new();
+    let Some(func) = find_fn(codec_f, "encode_into") else {
+        return vec![viol(&codec_f.path, 1, "encode_into not found".to_string())];
+    };
+    for arm in first_match_arms(codec_f, func) {
+        let pv = path_variants(&codec_f.toks, arm.pat, "Wire");
+        let Some((v, _)) = pv.first() else { continue };
+        let mut tag = None;
+        let (s, e) = arm.body;
+        let e = e.min(codec_f.toks.len());
+        for k in s..e.saturating_sub(2) {
+            if codec_f.toks[k].kind == Kind::Ident
+                && codec_f.toks[k].text == "u8"
+                && codec_f.toks[k + 1].text == "("
+                && codec_f.toks[k + 2].kind == Kind::Num
+            {
+                tag = tag_of(&codec_f.toks[k + 2]);
+                break;
+            }
+        }
+        let line = codec_f.toks[arm.pat.0].line;
+        if enc.contains_key(v) {
+            out.push(viol(&codec_f.path, line, format!("Wire::{v} has more than one encoder arm")));
+        }
+        enc.insert(v.clone(), (tag, line));
+    }
+
+    // decoder arms: single-integer pattern -> last Wire::V in the body
+    let mut dec: BTreeMap<String, (Option<u64>, usize)> = BTreeMap::new();
+    let mut dec_tags: Vec<u64> = Vec::new();
+    let Some(func) = find_fn(codec_f, "get_wire") else {
+        return vec![viol(&codec_f.path, 1, "get_wire not found".to_string())];
+    };
+    for arm in first_match_arms(codec_f, func) {
+        let (s, e) = arm.pat;
+        if e - s != 1 || codec_f.toks[s].kind != Kind::Num {
+            continue;
+        }
+        let Some(tag) = tag_of(&codec_f.toks[s]) else { continue };
+        let line = codec_f.toks[s].line;
+        let bv = path_variants(&codec_f.toks, arm.body, "Wire");
+        if dec_tags.contains(&tag) {
+            out.push(viol(&codec_f.path, line, format!("duplicate decoder tag {tag} in get_wire")));
+        }
+        dec_tags.push(tag);
+        let Some((v, _)) = bv.last() else {
+            out.push(viol(
+                &codec_f.path,
+                line,
+                format!("decoder arm {tag} constructs no Wire variant"),
+            ));
+            continue;
+        };
+        if dec.contains_key(v) {
+            out.push(viol(&codec_f.path, line, format!("Wire::{v} decoded by more than one arm")));
+        }
+        dec.insert(v.clone(), (Some(tag), line));
+    }
+
+    for v in &variants {
+        if !enc.contains_key(v) {
+            out.push(viol(&codec_f.path, 1, format!("Wire::{v} has no encoder arm in encode_into")));
+        }
+        if !dec.contains_key(v) {
+            out.push(viol(&codec_f.path, 1, format!("Wire::{v} has no decoder arm in get_wire")));
+        }
+        if let (Some((et, _)), Some((dt, dline))) = (enc.get(v), dec.get(v)) {
+            if et != dt {
+                let show = |t: &Option<u64>| t.map_or("?".to_string(), |x| x.to_string());
+                out.push(viol(
+                    &codec_f.path,
+                    *dline,
+                    format!("Wire::{v} encoder tag {} != decoder tag {}", show(et), show(dt)),
+                ));
+            }
+        }
+    }
+
+    // dispatch coverage: any on_wire match arm or let-else binding
+    let mut handled: Vec<String> = Vec::new();
+    for f in dispatch_files {
+        for func in &f.fns {
+            if func.name != "on_wire" || func.in_test {
+                continue;
+            }
+            let toks = &f.toks;
+            for i in func.body.0..func.body.1.min(toks.len()) {
+                if toks[i].kind == Kind::Ident && toks[i].text == "match" {
+                    for arm in match_arms(toks, i, func.body.1) {
+                        for (v, _) in path_variants(toks, arm.pat, "Wire") {
+                            handled.push(v);
+                        }
+                    }
+                }
+                if toks[i].kind == Kind::Ident
+                    && toks[i].text == "let"
+                    && i + 1 < toks.len()
+                    && toks[i + 1].text == "Wire"
+                {
+                    for (v, _) in path_variants(toks, (i + 1, i + 5), "Wire") {
+                        handled.push(v);
+                    }
+                }
+            }
+        }
+    }
+    for v in &variants {
+        if exempt.contains(&v.as_str()) {
+            continue;
+        }
+        if !handled.contains(v) {
+            out.push(viol(
+                &wire_f.path,
+                1,
+                format!("Wire::{v} is decodable but no protocol on_wire dispatches it"),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE_FIX: &str = "
+pub enum Wire {
+    A { x: u32 },
+    B(Vec<Wire>),
+    C,
+}
+";
+
+    const CODEC_FIX: &str = "
+pub fn encode_into(e: &mut Enc, w: &Wire) {
+    match w {
+        Wire::A { x } => { e.u8(0); e.u32(*x); }
+        Wire::B(inner) => { e.u8(1); }
+        Wire::C => { e.u8(2); }
+    }
+}
+fn get_wire(d: &mut Dec) -> Result<Wire> {
+    Ok(match d.u8()? {
+        0 => Wire::A { x: d.u32()? },
+        1 => Wire::B(vec![]),
+        2 => Wire::C,
+        v => return Err(bad(v)),
+    })
+}
+";
+
+    const DISPATCH_FIX: &str = "
+impl Node for N {
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
+        match wire {
+            Wire::A { x } => self.on_a(x),
+            Wire::C => {}
+            _ => {}
+        }
+    }
+}
+";
+
+    fn pf(path: &str, src: &str) -> ParsedFile {
+        ParsedFile::parse(path, src)
+    }
+
+    #[test]
+    fn variants_extracted_from_enum() {
+        assert_eq!(enum_variants(&pf("w.rs", WIRE_FIX), "Wire"), vec!["A", "B", "C"]);
+    }
+
+    #[test]
+    fn consistent_fixture_is_clean() {
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", CODEC_FIX), &[pf("d.rs", DISPATCH_FIX)], &["B"]);
+        assert!(vs.is_empty(), "{vs:#?}");
+    }
+
+    #[test]
+    fn missing_decoder_arm_fires() {
+        let codec = CODEC_FIX.replace("2 => Wire::C,", "");
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", &codec), &[pf("d.rs", DISPATCH_FIX)], &["B"]);
+        assert!(vs.iter().any(|v| v.msg.contains("no decoder arm")), "{vs:#?}");
+    }
+
+    #[test]
+    fn duplicate_decoder_tag_fires() {
+        let codec = CODEC_FIX.replace("2 => Wire::C,", "1 => Wire::C,");
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", &codec), &[pf("d.rs", DISPATCH_FIX)], &["B"]);
+        assert!(vs.iter().any(|v| v.msg.contains("duplicate decoder tag")), "{vs:#?}");
+    }
+
+    #[test]
+    fn encoder_decoder_tag_mismatch_fires() {
+        let codec = CODEC_FIX.replace("Wire::C => { e.u8(2); }", "Wire::C => { e.u8(3); }");
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", &codec), &[pf("d.rs", DISPATCH_FIX)], &["B"]);
+        assert!(vs.iter().any(|v| v.msg.contains("encoder tag 3 != decoder tag 2")), "{vs:#?}");
+    }
+
+    #[test]
+    fn undispatched_variant_fires() {
+        let disp = DISPATCH_FIX.replace("Wire::C => {}", "");
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", CODEC_FIX), &[pf("d.rs", &disp)], &["B"]);
+        assert!(vs.iter().any(|v| v.msg.contains("no protocol on_wire dispatches")), "{vs:#?}");
+    }
+
+    #[test]
+    fn let_else_dispatch_counts() {
+        let disp = "
+impl Client {
+    fn on_wire(&mut self, wire: Wire) {
+        let Wire::A { x } = wire else { return };
+        self.on_a(x);
+    }
+}
+";
+        let vs = check(&pf("w.rs", WIRE_FIX), &pf("c.rs", CODEC_FIX), &[pf("d.rs", disp)], &["B", "C"]);
+        assert!(vs.is_empty(), "{vs:#?}");
+    }
+}

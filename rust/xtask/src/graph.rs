@@ -1,0 +1,402 @@
+//! `cargo xtask graph` — generated architecture diagrams.
+//!
+//! Emits two Graphviz DOT files under `target/analyze/`:
+//!
+//! * `message_flow.dot` — nodes are `Wire` variants (plus `client` and
+//!   `timer` pseudo-nodes); an edge `V -> U [label="p"]` means protocol
+//!   `p`'s `on_wire` handler for `V` can send `U` (directly or through
+//!   its call graph, including `let`-bound wires). `on_timer` sends
+//!   appear as `timer -> U`; the client's `multicast` entry appears as
+//!   `client -> Multicast`.
+//! * `lock_order.dot` — the held-while-acquiring graph from the
+//!   lock-order analysis (see [`crate::analyze::locks`]); a clean tree
+//!   shows the acquired locks as isolated nodes.
+//!
+//! The embedded message-flow figure in ARCHITECTURE.md §Correctness
+//! tooling is this output, regenerated whenever the protocol set
+//! changes.
+
+use crate::analyze::{self, is_method, matching_paren, SENDS};
+use crate::lexer::Kind;
+use crate::parser::{calls_in, match_arms, path_variants, FnInfo, ParsedFile};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::process::ExitCode;
+
+/// Protocol label for a file: `protocols/wbcast/mod.rs` -> `wbcast`,
+/// `protocols/skeen.rs` -> `skeen`, `client/mod.rs` -> `client`.
+fn proto_label(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let parts: Vec<&str> = norm.split('/').collect();
+    let last = parts.last().copied().unwrap_or("");
+    let stem = last.strip_suffix(".rs").unwrap_or(last);
+    if (stem == "mod" || stem == "recovery") && parts.len() >= 2 {
+        parts[parts.len() - 2].to_string()
+    } else {
+        stem.to_string()
+    }
+}
+
+/// `ident -> Wire variants` for every `let id = .. Wire::V ..;` in the
+/// function body (any variant, unlike the journal analysis' ack-only
+/// tracking).
+fn wire_bindings(f: &ParsedFile, func: &FnInfo) -> BTreeMap<String, BTreeSet<String>> {
+    let mut bound: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let toks = &f.toks;
+    let (start, end) = func.body;
+    let end = end.min(toks.len());
+    let mut i = start;
+    while i < end {
+        if toks[i].kind == Kind::Ident && toks[i].text == "let" {
+            let mut j = i + 1;
+            if j < end && toks[j].text == "mut" {
+                j += 1;
+            }
+            if j < end && toks[j].kind == Kind::Ident && j + 1 < end && toks[j + 1].text == "=" {
+                let name = toks[j].text.clone();
+                let mut k = j + 2;
+                let mut d = 0i64;
+                while k < end {
+                    let t = toks[k].text.as_str();
+                    if t == "(" || t == "[" || t == "{" {
+                        d += 1;
+                    } else if t == ")" || t == "]" || t == "}" {
+                        d -= 1;
+                    } else if t == ";" && d == 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                let vs: BTreeSet<String> =
+                    path_variants(toks, (j + 2, k), "Wire").into_iter().map(|(v, _)| v).collect();
+                if !vs.is_empty() {
+                    bound.entry(name).or_default().extend(vs);
+                }
+                i = k;
+            }
+        }
+        i += 1;
+    }
+    bound
+}
+
+/// Wire variants sent by `.send*(..)` calls inside the token range,
+/// resolving `let`-bound wire idents via `bound`.
+fn sends_in(
+    f: &ParsedFile,
+    rng: (usize, usize),
+    bound: &BTreeMap<String, BTreeSet<String>>,
+) -> BTreeSet<String> {
+    let toks = &f.toks;
+    let mut sent = BTreeSet::new();
+    if toks.is_empty() {
+        return sent;
+    }
+    for i in rng.0..rng.1.min(toks.len() - 1) {
+        let t = &toks[i];
+        if t.kind == Kind::Ident
+            && SENDS.contains(&t.text.as_str())
+            && toks[i + 1].text == "("
+            && is_method(toks, i)
+        {
+            let close = matching_paren(toks, i + 1);
+            for (v, _) in path_variants(toks, (i + 1, close), "Wire") {
+                sent.insert(v);
+            }
+            for k in (i + 2)..close {
+                if toks[k].kind == Kind::Ident {
+                    if let Some(vs) = bound.get(&toks[k].text) {
+                        sent.extend(vs.iter().cloned());
+                    }
+                }
+            }
+        }
+    }
+    sent
+}
+
+type FnKey = (usize, usize);
+
+/// Per-fn transitive sent-variant sets plus the per-name union.
+fn send_closure(
+    files: &[ParsedFile],
+) -> (BTreeMap<FnKey, BTreeSet<String>>, BTreeMap<String, BTreeSet<String>>) {
+    let mut direct: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut callees: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (fni, func) in f.fns.iter().enumerate() {
+            if func.in_test {
+                continue;
+            }
+            let key = (fi, fni);
+            direct.insert(key, sends_in(f, func.body, &wire_bindings(f, func)));
+            callees.insert(key, calls_in(&f.toks, func.body).into_iter().map(|(n, _)| n).collect());
+            by_name.entry(func.name.clone()).or_default().push(key);
+        }
+    }
+    let sends = analyze::close_over_calls(direct, &callees, &by_name);
+    let mut name_sends: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for ((fi, fni), ss) in &sends {
+        let nm = &files[*fi].fns[*fni].name;
+        name_sends.entry(nm.clone()).or_default().extend(ss.iter().cloned());
+    }
+    (sends, name_sends)
+}
+
+/// `(from, to, protocol label)` edge set of the message-flow graph.
+pub(crate) fn message_flow_edges(files: &[ParsedFile]) -> BTreeSet<(String, String, String)> {
+    let (sends, name_sends) = send_closure(files);
+    let mut edges: BTreeSet<(String, String, String)> = BTreeSet::new();
+    for (fi, f) in files.iter().enumerate() {
+        let label = proto_label(&f.path);
+        for (fni, func) in f.fns.iter().enumerate() {
+            if func.in_test {
+                continue;
+            }
+            let key = (fi, fni);
+            let empty = BTreeSet::new();
+            let fn_sends = sends.get(&key).unwrap_or(&empty);
+            if func.name == "on_wire" {
+                let toks = &f.toks;
+                let bound = wire_bindings(f, func);
+                let mut arms_found = false;
+                for i in func.body.0..func.body.1.min(toks.len()) {
+                    if toks[i].kind == Kind::Ident && toks[i].text == "match" {
+                        for arm in match_arms(toks, i, func.body.1) {
+                            let pv: Vec<String> = path_variants(toks, arm.pat, "Wire")
+                                .into_iter()
+                                .map(|(v, _)| v)
+                                .collect();
+                            if pv.is_empty() {
+                                continue;
+                            }
+                            arms_found = true;
+                            let mut outs = sends_in(f, arm.body, &bound);
+                            for (nm, _) in calls_in(toks, arm.body) {
+                                if let Some(ss) = name_sends.get(&nm) {
+                                    outs.extend(ss.iter().cloned());
+                                }
+                            }
+                            for src in &pv {
+                                for dst in &outs {
+                                    edges.insert((src.clone(), dst.clone(), label.clone()));
+                                }
+                            }
+                        }
+                        break; // the dispatch match is the first one
+                    }
+                }
+                if !arms_found {
+                    // let-else dispatch (client): the whole body handles
+                    // the bound variant
+                    for i in func.body.0..func.body.1.min(toks.len()) {
+                        if toks[i].kind == Kind::Ident
+                            && toks[i].text == "let"
+                            && i + 1 < toks.len()
+                            && toks[i + 1].text == "Wire"
+                        {
+                            for (src, _) in path_variants(toks, (i + 1, i + 5), "Wire") {
+                                for dst in fn_sends {
+                                    edges.insert((src.clone(), dst.clone(), label.clone()));
+                                }
+                            }
+                        }
+                    }
+                }
+            } else if func.name == "on_timer" {
+                for dst in fn_sends {
+                    edges.insert(("timer".to_string(), dst.clone(), label.clone()));
+                }
+            } else if func.name == "multicast" && fn_sends.contains("Multicast") {
+                edges.insert(("client".to_string(), "Multicast".to_string(), label.clone()));
+            }
+        }
+    }
+    edges
+}
+
+/// Render an edge set as Graphviz DOT, deterministically ordered.
+pub(crate) fn dot(
+    name: &str,
+    edges: &BTreeSet<(String, String, String)>,
+    extra_nodes: &[String],
+) -> String {
+    let mut lines = vec![format!("digraph {name} {{"), "  rankdir=LR;".to_string()];
+    let mut nodes: BTreeSet<&str> = extra_nodes.iter().map(|s| s.as_str()).collect();
+    for (a, b, _) in edges {
+        nodes.insert(a);
+        nodes.insert(b);
+    }
+    for n in &nodes {
+        let shape = if *n == "client" || *n == "timer" { "ellipse" } else { "box" };
+        lines.push(format!("  \"{n}\" [shape={shape}];"));
+    }
+    for (a, b, lab) in edges {
+        lines.push(format!("  \"{a}\" -> \"{b}\" [label=\"{lab}\"];"));
+    }
+    lines.push("}".to_string());
+    lines.join("\n")
+}
+
+/// The message-flow file set: protocol core + client + Paxos substrate.
+fn flow_files(root: &Path) -> Vec<ParsedFile> {
+    let mut files: Vec<ParsedFile> = Vec::new();
+    for rel in crate::rs_files_under(root, "rust/src/protocols") {
+        if rel.ends_with("tests.rs") {
+            continue;
+        }
+        if let Some(f) = analyze::parse_rel(root, &rel) {
+            files.push(f);
+        }
+    }
+    for rel in ["rust/src/client/mod.rs", "rust/src/paxos/mod.rs"] {
+        if let Some(f) = analyze::parse_rel(root, rel) {
+            files.push(f);
+        }
+    }
+    files
+}
+
+/// `cargo xtask graph`: write both DOT files and print their paths.
+pub fn run(root: &Path) -> ExitCode {
+    let flow = message_flow_edges(&flow_files(root));
+    let mf = dot("message_flow", &flow, &[]);
+
+    let mut lfiles: Vec<ParsedFile> = Vec::new();
+    for rel in analyze::LOCK_FILES {
+        if let Some(f) = analyze::parse_rel(root, rel) {
+            lfiles.push(f);
+        }
+    }
+    let ledges = analyze::locks::edges(&lfiles);
+    // witness shortened to file:line for the figure
+    let short: BTreeSet<(String, String, String)> = ledges
+        .iter()
+        .map(|(a, b, w)| {
+            (a.clone(), b.clone(), w.split(" in ").next().unwrap_or("").to_string())
+        })
+        .collect();
+    // show acquired locks as nodes even when edge-free (the healthy case)
+    let mut nodes: BTreeSet<String> = BTreeSet::new();
+    for (a, b, _) in &ledges {
+        nodes.insert(a.clone());
+        nodes.insert(b.clone());
+    }
+    for f in &lfiles {
+        for func in &f.fns {
+            if func.in_test {
+                continue;
+            }
+            // reuse the journal-agnostic acquisition scan: any `x.lock(`
+            for i in func.body.0..func.body.1.min(f.toks.len()) {
+                if f.toks[i].kind == Kind::Ident
+                    && f.toks[i].text == "lock"
+                    && i + 1 < f.toks.len()
+                    && f.toks[i + 1].text == "("
+                    && is_method(&f.toks, i)
+                    && i >= 2
+                    && f.toks[i - 2].kind == Kind::Ident
+                {
+                    nodes.insert(f.toks[i - 2].text.clone());
+                }
+            }
+        }
+    }
+    let node_list: Vec<String> = nodes.into_iter().collect();
+    let lo = dot("lock_order", &short, &node_list);
+
+    let dir = root.join("target/analyze");
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("xtask graph: create {dir:?}: {e}");
+        return ExitCode::FAILURE;
+    }
+    let mf_path = dir.join("message_flow.dot");
+    let lo_path = dir.join("lock_order.dot");
+    for (path, content) in [(&mf_path, &mf), (&lo_path, &lo)] {
+        if let Err(e) = std::fs::write(path, format!("{content}\n")) {
+            eprintln!("xtask graph: write {path:?}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    println!(
+        "xtask graph: wrote {} ({} edges) and {} ({} nodes)",
+        mf_path.display(),
+        flow.len(),
+        lo_path.display(),
+        node_list.len()
+    );
+    ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(path: &str, src: &str) -> ParsedFile {
+        ParsedFile::parse(path, src)
+    }
+
+    #[test]
+    fn proto_labels() {
+        assert_eq!(proto_label("rust/src/protocols/wbcast/mod.rs"), "wbcast");
+        assert_eq!(proto_label("rust/src/protocols/wbcast/recovery.rs"), "wbcast");
+        assert_eq!(proto_label("rust/src/protocols/skeen.rs"), "skeen");
+        assert_eq!(proto_label("rust/src/client/mod.rs"), "client");
+    }
+
+    #[test]
+    fn on_wire_arm_sends_become_edges_including_let_bound() {
+        let src = "
+impl Node for N {
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
+        match wire {
+            Wire::Multicast { m } => {
+                let acc = Wire::Accept { m };
+                out.send_to_many(peers, acc);
+            }
+            Wire::Accept { m } => self.ack(m, out),
+            _ => {}
+        }
+    }
+    fn ack(&mut self, m: M, out: &mut Outbox) {
+        out.send(from, Wire::AcceptAck { m });
+    }
+}
+";
+        let edges = message_flow_edges(&[pf("protocols/wbcast/mod.rs", src)]);
+        assert!(edges.contains(&("Multicast".into(), "Accept".into(), "wbcast".into())), "{edges:#?}");
+        assert!(edges.contains(&("Accept".into(), "AcceptAck".into(), "wbcast".into())), "{edges:#?}");
+    }
+
+    #[test]
+    fn timer_and_client_pseudo_nodes() {
+        let src = "
+impl Node for N {
+    fn on_timer(&mut self, now: u64, out: &mut Outbox) {
+        out.send_to_many(peers, Wire::Heartbeat { t: now });
+    }
+}
+impl Client {
+    fn multicast(&mut self, m: M, out: &mut Outbox) {
+        out.send(self.coord, Wire::Multicast { m });
+    }
+}
+";
+        let edges = message_flow_edges(&[pf("protocols/x.rs", src)]);
+        assert!(edges.contains(&("timer".into(), "Heartbeat".into(), "x".into())), "{edges:#?}");
+        assert!(edges.contains(&("client".into(), "Multicast".into(), "x".into())), "{edges:#?}");
+    }
+
+    #[test]
+    fn dot_output_is_deterministic_and_shaped() {
+        let mut edges = BTreeSet::new();
+        edges.insert(("timer".to_string(), "Deliver".to_string(), "p".to_string()));
+        let d = dot("message_flow", &edges, &[]);
+        assert!(d.starts_with("digraph message_flow {"));
+        assert!(d.contains("\"timer\" [shape=ellipse];"));
+        assert!(d.contains("\"Deliver\" [shape=box];"));
+        assert!(d.contains("\"timer\" -> \"Deliver\" [label=\"p\"];"));
+        assert!(d.ends_with('}'));
+    }
+}

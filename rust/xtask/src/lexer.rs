@@ -1,0 +1,501 @@
+//! A minimal, dependency-free Rust lexer for the static analyzer.
+//!
+//! This is *not* a full Rust lexer — it is exactly the subset the
+//! analyses in [`crate::analyze`] need: it classifies every byte of a
+//! source file into identifiers, numbers, string/char literals,
+//! lifetimes, punctuation, or comments, with correct handling of the
+//! cases that break naive line-based linting:
+//!
+//! * nested block comments (`/* a /* b */ c */`),
+//! * raw strings with hash fences (`r#".."#`) whose bodies may contain
+//!   `//`, quotes, or braces,
+//! * byte strings / byte chars (`b".."`, `b'x'`),
+//! * escaped quotes and line-continuation backslashes inside strings,
+//! * the `'a` lifetime vs `'a'` char-literal ambiguity.
+//!
+//! Every token records its 1-based start line and its byte span in the
+//! original source, so analyses can report precise locations and
+//! [`code_view`] can blank out non-code bytes while preserving both the
+//! byte length and every newline position of the input.
+//!
+//! The lexer works on bytes. Multi-byte UTF-8 sequences only ever appear
+//! inside comments and literals in this tree, but unknown non-ASCII
+//! bytes in code position are still consumed as a single whole-sequence
+//! punct token so spans never split a character.
+
+/// Token classification. Comments are real tokens (not skipped) so the
+/// parser can implement marker lookup (`// lock-ok: ...`) and so
+/// [`code_view`] knows which byte ranges to blank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+    LineComment,
+    BlockComment,
+}
+
+/// One lexed token: classification, verbatim text, 1-based start line,
+/// and `[start, end)` byte span in the source.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+fn is_id_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_id(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize `src`. Whitespace is dropped; everything else (including
+/// comments) becomes a token. Unterminated literals/comments extend to
+/// end of input rather than failing — the analyzer must degrade
+/// gracefully on any input.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let push = |toks: &mut Vec<Tok>, kind: Kind, start: usize, end: usize, sl: usize| {
+        toks.push(Tok {
+            kind,
+            text: String::from_utf8_lossy(&b[start..end]).into_owned(),
+            line: sl,
+            start,
+            end,
+        });
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let sl = line;
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            push(&mut toks, Kind::LineComment, start, i, sl);
+            continue;
+        }
+        // nested block comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            push(&mut toks, Kind::BlockComment, start, i, sl);
+            continue;
+        }
+        // raw / byte strings: r".."  r#".."#  br".."  b".."  b'x'
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if j < n && b[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    i = k + 1;
+                    while i < n {
+                        if b[i] == b'\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if b[i] == b'"' {
+                            let mut h = 0usize;
+                            let mut m = i + 1;
+                            while m < n && b[m] == b'#' && h < hashes {
+                                h += 1;
+                                m += 1;
+                            }
+                            if h == hashes {
+                                i = m;
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                    push(&mut toks, Kind::Str, start, i, sl);
+                    continue;
+                }
+            }
+            if b[i] == b'b' && i + 1 < n && b[i + 1] == b'"' {
+                i += 2;
+                while i < n {
+                    if b[i] == b'\\' {
+                        if i + 1 < n && b[i + 1] == b'\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        i += 1;
+                        break;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                push(&mut toks, Kind::Str, start, i.min(n), sl);
+                continue;
+            }
+            if b[i] == b'b' && i + 1 < n && b[i + 1] == b'\'' {
+                i += 2;
+                if i < n && b[i] == b'\\' {
+                    i += 2;
+                }
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                push(&mut toks, Kind::Char, start, i.min(n), sl);
+                continue;
+            }
+            // otherwise: plain identifier starting with r/b; fall through
+        }
+        if c == b'"' {
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    if i + 1 < n && b[i + 1] == b'\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            push(&mut toks, Kind::Str, start, i.min(n), sl);
+            continue;
+        }
+        if c == b'\'' {
+            // `'ident` not followed by `'` is a lifetime; `'x'` is a char
+            if i + 1 < n && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_') {
+                let mut j = i + 2;
+                while j < n && is_id(b[j]) {
+                    j += 1;
+                }
+                if j >= n || b[j] != b'\'' {
+                    i = j;
+                    push(&mut toks, Kind::Lifetime, start, i, sl);
+                    continue;
+                }
+            }
+            i += 1;
+            if i < n && b[i] == b'\\' {
+                i += 2;
+            }
+            while i < n && b[i] != b'\'' {
+                i += 1;
+            }
+            i += 1;
+            push(&mut toks, Kind::Char, start, i.min(n), sl);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            i += 1;
+            let mut seen_dot = false;
+            while i < n {
+                let d = b[i];
+                if is_id(d) {
+                    i += 1;
+                } else if d == b'.' && !seen_dot && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            push(&mut toks, Kind::Num, start, i, sl);
+            continue;
+        }
+        if is_id_start(c) {
+            i += 1;
+            while i < n && is_id(b[i]) {
+                i += 1;
+            }
+            push(&mut toks, Kind::Ident, start, i, sl);
+            continue;
+        }
+        // punctuation; a non-ASCII lead byte consumes its whole sequence
+        i += 1;
+        while i < n && b[i] >= 0x80 && b[i] < 0xC0 && c >= 0x80 {
+            i += 1;
+        }
+        push(&mut toks, Kind::Punct, start, i, sl);
+    }
+    toks
+}
+
+/// Return `src` with every byte of comments and string/char literals
+/// replaced by a space (newlines kept), preserving length and line
+/// structure. Line-oriented pattern checks run on this view so that
+/// `// .to_vec()` in a comment or `"std::sync::"` in a string can never
+/// fire — and so that code *after* a `//` embedded in a string literal
+/// is still seen.
+pub fn code_view(src: &str) -> String {
+    let mut out: Vec<u8> = src.as_bytes().to_vec();
+    for t in lex(src) {
+        match t.kind {
+            Kind::LineComment | Kind::BlockComment | Kind::Str | Kind::Char => {
+                for k in t.start..t.end.min(out.len()) {
+                    if out[k] != b'\n' {
+                        out[k] = b' ';
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_nums_punct() {
+        let ks = kinds("let x2 = 41.5 + y;");
+        assert_eq!(
+            ks,
+            vec![
+                (Kind::Ident, "let".into()),
+                (Kind::Ident, "x2".into()),
+                (Kind::Punct, "=".into()),
+                (Kind::Num, "41.5".into()),
+                (Kind::Punct, "+".into()),
+                (Kind::Ident, "y".into()),
+                (Kind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn nested_block_comment_is_one_token() {
+        let ks = kinds("a /* x /* y */ z */ b");
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks[1], (Kind::BlockComment, "/* x /* y */ z */".into()));
+        assert_eq!(ks[2].1, "b");
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_fake_comment() {
+        let src = "let s = r#\"// not \"a\" comment\"#; x";
+        let ks = kinds(src);
+        assert_eq!(ks[3], (Kind::Str, "r#\"// not \"a\" comment\"#".into()));
+        assert_eq!(ks.last().unwrap().1, "x");
+    }
+
+    #[test]
+    fn byte_string_and_byte_char() {
+        let ks = kinds("b\"ab\\\"c\" b'x' b'\\''");
+        assert_eq!(ks[0], (Kind::Str, "b\"ab\\\"c\"".into()));
+        assert_eq!(ks[1], (Kind::Char, "b'x'".into()));
+        assert_eq!(ks[2], (Kind::Char, "b'\\''".into()));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let ks = kinds("&'a T; 'x'; '\\n'; 'long_life");
+        let got: Vec<Kind> = ks.iter().map(|(k, _)| *k).collect();
+        assert!(got.contains(&Kind::Lifetime));
+        assert_eq!(ks[1], (Kind::Lifetime, "'a".into()));
+        assert_eq!(ks[4], (Kind::Char, "'x'".into()));
+        assert_eq!(ks[6], (Kind::Char, "'\\n'".into()));
+        assert_eq!(ks.last().unwrap(), &(Kind::Lifetime, "'long_life".into()));
+    }
+
+    #[test]
+    fn char_literal_with_brace_does_not_confuse_depth() {
+        let ks = kinds("match c { '{' => 1, _ => 2 }");
+        let braces: Vec<&str> = ks
+            .iter()
+            .filter(|(k, t)| *k == Kind::Punct && (t == "{" || t == "}"))
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(braces, vec!["{", "}"], "'{{' must lex as a char literal");
+    }
+
+    #[test]
+    fn string_with_line_continuation_counts_lines() {
+        let src = "let a = \"one\\\ntwo\";\nlet b = 1;";
+        let toks = lex(src);
+        let b_tok = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn code_view_blanks_opaque_preserving_layout() {
+        let src = "foo(); // .to_vec()\nlet s = \"std::sync::x\";\n/* a\nb */ bar();";
+        let cv = code_view(src);
+        assert_eq!(cv.len(), src.len());
+        let nl = |s: &str| {
+            s.bytes()
+                .enumerate()
+                .filter(|(_, c)| *c == b'\n')
+                .map(|(i, _)| i)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(nl(&cv), nl(src));
+        assert!(!cv.contains(".to_vec"));
+        assert!(!cv.contains("std::sync"));
+        assert!(cv.contains("foo"));
+        assert!(cv.contains("bar"));
+    }
+
+    #[test]
+    fn code_view_reveals_code_after_string_with_slashes() {
+        // the old line-based `code_part` truncated at the `//` inside the
+        // string, hiding `evil.to_vec()` from every rule
+        let src = "let u = \"http://x\"; evil.to_vec();";
+        let cv = code_view(src);
+        assert!(cv.contains("evil.to_vec()"));
+    }
+
+    #[test]
+    fn spans_are_exact_source_slices() {
+        let src = "fn f(x: &'a str) -> u32 { x.len() as u32 } // tail";
+        for t in lex(src) {
+            assert_eq!(&src[t.start..t.end], t.text);
+        }
+    }
+
+    // ---- property test: random fragment assembly -------------------------
+    //
+    // xtask is dependency-free (it cannot use the wbam crate's util::prop),
+    // so this carries its own tiny deterministic xorshift generator.
+
+    struct XorShift(u64);
+
+    impl XorShift {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn below(&mut self, n: usize) -> usize {
+            (self.next() % n as u64) as usize
+        }
+    }
+
+    /// Fragments: (text, opaque). Opaque fragments contain the sentinel
+    /// `ZXQ` (must vanish from code_view); code fragments contain `KEEP`
+    /// idents (must survive).
+    const FRAGMENTS: &[(&str, bool)] = &[
+        ("// ZXQ unsafe .to_vec()\n", true),
+        ("/* ZXQ std::sync:: /* nested ZXQ */ tail */", true),
+        ("\"ZXQ \\\" escaped\"", true),
+        ("r#\"ZXQ // \"not\" a comment\"#", true),
+        ("b\"ZXQ bytes\"", true),
+        ("'\\''", true),
+        ("'{'", true),
+        ("let KEEP_x = 1;", false),
+        ("KEEP_y.lock().unwrap();", false),
+        ("fn KEEP_f<'a>(v: &'a [u8]) -> usize { v.len() }", false),
+        ("match KEEP_z { 0 => {} _ => {} }", false),
+    ];
+
+    fn count(hay: &str, needle: &str) -> usize {
+        hay.match_indices(needle).count()
+    }
+
+    #[test]
+    fn prop_lex_covers_and_code_view_filters() {
+        let mut rng = XorShift(0x9e3779b97f4a7c15);
+        for _case in 0..200 {
+            let mut src = String::new();
+            let parts = 1 + rng.below(20);
+            for _ in 0..parts {
+                src.push_str(FRAGMENTS[rng.below(FRAGMENTS.len())].0);
+                src.push(if rng.below(3) == 0 { '\n' } else { ' ' });
+            }
+            let toks = lex(&src);
+            // spans: in-bounds, ordered, non-overlapping, exact slices
+            let mut prev_end = 0usize;
+            for t in &toks {
+                assert!(t.start >= prev_end, "overlap in {src:?}");
+                assert!(t.end <= src.len());
+                assert!(t.end > t.start, "empty token in {src:?}");
+                assert_eq!(&src[t.start..t.end], t.text);
+                prev_end = t.end;
+            }
+            // every byte outside tokens is whitespace
+            let mut covered = vec![false; src.len()];
+            for t in &toks {
+                for c in covered.iter_mut().take(t.end).skip(t.start) {
+                    *c = true;
+                }
+            }
+            for (k, c) in src.bytes().enumerate() {
+                if !covered[k] {
+                    assert!(
+                        c == b' ' || c == b'\t' || c == b'\r' || c == b'\n',
+                        "uncovered non-ws byte {c} in {src:?}"
+                    );
+                }
+            }
+            // code_view: same length, same newlines, opaque gone, code kept
+            let cv = code_view(&src);
+            assert_eq!(cv.len(), src.len());
+            let nls = |s: &str| s.bytes().filter(|c| *c == b'\n').count();
+            assert_eq!(nls(&cv), nls(&src));
+            assert_eq!(count(&cv, "ZXQ"), 0, "opaque text leaked in {src:?}");
+            assert_eq!(count(&cv, "KEEP"), count(&src, "KEEP"), "code text lost in {src:?}");
+        }
+    }
+}

@@ -1,41 +1,43 @@
-//! Repo-invariant lint gate: `cargo xtask lint`.
+//! Repo-invariant gate: `cargo xtask {lint, analyze, graph}`.
 //!
-//! Five plain source-scanning rules (no parser, no dependencies — the
-//! offline build image cannot fetch crates), each encoding an invariant
-//! the compiler cannot check and CI must not regress. See
-//! ARCHITECTURE.md §Correctness tooling.
+//! Dependency-free, in-tree static tooling (the offline build image
+//! cannot fetch crates). Three subcommands:
 //!
-//! 1. **safety-comments** — every `unsafe` token in `rust/src/net/`
-//!    must carry a `// SAFETY:` comment on the same line or on the
-//!    comment/attribute block immediately above it. (Clippy's
-//!    `undocumented_unsafe_blocks` covers unsafe *blocks*; this rule
-//!    also covers `unsafe impl`/`unsafe fn` and runs without a
-//!    toolchain-version dependency.)
-//! 2. **sync-facade** — modules migrated onto the `crate::sync` facade
-//!    (`coordinator/mod.rs`, `net/mod.rs`, `storage/mod.rs`,
-//!    `protocols/outbox.rs`) must not name `std::sync::` /
-//!    `std::thread` directly outside `#[cfg(test)]` blocks, or the
-//!    loom model (`--cfg loom`) silently loses coverage of that code.
-//!    `net/epoll.rs` and `net/uring.rs` are exempt by design: their
-//!    atomics live in kernel-shared mmap'd memory and must stay real.
-//! 3. **codec-tags** — wire/record tag bytes in the decode matches
-//!    (`get_wire`, `get_paxos`, `get_cmd`, `get_phase` in
-//!    `codec/mod.rs`; `get_record` in `storage/mod.rs`) must be unique
-//!    per function. A duplicated tag silently shadows a variant.
-//! 4. **payload-alloc** — protocol hot-path code must not materialise
-//!    payload bytes or allocate per-event vectors (`.to_vec()`,
-//!    `.to_owned()`, `Vec::new()`, `payload.clone()`). Audited cold
-//!    sites carry an `// alloc-ok: <reason>` marker on the same or the
-//!    preceding line.
-//! 5. **unordered-iter** — identifiers declared as
-//!    `HashMap`/`FxHashMap` in a protocol-core file must not be
-//!    iterated (`.iter()`, `.values()`, `.keys()`, `.drain()`, …):
-//!    hash-iteration order is nondeterministic, and in the protocol
-//!    core it tends to reach the wire or the delivery order. Audited
-//!    order-insensitive sites (min/max folds, collects into maps)
-//!    carry an `// unordered-ok: <reason>` marker.
+//! * `lint` (default) — five line-oriented rules running on the
+//!   lexer's [`lexer::code_view`] (comments and string/char literals
+//!   blanked, so `unsafe` in a doc comment or `//` inside a string
+//!   can no longer produce false verdicts):
+//!   1. **safety-comments** — every `unsafe` token in `rust/src/net/`
+//!      must carry a `// SAFETY:` comment on the same line or on the
+//!      comment/attribute block immediately above it.
+//!   2. **sync-facade** — modules migrated onto the `crate::sync`
+//!      facade must not name `std::sync::` / `std::thread` directly
+//!      outside `#[cfg(test)]`, or the loom model (`--cfg loom`)
+//!      silently loses coverage. `net/epoll.rs` / `net/uring.rs` are
+//!      exempt by design: their atomics live in kernel-shared mmap'd
+//!      memory and must stay real.
+//!   3. **codec-tags** — tag bytes in the decode matches must be
+//!      unique per function; a duplicate silently shadows a variant.
+//!   4. **payload-alloc** — protocol hot-path code must not
+//!      materialise payload bytes or allocate per-event vectors;
+//!      audited cold sites carry `// alloc-ok: <reason>`.
+//!   5. **unordered-iter** — `HashMap`/`FxHashMap` identifiers in the
+//!      protocol core must not be iterated (hash order is
+//!      nondeterministic and tends to reach the wire); audited sites
+//!      carry `// unordered-ok: <reason>`.
+//! * `analyze` — the protocol-aware analyses in [`analyze`]:
+//!   journal-before-ack dataflow, `Wire` exhaustiveness, lock-order
+//!   deadlock freedom, and blocking-call-in-event-loop reachability.
+//! * `graph` — emit the generated message-flow and lock-order DOT
+//!   figures (see [`graph`]).
 //!
-//! Exit status 1 with one line per violation; 0 on a clean tree.
+//! Exit status 1 with one line per violation; 0 on a clean tree. See
+//! ARCHITECTURE.md §Correctness tooling for the rule ↔ invariant table.
+
+mod analyze;
+mod graph;
+mod lexer;
+mod parser;
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -52,8 +54,10 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         None | Some("lint") => lint(),
+        Some("analyze") => analyze_cmd(),
+        Some("graph") => graph::run(&repo_root()),
         Some(other) => {
-            eprintln!("unknown xtask command {other:?} (commands: lint)");
+            eprintln!("unknown xtask command {other:?} (commands: lint, analyze, graph)");
             ExitCode::FAILURE
         }
     }
@@ -62,6 +66,24 @@ fn main() -> ExitCode {
 /// xtask lives at `<repo>/rust/xtask`.
 fn repo_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().parent().unwrap().to_path_buf()
+}
+
+fn report(label: &str, checked: &str, violations: &[Violation]) -> ExitCode {
+    if violations.is_empty() {
+        println!("xtask {label}: {checked}, 0 violations");
+        ExitCode::SUCCESS
+    } else {
+        for v in violations {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        }
+        eprintln!("xtask {label}: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn analyze_cmd() -> ExitCode {
+    let vs = analyze::run_all(&repo_root());
+    report("analyze", "4 analyses", &vs)
 }
 
 fn lint() -> ExitCode {
@@ -109,16 +131,7 @@ fn lint() -> ExitCode {
         violations.extend(lint_unordered_iter(&rel, &src));
     }
 
-    if violations.is_empty() {
-        println!("xtask lint: {files} files checked, 0 violations");
-        ExitCode::SUCCESS
-    } else {
-        for v in &violations {
-            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
-        }
-        eprintln!("xtask lint: {} violation(s)", violations.len());
-        ExitCode::FAILURE
-    }
+    report("lint", &format!("{files} files checked"), &violations)
 }
 
 /// Modules under the sync-facade rule. `net/epoll.rs` / `net/uring.rs`
@@ -154,16 +167,6 @@ fn rs_files_under(root: &Path, rel: &str) -> Vec<String> {
 // ---------------------------------------------------------------------
 // line helpers
 // ---------------------------------------------------------------------
-
-/// The code portion of a line: everything before a `//` comment. Naive
-/// about `//` inside string literals, which this codebase avoids on the
-/// lines these rules look at.
-fn code_part(line: &str) -> &str {
-    match line.find("//") {
-        Some(i) => &line[..i],
-        None => line,
-    }
-}
 
 /// Index of the first line opening a `#[cfg(test)]` /
 /// `#[cfg(all(test, ...))]` region. Test modules sit at the bottom of
@@ -207,6 +210,7 @@ fn ident_before(line: &str, end: usize) -> &str {
 }
 
 /// Marker (e.g. `alloc-ok`, `unordered-ok`) on this line or the one above.
+/// Runs on the *raw* lines: markers live in comments.
 fn has_marker(lines: &[&str], idx: usize, marker: &str) -> bool {
     lines[idx].contains(marker) || (idx > 0 && lines[idx - 1].contains(marker))
 }
@@ -216,13 +220,15 @@ fn has_marker(lines: &[&str], idx: usize, marker: &str) -> bool {
 // ---------------------------------------------------------------------
 
 fn lint_safety_comments(file: &str, src: &str) -> Vec<Violation> {
-    let lines: Vec<&str> = src.lines().collect();
+    let raw: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
     let mut out = Vec::new();
-    for (i, line) in lines.iter().enumerate() {
-        if !has_word(code_part(line), "unsafe") {
+    for (i, cl) in code.iter().enumerate() {
+        if !has_word(cl, "unsafe") {
             continue;
         }
-        if line.contains("SAFETY:") {
+        if raw[i].contains("SAFETY:") {
             continue;
         }
         // walk the contiguous comment/attribute block directly above
@@ -230,7 +236,7 @@ fn lint_safety_comments(file: &str, src: &str) -> Vec<Violation> {
         let mut j = i;
         while j > 0 {
             j -= 1;
-            let t = lines[j].trim_start();
+            let t = raw[j].trim_start();
             if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") {
                 if t.contains("SAFETY:") {
                     documented = true;
@@ -257,12 +263,13 @@ fn lint_safety_comments(file: &str, src: &str) -> Vec<Violation> {
 // ---------------------------------------------------------------------
 
 fn lint_sync_facade(file: &str, src: &str) -> Vec<Violation> {
-    let lines: Vec<&str> = src.lines().collect();
-    let limit = test_mod_start(&lines);
+    let raw: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
+    let limit = test_mod_start(&raw);
     let mut out = Vec::new();
-    for (i, line) in lines.iter().enumerate().take(limit) {
-        let code = code_part(line);
-        if code.contains("std::sync::") || code.contains("std::thread") {
+    for (i, cl) in code.iter().enumerate().take(limit) {
+        if cl.contains("std::sync::") || cl.contains("std::thread") {
             out.push(Violation {
                 file: file.to_string(),
                 line: i + 1,
@@ -281,11 +288,12 @@ fn lint_sync_facade(file: &str, src: &str) -> Vec<Violation> {
 // ---------------------------------------------------------------------
 
 fn lint_codec_tags(file: &str, src: &str, fns: &[&str]) -> Vec<Violation> {
-    let lines: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
     let mut out = Vec::new();
     for name in fns {
         let needle = format!("fn {name}(");
-        let Some(start) = lines.iter().position(|l| code_part(l).contains(&needle)) else {
+        let Some(start) = code.iter().position(|l| l.contains(&needle)) else {
             out.push(Violation {
                 file: file.to_string(),
                 line: 1,
@@ -298,15 +306,14 @@ fn lint_codec_tags(file: &str, src: &str, fns: &[&str]) -> Vec<Violation> {
         let mut depth = 0i32;
         let mut opened = false;
         let mut tags: Vec<(u64, usize)> = Vec::new();
-        for (i, line) in lines.iter().enumerate().skip(start) {
-            let code = code_part(line);
+        for (i, line) in code.iter().enumerate().skip(start) {
             // `N => ...` match arms with an integer literal pattern
-            let t = code.trim_start();
+            let t = line.trim_start();
             let digits: String = t.chars().take_while(|c| c.is_ascii_digit()).collect();
             if !digits.is_empty() && t[digits.len()..].trim_start().starts_with("=>") {
                 tags.push((digits.parse().unwrap(), i + 1));
             }
-            for c in code.chars() {
+            for c in line.chars() {
                 match c {
                     '{' => {
                         depth += 1;
@@ -352,13 +359,14 @@ fn lint_codec_tags(file: &str, src: &str, fns: &[&str]) -> Vec<Violation> {
 const ALLOC_PATTERNS: &[&str] = &[".to_vec()", ".to_owned()", "Vec::new()", "payload.clone()"];
 
 fn lint_payload_alloc(file: &str, src: &str) -> Vec<Violation> {
-    let lines: Vec<&str> = src.lines().collect();
-    let limit = test_mod_start(&lines);
+    let raw: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
+    let limit = test_mod_start(&raw);
     let mut out = Vec::new();
-    for (i, line) in lines.iter().enumerate().take(limit) {
-        let code = code_part(line);
+    for (i, cl) in code.iter().enumerate().take(limit) {
         for pat in ALLOC_PATTERNS {
-            if code.contains(pat) && !has_marker(&lines, i, "alloc-ok") {
+            if cl.contains(pat) && !has_marker(&raw, i, "alloc-ok") {
                 out.push(Violation {
                     file: file.to_string(),
                     line: i + 1,
@@ -382,11 +390,11 @@ const ITER_METHODS: &[&str] =
     &[".iter()", ".iter_mut()", ".values()", ".values_mut()", ".keys()", ".drain(", ".into_iter()"];
 
 /// Identifiers declared in this file with a `HashMap`/`FxHashMap` type
-/// annotation or initialiser.
+/// annotation or initialiser. `lines` must already be code-view lines.
 fn hash_map_idents(lines: &[&str], limit: usize) -> Vec<String> {
     let mut idents = Vec::new();
     for line in lines.iter().take(limit) {
-        let code = code_part(line);
+        let code = *line;
         // `ident: [pfx::]HashMap<...>` / `ident: [pfx::]FxHashMap<...>`
         let mut from = 0;
         while let Some(rel) = code[from..].find("HashMap<") {
@@ -431,19 +439,20 @@ fn hash_map_idents(lines: &[&str], limit: usize) -> Vec<String> {
 }
 
 fn lint_unordered_iter(file: &str, src: &str) -> Vec<Violation> {
-    let lines: Vec<&str> = src.lines().collect();
-    let limit = test_mod_start(&lines);
-    let tracked = hash_map_idents(&lines, limit);
+    let raw: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
+    let limit = test_mod_start(&raw);
+    let tracked = hash_map_idents(&code, limit);
     let mut out = Vec::new();
-    for (i, line) in lines.iter().enumerate().take(limit) {
-        let code = code_part(line);
+    for (i, cl) in code.iter().enumerate().take(limit) {
         for m in ITER_METHODS {
             let mut from = 0;
-            while let Some(rel) = code[from..].find(m) {
+            while let Some(rel) = cl[from..].find(m) {
                 let at = from + rel;
                 from = at + m.len();
-                let ident = ident_before(code, at);
-                if tracked.iter().any(|t| t == ident) && !has_marker(&lines, i, "unordered-ok") {
+                let ident = ident_before(cl, at);
+                if tracked.iter().any(|t| t == ident) && !has_marker(&raw, i, "unordered-ok") {
                     out.push(Violation {
                         file: file.to_string(),
                         line: i + 1,
@@ -501,6 +510,16 @@ mod tests {
         assert!(lint_safety_comments("f", src).is_empty());
     }
 
+    #[test]
+    fn safety_sees_through_raw_strings() {
+        // a raw string containing `unsafe` must not fire, and an actual
+        // `unsafe` after a string containing `//` must still fire
+        let fake = "let doc = r#\"this mentions unsafe code\"#;\n";
+        assert!(lint_safety_comments("f", fake).is_empty());
+        let hidden = "let u = \"http://x\"; unsafe { go(u) };\n";
+        assert_eq!(rules_of(&lint_safety_comments("f", hidden)), ["safety-comments"]);
+    }
+
     // --- rule 2 ---
 
     #[test]
@@ -519,6 +538,12 @@ mod tests {
         assert!(lint_sync_facade("f", src).is_empty());
         let loom = "#[cfg(all(test, loom))]\nmod loom_tests {\n    use std::sync::atomic::AtomicU64;\n}\n";
         assert!(lint_sync_facade("f", loom).is_empty());
+    }
+
+    #[test]
+    fn facade_ignores_pattern_inside_string_literal() {
+        let src = "let msg = \"import from std::sync::Mutex instead\";\n";
+        assert!(lint_sync_facade("f", src).is_empty());
     }
 
     // --- rule 3 ---

@@ -1,0 +1,538 @@
+//! Item-level parser on top of [`crate::lexer`].
+//!
+//! Extracts just enough structure for the protocol analyses: the list of
+//! functions (with `impl`-qualified names, body token ranges, and
+//! whether they live under `#[cfg(test)]` / `#[test]`), `match` arms,
+//! call edges, and `Head::Variant` path occurrences. It is deliberately
+//! permissive — unknown constructs are skipped, never fatal — because
+//! the analyzer must keep working as the tree grows.
+
+use crate::lexer::{lex, Kind, Tok};
+use std::collections::BTreeMap;
+
+/// One `fn` item found in a file.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    /// bare name (`on_wire`)
+    pub name: String,
+    /// `impl`-qualified name (`WbNode::on_wire`) when inside an impl
+    pub qname: String,
+    /// 1-based line of the `fn` keyword
+    pub line: usize,
+    /// token index range of the body, exclusive of the braces
+    pub body: (usize, usize),
+    /// true when under `#[test]`, `#[cfg(test)] mod`, or a test impl
+    pub in_test: bool,
+}
+
+/// A lexed + item-scanned source file. `toks` holds only code tokens;
+/// comments are kept separately for marker lookup.
+pub struct ParsedFile {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Tok>,
+    pub fns: Vec<FnInfo>,
+}
+
+impl ParsedFile {
+    pub fn parse(path: &str, src: &str) -> ParsedFile {
+        let all = lex(src);
+        let mut toks = Vec::new();
+        let mut comments = Vec::new();
+        for t in all {
+            match t.kind {
+                Kind::LineComment | Kind::BlockComment => comments.push(t),
+                _ => toks.push(t),
+            }
+        }
+        let fns = scan_items(&toks);
+        ParsedFile { path: path.to_string(), toks, comments, fns }
+    }
+
+    /// True when `marker` appears in a comment on `line` itself or
+    /// anywhere in the contiguous comment block ending on the line
+    /// directly above. Multi-line block comments cover all their lines.
+    pub fn has_marker(&self, line: usize, marker: &str) -> bool {
+        let mut by_line: BTreeMap<usize, bool> = BTreeMap::new();
+        for c in &self.comments {
+            let span = c.text.matches('\n').count();
+            let hit = c.text.contains(marker);
+            for k in c.line..=c.line + span {
+                let e = by_line.entry(k).or_insert(false);
+                *e = *e || hit;
+            }
+        }
+        if by_line.get(&line).copied().unwrap_or(false) {
+            return true;
+        }
+        let mut k = line.saturating_sub(1);
+        while k > 0 {
+            match by_line.get(&k) {
+                Some(true) => return true,
+                Some(false) => k -= 1,
+                None => break,
+            }
+        }
+        false
+    }
+}
+
+/// True when token `i` and `i + 1` are byte-adjacent (no whitespace).
+pub fn is_adj(toks: &[Tok], i: usize) -> bool {
+    toks[i].end == toks[i + 1].start
+}
+
+/// `toks[open_idx]` must be `{`; returns the index of the matching `}`
+/// (or `toks.len()` when unbalanced).
+pub fn matching_brace(toks: &[Tok], open_idx: usize) -> usize {
+    let mut d = 0i64;
+    let mut i = open_idx;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct {
+            if t.text == "{" {
+                d += 1;
+            } else if t.text == "}" {
+                d -= 1;
+                if d == 0 {
+                    return i;
+                }
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// `toks[i]` must be `#`. Returns `(index past the attribute, inner
+/// token range)` for `#[...]` / `#![...]`, or `None` if not an
+/// attribute.
+fn attr_end(toks: &[Tok], i: usize) -> Option<(usize, (usize, usize))> {
+    let mut j = i + 1;
+    if j < toks.len() && toks[j].kind == Kind::Punct && toks[j].text == "!" {
+        j += 1;
+    }
+    if j >= toks.len() || toks[j].text != "[" {
+        return None;
+    }
+    let mut d = 0i64;
+    let mut k = j;
+    while k < toks.len() {
+        if toks[k].kind == Kind::Punct {
+            if toks[k].text == "[" {
+                d += 1;
+            } else if toks[k].text == "]" {
+                d -= 1;
+                if d == 0 {
+                    return Some((k + 1, (j + 1, k)));
+                }
+            }
+        }
+        k += 1;
+    }
+    Some((toks.len(), (j + 1, toks.len())))
+}
+
+/// `toks[i]` must be `impl`. Returns `(self-type name, index of the body
+/// '{')`. Handles generics (`impl<T: Ord> Map<T>`), trait impls
+/// (`impl Trait for Type` — the type after `for` wins), and `where`
+/// clauses (idents after `where` never shadow the type).
+fn impl_type(toks: &[Tok], i: usize) -> (String, usize) {
+    let mut j = i + 1;
+    // skip leading generic params, minding `->` inside them
+    if j < toks.len() && toks[j].text == "<" {
+        let mut d = 0i64;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.text == "<" {
+                d += 1;
+            } else if t.text == ">" && !(j > 0 && toks[j - 1].text == "-" && is_adj(toks, j - 1)) {
+                d -= 1;
+                if d == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+    let mut name = String::new();
+    let mut d = 0i64;
+    let mut frozen = false;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct {
+            if t.text == "<" {
+                d += 1;
+            } else if t.text == ">" && !(j > 0 && toks[j - 1].text == "-" && is_adj(toks, j - 1)) {
+                d -= 1;
+            } else if t.text == "{" && d <= 0 {
+                return (name, j);
+            }
+        } else if t.kind == Kind::Ident && d <= 0 && !frozen {
+            if t.text == "for" {
+                name.clear();
+            } else if t.text == "where" {
+                frozen = true;
+            } else if !matches!(t.text.as_str(), "dyn" | "unsafe" | "const" | "mut") {
+                name = t.text.clone();
+            }
+        }
+        j += 1;
+    }
+    (name, toks.len())
+}
+
+const ITEM_KEYWORDS: &[&str] =
+    &["struct", "enum", "trait", "union", "const", "static", "type", "use", "extern"];
+
+/// Walk the token stream tracking brace depth and an `impl`/`mod`
+/// context stack; emit every `fn` with its qualified name, body range,
+/// and test-ness.
+fn scan_items(toks: &[Tok]) -> Vec<FnInfo> {
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    let mut depth = 0i64;
+    // (depth at open, impl type if any, is_test)
+    let mut ctx: Vec<(i64, Option<String>, bool)> = Vec::new();
+    let mut pending_test = false;
+
+    let in_test = |ctx: &[(i64, Option<String>, bool)]| ctx.iter().any(|c| c.2);
+    let cur_impl = |ctx: &[(i64, Option<String>, bool)]| {
+        ctx.iter().rev().find_map(|c| c.1.clone())
+    };
+
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                while ctx.last().is_some_and(|c| c.0 == depth) {
+                    ctx.pop();
+                }
+            } else if t.text == "#" {
+                if let Some((end, (a, b))) = attr_end(toks, i) {
+                    if toks[a..b].iter().any(|k| k.kind == Kind::Ident && k.text == "test") {
+                        pending_test = true;
+                    }
+                    i = end;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Ident {
+            match t.text.as_str() {
+                "impl" => {
+                    let (ty, brace) = impl_type(toks, i);
+                    if brace < toks.len() {
+                        let test = pending_test || in_test(&ctx);
+                        ctx.push((depth, if ty.is_empty() { None } else { Some(ty) }, test));
+                        pending_test = false;
+                        depth += 1;
+                        i = brace + 1;
+                        continue;
+                    }
+                    i += 1;
+                    continue;
+                }
+                "mod" => {
+                    let mut j = i + 1;
+                    while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                        j += 1;
+                    }
+                    if j < toks.len() && toks[j].text == "{" {
+                        let test = pending_test || in_test(&ctx);
+                        ctx.push((depth, None, test));
+                        pending_test = false;
+                        depth += 1;
+                        i = j + 1;
+                        continue;
+                    }
+                    pending_test = false;
+                    i = j + 1;
+                    continue;
+                }
+                "fn" => {
+                    let name = if i + 1 < toks.len() && toks[i + 1].kind == Kind::Ident {
+                        toks[i + 1].text.clone()
+                    } else {
+                        String::new()
+                    };
+                    let mut j = i + 2;
+                    while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                        j += 1;
+                    }
+                    if j < toks.len() && toks[j].text == "{" {
+                        let close = matching_brace(toks, j);
+                        let qname = match cur_impl(&ctx) {
+                            Some(imp) => format!("{imp}::{name}"),
+                            None => name.clone(),
+                        };
+                        fns.push(FnInfo {
+                            name,
+                            qname,
+                            line: t.line,
+                            body: (j + 1, close),
+                            in_test: pending_test || in_test(&ctx),
+                        });
+                        pending_test = false;
+                        depth += 1;
+                        i = j + 1;
+                        continue;
+                    }
+                    pending_test = false;
+                    i = j + 1;
+                    continue;
+                }
+                w if ITEM_KEYWORDS.contains(&w) => {
+                    pending_test = false;
+                    i += 1;
+                    continue;
+                }
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// One arm of a `match`: pattern and body token ranges plus start line.
+pub struct Arm {
+    pub pat: (usize, usize),
+    pub body: (usize, usize),
+    #[allow(dead_code)]
+    pub line: usize,
+}
+
+/// `toks[match_idx]` must be the `match` ident. Returns its arms
+/// (pattern range, body range). `limit` bounds the scan (typically the
+/// enclosing fn body end).
+pub fn match_arms(toks: &[Tok], match_idx: usize, limit: usize) -> Vec<Arm> {
+    let n = limit.min(toks.len());
+    let mut i = match_idx + 1;
+    let mut pd = 0i64;
+    while i < n {
+        let t = toks[i].text.as_str();
+        if t == "(" || t == "[" {
+            pd += 1;
+        } else if t == ")" || t == "]" {
+            pd -= 1;
+        } else if t == "{" && pd == 0 {
+            break;
+        }
+        i += 1;
+    }
+    if i >= n {
+        return Vec::new();
+    }
+    let open_b = i;
+    let close = matching_brace(toks, open_b).min(n);
+    let mut arms = Vec::new();
+    let mut j = open_b + 1;
+    while j < close {
+        let pat_start = j;
+        let mut d = 0i64;
+        while j < close {
+            let t = toks[j].text.as_str();
+            if t == "(" || t == "[" || t == "{" {
+                d += 1;
+            } else if t == ")" || t == "]" || t == "}" {
+                d -= 1;
+            } else if t == "=" && d == 0 && j + 1 < close && toks[j + 1].text == ">" && is_adj(toks, j) {
+                break;
+            }
+            j += 1;
+        }
+        if j >= close {
+            break;
+        }
+        let pat = (pat_start, j);
+        let line = toks[pat_start].line;
+        j += 2; // past =>
+        let body_start = j;
+        let body;
+        if j < close && toks[j].text == "{" {
+            let bclose = matching_brace(toks, j).min(close);
+            body = (body_start, bclose + 1);
+            j = bclose + 1;
+            if j < close && toks[j].text == "," {
+                j += 1;
+            }
+        } else {
+            let mut d = 0i64;
+            while j < close {
+                let t = toks[j].text.as_str();
+                if t == "(" || t == "[" || t == "{" {
+                    d += 1;
+                } else if t == ")" || t == "]" || t == "}" {
+                    d -= 1;
+                } else if t == "," && d == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            body = (body_start, j);
+            if j < close {
+                j += 1;
+            }
+        }
+        arms.push(Arm { pat, body, line });
+    }
+    arms
+}
+
+const CALL_KEYWORDS: &[&str] =
+    &["if", "while", "for", "match", "return", "loop", "unsafe", "else", "move", "in", "as", "box"];
+
+/// `(callee name, token index)` for every `name(`-shaped call in the
+/// token range. Purely name-based: method calls and free fns alike.
+pub fn calls_in(toks: &[Tok], rng: (usize, usize)) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let end = rng.1.min(toks.len());
+    if end == 0 {
+        return out;
+    }
+    for i in rng.0..end.saturating_sub(1) {
+        let t = &toks[i];
+        if t.kind != Kind::Ident || toks[i + 1].text != "(" {
+            continue;
+        }
+        if CALL_KEYWORDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if i > 0 && toks[i - 1].text == "fn" {
+            continue;
+        }
+        out.push((t.text.clone(), i));
+    }
+    out
+}
+
+/// Idents `V` for every `head :: V` path in the range: `(name, index of
+/// the variant token)`.
+pub fn path_variants(toks: &[Tok], rng: (usize, usize), head: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let end = rng.1.min(toks.len());
+    if end < 4 {
+        return out;
+    }
+    for i in rng.0..end - 3 {
+        if toks[i].kind == Kind::Ident
+            && toks[i].text == head
+            && toks[i + 1].text == ":"
+            && toks[i + 2].text == ":"
+            && toks[i + 3].kind == Kind::Ident
+        {
+            out.push((toks[i + 3].text.clone(), i + 3));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> ParsedFile {
+        ParsedFile::parse("test.rs", src)
+    }
+
+    #[test]
+    fn fns_get_impl_qualified_names() {
+        let f = parse(
+            "impl Foo { fn a(&self) {} }\n\
+             impl<T: Ord> Bar<T> for Baz { fn b() { let x = 1; } }\n\
+             fn free() {}\n",
+        );
+        let q: Vec<&str> = f.fns.iter().map(|x| x.qname.as_str()).collect();
+        assert_eq!(q, vec!["Foo::a", "Baz::b", "free"]);
+    }
+
+    #[test]
+    fn where_clause_does_not_shadow_impl_type() {
+        let f = parse("impl<T> Holder<T> where T: Clone { fn g(&self) {} }");
+        assert_eq!(f.fns[0].qname, "Holder::g");
+    }
+
+    #[test]
+    fn test_attrs_and_cfg_test_mods_are_flagged() {
+        let f = parse(
+            "fn real() {}\n\
+             #[test]\nfn unit() {}\n\
+             #[cfg(test)]\nmod tests {\n  fn helper() {}\n  impl Fix { fn h(&self) {} }\n}\n",
+        );
+        let flags: Vec<(String, bool)> =
+            f.fns.iter().map(|x| (x.name.clone(), x.in_test)).collect();
+        assert_eq!(
+            flags,
+            vec![
+                ("real".into(), false),
+                ("unit".into(), true),
+                ("helper".into(), true),
+                ("h".into(), true),
+            ]
+        );
+    }
+
+    #[test]
+    fn attr_does_not_leak_past_non_fn_item() {
+        let f = parse("#[cfg(test)]\nuse foo::bar;\nfn live() {}");
+        assert!(!f.fns[0].in_test);
+    }
+
+    #[test]
+    fn match_arms_patterns_and_bodies() {
+        let f = parse(
+            "fn d(w: Wire) { match w { Wire::A { x } => { one(x); }\n\
+             Wire::B(..) | Wire::C => two(), _ => {} } }",
+        );
+        let fnb = f.fns[0].body;
+        let mi = (fnb.0..fnb.1).find(|&i| f.toks[i].text == "match").unwrap();
+        let arms = match_arms(&f.toks, mi, fnb.1);
+        assert_eq!(arms.len(), 3);
+        let pv: Vec<String> =
+            path_variants(&f.toks, arms[1].pat, "Wire").into_iter().map(|(v, _)| v).collect();
+        assert_eq!(pv, vec!["B", "C"]);
+        let calls: Vec<String> =
+            calls_in(&f.toks, arms[0].body).into_iter().map(|(c, _)| c).collect();
+        assert_eq!(calls, vec!["one"]);
+    }
+
+    #[test]
+    fn marker_same_line_and_contiguous_block_above() {
+        let f = parse(
+            "fn a() {\n\
+             // lock-ok: reason spans\n\
+             // two lines\n\
+             x.lock();\n\
+             y.lock();\n\
+             }\n",
+        );
+        assert!(f.has_marker(4, "lock-ok"), "block directly above");
+        assert!(!f.has_marker(5, "lock-ok"), "blank gap breaks the block");
+        let g = parse("fn a() { x.lock(); } // lock-ok: same line");
+        assert!(g.has_marker(1, "lock-ok"));
+    }
+
+    #[test]
+    fn multiline_block_comment_marker_covers_all_lines() {
+        let f = parse("fn a() {\n/* lock-ok:\n   long reason\n*/\nx.lock();\n}");
+        assert!(f.has_marker(5, "lock-ok"));
+    }
+
+    #[test]
+    fn calls_exclude_keywords_and_defs() {
+        let f = parse("fn a() { if cond() { return helper(1); } match x() {} }");
+        let calls: Vec<String> =
+            calls_in(&f.toks, f.fns[0].body).into_iter().map(|(c, _)| c).collect();
+        assert_eq!(calls, vec!["cond", "helper", "x"]);
+    }
+}
