@@ -20,13 +20,14 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 use wbam::client::{Client, ClientCfg};
-use wbam::coordinator::{one_shard_round_trip_ns, Cluster};
+use wbam::coordinator::{one_shard_round_trip_ns, Cluster, ShardedRuntime};
 use wbam::harness::{run, Net, Proto, RunCfg};
-use wbam::net::{syscalls_observed, TcpTransport, Transport};
+use wbam::net::{syscalls_observed, InProcMesh, TcpTransport, Transport};
+use wbam::obs::{CoreMetrics, Registry};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::{Node, Outbox};
 use wbam::sim::MS;
@@ -258,10 +259,35 @@ fn main() {
     // so the actual speedup is bounded by the host's core count
     println!("\nsharded runtime (real threads, 2 groups x 3 replicas, 64 clients, dest=2, {secs}s):");
     for &s in &[1usize, 4] {
-        let thru = real_cluster_throughput(s, 64, secs);
+        let thru = real_cluster_throughput(s, 64, secs, None);
         println!("  shards={s:<2} {thru:.0} multicasts/s");
         json.push("sharded_runtime_mesh", &format!("shards={s}"), &[("throughput", thru)]);
     }
+
+    // metrics-overhead ablation (EXPERIMENTS.md §Metrics overhead): the
+    // same 1-shard mesh deployment with the full live-observability
+    // pack attached (per-path counters, e2e + stage histograms, HLL
+    // client estimator, flight recorder) and wall-clock client stamping
+    // vs the bare runtime. Acceptance bar: metrics-on throughput within
+    // 3% of metrics-off.
+    println!("\nmetrics-overhead ablation (real threads, 2 groups x 3 replicas, 64 clients, dest=2, {secs}s):");
+    let off = real_cluster_throughput(1, 64, secs, None);
+    let reg = Registry::new();
+    let cm = CoreMetrics::register(&reg);
+    let on = real_cluster_throughput(1, 64, secs, Some(Arc::clone(&cm)));
+    let overhead = (1.0 - on / off) * 100.0;
+    println!("  metrics=off {off:.0} multicasts/s");
+    println!(
+        "  metrics=on  {on:.0} multicasts/s ({} deliveries recorded, {} flight events)",
+        cm.delivered_total(),
+        cm.flight.pushed()
+    );
+    println!(
+        "  => instrumentation overhead: {overhead:+.1}% {}",
+        if overhead <= 3.0 { "(within 3% target)" } else { "(ABOVE 3% target)" }
+    );
+    json.push("metrics_overhead", "off", &[("throughput", off)]);
+    json.push("metrics_overhead", "on", &[("throughput", on), ("overhead_pct", overhead)]);
 
     // three-way transport ablation (EXPERIMENTS.md §Three-way transport
     // ablation): the same closed-loop deployment over real localhost
@@ -435,7 +461,15 @@ fn main() {
 /// [`wbam::coordinator::ShardedRuntime`]: `shards` WbCast instances
 /// behind each of the 6 member endpoints, clients on their own
 /// endpoints, measured over `secs` of wall clock.
-fn real_cluster_throughput(shards: usize, n_clients: u32, secs: u64) -> f64 {
+///
+/// With `obs` set, every endpoint runtime gets the full live-metrics
+/// pack attached and clients wall-clock-stamp their submissions — the
+/// exact production `--metrics-addr` configuration — so the delta
+/// against an `obs = None` run is the instrumentation overhead the
+/// EXPERIMENTS.md ablation pins. Launches the mesh endpoints by hand
+/// (rather than via [`Cluster::launch_hosts`]) because attaching
+/// metrics is a per-runtime, pre-`run` operation.
+fn real_cluster_throughput(shards: usize, n_clients: u32, secs: u64, obs: Option<Arc<CoreMetrics>>) -> f64 {
     let map = ShardMap::new(2, 1, shards);
     let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
     let mut hosts: Vec<Vec<Box<dyn Node>>> = Vec::new();
@@ -450,13 +484,37 @@ fn real_cluster_throughput(shards: usize, n_clients: u32, secs: u64) -> f64 {
     for c in 0..n_clients {
         let pid = Pid(map.first_client_pid().0 + c);
         let s = map.client_shard(pid);
-        let cfg = ClientCfg { dest_groups: 2, resend_after: 2_000_000_000, ..Default::default() };
+        let cfg = ClientCfg {
+            dest_groups: 2,
+            resend_after: 2_000_000_000,
+            stamp: obs.is_some(),
+            ..Default::default()
+        };
         hosts.push(vec![Box::new(Client::new(pid, map.topo(s), cfg, 0xBE5C + c as u64))]);
     }
     let t0 = Instant::now();
-    let cluster = Cluster::launch_hosts(hosts, None);
+    let mesh = InProcMesh::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for ns in hosts {
+        let pids: Vec<Pid> = ns.iter().map(|n| n.pid()).collect();
+        let ep = mesh.endpoint_hosting(&pids);
+        let stop2 = Arc::clone(&stop);
+        let cm = obs.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rt = ShardedRuntime::new(ns, ep);
+            if let Some(cm) = cm {
+                rt.attach_metrics(cm);
+            }
+            rt.run(stop2)
+        }));
+    }
     std::thread::sleep(std::time::Duration::from_secs(secs));
-    let nodes = cluster.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    let mut nodes: Vec<Box<dyn Node>> = Vec::new();
+    for h in handles {
+        nodes.extend(h.join().expect("endpoint thread"));
+    }
     let wall = t0.elapsed().as_secs_f64();
     let mut completed = 0usize;
     for n in &nodes {

@@ -29,11 +29,17 @@ pub struct ClientCfg {
     pub resend_after: u64,
     /// optional think time between requests (0 = pure closed loop)
     pub think_ns: u64,
+    /// stamp each multicast with the client's wall clock
+    /// ([`crate::types::MsgMeta::submit_ns`]) so delivering nodes can
+    /// export end-to-end latency through `/metrics`. Off by default:
+    /// the simulator must stay deterministic, and unstamped messages
+    /// are skipped by the exporter's latency histograms.
+    pub stamp: bool,
 }
 
 impl Default for ClientCfg {
     fn default() -> Self {
-        ClientCfg { dest_groups: 1, payload: 20, max_requests: None, resend_after: 0, think_ns: 0 }
+        ClientCfg { dest_groups: 1, payload: 20, max_requests: None, resend_after: 0, think_ns: 0, stamp: false }
     }
 }
 
@@ -42,6 +48,10 @@ struct Pending {
     dest: GidSet,
     acked: GidSet,
     sent_at: u64,
+    /// wall-clock stamp of the original submit (0 when unstamped);
+    /// resends reuse it so the end-to-end measurement spans from the
+    /// *first* attempt
+    submit_ns: u64,
 }
 
 /// Latency sample recorded by a client: (request id, multicast time,
@@ -83,8 +93,10 @@ impl Client {
         let id = MsgId::new(self.pid.0, self.seq);
         let gidxs = self.rng.sample_indices(self.topo.num_groups(), self.cfg.dest_groups);
         let dest = GidSet::from_iter(gidxs.into_iter().map(|i| Gid(i as u32)));
-        let meta = MsgMeta::new(id, dest, vec![0u8; self.cfg.payload]);
-        self.pending = Some(Pending { id, dest, acked: GidSet::EMPTY, sent_at: now });
+        let mut meta = MsgMeta::new(id, dest, vec![0u8; self.cfg.payload]);
+        let submit_ns = if self.cfg.stamp { crate::obs::wallclock_ns() } else { 0 };
+        meta.submit_ns = submit_ns;
+        self.pending = Some(Pending { id, dest, acked: GidSet::EMPTY, sent_at: now, submit_ns });
         self.multicast_to_leaders(&meta, out);
         if self.cfg.resend_after > 0 {
             out.timer(TimerKind::ClientResend(id), self.cfg.resend_after);
@@ -143,7 +155,8 @@ impl Node for Client {
                 // message recovery (§IV): retransmit to current leader
                 // guesses, and also to all members of not-yet-acked groups
                 // in case our leader guess is stale.
-                let meta = MsgMeta::new(p.id, p.dest, vec![0u8; self.cfg.payload]);
+                let mut meta = MsgMeta::new(p.id, p.dest, vec![0u8; self.cfg.payload]);
+                meta.submit_ns = p.submit_ns; // original stamp, not re-stamped
                 let (dest, acked) = (p.dest, p.acked);
                 self.multicast_to_leaders(&meta, out);
                 for g in dest.iter() {

@@ -5,7 +5,7 @@
 //! TCP transport frames each message as `u32 length ++ bytes`.
 
 use crate::types::wire::{MsgState, PaxosMsg, RsmCmd};
-use crate::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Payload, Phase, Pid, Ts, Wire};
+use crate::types::{Ballot, DeliveryPath, Gid, GidSet, MsgId, MsgMeta, Payload, Phase, Pid, Ts, Wire};
 use std::sync::Arc;
 use thiserror::Error;
 
@@ -150,10 +150,11 @@ pub(crate) fn get_ballot(d: &mut Dec) -> Result<Ballot> {
 fn put_meta(e: &mut Enc, m: &MsgMeta) {
     e.u64(m.id.0);
     e.u64(m.dest.0);
+    e.u64(m.submit_ns);
     e.bytes(&m.payload);
 }
 fn get_meta(d: &mut Dec) -> Result<MsgMeta> {
-    Ok(MsgMeta { id: MsgId(d.u64()?), dest: GidSet(d.u64()?), payload: d.payload()? })
+    Ok(MsgMeta { id: MsgId(d.u64()?), dest: GidSet(d.u64()?), submit_ns: d.u64()?, payload: d.payload()? })
 }
 fn put_phase(e: &mut Enc, p: Phase) {
     e.u8(match p {
@@ -303,12 +304,13 @@ pub fn encode_into(e: &mut Enc, w: &Wire) {
                 put_ballot(e, *b);
             }
         }
-        Wire::Deliver { m, bal, lts, gts } => {
+        Wire::Deliver { m, bal, lts, gts, path } => {
             e.u8(5);
             e.u64(m.0);
             put_ballot(e, *bal);
             put_ts(e, *lts);
             put_ts(e, *gts);
+            e.u8(*path as u8);
         }
         Wire::NewLeader { bal } => {
             e.u8(6);
@@ -421,6 +423,7 @@ fn get_wire(d: &mut Dec, allow_batch: bool) -> Result<Wire> {
             bal: get_ballot(d)?,
             lts: get_ts(d)?,
             gts: get_ts(d)?,
+            path: DeliveryPath::from_u8(d.u8()?),
         },
         6 => Wire::NewLeader { bal: get_ballot(d)? },
         7 => {
@@ -492,6 +495,7 @@ mod tests {
             id: MsgId(r.next_u64()),
             dest: GidSet(r.next_u64() & 0x3FF),
             payload: (0..n).map(|_| r.below(256) as u8).collect::<Vec<u8>>().into(),
+            submit_ns: r.next_u64(),
         }
     }
     fn rand_state(r: &mut Rng) -> MsgState {
@@ -524,7 +528,13 @@ mod tests {
                     bals: (0..n).map(|i| (Gid(i as u32), rand_ballot(r))).collect(),
                 }
             }
-            5 => Wire::Deliver { m: MsgId(r.next_u64()), bal: rand_ballot(r), lts: rand_ts(r), gts: rand_ts(r) },
+            5 => Wire::Deliver {
+                m: MsgId(r.next_u64()),
+                bal: rand_ballot(r),
+                lts: rand_ts(r),
+                gts: rand_ts(r),
+                path: DeliveryPath::from_u8(r.below(4) as u8),
+            },
             6 => Wire::NewLeader { bal: rand_ballot(r) },
             7 => {
                 let n = r.below(5) as usize;

@@ -35,6 +35,7 @@
 //! transports.
 
 use crate::net::{Incoming, Transport, TransportTx};
+use crate::obs::{CoreMetrics, FlightEvent};
 use crate::protocols::{LinkCoalescer, Node, Outbox, TimerKind};
 use crate::storage::Storage;
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -133,6 +134,7 @@ struct ShardWorker {
     epoch: Instant,
     on_deliver: Option<Arc<Mutex<DeliverFn>>>,
     stats: Arc<CoordStats>,
+    obs: Option<Arc<CoreMetrics>>,
     stop: Arc<AtomicBool>,
     halt: Arc<AtomicBool>,
 }
@@ -151,15 +153,22 @@ impl ShardWorker {
     /// Returns the number of inner wires dispatched.
     fn dispatch_wire(&mut self, from: Pid, wire: Wire) -> usize {
         let now = self.now();
+        let me = self.node.pid();
         let n = match wire {
             Wire::Batch(inner) => {
                 let n = inner.len();
                 for w in inner {
+                    if let Some(cm) = &self.obs {
+                        cm.flight.push(FlightEvent::wire_in(now, me, from, &w));
+                    }
                     self.node.on_wire(from, w, now, &mut self.outbox);
                 }
                 n
             }
             w => {
+                if let Some(cm) = &self.obs {
+                    cm.flight.push(FlightEvent::wire_in(now, me, from, &w));
+                }
                 self.node.on_wire(from, w, now, &mut self.outbox);
                 1
             }
@@ -179,15 +188,26 @@ impl ShardWorker {
             let now = self.now();
             // journal records first: appended ahead of this iteration's
             // other effects, committed before anything app-visible
+            if !self.outbox.records.is_empty() {
+                if let Some(cm) = &self.obs {
+                    cm.flight.push(FlightEvent::journal(now, me));
+                }
+            }
             append_records(&mut self.storage, &mut self.outbox);
             if !self.outbox.delivers.is_empty() {
                 // output commit: the delivery callback is app-visible
                 commit_records(&mut self.storage);
+                if let Some(cm) = &self.obs {
+                    for d in &self.outbox.delivers {
+                        cm.on_deliver(d);
+                        cm.flight.push(FlightEvent::deliver(now, me, d.m, d.gts, d.path));
+                    }
+                }
                 if let Some(cb) = &self.on_deliver {
                     let mut f = cb.lock().unwrap();
                     for i in 0..self.outbox.delivers.len() {
-                        let (m, gts) = self.outbox.delivers[i];
-                        f(me, m, gts, now);
+                        let d = self.outbox.delivers[i];
+                        f(me, d.m, d.gts, now);
                     }
                 }
                 self.stats.delivered.fetch_add(self.outbox.delivers.len() as u64, Ordering::Relaxed);
@@ -214,6 +234,9 @@ impl ShardWorker {
                     let _ = tx.send((me, to, wire));
                 } else {
                     self.stats.wires_out.fetch_add(1, Ordering::Relaxed);
+                    if let Some(cm) = &self.obs {
+                        cm.flight.push(FlightEvent::wire_out(now, me, to, &wire));
+                    }
                     self.outgoing.push(((me, to), wire));
                 }
             }
@@ -353,6 +376,9 @@ struct InlineLoop<T: Transport> {
     epoch: Instant,
     on_deliver: Option<Arc<Mutex<DeliverFn>>>,
     stats: Arc<CoordStats>,
+    /// live-observability sink (None: metrics off — the hot path pays
+    /// one branch)
+    obs: Option<Arc<CoreMetrics>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -372,15 +398,22 @@ impl<T: Transport> InlineLoop<T> {
             return 1;
         }
         let now = self.now();
+        let me = self.me;
         let n = match wire {
             Wire::Batch(inner) => {
                 let n = inner.len();
                 for w in inner {
+                    if let Some(cm) = &self.obs {
+                        cm.flight.push(FlightEvent::wire_in(now, me, from, &w));
+                    }
                     self.node.on_wire(from, w, now, &mut self.outbox);
                 }
                 n
             }
             w => {
+                if let Some(cm) = &self.obs {
+                    cm.flight.push(FlightEvent::wire_in(now, me, from, &w));
+                }
                 self.node.on_wire(from, w, now, &mut self.outbox);
                 1
             }
@@ -402,15 +435,26 @@ impl<T: Transport> InlineLoop<T> {
             // cycle's transport frames commit at `flush`; the one
             // pre-commit escape is a >8 MiB link overflowing out of the
             // coalescer mid-drain, which no protocol cycle approaches)
+            if !self.outbox.records.is_empty() {
+                if let Some(cm) = &self.obs {
+                    cm.flight.push(FlightEvent::journal(now, me));
+                }
+            }
             append_records(&mut self.storage, &mut self.outbox);
             if !self.outbox.delivers.is_empty() {
                 // output commit: the delivery callback is app-visible
                 commit_records(&mut self.storage);
+                if let Some(cm) = &self.obs {
+                    for d in &self.outbox.delivers {
+                        cm.on_deliver(d);
+                        cm.flight.push(FlightEvent::deliver(now, me, d.m, d.gts, d.path));
+                    }
+                }
                 if let Some(cb) = &self.on_deliver {
                     let mut f = cb.lock().unwrap();
                     for i in 0..self.outbox.delivers.len() {
-                        let (m, gts) = self.outbox.delivers[i];
-                        f(me, m, gts, now);
+                        let d = self.outbox.delivers[i];
+                        f(me, d.m, d.gts, now);
                     }
                 }
                 self.stats.delivered.fetch_add(self.outbox.delivers.len() as u64, Ordering::Relaxed);
@@ -428,12 +472,16 @@ impl<T: Transport> InlineLoop<T> {
             std::mem::swap(&mut self.outbox.sends, &mut self.scratch);
             let links = &mut self.links;
             let transport = &mut self.transport;
+            let obs = &self.obs;
             for (to, wire) in self.scratch.drain(..) {
                 if to == me {
                     self.stats.self_wires.fetch_add(1, Ordering::Relaxed);
                     self.node.on_wire(me, wire, now, &mut self.outbox);
                 } else {
                     self.stats.wires_out.fetch_add(1, Ordering::Relaxed);
+                    if let Some(cm) = obs {
+                        cm.flight.push(FlightEvent::wire_out(now, me, to, &wire));
+                    }
                     links.push(now, to, wire, &mut |to, frame| transport.send(me, to, frame));
                 }
             }
@@ -534,6 +582,9 @@ pub struct ShardedRuntime<T: Transport> {
     storage: FxHashMap<Pid, Storage>,
     on_deliver: Option<Arc<Mutex<DeliverFn>>>,
     stats: Arc<CoordStats>,
+    /// live-observability sink shared by every hosted shard (None:
+    /// metrics off)
+    obs: Option<Arc<CoreMetrics>>,
     epoch: Instant,
     flush: FlushPolicy,
     force_threaded: bool,
@@ -551,6 +602,7 @@ impl<T: Transport> ShardedRuntime<T> {
             storage: FxHashMap::default(),
             on_deliver: None,
             stats: Arc::new(CoordStats::default()),
+            obs: None,
             epoch: Instant::now(),
             flush: FlushPolicy::default(),
             force_threaded: false,
@@ -584,6 +636,15 @@ impl<T: Transport> ShardedRuntime<T> {
         self.flush = p;
     }
 
+    /// Attach the live-observability sink: every delivered multicast
+    /// records its path split / latency histograms into `cm`, and the
+    /// event loops feed `cm.flight` (wire in/out, journal appends,
+    /// deliveries). Off by default — with no sink attached the hot path
+    /// pays one untaken branch per effect batch.
+    pub fn attach_metrics(&mut self, cm: Arc<CoreMetrics>) {
+        self.obs = Some(cm);
+    }
+
     /// Run a 1-node endpoint through the threaded worker/flusher pipeline
     /// instead of the inline fast path. Only useful for comparing the two
     /// (the `hotpath` bench and the pinned latency test); never faster.
@@ -615,6 +676,7 @@ impl<T: Transport> ShardedRuntime<T> {
                 epoch: self.epoch,
                 on_deliver: self.on_deliver.take(),
                 stats: Arc::clone(&self.stats),
+                obs: self.obs.take(),
                 stop,
             };
             return vec![inline.run()];
@@ -670,6 +732,7 @@ impl<T: Transport> ShardedRuntime<T> {
                 epoch: self.epoch,
                 on_deliver: cb.clone(),
                 stats: Arc::clone(&self.stats),
+                obs: self.obs.clone(),
                 stop: Arc::clone(&stop),
                 halt: Arc::clone(&halt),
             };
@@ -736,6 +799,12 @@ impl<T: Transport> NodeRuntime<T> {
     /// Set the wire-coalescing [`FlushPolicy`].
     pub fn flush_policy(&mut self, p: FlushPolicy) {
         self.inner.flush_policy(p);
+    }
+
+    /// Attach the live-observability sink (see
+    /// [`ShardedRuntime::attach_metrics`]).
+    pub fn attach_metrics(&mut self, cm: Arc<CoreMetrics>) {
+        self.inner.attach_metrics(cm);
     }
 
     /// Run through the threaded pipeline instead of the inline fast path

@@ -321,7 +321,6 @@ impl crate::protocols::Node for ScriptedClient {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::invariants;
 
     #[test]
     fn theory_latencies_match_table_1() {
@@ -351,8 +350,11 @@ mod tests {
             cfg.max_requests = Some(20);
             cfg.record_full = true;
             let mut w = build_world(&cfg);
+            // flight recorder rides along: an invariant failure dumps
+            // the event tail instead of a bare assert
+            w.enable_flight(crate::obs::flight::DEFAULT_CAP);
             w.run_to_quiescence(50_000_000);
-            invariants::assert_correct(&w.trace);
+            w.check_invariants();
             assert_eq!(w.trace.completions.len(), 160, "{}", proto.name());
         }
     }
@@ -363,8 +365,9 @@ mod tests {
         cfg.max_requests = Some(25);
         cfg.record_full = true;
         let mut w = build_world(&cfg);
+        w.enable_flight(crate::obs::flight::DEFAULT_CAP);
         w.run_to_quiescence(10_000_000);
-        invariants::assert_correct(&w.trace);
+        w.check_invariants();
         assert_eq!(w.trace.completions.len(), 150);
     }
 
@@ -391,8 +394,9 @@ mod tests {
         cfg.max_requests = Some(10);
         cfg.record_full = true;
         let mut w = build_world(&cfg);
+        w.enable_flight(crate::obs::flight::DEFAULT_CAP);
         w.run_to_quiescence(50_000_000);
-        invariants::assert_correct_sharded(&w.trace);
+        w.check_invariants();
         // all 8 clients (2 per shard) completed their 10 requests
         assert_eq!(w.trace.completions.len(), 80);
     }

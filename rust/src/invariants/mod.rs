@@ -227,6 +227,37 @@ pub fn assert_correct_sharded(trace: &Trace) {
     }
 }
 
+/// Like [`assert_correct`] / [`assert_correct_sharded`] (picked by the
+/// trace's shard count), but when a [`FlightRecorder`] rode along
+/// ([`crate::sim::World::enable_flight`]) its tail is dumped to stderr
+/// *before* the panic propagates — a failed invariant arrives with the
+/// wire/journal/delivery history that led to it instead of a bare
+/// assertion message.
+// stderr by contract: this runs mid-panic in test harnesses, where the
+// log capture is already unwinding (same audited exception as
+// `WbNode::debug_dump`; see the crate-root lint note).
+#[allow(clippy::print_stderr)]
+pub fn assert_correct_with_flight(trace: &Trace, flight: Option<&crate::obs::FlightRecorder>) {
+    let checks = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if trace.shards() > 1 {
+            assert_correct_sharded(trace);
+        } else {
+            assert_correct(trace);
+        }
+    }));
+    if let Err(cause) = checks {
+        if let Some(fl) = flight {
+            eprintln!(
+                "=== invariant failure: flight recorder tail ({} of {} events) ===\n{}",
+                fl.len(),
+                fl.pushed(),
+                fl.render()
+            );
+        }
+        std::panic::resume_unwind(cause);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

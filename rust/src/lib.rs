@@ -111,6 +111,7 @@ pub mod harness;
 pub mod invariants;
 pub mod lss;
 pub mod net;
+pub mod obs;
 pub mod paxos;
 pub mod protocols;
 pub mod runtime;

@@ -7,9 +7,10 @@
 //! wbam table                                   # §V latency table (T-lat)
 //! wbam serve --pid 0 --config cluster.toml [--shards 4]   # TCP member endpoint
 //!            [--data-dir DIR] [--sync always|never|interval|interval:<us>]
-//!            [--transport tcp|epoll|uring]
+//!            [--transport tcp|epoll|uring] [--metrics-addr 127.0.0.1:9464]
+//!            [--stats-json]
 //! wbam client --pid 30 --config cluster.toml --dest 2 --requests 100 [--shards 4]
-//!            [--transport tcp|epoll|uring]
+//!            [--transport tcp|epoll|uring] [--stamp]
 //! wbam engine-check                            # load + self-test XLA artifacts
 //! ```
 //!
@@ -30,8 +31,20 @@
 //! default `interval` = at most one fsync per 5 ms). A killed `serve`
 //! restarted with the same `--data-dir` replays log + snapshot and
 //! rejoins its group through the recovery protocol. Type `quit` (or
-//! `q`) on stdin to stop cleanly; the final `CoordStats`/`NetStats`
-//! counter summary prints on shutdown.
+//! `q`) on stdin to stop cleanly; the final `CoordStats`/`NetStats`/
+//! storage counter summary prints on shutdown (add `--stats-json` for a
+//! machine-readable copy).
+//!
+//! Live observability (`serve`): `--metrics-addr HOST:PORT` starts the
+//! dependency-free exposition listener (`GET /metrics` in Prometheus
+//! text format, `GET /debug/flight` for the protocol flight recorder;
+//! SIGUSR1 dumps the flight ring into the log) and attaches the
+//! [`CoreMetrics`](wbam::obs::CoreMetrics) sink to the runtime: per-path
+//! delivery counters (fast 3δ / concurrent 5δ / recovery), end-to-end
+//! and per-stage latency histograms, an HLL distinct-client estimator,
+//! and every `CoordStats`/`NetStats`/`StorageStats` counter. End-to-end
+//! latency needs clients started with `--stamp` (wall-clock submit
+//! stamps on each multicast). See `ARCHITECTURE.md` §Observability.
 //!
 //! Adaptive wire coalescing (`sim`, `serve` and `client` accept all
 //! three; the default flushes one frame per link per event-loop cycle):
@@ -60,6 +73,10 @@ use wbam::config::{Args, Config};
 use wbam::coordinator::{NodeRuntime, ShardedRuntime};
 use wbam::harness::{run, Net, Proto, RunCfg};
 use wbam::net::{TcpTransport, Transport};
+use wbam::obs::{
+    install_sigusr1, register_coord_stats, register_net_stats, register_storage_stats, CoreMetrics,
+    MetricsServer, Registry, StatsReport,
+};
 use wbam::protocols::wbcast::{WbConfig, WbNode};
 use wbam::protocols::Node;
 use wbam::runtime::{spawn_engine, CommitBackend, NativeBackend, XlaBackend};
@@ -266,33 +283,44 @@ fn cmd_serve(a: &Args) -> Result<()> {
         });
     }
     let mut rt = ShardedRuntime::new(nodes, transport);
+    let store_stats: Vec<_> = stores.iter().map(|(_, s)| s.stats()).collect();
     for (p, s) in stores {
         rt.attach_storage(p, s);
     }
     rt.flush_policy(parse_flush(a));
     let stats = rt.stats();
+    // live observability: registry + exposition listener + flight dump
+    let mut obs_handles = None;
+    if let Some(maddr) = a.opt("metrics-addr") {
+        let reg = Arc::new(Registry::new());
+        let cm = CoreMetrics::register(&reg);
+        register_coord_stats(&reg, &stats);
+        register_net_stats(&reg, &net);
+        register_storage_stats(&reg, store_stats.clone());
+        if !install_sigusr1() {
+            log::warn!("could not install the SIGUSR1 flight-dump handler");
+        }
+        let srv = MetricsServer::serve(maddr, Arc::clone(&reg), Some(Arc::clone(&cm.flight)))
+            .with_context(|| format!("--metrics-addr {maddr:?}"))?;
+        println!("  metrics: http://{}/metrics  (also /debug/flight; SIGUSR1 dumps the flight ring)", srv.addr);
+        rt.attach_metrics(Arc::clone(&cm));
+        obs_handles = Some((srv, cm));
+    }
     rt.on_deliver(Box::new(|pid, m, gts, _| {
         log::info!("{pid:?} deliver {m:?} gts {gts:?}");
     }));
     rt.run(stop);
     // final counter summary (storage WALs fsync as the runtime drops)
-    use std::sync::atomic::Ordering::Relaxed;
+    let mut report = StatsReport::new(&stats, &net).with_storage(&store_stats);
+    if let Some((_, cm)) = &obs_handles {
+        report = report.with_core(cm);
+    }
     println!("endpoint {pid:?} shut down:");
-    println!(
-        "  coord: wires_in={} wires_out={} self_wires={} delivered={} dropped_frames={}",
-        stats.wires_in.load(Relaxed),
-        stats.wires_out.load(Relaxed),
-        stats.self_wires.load(Relaxed),
-        stats.delivered.load(Relaxed),
-        stats.dropped_frames.load(Relaxed),
-    );
-    println!(
-        "  net:   dropped_frames={} probes_alive={} probes_dead={} transport_fallbacks={}",
-        net.dropped_frames.load(Relaxed),
-        net.probes_alive.load(Relaxed),
-        net.probes_dead.load(Relaxed),
-        net.transport_fallbacks.load(Relaxed),
-    );
+    print!("{report}");
+    if a.flag("stats-json") {
+        println!("{}", report.to_json());
+    }
+    drop(obs_handles); // joins the listener thread
     Ok(())
 }
 
@@ -308,6 +336,9 @@ fn cmd_client(a: &Args) -> Result<()> {
         dest_groups: a.usize_opt("dest", 1),
         max_requests: Some(requests),
         resend_after: 2_000 * MS,
+        // --stamp: wall-clock submit stamps for the servers' end-to-end
+        // latency exporter (off by default; adds 8 real bytes per wire)
+        stamp: a.flag("stamp"),
         ..Default::default()
     };
     let node = Box::new(Client::new(pid, topo, ccfg, a.u64_opt("seed", 7)));

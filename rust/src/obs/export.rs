@@ -1,0 +1,149 @@
+//! Bridges from the pre-existing stats structs to the [`Registry`]:
+//! every public `AtomicU64` field of
+//! [`CoordStats`](crate::coordinator::CoordStats),
+//! [`NetStats`](crate::net::NetStats) and
+//! [`StorageStats`](crate::storage::StorageStats) is registered as a
+//! scrape-time counter closure over the shared `Arc` — no change to the
+//! owning structs, no extra hot-path cost.
+//!
+//! Coverage is lint-enforced: `cargo xtask lint` parses the three struct
+//! definitions and fails if any public counter field's name does not
+//! appear in this file, so adding a stats field without exporting it
+//! breaks the build, not the dashboard.
+
+use super::Registry;
+use crate::coordinator::CoordStats;
+use crate::net::NetStats;
+use crate::storage::StorageStats;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Export every [`CoordStats`] field under `wbam_coord_*`.
+pub fn register_coord_stats(reg: &Registry, stats: &Arc<CoordStats>) {
+    let s = stats.clone();
+    reg.counter_fn("wbam_coord_wires_in_total", "Protocol wires fed into local nodes", vec![], move || {
+        s.wires_in.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_coord_wires_out_total", "Wires handed to the transport flush", vec![], move || {
+        s.wires_out.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_coord_self_wires_total", "Wires routed in-process between hosted pids", vec![], move || {
+        s.self_wires.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_coord_delivered_total", "Local deliveries drained from node outboxes", vec![], move || {
+        s.delivered.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_coord_dropped_frames_total", "Incoming frames addressed to an unhosted pid", vec![], move || {
+        s.dropped_frames.load(Ordering::Relaxed)
+    });
+}
+
+/// Export every [`NetStats`] field under `wbam_net_*`.
+pub fn register_net_stats(reg: &Registry, stats: &Arc<NetStats>) {
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_dropped_frames_total", "Frames observably lost on send or decode", vec![], move || {
+        s.dropped_frames.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_probes_alive_total", "Idle-probe verdicts: connection still healthy", vec![], move || {
+        s.probes_alive.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_probes_dead_total", "Dead-link verdicts on cached connections", vec![], move || {
+        s.probes_dead.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_reconnects_attempted_total", "Re-establishment attempts after a dead link", vec![], move || {
+        s.reconnects_attempted.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_reconnects_succeeded_total", "Reconnect attempts that produced a working connection", vec![], move || {
+        s.reconnects_succeeded.load(Ordering::Relaxed)
+    });
+    let s = stats.clone();
+    reg.counter_fn("wbam_net_transport_fallbacks_total", "Capability fallbacks at transport startup", vec![], move || {
+        s.transport_fallbacks.load(Ordering::Relaxed)
+    });
+}
+
+/// Export every [`StorageStats`] field under `wbam_storage_*`, summed
+/// across the endpoint's hosted shards (one `Storage` per pid).
+pub fn register_storage_stats(reg: &Registry, shards: Vec<Arc<StorageStats>>) {
+    let shards = Arc::new(shards);
+    let sum = |shards: &Arc<Vec<Arc<StorageStats>>>, f: fn(&StorageStats) -> u64| {
+        let shards = shards.clone();
+        move || shards.iter().map(|s| f(s)).sum()
+    };
+    reg.counter_fn(
+        "wbam_storage_records_appended_total",
+        "Journal records appended across hosted shards",
+        vec![],
+        sum(&shards, |s| s.records_appended.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_bytes_appended_total",
+        "Journal payload bytes appended across hosted shards",
+        vec![],
+        sum(&shards, |s| s.bytes_appended.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_commits_total",
+        "Group-commit flushes across hosted shards",
+        vec![],
+        sum(&shards, |s| s.commits.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_fsyncs_total",
+        "Durability syncs (data + rotation) across hosted shards",
+        vec![],
+        sum(&shards, |s| s.fsyncs.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_rotations_total",
+        "Journal segment rotations across hosted shards",
+        vec![],
+        sum(&shards, |s| s.rotations.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_snapshots_written_total",
+        "Snapshots written across hosted shards",
+        vec![],
+        sum(&shards, |s| s.snapshots_written.load(Ordering::Relaxed)),
+    );
+    reg.counter_fn(
+        "wbam_storage_poisoned_total",
+        "Storages that hit an unrecoverable write error",
+        vec![],
+        sum(&shards, |s| s.poisoned.load(Ordering::Relaxed)),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exported_fields_appear_in_the_exposition() {
+        let reg = Registry::new();
+        let cs = Arc::new(CoordStats::default());
+        cs.wires_in.fetch_add(7, Ordering::Relaxed);
+        register_coord_stats(&reg, &cs);
+        let ns = Arc::new(NetStats::default());
+        ns.reconnects_attempted.fetch_add(2, Ordering::Relaxed);
+        register_net_stats(&reg, &ns);
+        let st1 = Arc::new(StorageStats::default());
+        let st2 = Arc::new(StorageStats::default());
+        st1.fsyncs.fetch_add(3, Ordering::Relaxed);
+        st2.fsyncs.fetch_add(4, Ordering::Relaxed);
+        register_storage_stats(&reg, vec![st1, st2]);
+        let text = reg.render();
+        assert!(text.contains("wbam_coord_wires_in_total 7"), "{text}");
+        assert!(text.contains("wbam_net_reconnects_attempted_total 2"), "{text}");
+        assert!(text.contains("wbam_storage_fsyncs_total 7"), "{text}");
+        assert!(text.contains("# TYPE wbam_coord_delivered_total counter"), "{text}");
+    }
+}

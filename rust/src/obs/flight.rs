@@ -1,0 +1,258 @@
+//! The protocol flight recorder: a fixed-capacity ring of recent
+//! protocol events (wire in/out with their tags, ballot-changing
+//! recovery traffic, journal appends, deliveries with their white-box
+//! path). Bounded by construction — a misbehaving run can never grow it
+//! — and cheap enough to leave on in production: one short mutex hold
+//! per event, no allocation after construction.
+//!
+//! Dump surfaces: `GET /debug/flight` on the metrics listener, SIGUSR1
+//! (rendered to the log), and automatically when a sim-harness invariant
+//! check fails ([`crate::invariants`]) — the assert message becomes a
+//! replayable event tail.
+
+use crate::types::{DeliveryPath, MsgId, Pid, Ts, Wire};
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Default ring capacity (events), sized to hold the last few thousand
+/// protocol steps — enough to see a full recovery round.
+pub const DEFAULT_CAP: usize = 4096;
+
+/// Event class recorded in the ring.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FlightKind {
+    /// A protocol message arrived (`peer` = sender).
+    WireIn,
+    /// A protocol message was emitted (`peer` = destination).
+    WireOut,
+    /// A ballot-carrying recovery message (NEWLEADER / NEW_STATE family)
+    /// moved — the ballot lives in `a`.
+    BallotChange,
+    /// Journal records reached the WAL's group-commit point.
+    Journal,
+    /// A local delivery; `a` = message id, `b` = gts time, label = path.
+    Deliver,
+}
+
+/// One recorded event. All-`Copy`, fixed-size; `label` is a `'static`
+/// tag (wire tag or delivery path), so the ring never owns heap data.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    /// Runtime-local (or sim-virtual) nanosecond timestamp.
+    pub at: u64,
+    /// The node recording the event.
+    pub pid: Pid,
+    /// Sender (WireIn), destination (WireOut), or the recording node.
+    pub peer: Pid,
+    pub kind: FlightKind,
+    /// Wire tag ([`Wire::tag`]) or delivery-path label.
+    pub label: &'static str,
+    /// Kind-specific payload (message id, encoded ballot, ...).
+    pub a: u64,
+    /// Kind-specific payload (gts time, ...).
+    pub b: u64,
+}
+
+/// True for wire variants whose movement marks a ballot change.
+fn is_ballot_wire(w: &Wire) -> bool {
+    matches!(w, Wire::NewLeader { .. } | Wire::NewLeaderAck { .. } | Wire::NewState { .. } | Wire::NewStateAck { .. })
+}
+
+fn wire_detail(w: &Wire) -> (u64, u64) {
+    match w {
+        Wire::Multicast { meta } => (meta.id.0, 0),
+        Wire::Accept { meta, bal, .. } => (meta.id.0, ballot_bits(bal.n, bal.p.0)),
+        Wire::AcceptAck { m, .. } => (m.0, 0),
+        Wire::Deliver { m, gts, .. } => (m.0, gts.time()),
+        Wire::Delivered { m, gts, .. } => (m.0, gts.time()),
+        Wire::NewLeader { bal } | Wire::NewStateAck { bal } | Wire::Heartbeat { bal } => (ballot_bits(bal.n, bal.p.0), 0),
+        Wire::NewLeaderAck { bal, clock, .. } | Wire::NewState { bal, clock, .. } => (ballot_bits(bal.n, bal.p.0), *clock),
+        _ => (0, 0),
+    }
+}
+
+fn ballot_bits(n: u32, p: u32) -> u64 {
+    ((n as u64) << 32) | p as u64
+}
+
+impl FlightEvent {
+    /// A message arriving at `pid` from `from`.
+    pub fn wire_in(at: u64, pid: Pid, from: Pid, w: &Wire) -> Self {
+        let (a, b) = wire_detail(w);
+        let kind = if is_ballot_wire(w) { FlightKind::BallotChange } else { FlightKind::WireIn };
+        FlightEvent { at, pid, peer: from, kind, label: w.tag(), a, b }
+    }
+
+    /// A message leaving `pid` toward `to`.
+    pub fn wire_out(at: u64, pid: Pid, to: Pid, w: &Wire) -> Self {
+        let (a, b) = wire_detail(w);
+        let kind = if is_ballot_wire(w) { FlightKind::BallotChange } else { FlightKind::WireOut };
+        FlightEvent { at, pid, peer: to, kind, label: w.tag(), a, b }
+    }
+
+    /// Journal records committed at `pid`.
+    pub fn journal(at: u64, pid: Pid) -> Self {
+        FlightEvent { at, pid, peer: pid, kind: FlightKind::Journal, label: "JOURNAL", a: 0, b: 0 }
+    }
+
+    /// A local delivery at `pid`.
+    pub fn deliver(at: u64, pid: Pid, m: MsgId, gts: Ts, path: DeliveryPath) -> Self {
+        FlightEvent { at, pid, peer: pid, kind: FlightKind::Deliver, label: path.as_str(), a: m.0, b: gts.time() }
+    }
+}
+
+struct Ring {
+    buf: Vec<FlightEvent>,
+    /// fixed capacity (not `buf.capacity()`, which may over-allocate)
+    cap: usize,
+    /// next write slot
+    head: usize,
+    /// live events (saturates at capacity)
+    len: usize,
+    /// total pushes ever (so dumps report how much history was shed)
+    pushed: u64,
+}
+
+/// The bounded recorder. One per node/endpoint; shared by `Arc`.
+pub struct FlightRecorder {
+    ring: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder {
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(cap), cap, head: 0, len: 0, pushed: 0 }),
+        }
+    }
+
+    /// Record one event, evicting the oldest once full.
+    pub fn push(&self, ev: FlightEvent) {
+        let mut r = self.ring.lock().expect("flight ring poisoned");
+        let cap = r.cap;
+        if r.buf.len() < cap {
+            r.buf.push(ev);
+            r.len += 1;
+        } else {
+            let head = r.head;
+            r.buf[head] = ev;
+        }
+        r.head = (r.head + 1) % cap;
+        r.pushed += 1;
+    }
+
+    /// Live events, oldest first.
+    pub fn dump(&self) -> Vec<FlightEvent> {
+        let r = self.ring.lock().expect("flight ring poisoned");
+        let cap = r.cap;
+        let mut out = Vec::with_capacity(r.len);
+        if r.buf.len() < cap {
+            out.extend_from_slice(&r.buf);
+        } else {
+            out.extend_from_slice(&r.buf[r.head..]);
+            out.extend_from_slice(&r.buf[..r.head]);
+        }
+        out
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("flight ring poisoned").len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever pushed (dumps report `pushed - len` shed).
+    pub fn pushed(&self) -> u64 {
+        self.ring.lock().expect("flight ring poisoned").pushed
+    }
+
+    /// One-line-per-event text rendering (the `/debug/flight` body and
+    /// the SIGUSR1 / invariant-failure dump).
+    pub fn render(&self) -> String {
+        let events = self.dump();
+        let pushed = self.pushed();
+        let mut s = String::with_capacity(events.len() * 64 + 64);
+        let _ = writeln!(s, "# flight recorder: {} events held, {} recorded total", events.len(), pushed);
+        for e in &events {
+            let _ = writeln!(
+                s,
+                "{:>14} p{:<4} {:12} {:14} peer=p{} a={:#x} b={}",
+                e.at,
+                e.pid.0,
+                format!("{:?}", e.kind),
+                e.label,
+                e.peer.0,
+                e.a,
+                e.b
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Ballot, Gid};
+
+    fn ev(i: u64) -> FlightEvent {
+        FlightEvent::deliver(i, Pid(1), MsgId::new(1, i as u32), Ts::new(i, Gid(0)), DeliveryPath::Fast)
+    }
+
+    #[test]
+    fn ring_holds_everything_below_capacity() {
+        let fl = FlightRecorder::new(8);
+        for i in 0..5 {
+            fl.push(ev(i));
+        }
+        let d = fl.dump();
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.iter().map(|e| e.at).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(fl.pushed(), 5);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_tail_in_order() {
+        let fl = FlightRecorder::new(4);
+        for i in 0..11 {
+            fl.push(ev(i));
+        }
+        let d = fl.dump();
+        assert_eq!(d.len(), 4, "bounded at capacity");
+        // oldest-first tail: 7, 8, 9, 10
+        assert_eq!(d.iter().map(|e| e.at).collect::<Vec<_>>(), vec![7, 8, 9, 10]);
+        assert_eq!(fl.pushed(), 11);
+        // keep wrapping: ordering holds at every phase offset
+        for i in 11..17 {
+            fl.push(ev(i));
+        }
+        let d = fl.dump();
+        assert_eq!(d.iter().map(|e| e.at).collect::<Vec<_>>(), vec![13, 14, 15, 16]);
+    }
+
+    #[test]
+    fn ballot_wires_classify_as_ballot_changes() {
+        let w = Wire::NewLeader { bal: Ballot::new(7, Pid(2)) };
+        let e = FlightEvent::wire_in(5, Pid(1), Pid(2), &w);
+        assert_eq!(e.kind, FlightKind::BallotChange);
+        assert_eq!(e.label, "NEWLEADER");
+        assert_eq!(e.a, (7u64 << 32) | 2);
+        let hb = Wire::Heartbeat { bal: Ballot::new(1, Pid(0)) };
+        assert_eq!(FlightEvent::wire_out(5, Pid(1), Pid(3), &hb).kind, FlightKind::WireOut);
+    }
+
+    #[test]
+    fn render_mentions_capacity_and_events() {
+        let fl = FlightRecorder::new(2);
+        fl.push(ev(1));
+        fl.push(ev(2));
+        fl.push(ev(3));
+        let text = fl.render();
+        assert!(text.contains("2 events held, 3 recorded total"), "{text}");
+        assert!(text.contains("fast"), "{text}");
+    }
+}

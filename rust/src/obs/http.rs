@@ -1,0 +1,246 @@
+//! Tiny dependency-free HTTP/1.1 exposition listener.
+//!
+//! One detached thread, std TCP sockets, a hand-written request-line
+//! parser, and a raw-syscall signal shim (glibc symbol, no `libc` crate
+//! — the same no-deps discipline as the epoll/uring transports'
+//! `mod sys`). Serves exactly two routes:
+//!
+//! * `GET /metrics` — Prometheus text exposition from the [`Registry`].
+//! * `GET /debug/flight` — the flight-recorder tail as text.
+//!
+//! SIGUSR1 renders the flight recorder into the log from the listener
+//! thread: the signal handler itself only stores one atomic flag (the
+//! only async-signal-safe thing to do), and the accept loop — which
+//! polls with a short timeout — picks the flag up.
+
+use super::{FlightRecorder, Registry};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Raw signal shim (glibc symbol; the offline image has no `libc`
+/// crate). Only what the dump trigger needs: installing a SIGUSR1
+/// handler, which std does not expose.
+mod sys {
+    /// Linux SIGUSR1.
+    pub const SIGUSR1: i32 = 10;
+
+    extern "C" {
+        /// glibc `signal(2)` wrapper (BSD semantics: the handler stays
+        /// installed after delivery).
+        pub fn signal(signum: i32, handler: usize) -> usize;
+    }
+}
+
+/// Set by the SIGUSR1 handler, drained by the listener thread.
+static USR1_PENDING: AtomicBool = AtomicBool::new(false);
+
+/// The installed handler: a single atomic store is async-signal-safe;
+/// everything else (locking the flight ring, formatting, logging)
+/// happens later on the listener thread.
+extern "C" fn on_sigusr1(_sig: i32) {
+    USR1_PENDING.store(true, Ordering::Relaxed);
+}
+
+/// Install the SIGUSR1 → flight-dump trigger (idempotent). Returns
+/// whether installation succeeded.
+pub fn install_sigusr1() -> bool {
+    // SAFETY: passing a valid `extern "C" fn(i32)` as the handler for a
+    // valid signal number; `signal` itself touches no caller memory.
+    // SIG_ERR is usize::MAX (-1) on failure.
+    let prev = unsafe { sys::signal(sys::SIGUSR1, on_sigusr1 as usize) };
+    prev != usize::MAX
+}
+
+/// How long the accept loop sleeps between polls of the stop flag, the
+/// SIGUSR1 flag and the (nonblocking) listener.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection read/write timeout: a stuck scraper cannot wedge the
+/// listener thread for long.
+const CONN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A running metrics listener. Dropping it (or calling
+/// [`MetricsServer::stop`]) shuts the thread down.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// The bound address (useful when the caller asked for port 0).
+    pub addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks a free port) and
+    /// serve `registry` — plus `flight`, when given, under
+    /// `/debug/flight` and on SIGUSR1.
+    pub fn serve(addr: &str, registry: Arc<Registry>, flight: Option<Arc<FlightRecorder>>) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new().name("wbam-metrics".into()).spawn(move || {
+            accept_loop(listener, registry, flight, stop2);
+        })?;
+        Ok(MetricsServer { stop, handle: Some(handle), addr: bound })
+    }
+
+    /// Stop the listener thread and join it.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: Arc<Registry>, flight: Option<Arc<FlightRecorder>>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        if USR1_PENDING.swap(false, Ordering::Relaxed) {
+            if let Some(fl) = &flight {
+                log::info!("SIGUSR1 flight dump:\n{}", fl.render());
+            } else {
+                log::info!("SIGUSR1 received but no flight recorder attached");
+            }
+        }
+        match listener.accept() {
+            Ok((conn, _)) => {
+                if let Err(e) = handle_conn(conn, &registry, flight.as_deref()) {
+                    log::debug!("metrics connection error: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                log::warn!("metrics accept error: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+/// Read one request, answer it, close. Keep-alive is deliberately not
+/// offered (`Connection: close`): scrapes are cheap and the loop serves
+/// one connection at a time.
+fn handle_conn(mut conn: TcpStream, registry: &Registry, flight: Option<&FlightRecorder>) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(CONN_TIMEOUT))?;
+    conn.set_write_timeout(Some(CONN_TIMEOUT))?;
+    conn.set_nonblocking(false)?;
+    let mut buf = [0u8; 2048];
+    let mut used = 0;
+    // read until the header terminator; request bodies are not supported
+    loop {
+        if used == buf.len() {
+            return respond(&mut conn, 431, "text/plain", "header too large\n");
+        }
+        let n = conn.read(&mut buf[used..])?;
+        if n == 0 {
+            return Ok(()); // peer went away
+        }
+        used += n;
+        if buf[..used].windows(4).any(|w| w == b"\r\n\r\n") || buf[..used].windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf[..used]);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut conn, 405, "text/plain", "method not allowed\n");
+    }
+    match path {
+        "/metrics" => {
+            let body = registry.render();
+            respond(&mut conn, 200, "text/plain; version=0.0.4", &body)
+        }
+        "/debug/flight" => match flight {
+            Some(fl) => respond(&mut conn, 200, "text/plain", &fl.render()),
+            None => respond(&mut conn, 404, "text/plain", "no flight recorder attached\n"),
+        },
+        _ => respond(&mut conn, 404, "text/plain", "not found (try /metrics or /debug/flight)\n"),
+    }
+}
+
+fn respond(conn: &mut TcpStream, code: u16, ctype: &str, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        431 => "Request Header Fields Too Large",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Minimal scrape client (shared with the e2e tests' approach): one
+    /// GET, read to EOF, split head from body.
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").expect("write");
+        let mut out = String::new();
+        conn.read_to_string(&mut out).expect("read");
+        let code: u16 = out.split_whitespace().nth(1).expect("status").parse().expect("code");
+        let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (code, body)
+    }
+
+    #[test]
+    fn serves_metrics_and_flight_routes() {
+        let reg = Arc::new(Registry::new());
+        let c: Arc<AtomicU64> = reg.counter("wbam_http_test_total", "t", vec![]);
+        c.fetch_add(5, Ordering::Relaxed);
+        let fl = Arc::new(FlightRecorder::new(8));
+        fl.push(crate::obs::FlightEvent::journal(1, crate::types::Pid(0)));
+        let mut srv = MetricsServer::serve("127.0.0.1:0", reg, Some(fl)).expect("bind");
+        let (code, body) = get(srv.addr, "/metrics");
+        assert_eq!(code, 200);
+        assert!(body.contains("wbam_http_test_total 5"), "{body}");
+        let (code, body) = get(srv.addr, "/debug/flight");
+        assert_eq!(code, 200);
+        assert!(body.contains("JOURNAL"), "{body}");
+        let (code, _) = get(srv.addr, "/nope");
+        assert_eq!(code, 404);
+        srv.stop();
+    }
+
+    #[test]
+    fn sigusr1_handler_installs() {
+        assert!(install_sigusr1());
+        // raising the signal must not kill the process, only set the flag
+        // SAFETY: raising a signal we just installed a handler for
+        unsafe {
+            extern "C" {
+                fn raise(sig: i32) -> i32;
+            }
+            raise(sys::SIGUSR1);
+        }
+        // the handler may run asynchronously; give it a moment
+        for _ in 0..100 {
+            if USR1_PENDING.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(USR1_PENDING.swap(false, Ordering::Relaxed), "handler must set the flag");
+    }
+}

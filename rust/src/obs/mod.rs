@@ -1,0 +1,430 @@
+//! Live observability: a dependency-free metrics registry with
+//! Prometheus text exposition, white-box delivery-path accounting, an
+//! HLL distinct-client estimator and a bounded protocol flight recorder.
+//!
+//! Design (ARCHITECTURE.md §Observability):
+//!
+//! * [`Registry`] — named + labeled metrics. Counters are plain
+//!   `Arc<AtomicU64>` handles the hot path bumps directly; gauges are
+//!   closures evaluated at scrape time (which is how the pre-existing
+//!   [`CoordStats`](crate::coordinator::CoordStats) /
+//!   [`NetStats`](crate::net::NetStats) / storage counters export
+//!   without changing their types — see [`export`]); histograms are
+//!   shard-striped [`crate::stats::Histogram`] wrappers ([`SharedHist`])
+//!   rendered as summary quantiles over the *interval* since the
+//!   previous scrape.
+//! * [`CoreMetrics`] — the protocol-core instrument pack: per-path
+//!   delivery counters (fast 3δ / concurrent 5δ / recovery — the
+//!   white-box split a black-box implementation cannot report),
+//!   end-to-end latency, per-stage waits and the distinct-client HLL.
+//!   Fed from the runtimes' delivery drain via
+//!   [`DeliverEffect`](crate::protocols::DeliverEffect) — all `Copy`
+//!   data, no hot-path allocation.
+//! * [`http`] — a tiny HTTP/1.1 listener (std sockets + a raw-syscall
+//!   signal shim, same no-external-deps discipline as the epoll/uring
+//!   transports) serving `GET /metrics` and `GET /debug/flight`, with a
+//!   SIGUSR1 handler that dumps the flight recorder to the log.
+//! * [`flight`] — the per-node bounded ring of recent protocol events.
+//! * [`hll`] — the HyperLogLog estimator behind
+//!   `wbam_distinct_clients`.
+
+pub mod export;
+pub mod flight;
+pub mod hll;
+pub mod http;
+pub mod report;
+
+pub use export::{register_coord_stats, register_net_stats, register_storage_stats};
+pub use flight::{FlightEvent, FlightKind, FlightRecorder};
+pub use hll::Hll;
+pub use http::MetricsServer;
+pub use report::StatsReport;
+
+use crate::protocols::DeliverEffect;
+use crate::stats::Histogram;
+use crate::types::DeliveryPath;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Wall-clock nanoseconds since the Unix epoch. This is the one clock
+/// domain shared by clients and servers (each runtime's internal `now`
+/// is epoch-relative and incomparable across endpoints), so it is what
+/// [`crate::types::MsgMeta::submit_ns`] stamps and what end-to-end
+/// latency is measured against.
+pub fn wallclock_ns() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+/// Number of lock stripes in a [`SharedHist`]; recording threads spread
+/// across them (per-thread stripe index), so concurrent shards rarely
+/// contend on the same mutex.
+const HIST_SHARDS: usize = 8;
+
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each recording thread picks one stripe for life.
+    static STRIPE: usize = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A shard-striped [`Histogram`] behind `Arc`: `record` locks only the
+/// calling thread's stripe, cumulative count/sum stay lock-free, and
+/// [`SharedHist::take_window`] drains every stripe into one interval
+/// histogram for the exporter (interval — not lifetime — percentiles).
+pub struct SharedHist {
+    stripes: Vec<Mutex<Histogram>>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl SharedHist {
+    pub fn new() -> Self {
+        SharedHist {
+            stripes: (0..HIST_SHARDS).map(|_| Mutex::new(Histogram::new())).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds, by convention).
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        let i = STRIPE.with(|s| *s) % self.stripes.len();
+        self.stripes[i].lock().expect("hist stripe poisoned").record(v);
+    }
+
+    /// Lifetime sample count.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Drain and merge every stripe: the histogram of everything
+    /// recorded since the previous call (or ever, on the first call).
+    pub fn take_window(&self) -> Histogram {
+        let mut merged = Histogram::new();
+        for s in &self.stripes {
+            merged.merge(&s.lock().expect("hist stripe poisoned").take_window());
+        }
+        merged
+    }
+
+    /// Merge every stripe without draining (tests / end-of-run reports
+    /// that must not disturb a concurrent exporter's window).
+    pub fn peek(&self) -> Histogram {
+        let mut merged = Histogram::new();
+        for s in &self.stripes {
+            merged.merge(&s.lock().expect("hist stripe poisoned"));
+        }
+        merged
+    }
+}
+
+impl Default for SharedHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+enum Kind {
+    /// Monotonic counter the owner bumps directly.
+    Counter(Arc<AtomicU64>),
+    /// Evaluated at scrape time; `counter` picks the exposition TYPE.
+    Fn { f: Box<dyn Fn() -> u64 + Send + Sync>, counter: bool },
+    /// Summary-rendered histogram (interval quantiles + lifetime
+    /// `_sum`/`_count`).
+    Hist(Arc<SharedHist>),
+}
+
+struct Metric {
+    name: &'static str,
+    help: &'static str,
+    labels: Vec<(&'static str, String)>,
+    kind: Kind,
+}
+
+/// The metrics registry: register once at startup, scrape via
+/// [`Registry::render`] (Prometheus text exposition format 0.0.4).
+/// Metric names are emitted in registration order; metrics sharing a
+/// name (label variants) must be registered consecutively to keep the
+/// exposition's one-`TYPE`-per-name shape.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<Vec<Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register a counter and return the handle the hot path bumps.
+    pub fn counter(&self, name: &'static str, help: &'static str, labels: Vec<(&'static str, String)>) -> Arc<AtomicU64> {
+        let c = Arc::new(AtomicU64::new(0));
+        self.push(Metric { name, help, labels, kind: Kind::Counter(c.clone()) });
+        c
+    }
+
+    /// Register a scrape-time gauge closure.
+    pub fn gauge_fn(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: Vec<(&'static str, String)>,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.push(Metric { name, help, labels, kind: Kind::Fn { f: Box::new(f), counter: false } });
+    }
+
+    /// Register a scrape-time closure exposed with `TYPE counter` —
+    /// how pre-existing monotonic `AtomicU64` stats fields export
+    /// without changing their owning structs (see [`export`]).
+    pub fn counter_fn(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: Vec<(&'static str, String)>,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.push(Metric { name, help, labels, kind: Kind::Fn { f: Box::new(f), counter: true } });
+    }
+
+    /// Register a shard-striped histogram, rendered as a summary.
+    pub fn histogram(&self, name: &'static str, help: &'static str, labels: Vec<(&'static str, String)>) -> Arc<SharedHist> {
+        let h = Arc::new(SharedHist::new());
+        self.push(Metric { name, help, labels, kind: Kind::Hist(h.clone()) });
+        h
+    }
+
+    fn push(&self, m: Metric) {
+        self.metrics.lock().expect("registry poisoned").push(m);
+    }
+
+    /// Render the Prometheus text exposition. Histogram quantiles cover
+    /// the window since the previous `render` call (interval
+    /// percentiles); `_count`/`_sum` stay cumulative.
+    pub fn render(&self) -> String {
+        let metrics = self.metrics.lock().expect("registry poisoned");
+        let mut out = String::with_capacity(1024);
+        let mut last_name = "";
+        for m in metrics.iter() {
+            if m.name != last_name {
+                let ty = match &m.kind {
+                    Kind::Counter(_) | Kind::Fn { counter: true, .. } => "counter",
+                    Kind::Fn { counter: false, .. } => "gauge",
+                    Kind::Hist(_) => "summary",
+                };
+                let _ = writeln!(out, "# HELP {} {}", m.name, m.help);
+                let _ = writeln!(out, "# TYPE {} {}", m.name, ty);
+                last_name = m.name;
+            }
+            match &m.kind {
+                Kind::Counter(c) => {
+                    let _ = writeln!(out, "{}{} {}", m.name, render_labels(&m.labels, None), c.load(Ordering::Relaxed));
+                }
+                Kind::Fn { f, .. } => {
+                    let _ = writeln!(out, "{}{} {}", m.name, render_labels(&m.labels, None), f());
+                }
+                Kind::Hist(h) => {
+                    let w = h.take_window();
+                    for (q, v) in [(0.5, w.p50()), (0.99, w.p99())] {
+                        let _ = writeln!(out, "{}{} {}", m.name, render_labels(&m.labels, Some(q)), v);
+                    }
+                    let _ = writeln!(out, "{}_sum{} {}", m.name, render_labels(&m.labels, None), h.sum());
+                    let _ = writeln!(out, "{}_count{} {}", m.name, render_labels(&m.labels, None), h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_labels(labels: &[(&'static str, String)], quantile: Option<f64>) -> String {
+    if labels.is_empty() && quantile.is_none() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{v}\"");
+    }
+    if let Some(q) = quantile {
+        if !labels.is_empty() {
+            s.push(',');
+        }
+        let _ = write!(s, "quantile=\"{q}\"");
+    }
+    s.push('}');
+    s
+}
+
+/// The protocol-core instrument pack: everything the runtimes' delivery
+/// drain records per [`DeliverEffect`]. One `Arc<CoreMetrics>` is shared
+/// by all shards of an endpoint; every member is lock-free or
+/// lock-striped, so recording from concurrent shard workers is safe and
+/// allocation-free.
+pub struct CoreMetrics {
+    /// Deliveries by [`DeliveryPath`] (indexed by the path's `u8` value):
+    /// the white-box 3δ-vs-5δ split.
+    pub path: [Arc<AtomicU64>; 4],
+    /// Submit → deliver wall-clock latency (stamped messages only).
+    pub e2e: Arc<SharedHist>,
+    /// Leader-local proposal → ack-quorum wait.
+    pub stage_quorum: Arc<SharedHist>,
+    /// Leader-local ack-quorum → commit wait.
+    pub stage_commit: Arc<SharedHist>,
+    /// Leader-local commit → deliver wait (frontier hold time).
+    pub stage_deliver: Arc<SharedHist>,
+    /// Distinct submitting clients (HyperLogLog estimate).
+    pub clients: Arc<Hll>,
+    /// Recent protocol events, dumpable via `/debug/flight` / SIGUSR1.
+    pub flight: Arc<FlightRecorder>,
+}
+
+impl CoreMetrics {
+    /// Build the pack and register every member under its metric name.
+    pub fn register(reg: &Registry) -> Arc<CoreMetrics> {
+        let path = [DeliveryPath::Fast, DeliveryPath::Concurrent, DeliveryPath::Recovery, DeliveryPath::Unclassified]
+            .map(|p| {
+                reg.counter(
+                    "wbam_deliveries_total",
+                    "Delivered multicasts by white-box latency path (fast=3delta, concurrent=5delta)",
+                    vec![("path", p.as_str().to_string())],
+                )
+            });
+        let e2e = reg.histogram("wbam_delivery_latency_ns", "Client submit to delivery wall-clock latency", vec![]);
+        let stage_quorum =
+            reg.histogram("wbam_stage_wait_ns", "Per-stage waits on the leader path", vec![("stage", "quorum".into())]);
+        let stage_commit =
+            reg.histogram("wbam_stage_wait_ns", "Per-stage waits on the leader path", vec![("stage", "commit".into())]);
+        let stage_deliver =
+            reg.histogram("wbam_stage_wait_ns", "Per-stage waits on the leader path", vec![("stage", "deliver".into())]);
+        let clients = Arc::new(Hll::new());
+        {
+            let h = clients.clone();
+            reg.gauge_fn("wbam_distinct_clients", "HyperLogLog estimate of distinct submitting clients", vec![], move || {
+                h.estimate()
+            });
+        }
+        let flight = Arc::new(FlightRecorder::new(flight::DEFAULT_CAP));
+        Arc::new(CoreMetrics { path, e2e, stage_quorum, stage_commit, stage_deliver, clients, flight })
+    }
+
+    /// Record one delivery. `Copy` reads + atomics only — safe on the
+    /// hot path (the metrics-overhead ablation in EXPERIMENTS.md pins
+    /// the cost).
+    pub fn on_deliver(&self, d: &DeliverEffect) {
+        self.path[d.path as u8 as usize].fetch_add(1, Ordering::Relaxed);
+        self.clients.insert(d.m.client() as u64);
+        if d.submit_ns != 0 {
+            self.e2e.record(wallclock_ns().saturating_sub(d.submit_ns));
+        }
+        if d.quorum_at >= d.proposal_at && d.proposal_at != 0 {
+            self.stage_quorum.record(d.quorum_at - d.proposal_at);
+        }
+        if d.commit_at >= d.quorum_at && d.quorum_at != 0 {
+            self.stage_commit.record(d.commit_at - d.quorum_at);
+        }
+        if d.deliver_at >= d.commit_at && d.commit_at != 0 {
+            self.stage_deliver.record(d.deliver_at - d.commit_at);
+        }
+    }
+
+    /// Total deliveries across every path label.
+    pub fn delivered_total(&self) -> u64 {
+        self.path.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Gid, MsgId, Ts};
+
+    #[test]
+    fn counters_and_gauges_render_prometheus_text() {
+        let reg = Registry::new();
+        let c = reg.counter("wbam_test_total", "help one", vec![("path", "fast".into())]);
+        c.fetch_add(3, Ordering::Relaxed);
+        reg.gauge_fn("wbam_test_gauge", "help two", vec![], || 42);
+        let text = reg.render();
+        assert!(text.contains("# TYPE wbam_test_total counter"), "{text}");
+        assert!(text.contains("wbam_test_total{path=\"fast\"} 3"), "{text}");
+        assert!(text.contains("# TYPE wbam_test_gauge gauge"), "{text}");
+        assert!(text.contains("wbam_test_gauge 42"), "{text}");
+    }
+
+    #[test]
+    fn histogram_renders_interval_quantiles_and_cumulative_count() {
+        let reg = Registry::new();
+        let h = reg.histogram("wbam_test_lat_ns", "latency", vec![]);
+        for v in [100u64, 200, 300, 400] {
+            h.record(v);
+        }
+        let text = reg.render();
+        assert!(text.contains("# TYPE wbam_test_lat_ns summary"), "{text}");
+        assert!(text.contains("quantile=\"0.5\""), "{text}");
+        assert!(text.contains("wbam_test_lat_ns_count 4"), "{text}");
+        assert!(text.contains("wbam_test_lat_ns_sum 1000"), "{text}");
+        // second scrape: the window drained, but the cumulative count stays
+        let text2 = reg.render();
+        assert!(text2.contains("wbam_test_lat_ns_count 4"), "{text2}");
+        assert!(text2.contains("wbam_test_lat_ns{quantile=\"0.5\"} 0"), "{text2}");
+    }
+
+    #[test]
+    fn shared_hist_stripes_merge() {
+        let h = SharedHist::new();
+        for v in 1..=100u64 {
+            h.record(v * 1000);
+        }
+        assert_eq!(h.count(), 100);
+        let w = h.take_window();
+        assert_eq!(w.count(), 100);
+        assert!(w.p50() >= 45_000 && w.p50() <= 55_000, "p50 {}", w.p50());
+        assert_eq!(h.take_window().count(), 0, "window drained");
+        assert_eq!(h.count(), 100, "cumulative count survives the drain");
+    }
+
+    #[test]
+    fn core_metrics_count_paths_and_sum_to_total() {
+        let reg = Registry::new();
+        let cm = CoreMetrics::register(&reg);
+        let mut d = crate::protocols::DeliverEffect::untraced(MsgId::new(7, 1), Ts::new(1, Gid(0)));
+        d.path = DeliveryPath::Fast;
+        cm.on_deliver(&d);
+        d.path = DeliveryPath::Concurrent;
+        cm.on_deliver(&d);
+        cm.on_deliver(&d);
+        assert_eq!(cm.delivered_total(), 3);
+        assert_eq!(cm.path[DeliveryPath::Fast as usize].load(Ordering::Relaxed), 1);
+        assert_eq!(cm.path[DeliveryPath::Concurrent as usize].load(Ordering::Relaxed), 2);
+        let text = reg.render();
+        assert!(text.contains("wbam_deliveries_total{path=\"fast\"} 1"), "{text}");
+        assert!(text.contains("wbam_deliveries_total{path=\"concurrent\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn e2e_latency_recorded_only_for_stamped_messages() {
+        let reg = Registry::new();
+        let cm = CoreMetrics::register(&reg);
+        let mut d = crate::protocols::DeliverEffect::untraced(MsgId::new(1, 1), Ts::new(1, Gid(0)));
+        cm.on_deliver(&d); // unstamped: no sample
+        assert_eq!(cm.e2e.count(), 0);
+        d.submit_ns = wallclock_ns().saturating_sub(1_000_000);
+        cm.on_deliver(&d);
+        assert_eq!(cm.e2e.count(), 1);
+        assert!(cm.e2e.peek().max() >= 1_000_000);
+    }
+}

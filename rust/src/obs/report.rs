@@ -1,0 +1,159 @@
+//! The unified end-of-run stats report: one snapshot type with a
+//! human-readable `Display` and a hand-rolled JSON rendering, shared by
+//! `serve`'s shutdown summary, the e2e tests and the benches (which all
+//! used to format the same counters ad hoc).
+
+use super::CoreMetrics;
+use crate::coordinator::CoordStats;
+use crate::net::NetStats;
+use crate::storage::StorageStats;
+use std::fmt;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+/// A point-in-time snapshot of an endpoint's counters. Build with
+/// [`StatsReport::new`], extend with [`StatsReport::with_storage`] /
+/// [`StatsReport::with_core`], then `{report}` or
+/// [`StatsReport::to_json`].
+#[derive(Default)]
+pub struct StatsReport {
+    /// (name, value) pairs in render order, grouped by the `coord.` /
+    /// `net.` / `storage.` / `obs.` name prefix.
+    fields: Vec<(&'static str, u64)>,
+}
+
+impl StatsReport {
+    /// Snapshot the coordinator and transport counters.
+    pub fn new(coord: &CoordStats, net: &NetStats) -> Self {
+        let fields = vec![
+            ("coord.wires_in", coord.wires_in.load(Relaxed)),
+            ("coord.wires_out", coord.wires_out.load(Relaxed)),
+            ("coord.self_wires", coord.self_wires.load(Relaxed)),
+            ("coord.delivered", coord.delivered.load(Relaxed)),
+            ("coord.dropped_frames", coord.dropped_frames.load(Relaxed)),
+            ("net.dropped_frames", net.dropped_frames.load(Relaxed)),
+            ("net.probes_alive", net.probes_alive.load(Relaxed)),
+            ("net.probes_dead", net.probes_dead.load(Relaxed)),
+            ("net.reconnects_attempted", net.reconnects_attempted.load(Relaxed)),
+            ("net.reconnects_succeeded", net.reconnects_succeeded.load(Relaxed)),
+            ("net.transport_fallbacks", net.transport_fallbacks.load(Relaxed)),
+        ];
+        StatsReport { fields }
+    }
+
+    /// Add the storage counters, summed across hosted shards.
+    pub fn with_storage(mut self, shards: &[Arc<StorageStats>]) -> Self {
+        let sum = |f: fn(&StorageStats) -> u64| shards.iter().map(|s| f(s)).sum::<u64>();
+        self.fields.extend([
+            ("storage.records_appended", sum(|s| s.records_appended.load(Relaxed))),
+            ("storage.bytes_appended", sum(|s| s.bytes_appended.load(Relaxed))),
+            ("storage.commits", sum(|s| s.commits.load(Relaxed))),
+            ("storage.fsyncs", sum(|s| s.fsyncs.load(Relaxed))),
+            ("storage.rotations", sum(|s| s.rotations.load(Relaxed))),
+            ("storage.snapshots_written", sum(|s| s.snapshots_written.load(Relaxed))),
+            ("storage.poisoned", sum(|s| s.poisoned.load(Relaxed))),
+        ]);
+        self
+    }
+
+    /// Add the white-box delivery split and latency summary (the
+    /// latency quantiles read [`super::SharedHist::peek`], so a
+    /// concurrently scraping exporter's interval window is undisturbed).
+    pub fn with_core(mut self, core: &CoreMetrics) -> Self {
+        self.fields.extend([
+            ("obs.delivered_fast", core.path[crate::types::DeliveryPath::Fast as usize].load(Relaxed)),
+            ("obs.delivered_concurrent", core.path[crate::types::DeliveryPath::Concurrent as usize].load(Relaxed)),
+            ("obs.delivered_recovery", core.path[crate::types::DeliveryPath::Recovery as usize].load(Relaxed)),
+            ("obs.delivered_unclassified", core.path[crate::types::DeliveryPath::Unclassified as usize].load(Relaxed)),
+            ("obs.distinct_clients", core.clients.estimate()),
+        ]);
+        let lat = core.e2e.peek();
+        if lat.count() > 0 {
+            self.fields.extend([("obs.latency_p50_ns", lat.p50()), ("obs.latency_p99_ns", lat.p99())]);
+        }
+        self
+    }
+
+    /// Look up one field by its full dotted name (test convenience).
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.fields.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// One flat JSON object: `{"coord.wires_in":12,...}`. Hand-rolled —
+    /// every key is a known `&'static str` and every value a `u64`, so
+    /// no escaping is needed.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(self.fields.len() * 32 + 2);
+        s.push('{');
+        for (i, (name, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{name}\":{v}"));
+        }
+        s.push('}');
+        s
+    }
+}
+
+impl fmt::Display for StatsReport {
+    /// Grouped `  prefix: name=value ...` lines — the shape `serve`
+    /// prints at shutdown.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut last_prefix = "";
+        let mut first_in_group = true;
+        for (name, v) in &self.fields {
+            let (prefix, field) = name.split_once('.').unwrap_or(("", name));
+            if prefix != last_prefix {
+                if !first_in_group {
+                    writeln!(f)?;
+                }
+                write!(f, "  {prefix}:")?;
+                last_prefix = prefix;
+                first_in_group = false;
+            }
+            write!(f, " {field}={v}")?;
+        }
+        if !first_in_group {
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_grouped_display_and_flat_json() {
+        let coord = CoordStats::default();
+        coord.delivered.fetch_add(5, Relaxed);
+        let net = NetStats::default();
+        net.probes_alive.fetch_add(2, Relaxed);
+        let st = Arc::new(StorageStats::default());
+        st.commits.fetch_add(3, Relaxed);
+        let rep = StatsReport::new(&coord, &net).with_storage(&[st]);
+        let text = rep.to_string();
+        assert!(text.contains("coord: wires_in=0"), "{text}");
+        assert!(text.contains("delivered=5"), "{text}");
+        assert!(text.contains("net: dropped_frames=0"), "{text}");
+        assert!(text.contains("storage:"), "{text}");
+        let json = rep.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        assert!(json.contains("\"coord.delivered\":5"), "{json}");
+        assert!(json.contains("\"storage.commits\":3"), "{json}");
+        assert_eq!(rep.get("coord.delivered"), Some(5));
+        assert_eq!(rep.get("nope"), None);
+    }
+
+    #[test]
+    fn core_section_reports_the_path_split() {
+        let reg = super::super::Registry::new();
+        let cm = CoreMetrics::register(&reg);
+        cm.path[crate::types::DeliveryPath::Fast as usize].fetch_add(4, Relaxed);
+        let rep = StatsReport::new(&CoordStats::default(), &NetStats::default()).with_core(&cm);
+        assert_eq!(rep.get("obs.delivered_fast"), Some(4));
+        assert_eq!(rep.get("obs.latency_p50_ns"), None, "no samples, no quantiles");
+    }
+}

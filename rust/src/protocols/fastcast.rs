@@ -22,7 +22,7 @@
 use crate::paxos::Paxos;
 use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::wire::RsmCmd;
-use crate::types::{Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
+use crate::types::{DeliveryPath, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 struct Entry {
@@ -218,7 +218,7 @@ impl FastCastNode {
             let me = self.pid;
             out.send_to_many(
                 self.topo.members(self.gid).iter().copied().filter(|&p| p != me),
-                Wire::Deliver { m, bal, lts, gts },
+                Wire::Deliver { m, bal, lts, gts, path: DeliveryPath::Unclassified },
             );
         }
     }

@@ -19,7 +19,7 @@
 use crate::paxos::Paxos;
 use crate::protocols::{Node, Outbox, TimerKind};
 use crate::types::wire::RsmCmd;
-use crate::types::{Gid, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
+use crate::types::{DeliveryPath, Gid, MsgId, MsgMeta, Phase, Pid, Topology, Ts, Wire};
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 struct Entry {
@@ -176,7 +176,7 @@ impl FtSkeenNode {
             let me = self.pid;
             out.send_to_many(
                 self.topo.members(self.gid).iter().copied().filter(|&p| p != me),
-                Wire::Deliver { m, bal, lts, gts },
+                Wire::Deliver { m, bal, lts, gts, path: DeliveryPath::Unclassified },
             );
         }
     }

@@ -30,7 +30,7 @@ pub mod outbox;
 pub mod skeen;
 pub mod wbcast;
 
-pub use outbox::{Coalescer, LinkCoalescer, Outbox};
+pub use outbox::{Coalescer, DeliverEffect, LinkCoalescer, Outbox};
 
 use crate::types::{MsgId, Pid, Wire};
 

@@ -29,15 +29,57 @@
 //!   immediate policy against.
 
 use super::TimerKind;
-use crate::types::{FlushPolicy, MsgId, Pid, Ts, Wire};
+use crate::types::{DeliveryPath, FlushPolicy, MsgId, Pid, Ts, Wire};
 use crate::util::FxHashMap;
+
+/// One local delivery effect. Beyond the paper-level `(m, gts)` pair it
+/// carries the observability trace that rides the hot path by value (no
+/// allocation): the white-box [`DeliveryPath`] classification, the
+/// client's wall-clock submit stamp (0 when unstamped) and the node-local
+/// per-stage timestamps (0 when unknown, e.g. on followers), so the
+/// runtime can record end-to-end latency and stage waits
+/// (submit → proposal → ack-quorum → commit → deliver) without asking the
+/// protocol anything.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct DeliverEffect {
+    pub m: MsgId,
+    pub gts: Ts,
+    pub path: DeliveryPath,
+    /// client wall-clock submit stamp ([`crate::types::MsgMeta::submit_ns`])
+    pub submit_ns: u64,
+    /// node-local `now` when the local proposal was made
+    pub proposal_at: u64,
+    /// node-local `now` when the ack quorum completed
+    pub quorum_at: u64,
+    /// node-local `now` when the commit was applied
+    pub commit_at: u64,
+    /// node-local `now` of the delivery itself
+    pub deliver_at: u64,
+}
+
+impl DeliverEffect {
+    /// An untraced delivery: path unclassified, all stamps zero. What
+    /// [`Outbox::deliver`] emits — the baselines and tests stay exact.
+    pub fn untraced(m: MsgId, gts: Ts) -> Self {
+        DeliverEffect {
+            m,
+            gts,
+            path: DeliveryPath::Unclassified,
+            submit_ns: 0,
+            proposal_at: 0,
+            quorum_at: 0,
+            commit_at: 0,
+            deliver_at: 0,
+        }
+    }
+}
 
 /// Effects sink passed to every [`Node`](super::Node) handler. Buffers
 /// are drained (not dropped) by the runtimes and reused across events.
 #[derive(Default)]
 pub struct Outbox {
     pub(crate) sends: Vec<(Pid, Wire)>,
-    pub(crate) delivers: Vec<(MsgId, Ts)>,
+    pub(crate) delivers: Vec<DeliverEffect>,
     pub(crate) timers: Vec<(TimerKind, u64)>,
     /// durable journal records ([`crate::storage::Record`]); the owning
     /// runtime appends them to the node's WAL and commits them *before*
@@ -100,10 +142,19 @@ impl Outbox {
     }
 
     /// Deliver application message `m` locally with global timestamp
-    /// `gts` (the `deliver(m)` event of §II).
+    /// `gts` (the `deliver(m)` event of §II), untraced (path
+    /// unclassified, no stamps) — used by the baselines and tests.
     #[inline]
     pub fn deliver(&mut self, m: MsgId, gts: Ts) {
-        self.delivers.push((m, gts));
+        self.delivers.push(DeliverEffect::untraced(m, gts));
+    }
+
+    /// Deliver with the full observability trace (see [`DeliverEffect`]).
+    /// The instrumented protocol (`wbcast`) uses this; the effect is a
+    /// `Copy` value, so tracing adds no hot-path allocation.
+    #[inline]
+    pub fn deliver_traced(&mut self, eff: DeliverEffect) {
+        self.delivers.push(eff);
     }
 
     /// Arm a timer to fire after `after_ns`.
@@ -143,7 +194,7 @@ impl Outbox {
     pub fn sends(&self) -> &[(Pid, Wire)] {
         &self.sends
     }
-    pub fn delivers(&self) -> &[(MsgId, Ts)] {
+    pub fn delivers(&self) -> &[DeliverEffect] {
         &self.delivers
     }
     pub fn timers(&self) -> &[(TimerKind, u64)] {
@@ -661,7 +712,7 @@ mod tests {
         out.deliver(MsgId::new(1, 1), Ts::new(3, Gid(0)));
         out.timer(TimerKind::LssTick, 500);
         assert_eq!(out.sends().len(), 1);
-        assert_eq!(out.delivers(), &[(MsgId::new(1, 1), Ts::new(3, Gid(0)))]);
+        assert_eq!(out.delivers(), &[DeliverEffect::untraced(MsgId::new(1, 1), Ts::new(3, Gid(0)))]);
         assert_eq!(out.timers(), &[(TimerKind::LssTick, 500)]);
         assert!(!out.is_empty());
         out.clear();

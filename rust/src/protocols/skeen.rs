@@ -214,7 +214,8 @@ mod tests {
         propose(&mut n0, Pid(0), m, Gid(0), Ts::new(1, Gid(0)));
         let out = propose(&mut n0, Pid(1), m, Gid(1), Ts::new(1, Gid(1)));
         // gts = max((1,g0),(1,g1)) = (1,g1)
-        assert_eq!(out.delivers(), &[(m, Ts::new(1, Gid(1)))]);
+        assert_eq!(out.delivers().len(), 1);
+        assert_eq!((out.delivers()[0].m, out.delivers()[0].gts), (m, Ts::new(1, Gid(1))));
         // client notified
         assert!(out.sends().iter().any(|(to, w)| *to == Pid(99) && matches!(w, Wire::Delivered { .. })));
         assert_eq!(n0.clock(), 1);
@@ -242,7 +243,7 @@ mod tests {
         // commit m2 with gts (7,g1): both deliver, in gts order m(5) then m2(7)
         propose(&mut n0, Pid(0), m2, Gid(0), Ts::new(2, Gid(0)));
         let out = propose(&mut n0, Pid(1), m2, Gid(1), Ts::new(7, Gid(1)));
-        let delivered: Vec<MsgId> = out.delivers().iter().map(|&(mm, _)| mm).collect();
+        let delivered: Vec<MsgId> = out.delivers().iter().map(|d| d.m).collect();
         assert_eq!(delivered, vec![m, m2]);
     }
 

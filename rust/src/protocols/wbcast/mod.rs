@@ -17,8 +17,8 @@
 
 pub mod recovery;
 
-use crate::protocols::{Node, Outbox, TimerKind};
-use crate::types::{Ballot, Gid, MsgId, MsgMeta, Phase, Pid, Status, Topology, Ts, Wire};
+use crate::protocols::{DeliverEffect, Node, Outbox, TimerKind};
+use crate::types::{Ballot, DeliveryPath, Gid, MsgId, MsgMeta, Phase, Pid, Status, Topology, Ts, Wire};
 use crate::util::{FxHashMap, FxHashSet};
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
@@ -101,6 +101,15 @@ pub(crate) struct Entry {
     pub accepts: FxHashMap<Gid, (Ballot, Ts)>,
     /// leader: ACCEPT_ACK tally keyed by the ballot vector
     pub acks: FxHashMap<Vec<(Gid, Ballot)>, FxHashMap<Gid, FxHashSet<Pid>>>,
+    /// node-local instant of the fresh proposal (0 = not proposed here)
+    pub proposal_at: u64,
+    /// node-local instant the ack quorum completed (0 = not yet)
+    pub quorum_at: u64,
+    /// node-local instant the commit applied (0 = not yet)
+    pub commit_at: u64,
+    /// state arrived through recovery (restore / NEW_STATE adoption):
+    /// the delivery classifies as [`DeliveryPath::Recovery`]
+    pub recovered: bool,
 }
 
 impl Entry {
@@ -114,6 +123,10 @@ impl Entry {
             staged: false,
             accepts: Default::default(),
             acks: Default::default(),
+            proposal_at: 0,
+            quorum_at: 0,
+            commit_at: 0,
+            recovered: false,
         }
     }
 }
@@ -123,10 +136,28 @@ impl Entry {
 pub struct WbStats {
     pub committed: u64,
     pub delivered: u64,
+    /// deliveries that took the collision-free 3δ path
+    pub delivered_fast: u64,
+    /// deliveries held back by a concurrent message (5δ path)
+    pub delivered_concurrent: u64,
+    /// deliveries resolved through recovery (restore / NEW_STATE / resend)
+    pub delivered_recovery: u64,
     pub recoveries_started: u64,
     pub recoveries_completed: u64,
     pub retries: u64,
     pub gc_dropped: u64,
+}
+
+impl WbStats {
+    /// Tally one delivery under its white-box path.
+    fn note_path(&mut self, path: DeliveryPath) {
+        match path {
+            DeliveryPath::Fast => self.delivered_fast += 1,
+            DeliveryPath::Concurrent => self.delivered_concurrent += 1,
+            DeliveryPath::Recovery => self.delivered_recovery += 1,
+            DeliveryPath::Unclassified => {}
+        }
+    }
 }
 
 /// One WbCast process (Fig. 3 variables + plumbing).
@@ -270,6 +301,7 @@ impl WbNode {
             e.phase = s.phase;
             e.lts = s.lts;
             e.gts = s.gts;
+            e.recovered = true;
             match s.phase {
                 Phase::Accepted => {
                     n.pending.insert((s.lts, m));
@@ -394,7 +426,7 @@ impl WbNode {
     }
 
     // ---------- Fig. 4 line 3: MULTICAST at the leader ----------
-    pub(crate) fn on_multicast(&mut self, meta: MsgMeta, _now: u64, out: &mut Outbox) {
+    pub(crate) fn on_multicast(&mut self, meta: MsgMeta, now: u64, out: &mut Outbox) {
         let mid = meta.id;
         if self.status != Status::Leader {
             return; // pre: status = LEADER
@@ -418,6 +450,7 @@ impl WbNode {
             let lts = Ts::new(self.clock, self.gid);
             e.phase = Phase::Proposed;
             e.lts = lts;
+            e.proposal_at = now;
             self.pending.insert((lts, e.meta.id));
         } else if e.delivered {
             // duplicate of a delivered message: re-notify the client (its
@@ -514,7 +547,7 @@ impl WbNode {
         g: Gid,
         bals: Vec<(Gid, Ballot)>,
         from: Pid,
-        _now: u64,
+        now: u64,
         out: &mut Outbox,
     ) {
         if self.status != Status::Leader {
@@ -556,10 +589,11 @@ impl WbNode {
         // stays in `pending` until the flush applies, so the delivery
         // frontier remains exact.
         e.staged = true;
+        e.quorum_at = now;
         let lts_set: Vec<Ts> = bals.iter().map(|&(g, _)| e.accepts[&g].1).collect();
         self.ready.push(crate::runtime::BatchReq { m, lts: lts_set });
         if self.ready.len() >= self.cfg.batch_threshold {
-            self.flush_commits(out);
+            self.flush_commits(now, out);
         } else if self.cfg.batch_flush_after > 0 && self.ready.len() == 1 {
             out.timer(TimerKind::BatchFlush, self.cfg.batch_flush_after);
         }
@@ -567,7 +601,7 @@ impl WbNode {
 
     /// Resolve global timestamps for the staged batch through the commit
     /// backend, apply the commits, and deliver whatever is unblocked.
-    pub(crate) fn flush_commits(&mut self, out: &mut Outbox) {
+    pub(crate) fn flush_commits(&mut self, now: u64, out: &mut Outbox) {
         if self.ready.is_empty() {
             return;
         }
@@ -591,17 +625,18 @@ impl WbNode {
             e.phase = Phase::Committed;
             e.staged = false;
             e.gts = o.gts;
+            e.commit_at = now;
             self.committed.insert((o.gts, o.m));
             self.stats.committed += 1;
             // the resolved (lts, gts) pair is durable before any DELIVER
             // or client notification for it leaves this cycle
             self.journal_state(o.m, out);
         }
-        self.try_deliver(out);
+        self.try_deliver(now, out);
     }
 
     // ---------- Fig. 4 line 21: ordered delivery at the leader ----------
-    pub(crate) fn try_deliver(&mut self, out: &mut Outbox) {
+    pub(crate) fn try_deliver(&mut self, now: u64, out: &mut Outbox) {
         loop {
             let Some(&(gts, m)) = self.committed.iter().next() else { break };
             if let Some(&(frontier, _)) = self.pending.iter().next() {
@@ -610,24 +645,46 @@ impl WbNode {
                 }
             }
             self.committed.remove(&(gts, m));
-            self.deliver_one(m, gts, out, true);
+            self.deliver_one(m, gts, now, out, true);
         }
     }
 
     /// Mark `m` delivered at this process and replicate the decision to
     /// the followers (`DELIVER`, line 23). `notify`: send the client
     /// notification (suppressed for post-recovery resends).
-    pub(crate) fn deliver_one(&mut self, m: MsgId, gts: Ts, out: &mut Outbox, notify: bool) {
+    pub(crate) fn deliver_one(&mut self, m: MsgId, gts: Ts, now: u64, out: &mut Outbox, notify: bool) {
         let e = self.entries.get_mut(&m).expect("deliver_one: unknown entry");
         debug_assert_eq!(e.phase, Phase::Committed);
         let lts = e.lts;
+        // white-box path classification: recovery-resolved state trumps
+        // everything; otherwise a delivery that had to wait past its
+        // commit instant was blocked behind a concurrent message in the
+        // frontier (the 5δ case), and one that delivers in the same
+        // handler activation as its commit is collision-free (3δ)
+        let path = if e.recovered || !notify {
+            DeliveryPath::Recovery
+        } else if now > e.commit_at {
+            DeliveryPath::Concurrent
+        } else {
+            DeliveryPath::Fast
+        };
         if !e.delivered {
             e.delivered = true;
             self.delivered_log.insert(gts, m);
             if gts > self.max_delivered_gts {
                 self.max_delivered_gts = gts;
-                out.deliver(m, gts);
+                out.deliver_traced(DeliverEffect {
+                    m,
+                    gts,
+                    path,
+                    submit_ns: e.meta.submit_ns,
+                    proposal_at: e.proposal_at,
+                    quorum_at: e.quorum_at,
+                    commit_at: e.commit_at,
+                    deliver_at: now,
+                });
                 self.stats.delivered += 1;
+                self.stats.note_path(path);
             }
             let c = m.client();
             let seq = self.gc_client_seq.entry(c).or_insert(0);
@@ -640,12 +697,12 @@ impl WbNode {
             out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
         }
         let me = self.pid;
-        let wire = Wire::Deliver { m, bal: self.cballot, lts, gts };
+        let wire = Wire::Deliver { m, bal: self.cballot, lts, gts, path };
         out.send_to_many(self.group().iter().copied().filter(|&p| p != me), wire);
     }
 
     // ---------- Fig. 4 line 24: DELIVER at a follower ----------
-    pub(crate) fn on_deliver(&mut self, m: MsgId, b: Ballot, lts: Ts, gts: Ts, _now: u64, out: &mut Outbox) {
+    pub(crate) fn on_deliver(&mut self, m: MsgId, b: Ballot, lts: Ts, gts: Ts, path: DeliveryPath, now: u64, out: &mut Outbox) {
         // pre: status ∈ {FOLLOWER, LEADER} ∧ cballot = b ∧ max_delivered_gts < gts
         if self.status == Status::Recovering || self.cballot != b || self.max_delivered_gts >= gts {
             return;
@@ -669,10 +726,22 @@ impl WbNode {
         let seq = self.gc_client_seq.entry(c).or_insert(0);
         *seq = (*seq).max(m.seq());
         self.stats.delivered += 1;
+        self.stats.note_path(path);
         if self.cfg.durability {
             out.record(crate::storage::Record::Deliver { m, lts, gts });
         }
-        out.deliver(m, gts);
+        // the follower inherits the leader's classification byte; its own
+        // stage stamps are leader-local and therefore left at zero
+        out.deliver_traced(DeliverEffect {
+            m,
+            gts,
+            path,
+            submit_ns: e.meta.submit_ns,
+            proposal_at: 0,
+            quorum_at: 0,
+            commit_at: 0,
+            deliver_at: now,
+        });
     }
 
     // ---------- Fig. 4 line 32: retry (message recovery) ----------
@@ -769,11 +838,11 @@ impl Node for WbNode {
                 self.on_accept(meta, g, bal, lts, now, out)
             }
             Wire::AcceptAck { m, g, bals } => self.on_accept_ack(m, g, bals, from, now, out),
-            Wire::Deliver { m, bal, lts, gts } => {
+            Wire::Deliver { m, bal, lts, gts, path } => {
                 if bal.leader() == from {
                     self.last_hb = now;
                 }
-                self.on_deliver(m, bal, lts, gts, now, out)
+                self.on_deliver(m, bal, lts, gts, path, now, out)
             }
             Wire::NewLeader { bal } => self.on_new_leader(bal, from, now, out),
             Wire::NewLeaderAck { bal, cbal, clock, state } => {
@@ -814,7 +883,7 @@ impl Node for WbNode {
             TimerKind::Retry(m) => self.on_retry(m, now, out),
             TimerKind::LssTick => self.on_lss_tick(now, out),
             TimerKind::RecoveryTimeout(n) => self.on_recovery_timeout(n, now, out),
-            TimerKind::BatchFlush => self.flush_commits(out),
+            TimerKind::BatchFlush => self.flush_commits(now, out),
             _ => {}
         }
     }

@@ -12,7 +12,7 @@
 use super::{Entry, WbNode};
 use crate::protocols::{Outbox, TimerKind};
 use crate::types::wire::MsgState;
-use crate::types::{Ballot, MsgId, Phase, Pid, Status, Ts, Wire};
+use crate::types::{Ballot, DeliveryPath, MsgId, Phase, Pid, Status, Ts, Wire};
 use std::collections::BTreeMap;
 
 /// Contents of a NEWLEADER_ACK, kept per reporter.
@@ -168,6 +168,7 @@ impl WbNode {
             e.phase = s.phase;
             e.lts = s.lts;
             e.gts = s.gts;
+            e.recovered = true;
             match s.phase {
                 Phase::Accepted => {
                     self.pending.insert((s.lts, s.meta.id));
@@ -250,14 +251,14 @@ impl WbNode {
             let me = self.pid;
             out.send_to_many(
                 self.group().iter().copied().filter(|&p| p != me),
-                Wire::Deliver { m, bal, lts, gts },
+                Wire::Deliver { m, bal, lts, gts, path: DeliveryPath::Recovery },
             );
             // re-notify the client: its notification may have died with
             // the old leader (clients deduplicate)
             out.send(Pid(m.client()), Wire::Delivered { m, g: self.gid, gts });
         }
         // deliver whatever is now unblocked (line 66 delivery condition)
-        self.try_deliver(out);
+        self.try_deliver(now, out);
 
         // resume stuck messages (§IV message recovery): retry every
         // still-pending (ACCEPTED) message through the MULTICAST path,

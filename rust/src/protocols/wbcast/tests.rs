@@ -364,15 +364,15 @@ fn deliver_requires_matching_cballot() {
     let m = MsgId::new(9, 1);
     // DELIVER from a ballot we have not synchronised with
     let mut out = Outbox::new();
-    n.on_deliver(m, Ballot::new(9, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    n.on_deliver(m, Ballot::new(9, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), DeliveryPath::Fast, 0, &mut out);
     assert!(out.is_empty());
     assert_eq!(n.phase_of(m), Phase::Start);
     // matching ballot works
-    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), DeliveryPath::Fast, 0, &mut out);
     assert_eq!(out.delivers().len(), 1);
     out.clear();
     // duplicate (same gts) is dropped by max_delivered_gts
-    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), 0, &mut out);
+    n.on_deliver(m, Ballot::new(1, Pid(0)), Ts::new(1, Gid(0)), Ts::new(1, Gid(0)), DeliveryPath::Fast, 0, &mut out);
     assert!(out.is_empty());
 }
 

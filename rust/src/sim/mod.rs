@@ -168,6 +168,10 @@ pub struct World {
     stores: FxHashMap<Pid, crate::storage::MemWal>,
     /// per-pid node factories consulted by [`EventKind::Restart`]
     rebuilders: FxHashMap<Pid, RestartFn>,
+    /// opt-in protocol flight recorder ([`World::enable_flight`]): a
+    /// bounded ring of recent wire/journal/delivery events the harness
+    /// dumps when an invariant fails
+    flight: Option<std::sync::Arc<crate::obs::FlightRecorder>>,
     /// debug: print every handled event (env `WBAM_SIM_LOG=1`)
     pub log_events: bool,
 }
@@ -210,8 +214,33 @@ impl World {
             coalesce: cfg.coalesce,
             stores: FxHashMap::default(),
             rebuilders: FxHashMap::default(),
+            flight: None,
             log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
         }
+    }
+
+    /// Attach a bounded flight recorder keeping the last `cap` protocol
+    /// events (wire arrivals with their ballot-carrying tags, journal
+    /// appends, deliveries). The harness dumps its tail when a run fails
+    /// an invariant check, turning the assert into a replayable event
+    /// tail. Off by default: the hot loop pays nothing.
+    pub fn enable_flight(&mut self, cap: usize) -> std::sync::Arc<crate::obs::FlightRecorder> {
+        let fl = std::sync::Arc::new(crate::obs::FlightRecorder::new(cap));
+        self.flight = Some(fl.clone());
+        fl
+    }
+
+    /// The attached flight recorder, if [`World::enable_flight`] ran.
+    pub fn flight(&self) -> Option<&std::sync::Arc<crate::obs::FlightRecorder>> {
+        self.flight.as_ref()
+    }
+
+    /// Run the paper's correctness invariants over the recorded trace
+    /// (shard by shard for sharded worlds). When a flight recorder is
+    /// attached, a violation dumps its tail first — see
+    /// [`crate::invariants::assert_correct_with_flight`].
+    pub fn check_invariants(&self) {
+        crate::invariants::assert_correct_with_flight(&self.trace, self.flight.as_deref());
     }
 
     pub fn now(&self) -> u64 {
@@ -287,6 +316,11 @@ impl World {
                     store.append(rec);
                 }
             }
+            if let Some(fl) = &self.flight {
+                for _ in &self.outbox.records {
+                    fl.push(crate::obs::FlightEvent::journal(t0, pid));
+                }
+            }
             self.outbox.records.clear();
         }
         let mut frames = std::mem::take(&mut self.frames);
@@ -313,8 +347,11 @@ impl World {
         self.busy_until[idx] = done_at;
 
         for i in 0..self.outbox.delivers.len() {
-            let (m, gts) = self.outbox.delivers[i];
-            self.trace.on_deliver(done_at, pid, m, gts);
+            let d = self.outbox.delivers[i];
+            self.trace.on_deliver(done_at, pid, d.m, d.gts);
+            if let Some(fl) = &self.flight {
+                fl.push(crate::obs::FlightEvent::deliver(done_at, pid, d.m, d.gts, d.path));
+            }
         }
         self.outbox.delivers.clear();
         for i in 0..self.outbox.timers.len() {
@@ -336,9 +373,17 @@ impl World {
                 Wire::Batch(inner) => {
                     for w in inner {
                         self.account_wire(done_at, w);
+                        if let Some(fl) = &self.flight {
+                            fl.push(crate::obs::FlightEvent::wire_out(done_at, pid, to, w));
+                        }
                     }
                 }
-                w => self.account_wire(done_at, w),
+                w => {
+                    self.account_wire(done_at, w);
+                    if let Some(fl) = &self.flight {
+                        fl.push(crate::obs::FlightEvent::wire_out(done_at, pid, to, w));
+                    }
+                }
             }
             self.trace.send_bytes += frame.size() as u64;
             let arr = if to == pid {
@@ -511,6 +556,9 @@ impl World {
                             if matches!(w, Wire::Paxos { .. }) {
                                 extra += self.cpu.paxos_extra_ns;
                             }
+                            if let Some(fl) = &self.flight {
+                                fl.push(crate::obs::FlightEvent::wire_in(time, to, from, &w));
+                            }
                             self.nodes[idx].on_wire(from, w, time, &mut self.outbox);
                         }
                     }
@@ -518,6 +566,9 @@ impl World {
                         *self.arrivals.entry(to).or_insert(0) += 1;
                         if matches!(w, Wire::Paxos { .. }) {
                             extra = self.cpu.paxos_extra_ns;
+                        }
+                        if let Some(fl) = &self.flight {
+                            fl.push(crate::obs::FlightEvent::wire_in(time, to, from, &w));
                         }
                         self.nodes[idx].on_wire(from, w, time, &mut self.outbox);
                     }

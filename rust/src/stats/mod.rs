@@ -32,7 +32,8 @@ fn bucket_of(v: u64) -> usize {
 fn bucket_lower(b: usize) -> u64 {
     let b = b as u64;
     if b < SUB * 2 {
-        return b.min(SUB * 2 - 1).max(0);
+        // Buckets below two octaves are exact: lower bound == index.
+        return b;
     }
     let octave = b / SUB - 1;
     let sub = b % SUB;
@@ -94,6 +95,25 @@ impl Histogram {
     }
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
+    }
+
+    /// Reset to the empty state without reallocating the bucket vector.
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0.0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+
+    /// Drain the window accumulated since the previous call: returns a
+    /// histogram holding everything recorded so far and leaves `self`
+    /// empty. Lets an exporter report *interval* percentiles (per scrape
+    /// window) instead of lifetime ones.
+    pub fn take_window(&mut self) -> Histogram {
+        let mut out = Histogram::new();
+        std::mem::swap(self, &mut out);
+        out
     }
 
     /// Merge another histogram into this one.
@@ -185,6 +205,25 @@ mod tests {
             assert!(lo <= v, "v={v} b={b} lo={lo}");
             assert!(bucket_of(lo) == b || lo == 0, "v={v}");
         }
+    }
+
+    #[test]
+    fn clear_and_take_window_reset_state() {
+        let mut h = Histogram::new();
+        for v in [10u64, 100, 1000] {
+            h.record(v);
+        }
+        let w = h.take_window();
+        assert_eq!(w.count(), 3);
+        assert_eq!(w.max(), 1000);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        h.record(7);
+        assert_eq!((h.count(), h.min(), h.max()), (1, 7, 7));
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert!(h.mean().is_nan());
+        assert_eq!(h.min(), 0);
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! invariant checkers cover restarts; see `sim::World::enable_storage`).
 
 use crate::codec::{self, Dec, Enc};
-use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::{Arc, OnceLock};
 use crate::types::wire::MsgState;
 use crate::types::{Ballot, MsgId, Phase, Ts};
@@ -515,6 +515,8 @@ pub struct Storage {
     /// a write failed: journaling stopped, the directory carries a
     /// `POISONED` marker, and future [`Storage::open`]s refuse it
     poison_flag: PoisonFlag,
+    /// live counters shared with the metrics exporter
+    stats: Arc<StorageStats>,
     last_sync: Instant,
 }
 
@@ -547,6 +549,30 @@ impl PoisonFlag {
     pub fn get(&self) -> bool {
         self.0.load(Ordering::Acquire)
     }
+}
+
+/// Storage/WAL counters, shared out of the owning worker thread behind
+/// `Arc` (the same pattern as [`crate::coordinator::CoordStats`] /
+/// [`crate::net::NetStats`]) so the metrics exporter
+/// ([`crate::obs::export`]) reads them live. Relaxed ordering: these are
+/// monitoring counters, not synchronisation.
+#[derive(Debug, Default)]
+pub struct StorageStats {
+    /// records appended to the active segment
+    pub records_appended: AtomicU64,
+    /// frame bytes (header + payload) appended
+    pub bytes_appended: AtomicU64,
+    /// group-commit points that flushed buffered frames to the OS
+    pub commits: AtomicU64,
+    /// explicit `fdatasync` calls (policy-due commits, rotations,
+    /// snapshots, shutdown syncs)
+    pub fsyncs: AtomicU64,
+    /// segment rotations
+    pub rotations: AtomicU64,
+    /// compacted snapshots written
+    pub snapshots_written: AtomicU64,
+    /// 1 once the journal poisoned itself (write failure)
+    pub poisoned: AtomicU64,
 }
 
 impl Storage {
@@ -698,8 +724,15 @@ impl Storage {
             dirty: false,
             unsynced: false,
             poison_flag: PoisonFlag::new(),
+            stats: Arc::new(StorageStats::default()),
             last_sync: Instant::now(),
         })
+    }
+
+    /// A shared handle to this storage's live counters (the metrics
+    /// exporter aggregates one per hosted shard).
+    pub fn stats(&self) -> Arc<StorageStats> {
+        self.stats.clone()
     }
 
     fn load_snapshot(path: &Path) -> Option<Snapshot> {
@@ -762,6 +795,7 @@ impl Storage {
             return;
         }
         self.poison_flag.set();
+        self.stats.poisoned.store(1, Ordering::Relaxed);
         // the marker must itself be durable, or a crash after a failed
         // write could restore from the holed WAL the marker exists to
         // block — fsync the file and the directory entry
@@ -812,6 +846,8 @@ impl Storage {
         self.seq += 1;
         self.image.apply(rec);
         self.dirty = true;
+        self.stats.records_appended.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_appended.fetch_add(n, Ordering::Relaxed);
         Ok(())
     }
 
@@ -837,6 +873,7 @@ impl Storage {
             self.file.flush()?;
             self.dirty = false;
             self.unsynced = true;
+            self.stats.commits.fetch_add(1, Ordering::Relaxed);
         }
         let due = match self.policy {
             SyncPolicy::Always => true,
@@ -847,6 +884,7 @@ impl Storage {
             self.file.get_ref().sync_data()?;
             self.last_sync = Instant::now();
             self.unsynced = false;
+            self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
         }
         if self.wal_bytes >= self.snapshot_after {
             self.write_snapshot()?;
@@ -866,12 +904,15 @@ impl Storage {
         self.last_sync = Instant::now();
         self.dirty = false;
         self.unsynced = false;
+        self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     fn rotate(&mut self) -> std::io::Result<()> {
         self.file.flush()?;
         self.file.get_ref().sync_data()?;
+        self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+        self.stats.rotations.fetch_add(1, Ordering::Relaxed);
         let path = seg_path(&self.dir, self.seq);
         self.file = std::io::BufWriter::new(OpenOptions::new().create(true).append(true).open(&path)?);
         // persist the new segment's directory entry: without this a
@@ -899,6 +940,7 @@ impl Storage {
         // the rename must hit disk before the covered segments go away,
         // or a crash mid-compaction could leave neither snapshot nor log
         fsync_dir(&self.dir)?;
+        self.stats.snapshots_written.fetch_add(1, Ordering::Relaxed);
         self.snap_seq = self.seq;
         self.rotate()?; // new segment starts at seq; all older are covered
         self.wal_bytes = 0;

@@ -4,7 +4,7 @@
 
 pub mod wire;
 
-pub use wire::{MsgMeta, PaxosMsg, Payload, Wire};
+pub use wire::{DeliveryPath, MsgMeta, PaxosMsg, Payload, Wire};
 
 use std::fmt;
 

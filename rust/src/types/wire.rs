@@ -95,6 +95,55 @@ impl From<&[u8]> for Payload {
     }
 }
 
+/// Which latency path a delivery took — the white-box classification of
+/// the paper's headline claim (3δ collision-free vs 5δ under
+/// concurrency) that a black-box implementation cannot report.
+///
+/// Classified by the delivering leader ([`crate::protocols::wbcast`])
+/// and propagated to followers inside [`Wire::Deliver`]:
+///
+/// * [`Fast`](DeliveryPath::Fast) — delivered in the same handler
+///   invocation that committed it: the delivery frontier never blocked
+///   it, the collision-free 3δ path of Fig. 4.
+/// * [`Concurrent`](DeliveryPath::Concurrent) — committed earlier but
+///   held back by the delivery frontier (a concurrent multicast with a
+///   smaller pending timestamp): the 5δ path.
+/// * [`Recovery`](DeliveryPath::Recovery) — delivered via the leader
+///   recovery / crash-restore path; its latency says nothing about δ.
+/// * [`Unclassified`](DeliveryPath::Unclassified) — protocols that do
+///   not classify (the baselines) and legacy effects.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[repr(u8)]
+pub enum DeliveryPath {
+    Fast = 0,
+    Concurrent = 1,
+    Recovery = 2,
+    #[default]
+    Unclassified = 3,
+}
+
+impl DeliveryPath {
+    /// Decode a wire byte; unknown bytes map to `Unclassified` (the
+    /// classification is advisory, never worth rejecting a frame over).
+    pub fn from_u8(b: u8) -> DeliveryPath {
+        match b {
+            0 => DeliveryPath::Fast,
+            1 => DeliveryPath::Concurrent,
+            2 => DeliveryPath::Recovery,
+            _ => DeliveryPath::Unclassified,
+        }
+    }
+    /// Stable label used in metric names and dumps.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DeliveryPath::Fast => "fast",
+            DeliveryPath::Concurrent => "concurrent",
+            DeliveryPath::Recovery => "recovery",
+            DeliveryPath::Unclassified => "unclassified",
+        }
+    }
+}
+
 /// Metadata of an application message: identity, destination groups and
 /// payload. The protocols order `MsgMeta`s; the payload is opaque.
 /// The payload is reference-counted: protocol fan-out clones a `MsgMeta`
@@ -106,16 +155,23 @@ pub struct MsgMeta {
     pub id: MsgId,
     pub dest: GidSet,
     pub payload: Payload,
+    /// Client submit wall-clock timestamp (`obs::wallclock_ns`), or 0
+    /// when the client does not stamp ([`crate::client::ClientCfg`];
+    /// the simulator never stamps — virtual time stays deterministic).
+    /// Rides the meta end to end so the *delivering* node can record
+    /// true submit → deliver latency without per-message allocation.
+    pub submit_ns: u64,
 }
 
 impl MsgMeta {
     pub fn new(id: MsgId, dest: GidSet, payload: Vec<u8>) -> Self {
-        MsgMeta { id, dest, payload: payload.into() }
+        MsgMeta { id, dest, payload: payload.into(), submit_ns: 0 }
     }
-    /// Exact encoded size: id (8) + dest mask (8) + length-prefixed
-    /// payload (4 + len). Also the simulator cost model's byte count.
+    /// Exact encoded size: id (8) + dest mask (8) + submit stamp (8) +
+    /// length-prefixed payload (4 + len). Also the simulator cost
+    /// model's byte count.
     pub fn size(&self) -> usize {
-        20 + self.payload.len()
+        28 + self.payload.len()
     }
 }
 
@@ -182,8 +238,10 @@ pub enum Wire {
     /// line 16). `bals` is sorted by `Gid`.
     AcceptAck { m: MsgId, g: Gid, bals: Vec<(Gid, Ballot)> },
     /// Leader replicates the committed (lts, gts) pair and orders
-    /// delivery (line 23).
-    Deliver { m: MsgId, bal: Ballot, lts: Ts, gts: Ts },
+    /// delivery (line 23). `path` carries the leader's white-box
+    /// latency-path classification so followers count deliveries under
+    /// the same label (see [`DeliveryPath`]).
+    Deliver { m: MsgId, bal: Ballot, lts: Ts, gts: Ts, path: DeliveryPath },
 
     // ---------- WbCast leader recovery (Fig. 4, lines 35-66) ----------
     /// "1a": ask group members to join ballot `bal`.
@@ -245,7 +303,7 @@ impl Wire {
             Wire::Propose { .. } => 1 + 8 + 4 + TS,
             Wire::Accept { meta, .. } => 1 + meta.size() + 4 + BAL + TS,
             Wire::AcceptAck { bals, .. } => 1 + 8 + 4 + 4 + bals.len() * (4 + BAL),
-            Wire::Deliver { .. } => 1 + 8 + BAL + 2 * TS,
+            Wire::Deliver { .. } => 1 + 8 + BAL + 2 * TS + 1,
             Wire::NewLeader { .. } => 1 + BAL,
             Wire::NewLeaderAck { state, .. } => {
                 1 + 2 * BAL + 8 + 4 + state.iter().map(state_size).sum::<usize>()

@@ -620,3 +620,220 @@ fn durable_member_restart_rejoins_from_disk() {
     drop(dels);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ---------------------------------------------------------------------
+// live observability: /metrics scraping under client load
+// ---------------------------------------------------------------------
+
+/// Minimal scrape client: one GET, read to EOF, return (status, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect metrics listener");
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").expect("write request");
+    let mut out = String::new();
+    conn.read_to_string(&mut out).expect("read response");
+    let code: u16 = out.split_whitespace().nth(1).expect("status line").parse().expect("status code");
+    let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (code, body)
+}
+
+/// Value of the exposition line starting with `prefix` (exact metric
+/// name + labels), e.g. `wbam_deliveries_total{path="fast"}`.
+fn metric_value(body: &str, prefix: &str) -> u64 {
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix(prefix) {
+            if let Ok(v) = rest.trim().parse() {
+                return v;
+            }
+        }
+    }
+    panic!("metric {prefix:?} not found in scrape:\n{body}");
+}
+
+/// The shared scenario behind the tcp and epoll scrape tests: a 2-group
+/// cluster where endpoint 0 carries the full observability stack
+/// (registry + `CoreMetrics` + exposition listener), two *stamped*
+/// clients drive load, and the scrape is checked against ground truth —
+/// the white-box path counters must sum to the endpoint's delivered
+/// count, and the exported latency quantiles must agree with the
+/// clients' own completion measurements within histogram error.
+fn scrape_under_load_scenario<T, F>(port_off: u16, bind: F)
+where
+    T: wbam::net::Transport + 'static,
+    F: Fn(Pid, std::collections::HashMap<Pid, std::net::SocketAddr>) -> T,
+{
+    use wbam::obs::{register_coord_stats, register_net_stats, CoreMetrics, MetricsServer, Registry};
+    let topo = Topology::new(2, 1);
+    // 16-wide per-process stride, split 8/8 between the tcp and epoll
+    // variants (they run concurrently in one test process)
+    let base = 39000 + (std::process::id() % 300) as u16 * 16 + port_off;
+    let mut addrs = std::collections::HashMap::new();
+    for i in 0..8u32 {
+        addrs.insert(Pid(i), format!("127.0.0.1:{}", base + i as u16).parse().unwrap());
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let wb = WbConfig { hb_interval: 50_000_000, ..WbConfig::default() };
+
+    // endpoint 0 (initial leader of group 0) exports through one registry
+    let reg = Arc::new(Registry::new());
+    let cm = CoreMetrics::register(&reg);
+    let mut handles = Vec::new();
+    let mut coord0 = None;
+    // cluster-wide delivery count: the shutdown condition (stopping on
+    // endpoint 0's count alone could cut the clients' final group acks
+    // mid-flight)
+    let all_delivered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    for g in topo.gids() {
+        for &p in topo.members(g) {
+            let node: Box<dyn Node> = Box::new(WbNode::new(p, topo.clone(), wb));
+            let t = bind(p, addrs.clone());
+            let net = t.net_stats();
+            let stop2 = Arc::clone(&stop);
+            let mut rt = NodeRuntime::new(node, t);
+            let d = Arc::clone(&all_delivered);
+            rt.on_deliver(Box::new(move |_p, _m, _g, _t| {
+                d.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }));
+            if p == Pid(0) {
+                register_coord_stats(&reg, &rt.stats());
+                register_net_stats(&reg, &net);
+                coord0 = Some(rt.stats());
+                rt.attach_metrics(Arc::clone(&cm));
+            }
+            handles.push(std::thread::spawn(move || rt.run(stop2)));
+        }
+    }
+    // the registry serves from an ephemeral port; the window quantiles
+    // are per-scrape, the _sum/_count pairs cumulative
+    let srv =
+        MetricsServer::serve("127.0.0.1:0", Arc::clone(&reg), Some(Arc::clone(&cm.flight))).expect("bind metrics listener");
+    std::thread::sleep(Duration::from_millis(100)); // listeners up
+
+    // pre-load scrape: the exposition schema must hold from startup.
+    // Done before the clients start because every scrape drains the
+    // histograms' interval window — the post-load scrape below must be
+    // the first one to see the latency samples.
+    let (code, early) = http_get(srv.addr, "/metrics");
+    assert_eq!(code, 200);
+    for ty in [
+        "# TYPE wbam_deliveries_total counter",
+        "# TYPE wbam_delivery_latency_ns summary",
+        "# TYPE wbam_stage_wait_ns summary",
+        "# TYPE wbam_distinct_clients gauge",
+        "# TYPE wbam_coord_delivered_total counter",
+        "# TYPE wbam_net_dropped_frames_total counter",
+    ] {
+        assert!(early.contains(ty), "missing {ty:?} in scrape:\n{early}");
+    }
+
+    let n_clients = 2u32;
+    let requests = 15u32;
+    let mut client_handles = Vec::new();
+    for c in 0..n_clients {
+        let pid = Pid(6 + c);
+        // stamp: wall-clock submit stamps feed the server-side e2e
+        // latency histogram; every message targets both groups, so
+        // endpoint 0 delivers all of them
+        let cfg = ClientCfg {
+            dest_groups: 2,
+            max_requests: Some(requests),
+            resend_after: 500_000_000,
+            stamp: true,
+            ..Default::default()
+        };
+        let node: Box<dyn Node> = Box::new(Client::new(pid, topo.clone(), cfg, 11 + c as u64));
+        let t = bind(pid, addrs.clone());
+        let stop2 = Arc::clone(&stop);
+        client_handles.push(std::thread::spawn(move || NodeRuntime::new(node, t).run(stop2)));
+    }
+
+    // ground truth: endpoint 0 delivers every one of the 30 multicasts,
+    // and the whole cluster (2 clients x 15 requests x 2 groups x 3
+    // replicas = 180 deliveries) finishes before the scrape
+    let expected = (n_clients * requests) as u64;
+    let coord0 = coord0.expect("endpoint 0 stats");
+    wait_for(
+        || {
+            all_delivered.load(std::sync::atomic::Ordering::Relaxed) >= 6 * expected as usize
+                && cm.delivered_total() >= expected
+                && coord0.delivered.load(std::sync::atomic::Ordering::Relaxed) >= expected
+        },
+        60,
+        "cluster-wide deliveries",
+    );
+    let (code, body) = http_get(srv.addr, "/metrics");
+    assert_eq!(code, 200);
+
+    // the white-box split must account for every delivery the runtime
+    // counted — no path falls through unclassified on the wbcast path
+    let fast = metric_value(&body, "wbam_deliveries_total{path=\"fast\"}");
+    let concurrent = metric_value(&body, "wbam_deliveries_total{path=\"concurrent\"}");
+    let recovery = metric_value(&body, "wbam_deliveries_total{path=\"recovery\"}");
+    let unclassified = metric_value(&body, "wbam_deliveries_total{path=\"unclassified\"}");
+    let delivered = metric_value(&body, "wbam_coord_delivered_total");
+    assert_eq!(
+        fast + concurrent + recovery + unclassified,
+        delivered,
+        "path counters must sum to the endpoint's deliveries (f={fast} c={concurrent} r={recovery} u={unclassified})"
+    );
+    assert_eq!(delivered, expected);
+    assert_eq!(unclassified, 0, "wbcast deliveries must all be classified");
+    assert_eq!(
+        metric_value(&body, "wbam_delivery_latency_ns_count"),
+        expected,
+        "every stamped message must produce one e2e latency sample"
+    );
+    let hll = metric_value(&body, "wbam_distinct_clients");
+    assert!((1..=4).contains(&hll), "HLL estimate {hll} for 2 clients");
+
+    // flight recorder observed the run
+    let (code, flight) = http_get(srv.addr, "/debug/flight");
+    assert_eq!(code, 200);
+    assert!(flight.contains("Deliver"), "flight ring missing deliveries:\n{flight}");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut samples: Vec<u64> = Vec::new();
+    for h in client_handles {
+        let node = h.join().unwrap();
+        let any: &dyn Node = &*node;
+        if let Some(c) = (any as &dyn std::any::Any).downcast_ref::<Client>() {
+            assert_eq!(c.completed.len(), requests as usize);
+            samples.extend(c.completed.iter().map(|s| s.done_at - s.sent_at));
+        }
+    }
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+
+    // latency agreement: a delivery at the member precedes the client's
+    // completion (one extra notification hop), so the exported
+    // distribution must sit at-or-below the client's own — within
+    // histogram bucket error (~2x slack) and never at zero
+    let p50 = metric_value(&body, "wbam_delivery_latency_ns{quantile=\"0.5\"}");
+    let p99 = metric_value(&body, "wbam_delivery_latency_ns{quantile=\"0.99\"}");
+    let cmax = *samples.iter().max().expect("client samples");
+    assert!(p50 > 0 && p50 <= p99, "degenerate exported quantiles p50={p50} p99={p99}");
+    assert!(p99 <= cmax.saturating_mul(2), "exported p99 {p99} vs client max {cmax}");
+    let mean_exported =
+        metric_value(&body, "wbam_delivery_latency_ns_sum") / metric_value(&body, "wbam_delivery_latency_ns_count");
+    let mean_client = samples.iter().sum::<u64>() / samples.len() as u64;
+    assert!(
+        mean_exported <= mean_client.saturating_mul(2),
+        "exported mean {mean_exported} vs client completion mean {mean_client}"
+    );
+    drop(srv);
+}
+
+/// Tentpole acceptance: scraping `/metrics` over the **tcp** transport
+/// while stamped clients drive load.
+#[test]
+fn metrics_scrape_under_tcp_load() {
+    scrape_under_load_scenario(0, |p, addrs| TcpTransport::bind(p, addrs).expect("bind tcp"));
+}
+
+/// The same scrape scenario over the **epoll** event-loop transport.
+#[cfg(target_os = "linux")]
+#[test]
+fn metrics_scrape_under_epoll_load() {
+    scrape_under_load_scenario(8, |p, addrs| wbam::net::EpollTransport::bind(p, addrs).expect("bind epoll"));
+}

@@ -366,7 +366,7 @@ fn codec_roundtrips_batched_and_plain_frames() {
 /// transport frame-reassembly test below).
 mod wire_gen {
     use wbam::types::wire::{MsgState, PaxosMsg, RsmCmd};
-    use wbam::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts, Wire};
+    use wbam::types::{Ballot, DeliveryPath, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts, Wire};
     use wbam::util::Rng;
 
     pub fn rnd_meta(r: &mut Rng) -> MsgMeta {
@@ -414,7 +414,13 @@ mod wire_gen {
                 g: Gid(r.below(64) as u32),
                 bals: (0..r.below(5)).map(|i| (Gid(i as u32), rnd_bal(r))).collect(),
             },
-            5 => Wire::Deliver { m: MsgId(r.next_u64()), bal: rnd_bal(r), lts: rnd_ts(r), gts: rnd_ts(r) },
+            5 => Wire::Deliver {
+                m: MsgId(r.next_u64()),
+                bal: rnd_bal(r),
+                lts: rnd_ts(r),
+                gts: rnd_ts(r),
+                path: DeliveryPath::from_u8(r.below(4) as u8),
+            },
             6 => Wire::NewLeader { bal: rnd_bal(r) },
             7 => Wire::NewLeaderAck {
                 bal: rnd_bal(r),
@@ -648,6 +654,7 @@ mod storage_props {
                 id: MsgId(r.next_u64()),
                 dest: GidSet(r.next_u64() & 0x3FF),
                 payload: (0..n).map(|_| r.below(256) as u8).collect::<Vec<u8>>().into(),
+                submit_ns: r.next_u64(),
             },
             phase: *r.choose(&[Phase::Start, Phase::Proposed, Phase::Accepted, Phase::Committed]),
             lts: rand_ts(r),

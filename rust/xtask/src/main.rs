@@ -3,7 +3,7 @@
 //! Dependency-free, in-tree static tooling (the offline build image
 //! cannot fetch crates). Three subcommands:
 //!
-//! * `lint` (default) — five line-oriented rules running on the
+//! * `lint` (default) — six line-oriented rules running on the
 //!   lexer's [`lexer::code_view`] (comments and string/char literals
 //!   blanked, so `unsafe` in a doc comment or `//` inside a string
 //!   can no longer produce false verdicts):
@@ -25,6 +25,11 @@
 //!      protocol core must not be iterated (hash order is
 //!      nondeterministic and tends to reach the wire); audited sites
 //!      carry `// unordered-ok: <reason>`.
+//!   6. **exporter-coverage** — every `pub <field>: AtomicU64` counter
+//!      in `CoordStats` / `NetStats` / `StorageStats` must be read in
+//!      `rust/src/obs/export.rs`, so a stats field added without a
+//!      `/metrics` export fails the gate instead of silently missing
+//!      from dashboards.
 //! * `analyze` — the protocol-aware analyses in [`analyze`]:
 //!   journal-before-ack dataflow, `Wire` exhaustiveness, lock-order
 //!   deadlock freedom, and blocking-call-in-event-loop reachability.
@@ -130,6 +135,21 @@ fn lint() -> ExitCode {
         violations.extend(lint_payload_alloc(&rel, &src));
         violations.extend(lint_unordered_iter(&rel, &src));
     }
+
+    // 6. exporter-coverage — stats structs vs the /metrics exporter
+    files += 1;
+    let export_src = read("rust/src/obs/export.rs");
+    let coord_src = read("rust/src/coordinator/mod.rs");
+    let net_src = read("rust/src/net/mod.rs");
+    let storage_src = read("rust/src/storage/mod.rs");
+    violations.extend(lint_exporter_coverage(
+        &export_src,
+        &[
+            ("rust/src/coordinator/mod.rs", "CoordStats", coord_src.as_str()),
+            ("rust/src/net/mod.rs", "NetStats", net_src.as_str()),
+            ("rust/src/storage/mod.rs", "StorageStats", storage_src.as_str()),
+        ],
+    ));
 
     report("lint", &format!("{files} files checked"), &violations)
 }
@@ -471,6 +491,92 @@ fn lint_unordered_iter(file: &str, src: &str) -> Vec<Violation> {
 }
 
 // ---------------------------------------------------------------------
+// rule 6: exporter-coverage
+// ---------------------------------------------------------------------
+
+/// `(field, line)` for every `pub <field>: AtomicU64` inside the
+/// brace-matched body of `pub struct <struct_name> { ... }`. Runs on the
+/// code view so commented-out fields don't count. Empty if the struct is
+/// missing (the caller turns that into a loud violation — a renamed
+/// struct must not silently disable the rule).
+fn atomic_counter_fields(src: &str, struct_name: &str) -> Vec<(String, usize)> {
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
+    let needle = format!("pub struct {struct_name} {{");
+    let Some(start) = code.iter().position(|l| l.contains(&needle)) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (i, line) in code.iter().enumerate().skip(start) {
+        if opened && depth > 0 && i > start {
+            let t = line.trim_start();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some((name, ty)) = rest.split_once(':') {
+                    if ty.trim().trim_end_matches(',').ends_with("AtomicU64") {
+                        out.push((name.trim().to_string(), i + 1));
+                    }
+                }
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Every public `AtomicU64` counter of the listed stats structs must be
+/// *read* in `obs/export.rs` (the field access `s.<name>.load(..)` —
+/// mentioning the name in a comment or metric string does not count,
+/// because `has_word` rejects `_`-joined occurrences and the export
+/// source is scanned as a code view).
+fn lint_exporter_coverage(
+    export_src: &str,
+    structs: &[(&str, &str, &str)], // (file, struct name, source)
+) -> Vec<Violation> {
+    let export_cv = lexer::code_view(export_src);
+    let mut out = Vec::new();
+    for (file, name, src) in structs {
+        let fields = atomic_counter_fields(src, name);
+        if fields.is_empty() {
+            out.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: "exporter-coverage",
+                msg: format!("stats struct `{name}` not found or has no AtomicU64 fields (renamed? update xtask)"),
+            });
+            continue;
+        }
+        for (field, line) in fields {
+            if !export_cv.lines().any(|l| has_word(l, &field)) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line,
+                    rule: "exporter-coverage",
+                    msg: format!(
+                        "`{name}.{field}` is not exported: add a counter_fn reading it \
+                         in rust/src/obs/export.rs"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
 // tests: every rule must fire on a minimal fixture violation and stay
 // quiet on the corresponding clean fixture
 // ---------------------------------------------------------------------
@@ -624,6 +730,45 @@ mod tests {
         assert!(lint_unordered_iter("f", other).is_empty());
     }
 
+    // --- rule 6 ---
+
+    #[test]
+    fn exporter_coverage_fires_on_unexported_field() {
+        let stats = "pub struct CoordStats {\n\
+                         pub wires_in: AtomicU64,\n\
+                         pub ghosts: AtomicU64,\n\
+                     }\n";
+        let export = "let s = stats.clone();\nreg.counter_fn(\"wbam_coord_wires_in_total\", \
+                      \"d\", vec![], move || s.wires_in.load(Ordering::Relaxed));\n";
+        let vs = lint_exporter_coverage(export, &[("coordinator/mod.rs", "CoordStats", stats)]);
+        assert_eq!(rules_of(&vs), ["exporter-coverage"]);
+        assert_eq!(vs[0].line, 3);
+        assert!(vs[0].msg.contains("ghosts"), "{}", vs[0].msg);
+    }
+
+    #[test]
+    fn exporter_coverage_clean_comment_blind_and_loud_on_missing_struct() {
+        let stats = "pub struct NetStats {\n\
+                         /// doc lines are ignored\n\
+                         pub dropped_frames: AtomicU64,\n\
+                         pub last_addr: Mutex<Option<SocketAddr>>,\n\
+                     }\n";
+        // a real field read satisfies the rule; non-AtomicU64 fields are out of scope
+        let ok = "move || s.dropped_frames.load(Ordering::Relaxed)\n";
+        assert!(lint_exporter_coverage(ok, &[("net/mod.rs", "NetStats", stats)]).is_empty());
+        // a comment naming the field is NOT an export (code view blanks it)
+        let comment_only = "// dropped_frames is handled elsewhere\n";
+        let vs = lint_exporter_coverage(comment_only, &[("net/mod.rs", "NetStats", stats)]);
+        assert_eq!(rules_of(&vs), ["exporter-coverage"]);
+        // the metric-name string alone is NOT an export either
+        let string_only = "reg.counter_fn(\"wbam_net_dropped_frames_total\", \"d\", vec![], zero);\n";
+        let vs = lint_exporter_coverage(string_only, &[("net/mod.rs", "NetStats", stats)]);
+        assert_eq!(rules_of(&vs), ["exporter-coverage"]);
+        // a renamed struct must fail loudly, not silently pass
+        let vs = lint_exporter_coverage(ok, &[("net/mod.rs", "GoneStats", stats)]);
+        assert_eq!(rules_of(&vs), ["exporter-coverage"]);
+    }
+
     // --- the gate passes on the real tree (the binary's own acceptance) ---
 
     #[test]
@@ -657,6 +802,18 @@ mod tests {
             vs.extend(lint_payload_alloc(&rel, &src));
             vs.extend(lint_unordered_iter(&rel, &src));
         }
+        let export_src = read("rust/src/obs/export.rs");
+        let coord_src = read("rust/src/coordinator/mod.rs");
+        let net_src = read("rust/src/net/mod.rs");
+        let storage_src = read("rust/src/storage/mod.rs");
+        vs.extend(lint_exporter_coverage(
+            &export_src,
+            &[
+                ("rust/src/coordinator/mod.rs", "CoordStats", coord_src.as_str()),
+                ("rust/src/net/mod.rs", "NetStats", net_src.as_str()),
+                ("rust/src/storage/mod.rs", "StorageStats", storage_src.as_str()),
+            ],
+        ));
         assert!(vs.is_empty(), "clean-tree violations: {vs:#?}");
     }
 }
