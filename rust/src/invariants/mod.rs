@@ -200,6 +200,27 @@ pub fn check_termination(trace: &Trace) -> Vec<Violation> {
     v
 }
 
+/// Check safety + termination without panicking, shard-aware: the full
+/// strict suite over a quiescent trace, returning every violation found
+/// (empty = clean run). This is the swarm campaign's per-schedule check
+/// — identical strictness to [`assert_correct`], but failures come back
+/// as data so the runner can save the schedule and minimize it.
+pub fn check_correct(trace: &Trace) -> Vec<Violation> {
+    if trace.shards() > 1 {
+        let mut v = Vec::new();
+        for s in 0..trace.shards() {
+            let view = trace.shard_view(s);
+            v.extend(check_safety(&view));
+            v.extend(check_termination(&view));
+        }
+        v
+    } else {
+        let mut v = check_safety(trace);
+        v.extend(check_termination(trace));
+        v
+    }
+}
+
 /// Assert a clean trace; pretty-panic otherwise (test helper).
 pub fn assert_safe(trace: &Trace) {
     let vs = check_safety(trace);

@@ -7,9 +7,12 @@
 //! injection. Every run is a pure function of `(nodes, config, seed)`.
 
 pub mod delay;
+pub mod nemesis;
+pub mod swarm;
 pub mod trace;
 
 pub use delay::{ConstDelay, DelayModel, LanDelay, WanDelay, MS, US};
+pub use nemesis::{NemesisEvent, NemesisSchedule};
 pub use trace::{DeliveryEv, Trace};
 
 use crate::protocols::{LinkCoalescer, Node, Outbox, TimerKind};
@@ -70,6 +73,117 @@ enum EventKind {
 /// Rebuilds a node from its recovered storage image at restart
 /// (registered per pid via [`World::enable_storage`]).
 pub type RestartFn = Box<dyn FnMut(crate::storage::Snapshot) -> Box<dyn Node>>;
+
+/// Active nemesis fault windows (see [`nemesis`] for the schedule layer).
+///
+/// All collections default to empty, and every hook below consults them
+/// with plain scans that consume **no randomness** when nothing matches —
+/// a zero-fault world is therefore event-for-event identical to a world
+/// without the machinery (pinned by `tests/swarm.rs`). Schedules are
+/// small (tens of windows), so linear scans beat map overhead here.
+#[derive(Default)]
+struct Faults {
+    /// one-way link blocks `(from, to, start, heal)`: frames shipped on
+    /// the link while `start ≤ now < heal` are held and arrive no
+    /// earlier than the heal instant (partitions delay, never drop —
+    /// the asynchronous reliable-link model stays intact, so the strict
+    /// invariant checks remain exact)
+    blocked: Vec<(Pid, Pid, u64, u64)>,
+    /// delay jitter `(from, to, start, end, extra_max)`: frames shipped
+    /// in the window pick up a seeded extra delay in `[0, extra_max]`
+    jitter: Vec<(Pid, Pid, u64, u64, u64)>,
+    /// duplication windows `(from, to, start, end)`: each frame shipped
+    /// in the window arrives twice (FIFO-respecting second copy)
+    dup: Vec<(Pid, Pid, u64, u64)>,
+    /// reorder windows `(from, to, start, end)`: the FIFO clamp is
+    /// bypassed for frames shipped in the window — deliberately outside
+    /// the protocols' reliable-FIFO assumption (targeted tests only)
+    reorder: Vec<(Pid, Pid, u64, u64)>,
+    /// per-node timer-wheel skew `(pid, from_t, ppm)`: timers armed
+    /// from `from_t` on stretch (+ppm) or shrink (−ppm) by parts-per-million
+    skew: Vec<(Pid, u64, i64)>,
+    /// gray failure `(pid, start, end, extra_ns)`: the node stays alive
+    /// but every event it handles costs `extra_ns` more CPU
+    slow: Vec<(Pid, u64, u64, u64)>,
+    /// slow disk `(pid, start, end, extra_ns)`: each journaled record
+    /// costs `extra_ns` extra inside the window
+    disk_slow: Vec<(Pid, u64, u64, u64)>,
+    /// one-shot disk faults `(pid, at, fault, cut_bp)`: armed into the
+    /// pid's [`crate::storage::MemWal`] at its first journaling event
+    /// at or after `at`
+    disk_fault: Vec<(Pid, u64, crate::storage::WalFault, u32)>,
+}
+
+impl Faults {
+    /// Latest heal instant among blocks covering `(from, to)` at `now`.
+    fn block_until(&self, from: Pid, to: Pid, now: u64) -> Option<u64> {
+        self.blocked
+            .iter()
+            .filter(|&&(f, t, s, h)| f == from && t == to && s <= now && now < h)
+            .map(|&(_, _, _, h)| h)
+            .max()
+    }
+
+    /// Largest jitter bound active on `(from, to)` at `now`.
+    fn jitter_max(&self, from: Pid, to: Pid, now: u64) -> Option<u64> {
+        self.jitter
+            .iter()
+            .filter(|&&(f, t, s, e, _)| f == from && t == to && s <= now && now < e)
+            .map(|&(_, _, _, _, x)| x)
+            .max()
+    }
+
+    fn dup_active(&self, from: Pid, to: Pid, now: u64) -> bool {
+        self.dup.iter().any(|&(f, t, s, e)| f == from && t == to && s <= now && now < e)
+    }
+
+    fn reorder_active(&self, from: Pid, to: Pid, now: u64) -> bool {
+        self.reorder.iter().any(|&(f, t, s, e)| f == from && t == to && s <= now && now < e)
+    }
+
+    /// Apply `pid`'s timer skew to a delay of `after` ns (last-set wins).
+    fn skewed(&self, pid: Pid, after: u64, now: u64) -> u64 {
+        let ppm = self
+            .skew
+            .iter()
+            .rev()
+            .find(|&&(p, from_t, _)| p == pid && from_t <= now)
+            .map(|&(_, _, ppm)| ppm)
+            .unwrap_or(0);
+        if ppm == 0 {
+            return after;
+        }
+        let skewed = after as i128 + (after as i128 * ppm as i128) / 1_000_000;
+        skewed.max(0) as u64
+    }
+
+    /// Extra per-event CPU cost of a gray-slow window at `pid`.
+    fn slow_extra(&self, pid: Pid, now: u64) -> u64 {
+        self.slow
+            .iter()
+            .filter(|&&(p, s, e, _)| p == pid && s <= now && now < e)
+            .map(|&(_, _, _, x)| x)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Extra per-record journaling cost of a slow-disk window at `pid`.
+    fn disk_extra(&self, pid: Pid, now: u64) -> u64 {
+        self.disk_slow
+            .iter()
+            .filter(|&&(p, s, e, _)| p == pid && s <= now && now < e)
+            .map(|&(_, _, _, x)| x)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Remove and return a disk fault due for `pid` at `now`.
+    fn take_disk_fault(&mut self, pid: Pid, now: u64) -> Option<(crate::storage::WalFault, u32)> {
+        let i = self.disk_fault.iter().position(|&(p, at, _, _)| p == pid && at <= now)?;
+        let (_, _, fault, cut) = self.disk_fault.remove(i);
+        Some((fault, cut))
+    }
+}
 
 #[derive(Clone, Debug)]
 struct Event {
@@ -172,6 +286,8 @@ pub struct World {
     /// bounded ring of recent wire/journal/delivery events the harness
     /// dumps when an invariant fails
     flight: Option<std::sync::Arc<crate::obs::FlightRecorder>>,
+    /// nemesis fault windows (all empty unless a schedule armed them)
+    faults: Faults,
     /// debug: print every handled event (env `WBAM_SIM_LOG=1`)
     pub log_events: bool,
 }
@@ -215,8 +331,82 @@ impl World {
             stores: FxHashMap::default(),
             rebuilders: FxHashMap::default(),
             flight: None,
+            faults: Faults::default(),
             log_events: std::env::var("WBAM_SIM_LOG").is_ok(),
         }
+    }
+
+    // ---------- nemesis knobs (see [`nemesis`]) ----------
+    //
+    // Each knob records a window or one-shot fault consulted by the
+    // scheduling hooks; none is reachable from production code paths —
+    // the repo gate (`cargo xtask lint`, rule `nemesis-reach`) keeps it
+    // that way.
+
+    /// Partition pid sets `a` and `b` from `start` until `heal`: frames
+    /// between the sets are held and arrive no earlier than `heal`
+    /// (delayed, never dropped — reliable asynchronous links). With
+    /// `oneway`, only a→b traffic is blocked (asymmetric link failure).
+    pub fn net_partition(&mut self, a: &[Pid], b: &[Pid], start: u64, heal: u64, oneway: bool) {
+        for &x in a {
+            for &y in b {
+                self.faults.blocked.push((x, y, start, heal));
+                if !oneway {
+                    self.faults.blocked.push((y, x, start, heal));
+                }
+            }
+        }
+    }
+
+    /// Bounded delay jitter on `(from, to)`: frames shipped in
+    /// `[start, end)` pick up a seeded extra delay in `[0, extra_max]`.
+    pub fn link_jitter(&mut self, from: Pid, to: Pid, start: u64, end: u64, extra_max: u64) {
+        self.faults.jitter.push((from, to, start, end, extra_max));
+    }
+
+    /// Duplicate frames shipped on `(from, to)` during `[start, end)`
+    /// (the second copy respects the link's FIFO order).
+    pub fn link_dup(&mut self, from: Pid, to: Pid, start: u64, end: u64) {
+        self.faults.dup.push((from, to, start, end));
+    }
+
+    /// Let frames shipped on `(from, to)` during `[start, end)` overtake
+    /// earlier traffic (FIFO clamp bypassed). This steps *outside* the
+    /// protocols' reliable-FIFO channel assumption (§II) — an explicit
+    /// knob for targeted tests, not part of the default swarm
+    /// distribution (see [`nemesis::NemesisSchedule::generate`]).
+    pub fn link_reorder(&mut self, from: Pid, to: Pid, start: u64, end: u64) {
+        self.faults.reorder.push((from, to, start, end));
+    }
+
+    /// Skew `pid`'s timer wheel by `ppm` parts-per-million from `from_t`
+    /// on: every timer it arms stretches (+) or shrinks (−) by that
+    /// factor — bounded clock drift between per-node timer wheels.
+    pub fn clock_skew(&mut self, pid: Pid, from_t: u64, ppm: i64) {
+        self.faults.skew.push((pid, from_t, ppm));
+    }
+
+    /// Gray failure: `pid` stays alive but every event it handles during
+    /// `[start, end)` costs `extra_ns` more — slow-but-alive, the
+    /// failure detectors' hardest case.
+    pub fn gray_slow(&mut self, pid: Pid, start: u64, end: u64, extra_ns: u64) {
+        self.faults.slow.push((pid, start, end, extra_ns));
+    }
+
+    /// Slow disk: each record `pid` journals during `[start, end)` costs
+    /// `extra_ns` extra before the event's sends can ship.
+    pub fn disk_slow(&mut self, pid: Pid, start: u64, end: u64, extra_ns: u64) {
+        self.faults.disk_slow.push((pid, start, end, extra_ns));
+    }
+
+    /// Arm a one-shot disk fault: `pid`'s first journal append at or
+    /// after `at` is torn ([`crate::storage::WalFault::Torn`], cut at
+    /// `cut_bp`/10000 of the frame) or fails outright
+    /// ([`crate::storage::WalFault::Failed`], poisoning the WAL). Either
+    /// way the process crashes inside that same atomic event, before any
+    /// of its sends ship — no post-failure acknowledgement ever leaves.
+    pub fn disk_fault_at(&mut self, pid: Pid, at: u64, fault: crate::storage::WalFault, cut_bp: u32) {
+        self.faults.disk_fault.push((pid, at, fault, cut_bp));
     }
 
     /// Attach a bounded flight recorder keeping the last `cap` protocol
@@ -306,14 +496,36 @@ impl World {
     /// deliveries/timers/arrivals stamped with the completion time.
     /// Outbox and frame buffers are retained for reuse.
     fn finish_event(&mut self, idx: usize, pid: Pid, time: u64, cost_in: u64, charge_sends: bool) {
-        let t0 = time + cost_in;
+        // a slow disk stretches the commit point by extra_ns per record
+        let disk_cost = if self.outbox.records.is_empty() {
+            0
+        } else {
+            self.faults.disk_extra(pid, time) * self.outbox.records.len() as u64
+        };
+        let t0 = time + cost_in + disk_cost;
         // persist journal records before the event's sends ship: events
         // are atomic in the sim, so this is the virtual-time analogue of
         // the runtimes' commit-before-flush group-commit point
         if !self.outbox.records.is_empty() {
             if let Some(store) = self.stores.get_mut(&pid) {
+                if let Some((fault, cut_bp)) = self.faults.take_disk_fault(pid, time) {
+                    store.arm_fault(fault, cut_bp); // nemesis-ok: sim injection site
+                }
                 for rec in &self.outbox.records {
                     store.append(rec);
+                }
+                if store.take_fired().is_some() {
+                    // the journal append tore or failed: the process dies
+                    // here, inside this same atomic event. None of the
+                    // event's sends, deliveries or timers leave — the
+                    // journal-before-ack contract means no post-failure
+                    // acknowledgement is ever observable
+                    self.outbox.sends.clear();
+                    self.outbox.delivers.clear();
+                    self.outbox.timers.clear();
+                    self.outbox.records.clear();
+                    self.crash_now(idx, pid, t0);
+                    return;
                 }
             }
             if let Some(fl) = &self.flight {
@@ -356,6 +568,8 @@ impl World {
         self.outbox.delivers.clear();
         for i in 0..self.outbox.timers.len() {
             let (kind, after) = self.outbox.timers[i];
+            // bounded clock skew: this node's timer wheel runs fast/slow
+            let after = self.faults.skewed(pid, after, done_at);
             self.push(done_at + after, pid, EventKind::Timer(kind));
         }
         self.outbox.timers.clear();
@@ -387,16 +601,45 @@ impl World {
             }
             self.trace.send_bytes += frame.size() as u64;
             let arr = if to == pid {
-                done_at // self-sends are local
+                done_at // self-sends are local, faults never apply
             } else {
-                done_at + self.delay.sample(&mut self.rng, pid, to)
+                let mut arr = done_at + self.delay.sample(&mut self.rng, pid, to);
+                // partition: hold the frame until the link heals (delayed,
+                // never dropped — the links stay reliable, just slow)
+                if let Some(heal) = self.faults.block_until(pid, to, done_at) {
+                    arr = arr.max(heal);
+                }
+                // bounded jitter: seeded extra delay (rng consulted only
+                // inside an active window, so zero-fault runs stay
+                // event-for-event identical to the plain sim)
+                if let Some(extra) = self.faults.jitter_max(pid, to, done_at) {
+                    arr += self.rng.below(extra + 1);
+                }
+                arr
             };
-            // reliable FIFO channel: never reorder within a link
             let key = (pid, to);
+            if to != pid && self.faults.reorder_active(pid, to, done_at) {
+                // reorder window: bypass the FIFO clamp so this frame may
+                // overtake in-flight traffic; the watermark is left
+                // untouched so later frames are not dragged forward
+                self.push(arr, to, EventKind::Arrival { from: pid, wire: frame });
+                continue;
+            }
+            let dup =
+                if to != pid && self.faults.dup_active(pid, to, done_at) { Some(frame.clone()) } else { None };
+            // reliable FIFO channel: never reorder within a link
             let last = self.fifo_last.get(&key).copied().unwrap_or(0);
             let arr = arr.max(last);
             self.fifo_last.insert(key, arr);
             self.push(arr, to, EventKind::Arrival { from: pid, wire: frame });
+            if let Some(w) = dup {
+                // duplicate copy trails the original within FIFO order (a
+                // link-level retransmission, not a protocol send — it is
+                // deliberately absent from the send accounting)
+                let arr2 = arr + self.rng.below(self.delay.delta().max(1));
+                self.fifo_last.insert(key, arr2);
+                self.push(arr2, to, EventKind::Arrival { from: pid, wire: w });
+            }
         }
     }
 
@@ -452,25 +695,7 @@ impl World {
             return true; // drop events to crashed processes
         }
         match ev.kind {
-            EventKind::Crash => {
-                self.crashed[idx] = true;
-                self.backlog[idx].clear();
-                // the pending Drain wake-up (if any) will be dropped by
-                // the crashed-process filter: clear the flag too, or a
-                // later Restart could never schedule another drain and
-                // the reborn node would backlog events forever
-                self.drain_scheduled[idx] = false;
-                // unflushed coalescing wires die with the process
-                self.links[idx].clear();
-                self.flush_scheduled[idx] = None;
-                // a crashed pid's links can never be consulted again:
-                // prune its FIFO watermarks and arrival count, or long
-                // crash-injection runs grow these maps without bound
-                self.fifo_last.retain(|&(a, b), _| a != ev.to && b != ev.to);
-                self.arrivals.remove(&ev.to);
-                self.trace.on_crash(ev.time, ev.to);
-                self.nodes[idx].on_crash(ev.time);
-            }
+            EventKind::Crash => self.crash_now(idx, ev.to, ev.time),
             EventKind::FlushDue => {
                 if self.flush_scheduled[idx] == Some(ev.time) {
                     self.flush_scheduled[idx] = None;
@@ -510,6 +735,29 @@ impl World {
         true
     }
 
+    /// Kill process `idx` immediately: used by the [`EventKind::Crash`]
+    /// event and by disk faults that fire mid-event (the process dies
+    /// inside the failing event, before any of its sends ship).
+    fn crash_now(&mut self, idx: usize, pid: Pid, time: u64) {
+        self.crashed[idx] = true;
+        self.backlog[idx].clear();
+        // the pending Drain wake-up (if any) will be dropped by
+        // the crashed-process filter: clear the flag too, or a
+        // later Restart could never schedule another drain and
+        // the reborn node would backlog events forever
+        self.drain_scheduled[idx] = false;
+        // unflushed coalescing wires die with the process
+        self.links[idx].clear();
+        self.flush_scheduled[idx] = None;
+        // a crashed pid's links can never be consulted again:
+        // prune its FIFO watermarks and arrival count, or long
+        // crash-injection runs grow these maps without bound
+        self.fifo_last.retain(|&(a, b), _| a != pid && b != pid);
+        self.arrivals.remove(&pid);
+        self.trace.on_crash(time, pid);
+        self.nodes[idx].on_crash(time);
+    }
+
     /// Rebuild a crashed process from its simulated storage: decode the
     /// [`crate::storage::MemWal`] fold (the exact on-disk codec path),
     /// hand it to the registered rebuilder, and start the reborn node —
@@ -520,6 +768,11 @@ impl World {
             return;
         }
         let Some(store) = self.stores.get(&pid) else { return };
+        if store.is_poisoned() {
+            // file-backed Storage parity: a poisoned WAL (fsync failure)
+            // refuses recovery — the process stays dead
+            return;
+        }
         let snap = store.recover();
         let Some(rebuild) = self.rebuilders.get_mut(&pid) else { return };
         let node = rebuild(snap);
@@ -581,7 +834,9 @@ impl World {
             }
             _ => unreachable!(),
         };
-        self.finish_event(idx, to, time, cost_in, true);
+        // gray failure: a slow-but-alive node pays extra for every event
+        let slow = self.faults.slow_extra(to, time);
+        self.finish_event(idx, to, time, cost_in + slow, true);
     }
 
     /// Run until the virtual clock reaches `t` (or the queue drains).
@@ -622,6 +877,30 @@ impl World {
     pub fn is_crashed(&self, pid: Pid) -> bool {
         self.crashed[self.pid_index[&pid]]
     }
+
+    /// Replace `pid`'s node with `wrap(old)` — used by the swarm to
+    /// install test-only protocol shims (e.g. a double-delivering
+    /// wrapper that seeds a known safety violation) without the
+    /// protocols knowing. Must run before the world starts.
+    pub fn wrap_node(&mut self, pid: Pid, wrap: impl FnOnce(Box<dyn Node>) -> Box<dyn Node>) {
+        assert!(!self.started, "wrap_node must run before the world starts");
+        let idx = self.pid_index[&pid];
+        let old = std::mem::replace(&mut self.nodes[idx], Box::new(NullNode(pid)));
+        let new = wrap(old);
+        assert_eq!(new.pid(), pid, "wrapper changed the node's pid");
+        self.nodes[idx] = new;
+    }
+}
+
+/// Placeholder for [`World::wrap_node`]'s `mem::replace`; never runs.
+struct NullNode(Pid);
+impl Node for NullNode {
+    fn pid(&self) -> Pid {
+        self.0
+    }
+    fn on_start(&mut self, _now: u64, _out: &mut Outbox) {}
+    fn on_wire(&mut self, _from: Pid, _wire: Wire, _now: u64, _out: &mut Outbox) {}
+    fn on_timer(&mut self, _timer: TimerKind, _now: u64, _out: &mut Outbox) {}
 }
 
 #[cfg(test)]

@@ -1,0 +1,278 @@
+//! Swarm runner: execute [`NemesisSchedule`]s under the strict
+//! invariant suite, campaign over thousands of seeds, and minimize
+//! failing schedules with delta debugging.
+//!
+//! Everything here is deterministic: a schedule (itself a pure function
+//! of its seed) builds a [`World`] whose run is a pure function of the
+//! schedule, so [`run`] always returns the same [`Outcome`] — including
+//! the trace digest — and [`campaign`]'s summary hash is reproducible
+//! bit-for-bit across machines. That determinism is what makes a saved
+//! JSON schedule a *reproducer* rather than a hint, and what lets
+//! [`minimize`]'s ddmin loop trust every probe it makes.
+//!
+//! Used by `rust/tests/swarm.rs` (the in-tree entry point) and by
+//! `cargo xtask swarm` (the campaign CLI with JSON/flight artifacts).
+
+use super::nemesis::{NemesisSchedule, Shim};
+use super::World;
+use crate::harness::{build_world, enable_wb_storage, Net, Proto, RunCfg};
+use crate::protocols::wbcast::WbConfig;
+use crate::protocols::{Node, Outbox, TimerKind};
+use crate::types::{Pid, Topology, Wire};
+
+/// Result of one schedule run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Strict-check violations plus liveness/panic findings; empty =
+    /// the schedule passed.
+    pub violations: Vec<String>,
+    /// [`super::Trace::digest`] of the run (0 if the run panicked).
+    pub digest: u64,
+    /// Rendered flight-recorder tail (only on failure; empty otherwise).
+    pub flight: String,
+}
+
+impl Outcome {
+    pub fn failed(&self) -> bool {
+        !self.violations.is_empty()
+    }
+}
+
+/// One failing schedule inside a [`Campaign`].
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// Campaign index (the schedule's seed is derived from it).
+    pub index: u64,
+    pub schedule: NemesisSchedule,
+    pub outcome: Outcome,
+}
+
+/// Result of a [`campaign`] over `schedules` seeds.
+#[derive(Debug)]
+pub struct Campaign {
+    pub schedules: u64,
+    pub failures: Vec<Failure>,
+    /// FNV fold of every run's (index, digest, violation count): equal
+    /// summaries ⇔ the whole campaign behaved identically.
+    pub summary: u64,
+}
+
+/// Build the simulated deployment a schedule describes: a WbCast world
+/// with durability + per-member storage/rebuilders, the flight recorder
+/// armed, the optional violation shim installed, and every nemesis
+/// event applied. The world has not started yet.
+pub fn build(s: &NemesisSchedule) -> World {
+    let delta = s.delta;
+    let mut cfg = RunCfg::new(Proto::WbCast, s.groups, s.clients, s.dest_groups, Net::Theory { delta });
+    cfg.seed = s.seed;
+    cfg.max_requests = Some(s.reqs);
+    cfg.record_full = true;
+    cfg.resend_after = 40 * delta;
+    let mut wb = WbConfig::with_failures(delta);
+    wb.durability = true; // journaled: restarts recover through the WAL
+    cfg.wb = wb;
+    let mut w = build_world(&cfg);
+    enable_wb_storage(&mut w, &Topology::new(s.groups, 1), wb);
+    w.enable_flight(4096);
+    if let Some(Shim::DoubleDeliver { pid, nth }) = &s.shim {
+        let n = *nth;
+        w.wrap_node(*pid, move |inner| Box::new(DoubleDeliverShim { inner, remaining: n }));
+    }
+    for e in &s.events {
+        super::nemesis::apply(&mut w, e);
+    }
+    w
+}
+
+/// Run one schedule to its horizon and check it: strict safety +
+/// termination ([`crate::invariants::check_correct`]) plus the no-stuck-
+/// messages liveness the crash property tests assert. Panics inside the
+/// run (livelock guards, protocol assertions) are caught and reported
+/// as violations so a campaign never dies mid-flight.
+pub fn run(s: &NemesisSchedule) -> Outcome {
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut w = build(s);
+        w.run_until(s.horizon);
+        let mut violations: Vec<String> =
+            crate::invariants::check_correct(&w.trace).iter().map(|v| v.to_string()).collect();
+        if w.trace.incomplete() > 0 {
+            violations
+                .push(format!("[liveness] {} multicasts incomplete at horizon", w.trace.incomplete()));
+        }
+        let flight = if violations.is_empty() {
+            String::new()
+        } else {
+            w.flight().map(|f| f.render()).unwrap_or_default()
+        };
+        Outcome { violations, digest: w.trace.digest(), flight }
+    }));
+    out.unwrap_or_else(|e| Outcome {
+        violations: vec![format!("[panic] {}", panic_msg(&*e))],
+        digest: 0,
+        flight: String::new(),
+    })
+}
+
+/// Derive the schedule seed for campaign index `i` (splitmix-style, so
+/// neighbouring indices explore unrelated schedules).
+pub fn schedule_seed(campaign_seed: u64, i: u64) -> u64 {
+    let mut z = campaign_seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run `schedules` generated schedules derived from `seed`, calling
+/// `each` after every run (progress reporting; pass `|_, _|()` to skip).
+pub fn campaign_with<F: FnMut(u64, &Outcome)>(schedules: u64, seed: u64, mut each: F) -> Campaign {
+    let mut failures = Vec::new();
+    let mut summary = 0xcbf2_9ce4_8422_2325u64;
+    let mut fold = |h: &mut u64, x: u64| {
+        for b in x.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for i in 0..schedules {
+        let s = NemesisSchedule::generate(schedule_seed(seed, i));
+        let o = run(&s);
+        fold(&mut summary, i);
+        fold(&mut summary, o.digest);
+        fold(&mut summary, o.violations.len() as u64);
+        each(i, &o);
+        if o.failed() {
+            failures.push(Failure { index: i, schedule: s, outcome: o });
+        }
+    }
+    Campaign { schedules, failures, summary }
+}
+
+/// [`campaign_with`] without a progress callback.
+pub fn campaign(schedules: u64, seed: u64) -> Campaign {
+    campaign_with(schedules, seed, |_, _| ())
+}
+
+/// Delta-debug a failing schedule down to a minimal reproducing event
+/// list (classic ddmin: try subsets, then complements, doubling
+/// granularity). The workload shape, seed and shim are preserved —
+/// only `events` shrinks. Returns the input unchanged if it does not
+/// actually fail.
+pub fn minimize(s: &NemesisSchedule) -> NemesisSchedule {
+    let with = |events: &[super::nemesis::NemesisEvent]| {
+        let mut t = s.clone();
+        t.events = events.to_vec();
+        t
+    };
+    let fails = |events: &[super::nemesis::NemesisEvent]| run(&with(events)).failed();
+    if !fails(&s.events) {
+        return s.clone();
+    }
+    // fast path: shim-only failures reproduce with no faults at all
+    if fails(&[]) {
+        return with(&[]);
+    }
+    let mut events = s.events.clone();
+    let mut n = 2usize;
+    while events.len() >= 2 {
+        let len = events.len();
+        let chunk = len.div_ceil(n);
+        let mut reduced = false;
+        // try each subset chunk alone
+        let mut subset = None;
+        for st in (0..len).step_by(chunk) {
+            let c = &events[st..(st + chunk).min(len)];
+            if c.len() < len && fails(c) {
+                subset = Some(c.to_vec());
+                break;
+            }
+        }
+        if let Some(sub) = subset {
+            events = sub;
+            n = 2;
+            reduced = true;
+        }
+        if !reduced {
+            // try each complement (all but one chunk)
+            let starts: Vec<usize> = (0..len).step_by(chunk).collect();
+            for &st in &starts {
+                let end = (st + chunk).min(len);
+                let comp: Vec<_> =
+                    events[..st].iter().chain(&events[end..]).cloned().collect();
+                if !comp.is_empty() && comp.len() < len && fails(&comp) {
+                    events = comp;
+                    n = n.saturating_sub(1).max(2);
+                    reduced = true;
+                    break;
+                }
+            }
+        }
+        if !reduced {
+            if n >= len {
+                break; // single-event granularity reached: 1-minimal
+            }
+            n = (n * 2).min(len);
+        }
+    }
+    with(&events)
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic".to_string()
+    }
+}
+
+/// Test-only wrapper seeding a known integrity violation: delegates
+/// every handler to the wrapped node and duplicates its `nth` delivery
+/// (1-based) — the swarm must catch it, and the minimizer must shrink
+/// the surrounding schedule. Installed via [`World::wrap_node`] when a
+/// schedule carries [`Shim::DoubleDeliver`].
+struct DoubleDeliverShim {
+    inner: Box<dyn Node>,
+    /// deliveries left until the duplicate fires (0 = already fired)
+    remaining: u32,
+}
+
+impl DoubleDeliverShim {
+    fn tamper(&mut self, before: usize, out: &mut Outbox) {
+        if self.remaining == 0 {
+            return;
+        }
+        for i in before..out.delivers.len() {
+            self.remaining -= 1;
+            if self.remaining == 0 {
+                let dup = out.delivers[i]; // DeliverEffect is Copy
+                out.delivers.push(dup);
+                return;
+            }
+        }
+    }
+}
+
+impl Node for DoubleDeliverShim {
+    fn pid(&self) -> Pid {
+        self.inner.pid()
+    }
+    fn on_start(&mut self, now: u64, out: &mut Outbox) {
+        let before = out.delivers.len();
+        self.inner.on_start(now, out);
+        self.tamper(before, out);
+    }
+    fn on_wire(&mut self, from: Pid, wire: Wire, now: u64, out: &mut Outbox) {
+        let before = out.delivers.len();
+        self.inner.on_wire(from, wire, now, out);
+        self.tamper(before, out);
+    }
+    fn on_timer(&mut self, timer: TimerKind, now: u64, out: &mut Outbox) {
+        let before = out.delivers.len();
+        self.inner.on_timer(timer, now, out);
+        self.tamper(before, out);
+    }
+    fn on_crash(&mut self, now: u64) {
+        self.inner.on_crash(now);
+    }
+}

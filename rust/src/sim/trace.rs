@@ -171,6 +171,48 @@ impl Trace {
         bins
     }
 
+    /// FNV-1a digest over a canonical encoding of everything the trace
+    /// observed: multicasts (sorted by id), deliveries (in delivery
+    /// order), crashes, restarts, latency samples, completions and the
+    /// aggregate counters. Two runs with identical digests saw the same
+    /// events at the same virtual instants — the determinism pin the
+    /// swarm's campaign summary hash is built from.
+    pub fn digest(&self) -> u64 {
+        fn fnv(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut ms: Vec<(MsgId, u64, GidSet)> =
+            self.multicasts.iter().map(|(&m, &(t, d))| (m, t, d)).collect();
+        ms.sort_unstable();
+        for (m, t, d) in ms {
+            fnv(&mut h, m.0);
+            fnv(&mut h, t);
+            fnv(&mut h, d.0);
+        }
+        for d in &self.deliveries {
+            fnv(&mut h, d.time);
+            fnv(&mut h, d.pid.0 as u64);
+            fnv(&mut h, d.m.0);
+            fnv(&mut h, d.gts.t);
+            fnv(&mut h, d.gts.g.0 as u64);
+        }
+        for &(t, p) in self.crashes.iter().chain(&self.restarts) {
+            fnv(&mut h, t);
+            fnv(&mut h, p.0 as u64);
+        }
+        for &x in self.latencies.iter().chain(&self.completions) {
+            fnv(&mut h, x);
+        }
+        fnv(&mut h, self.sends);
+        fnv(&mut h, self.send_bytes);
+        fnv(&mut h, self.delivered_count);
+        h
+    }
+
     pub fn topo(&self) -> &Topology {
         &self.topo
     }

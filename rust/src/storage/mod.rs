@@ -407,13 +407,38 @@ impl Snapshot {
 
 // ---------------- in-memory WAL (simulator backend) ----------------
 
+/// A disk fault armed on the next [`MemWal::append`] — the simulator's
+/// nemesis schedules inject these (see `crate::sim::nemesis`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalFault {
+    /// the next append is torn mid-frame: only a strict prefix of the
+    /// frame reaches the buffer — the crash-mid-write tail that
+    /// [`decode_frames`] truncates on recovery
+    Torn,
+    /// the next append fails outright: nothing is written and the log
+    /// poisons itself — the [`Storage::poison`] analogue; a poisoned
+    /// `MemWal` is refused by the simulated restart path exactly like a
+    /// `POISONED` directory is refused by [`Storage::open`]
+    Failed,
+}
+
 /// The simulator's storage backend: record frames appended to a byte
 /// buffer with the identical framing the file-backed WAL uses, so a
 /// simulated restart round-trips node state through the on-disk codec.
+/// Nemesis schedules can arm torn/failing writes ([`MemWal::arm_fault`])
+/// to exercise the same crash-mid-write and poison semantics the
+/// file-backed [`Storage`] implements.
 #[derive(Default)]
 pub struct MemWal {
     buf: Vec<u8>,
     records: u64,
+    /// fault armed for the next append (+ torn cut in basis points of
+    /// the frame length) // nemesis-ok: fault-hook state, sim-injected
+    armed: Option<(WalFault, u32)>,
+    /// fault that fired and has not been observed yet ([`MemWal::take_fired`])
+    fired: Option<WalFault>,
+    /// a write failed: journaling stops and restore is refused
+    poisoned: bool,
 }
 
 impl MemWal {
@@ -422,10 +447,65 @@ impl MemWal {
         Self::default()
     }
 
-    /// Append one framed record (infallible — memory is the disk here).
+    /// Arm `fault` for the next append. For [`WalFault::Torn`], `cut_bp`
+    /// (basis points, 0..10000) picks the cut position within the torn
+    /// frame — always at least one byte short of a complete frame.
+    // nemesis-ok: definition site; callers live in sim/tests only
+    pub fn arm_fault(&mut self, fault: WalFault, cut_bp: u32) {
+        self.armed = Some((fault, cut_bp.min(9_999)));
+    }
+
+    /// The fault that fired since the last call, if any. The simulator
+    /// crashes the owning process inside the same atomic event, so no
+    /// post-failure acknowledgement can leave before the fault is seen.
+    pub fn take_fired(&mut self) -> Option<WalFault> {
+        self.fired.take()
+    }
+
+    /// True once a write failed; parity with [`Storage::is_poisoned`].
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Append one framed record. Memory is the disk here, so the append
+    /// is infallible — unless a nemesis fault is armed: a torn write
+    /// keeps only a prefix of the frame, a failed write keeps nothing
+    /// and poisons the log (both leave the fault observable through
+    /// [`MemWal::take_fired`] before any caller can acknowledge).
     pub fn append(&mut self, rec: &Record) {
-        append_frame(&mut self.buf, rec);
-        self.records += 1;
+        if self.poisoned || self.fired.is_some() {
+            // post-poison journaling is discarded (Storage parity), and
+            // nothing lands after an unobserved tear either — the write
+            // stream ends at the torn frame, exactly like a real crash
+            // mid-write (the owner crashes before the fault is taken)
+            return;
+        }
+        match self.armed.take() {
+            Some((WalFault::Failed, _)) => {
+                self.poisoned = true;
+                self.fired = Some(WalFault::Failed);
+            }
+            Some((WalFault::Torn, cut_bp)) => {
+                let start = self.buf.len();
+                append_frame(&mut self.buf, rec);
+                let flen = self.buf.len() - start;
+                // keep cut_bp/10000 of the frame, strictly short of whole
+                let keep = ((flen as u64 * cut_bp as u64) / 10_000) as usize;
+                self.buf.truncate(start + keep.min(flen.saturating_sub(1)));
+                self.fired = Some(WalFault::Torn);
+                // the torn record was never durable: not counted
+            }
+            None => {
+                append_frame(&mut self.buf, rec);
+                self.records += 1;
+            }
+        }
+    }
+
+    /// Truncate the raw log to `len` bytes — tests cut at arbitrary
+    /// (including mid-frame) positions to exercise torn-tail recovery.
+    pub fn truncate_to(&mut self, len: usize) {
+        self.buf.truncate(len);
     }
 
     /// Number of records appended so far.

@@ -626,8 +626,8 @@ fn repeated_recoveries_converge() {
 
 mod storage_props {
     use wbam::storage::{
-        append_frame, decode_frames, decode_record, encode_record, Record, Snapshot, Storage,
-        SyncPolicy,
+        append_frame, decode_frames, decode_record, encode_record, MemWal, Record, Snapshot,
+        Storage, SyncPolicy, WalFault,
     };
     use wbam::types::wire::MsgState;
     use wbam::types::{Ballot, Gid, GidSet, MsgId, MsgMeta, Phase, Pid, Ts};
@@ -775,6 +775,93 @@ mod storage_props {
             assert_eq!(s.record_count(), whole as u64);
             drop(s);
             let _ = std::fs::remove_dir_all(&dir);
+        });
+    }
+
+    // ----- MemWal nemesis faults (tentpole PR 10): torn + failing writes -----
+
+    /// A torn write at any armed cut point leaves a strict prefix of the
+    /// frame, the tear is observable before anything else can happen, and
+    /// recovery folds exactly the records that were durable *before* the
+    /// torn append — never a mangled record, never the torn one.
+    #[test]
+    fn memwal_torn_write_recovers_pre_tear_prefix() {
+        prop::check(200, |r| {
+            let mut wal = MemWal::new();
+            let before: Vec<Record> = (0..r.below(8)).map(|_| rand_record(r)).collect();
+            for rec in &before {
+                wal.append(rec);
+            }
+            let durable = wal.bytes().len();
+            wal.arm_fault(WalFault::Torn, r.below(10_000) as u32);
+            wal.append(&rand_record(r));
+            assert_eq!(wal.take_fired(), Some(WalFault::Torn));
+            assert!(wal.bytes().len() >= durable, "tear must not eat durable frames");
+            assert_eq!(wal.len(), before.len() as u64, "torn record must not count");
+            assert!(!wal.is_poisoned(), "a tear is a crash, not a poison");
+            let mut want = Snapshot::default();
+            for rec in &before {
+                want.apply(rec);
+            }
+            assert_eq!(wal.recover(), want, "recovery must stop at the tear");
+            // after the crash-observation, journaling works again
+            let extra = rand_record(r);
+            wal.truncate_to(durable); // restart replays the valid prefix
+            wal.append(&extra);
+            want.apply(&extra);
+            assert_eq!(wal.recover(), want);
+        });
+    }
+
+    /// A failed write keeps nothing, poisons the log before any caller
+    /// could acknowledge, and every later append is silently discarded —
+    /// the `POISONED`-marker semantics of the file-backed [`Storage`].
+    #[test]
+    fn memwal_failed_write_poisons_before_any_ack() {
+        prop::check(200, |r| {
+            let mut wal = MemWal::new();
+            let before: Vec<Record> = (0..r.below(6)).map(|_| rand_record(r)).collect();
+            for rec in &before {
+                wal.append(rec);
+            }
+            let durable = wal.bytes().to_vec();
+            wal.arm_fault(WalFault::Failed, 0);
+            wal.append(&rand_record(r));
+            // poison is visible BEFORE the fault is even taken: no window
+            // in which an ack could slip out against a lost write
+            assert!(wal.is_poisoned());
+            assert_eq!(wal.bytes(), &durable[..], "failed write must write nothing");
+            assert_eq!(wal.take_fired(), Some(WalFault::Failed));
+            for _ in 0..r.range(1, 5) {
+                wal.append(&rand_record(r));
+            }
+            assert_eq!(wal.bytes(), &durable[..], "post-poison appends must be discarded");
+            assert_eq!(wal.len(), before.len() as u64);
+            let mut want = Snapshot::default();
+            for rec in &before {
+                want.apply(rec);
+            }
+            assert_eq!(wal.recover(), want);
+        });
+    }
+
+    /// While a tear is fired-but-unobserved nothing else lands: a
+    /// multi-record flush whose first frame tears ends the write stream
+    /// at the tear, exactly like a real crash mid-write.
+    #[test]
+    fn memwal_unobserved_tear_blocks_followup_appends() {
+        prop::check(100, |r| {
+            let mut wal = MemWal::new();
+            wal.arm_fault(WalFault::Torn, r.below(10_000) as u32);
+            wal.append(&rand_record(r));
+            let torn_len = wal.bytes().len();
+            for _ in 0..r.range(1, 4) {
+                wal.append(&rand_record(r)); // same flush, tear not yet taken
+            }
+            assert_eq!(wal.bytes().len(), torn_len, "appends after an unobserved tear must not land");
+            assert_eq!(wal.len(), 0);
+            assert_eq!(wal.take_fired(), Some(WalFault::Torn));
+            assert_eq!(wal.recover(), Snapshot::default());
         });
     }
 }

@@ -1,0 +1,202 @@
+//! Swarm entry point: the nemesis fault-injection campaign as a test
+//! binary (`cargo test --test swarm`), plus the pins that make the
+//! campaign trustworthy — determinism (a seed IS a reproducer), the
+//! zero-perturbation identity (nemesis wiring adds nothing to a
+//! fault-free run), and the fire drill (an injected safety bug is
+//! caught, JSON-round-tripped, replayed and minimized).
+//!
+//! `cargo xtask swarm` drives the same `wbam::sim::swarm` library at
+//! campaign scale with on-disk artifacts; these tests keep the library
+//! honest on every PR.
+
+use wbam::harness::{build_world, enable_wb_storage, Net, Proto, RunCfg};
+use wbam::protocols::wbcast::WbConfig;
+use wbam::sim::nemesis::{NemesisEvent, NemesisSchedule, Shim};
+use wbam::sim::swarm;
+use wbam::sim::MS;
+use wbam::types::{Pid, Topology};
+
+/// A fixed-shape, zero-fault schedule (the identity-pin baseline).
+fn plain_schedule(seed: u64) -> NemesisSchedule {
+    NemesisSchedule {
+        seed,
+        groups: 2,
+        clients: 3,
+        dest_groups: 2,
+        reqs: 3,
+        delta: MS,
+        horizon: 2_600 * MS,
+        shim: None,
+        events: Vec::new(),
+    }
+}
+
+/// Determinism pin: the same schedule run twice produces byte-identical
+/// traces — equal delivery streams (time, pid, message, gts in order)
+/// and equal digests — for generated schedules across many seeds.
+#[test]
+fn same_seed_same_trace() {
+    for seed in [1u64, 7, 42, 0xDEAD_BEEF, u64::MAX] {
+        let s = NemesisSchedule::generate(seed);
+        let mut a = swarm::build(&s);
+        let mut b = swarm::build(&s);
+        a.run_until(s.horizon);
+        b.run_until(s.horizon);
+        assert_eq!(a.trace.deliveries, b.trace.deliveries, "seed {seed}: delivery streams differ");
+        assert_eq!(a.trace.crashes, b.trace.crashes, "seed {seed}: crash sets differ");
+        assert_eq!(a.trace.restarts, b.trace.restarts, "seed {seed}: restart sets differ");
+        assert_eq!(a.trace.sends, b.trace.sends, "seed {seed}: send counts differ");
+        assert_eq!(a.trace.digest(), b.trace.digest(), "seed {seed}: digests differ");
+    }
+}
+
+/// Zero-perturbation pin: a fault-free [`NemesisSchedule`] run is
+/// event-for-event identical to the plain sim run it describes — the
+/// nemesis machinery (fault tables, knob plumbing, flight recorder)
+/// consumes no randomness and shifts no event when no fault is active.
+#[test]
+fn zero_fault_schedule_is_identity() {
+    let s = plain_schedule(4242);
+
+    // the plain run: built by hand, no nemesis wiring touched
+    let delta = s.delta;
+    let mut cfg = RunCfg::new(Proto::WbCast, s.groups, s.clients, s.dest_groups, Net::Theory { delta });
+    cfg.seed = s.seed;
+    cfg.max_requests = Some(s.reqs);
+    cfg.record_full = true;
+    cfg.resend_after = 40 * delta;
+    let mut wb = WbConfig::with_failures(delta);
+    wb.durability = true;
+    cfg.wb = wb;
+    let mut plain = build_world(&cfg);
+    enable_wb_storage(&mut plain, &Topology::new(s.groups, 1), wb);
+    plain.run_until(s.horizon);
+
+    let mut nem = swarm::build(&s);
+    nem.run_until(s.horizon);
+
+    assert_eq!(plain.trace.deliveries, nem.trace.deliveries, "delivery streams diverged");
+    assert_eq!(plain.trace.sends, nem.trace.sends, "send counts diverged");
+    assert_eq!(plain.trace.send_bytes, nem.trace.send_bytes, "send bytes diverged");
+    assert_eq!(plain.trace.latencies, nem.trace.latencies, "latency samples diverged");
+    assert_eq!(plain.trace.digest(), nem.trace.digest(), "trace digests diverged");
+    assert_eq!(plain.trace.incomplete(), 0, "baseline run left messages stuck");
+}
+
+/// Campaign smoke: a batch of generated schedules all pass the strict
+/// invariant suite, and two identical campaigns produce the identical
+/// summary hash (the `xtask swarm` acceptance pin, in miniature).
+/// `WBAM_SMOKE=1` halves the batch for the PR gate.
+#[test]
+fn campaign_smoke_is_green_and_deterministic() {
+    let n = if std::env::var("WBAM_SMOKE").is_ok() { 8 } else { 16 };
+    let c1 = swarm::campaign(n, 1);
+    for f in &c1.failures {
+        panic!(
+            "schedule {} (seed {}) failed: {:?}\nschedule JSON:\n{}",
+            f.index,
+            f.schedule.seed,
+            f.outcome.violations,
+            f.schedule.to_json()
+        );
+    }
+    let c2 = swarm::campaign(n, 1);
+    assert_eq!(c1.summary, c2.summary, "campaign summary hash is not reproducible");
+    assert_ne!(c1.summary, swarm::campaign(n, 2).summary, "summary hash ignores the seed");
+}
+
+/// Fire drill + reproducer round-trip: a schedule carrying the
+/// double-deliver shim must (1) fail the integrity check with the
+/// flight recorder armed and non-empty, (2) round-trip through JSON to
+/// the same failure — digest and all, (3) minimize to ≤ 25 % of the
+/// original fault events while still failing.
+#[test]
+fn injected_violation_is_caught_reproduced_and_minimized() {
+    // a real generated fault plan around the seeded bug, so the
+    // minimizer has something to strip away
+    let mut s = NemesisSchedule::generate(99);
+    assert!(s.events.len() >= 4, "generator should emit >= 4 events");
+    s.shim = Some(Shim::DoubleDeliver { pid: Pid(1), nth: 3 });
+
+    let o = swarm::run(&s);
+    assert!(o.failed(), "double-deliver shim must trip the checkers");
+    assert!(
+        o.violations.iter().any(|v| v.contains("integrity")),
+        "expected an integrity violation, got {:?}",
+        o.violations
+    );
+    assert!(!o.flight.is_empty(), "flight recorder must capture the failing run");
+
+    // JSON round-trip: parse(json(s)) replays to the SAME failure
+    let json = s.to_json();
+    let parsed = NemesisSchedule::from_json(&json).expect("schedule JSON must parse");
+    assert_eq!(parsed, s, "JSON round-trip must be lossless");
+    let o2 = swarm::run(&parsed);
+    assert_eq!(o2.violations, o.violations, "replay must reproduce the same violations");
+    assert_eq!(o2.digest, o.digest, "replay must reproduce the same trace digest");
+
+    // ddmin: the schedule shrinks to <= 25 % of its events and the
+    // minimized schedule still fails and still round-trips
+    let min = swarm::minimize(&s);
+    assert!(
+        min.events.len() * 4 <= s.events.len(),
+        "minimizer left {} of {} events (> 25 %)",
+        min.events.len(),
+        s.events.len()
+    );
+    assert!(swarm::run(&min).failed(), "minimized schedule must still fail");
+    let min2 = NemesisSchedule::from_json(&min.to_json()).expect("minimized JSON must parse");
+    assert_eq!(min2, min);
+}
+
+/// A failing disk write crashes the process inside the same atomic
+/// event — before any acknowledgement ships — poisons its WAL so the
+/// restart is refused, and the rest of the group (f = 1) finishes every
+/// multicast under the strict checks.
+#[test]
+fn disk_fail_crashes_before_ack_and_refuses_restart() {
+    let mut s = plain_schedule(7);
+    s.events = vec![
+        NemesisEvent::DiskFail { at: 5 * MS, pid: Pid(2) },
+        NemesisEvent::Restart { at: 200 * MS, pid: Pid(2) },
+    ];
+    let mut w = swarm::build(&s);
+    w.run_until(s.horizon);
+
+    assert!(
+        w.trace.crashes.iter().any(|&(_, p)| p == Pid(2)),
+        "the failed write must crash Pid(2): {:?}",
+        w.trace.crashes
+    );
+    assert!(w.is_crashed(Pid(2)), "poisoned store must refuse the restart");
+    assert!(w.trace.restarts.iter().all(|&(_, p)| p != Pid(2)));
+    assert!(w.store(Pid(2)).expect("storage enabled").is_poisoned());
+
+    // and the run as a whole is still correct: the crash is permanent
+    // but within the f = 1 budget
+    let vs = wbam::invariants::check_correct(&w.trace);
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(w.trace.incomplete(), 0, "group must finish without the poisoned member");
+}
+
+/// A torn disk write recovers on restart through the torn-tail codec:
+/// the process rejoins from the longest whole-frame prefix and the run
+/// ends correct and complete.
+#[test]
+fn disk_torn_recovers_through_restart() {
+    let mut s = plain_schedule(11);
+    s.events = vec![
+        NemesisEvent::DiskTorn { at: 5 * MS, pid: Pid(1), cut_bp: 5_000 },
+        NemesisEvent::Restart { at: 300 * MS, pid: Pid(1) },
+    ];
+    let o = swarm::run(&s);
+    assert!(!o.failed(), "torn-write crash + recovery must stay correct: {:?}", o.violations);
+
+    let mut w = swarm::build(&s);
+    w.run_until(s.horizon);
+    assert!(
+        w.trace.restarts.iter().any(|&(_, p)| p == Pid(1)),
+        "Pid(1) must restart from the torn log's valid prefix"
+    );
+    assert!(!w.is_crashed(Pid(1)));
+}

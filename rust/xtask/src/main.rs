@@ -1,9 +1,10 @@
-//! Repo-invariant gate: `cargo xtask {lint, analyze, graph}`.
+//! Repo-invariant gate and campaign driver: `cargo xtask {lint,
+//! analyze, graph, swarm}`.
 //!
 //! Dependency-free, in-tree static tooling (the offline build image
-//! cannot fetch crates). Three subcommands:
+//! cannot fetch crates), plus the nemesis-swarm CLI. Four subcommands:
 //!
-//! * `lint` (default) — six line-oriented rules running on the
+//! * `lint` (default) — seven line-oriented rules running on the
 //!   lexer's [`lexer::code_view`] (comments and string/char literals
 //!   blanked, so `unsafe` in a doc comment or `//` inside a string
 //!   can no longer produce false verdicts):
@@ -30,11 +31,22 @@
 //!      `rust/src/obs/export.rs`, so a stats field added without a
 //!      `/metrics` export fails the gate instead of silently missing
 //!      from dashboards.
+//!   7. **nemesis-reach** — the simulator's fault-injection knobs
+//!      (`net_partition`, `clock_skew`, `disk_fault_at`, `arm_fault`,
+//!      …) must be unreachable from non-test, non-sim code paths;
+//!      audited sites carry `// nemesis-ok: <reason>`. A partition
+//!      knob reachable from production would be a self-inflicted
+//!      outage primitive.
 //! * `analyze` — the protocol-aware analyses in [`analyze`]:
 //!   journal-before-ack dataflow, `Wire` exhaustiveness, lock-order
 //!   deadlock freedom, and blocking-call-in-event-loop reachability.
 //! * `graph` — emit the generated message-flow and lock-order DOT
 //!   figures (see [`graph`]).
+//! * `swarm` — the deterministic fault-injection campaign
+//!   ([`swarm`]): run seeded [`wbam::sim::nemesis::NemesisSchedule`]s
+//!   under the strict invariant suite, dump failing schedules as JSON
+//!   with their flight-recorder tails, and delta-debug reproducers
+//!   (`--repro file.json`).
 //!
 //! Exit status 1 with one line per violation; 0 on a clean tree. See
 //! ARCHITECTURE.md §Correctness tooling for the rule ↔ invariant table.
@@ -43,6 +55,7 @@ mod analyze;
 mod graph;
 mod lexer;
 mod parser;
+mod swarm;
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -61,8 +74,9 @@ fn main() -> ExitCode {
         None | Some("lint") => lint(),
         Some("analyze") => analyze_cmd(),
         Some("graph") => graph::run(&repo_root()),
+        Some("swarm") => swarm::run(&args[1..]),
         Some(other) => {
-            eprintln!("unknown xtask command {other:?} (commands: lint, analyze, graph)");
+            eprintln!("unknown xtask command {other:?} (commands: lint, analyze, graph, swarm)");
             ExitCode::FAILURE
         }
     }
@@ -150,6 +164,15 @@ fn lint() -> ExitCode {
             ("rust/src/storage/mod.rs", "StorageStats", storage_src.as_str()),
         ],
     ));
+
+    // 7. nemesis-reach — fault knobs stay confined to sim/tests
+    for rel in rs_files_under(&root, "rust/src") {
+        if rel.starts_with("rust/src/sim/") {
+            continue; // the simulator owns the knobs by design
+        }
+        files += 1;
+        violations.extend(lint_nemesis_reach(&rel, &read(&rel)));
+    }
 
     report("lint", &format!("{files} files checked"), &violations)
 }
@@ -577,6 +600,55 @@ fn lint_exporter_coverage(
 }
 
 // ---------------------------------------------------------------------
+// rule 7: nemesis-reach
+// ---------------------------------------------------------------------
+
+/// The simulator's fault-injection surface: the [`wbam::sim::World`]
+/// nemesis knobs plus the `MemWal` fault hook. Any of these reachable
+/// from non-test code outside `rust/src/sim/` is a production path that
+/// can partition its own cluster, skew its own clocks or tear its own
+/// journal — exactly the capability the gate must keep fenced in.
+const NEMESIS_KNOBS: &[&str] = &[
+    "net_partition",
+    "link_jitter",
+    "link_dup",
+    "link_reorder",
+    "clock_skew",
+    "gray_slow",
+    "disk_slow",
+    "disk_fault_at",
+    "arm_fault",
+];
+
+/// Rule 7: nemesis knob names must not appear in non-`cfg(test)` code
+/// outside the simulator; audited sites carry `// nemesis-ok: <reason>`
+/// on the same line or the line above (markers live in comments, so
+/// the check runs on the raw lines while matching on the code view).
+fn lint_nemesis_reach(file: &str, src: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = src.lines().collect();
+    let cv = lexer::code_view(src);
+    let code: Vec<&str> = cv.lines().collect();
+    let limit = test_mod_start(&raw);
+    let mut out = Vec::new();
+    for (i, cl) in code.iter().enumerate().take(limit) {
+        for knob in NEMESIS_KNOBS {
+            if has_word(cl, knob) && !has_marker(&raw, i, "nemesis-ok") {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "nemesis-reach",
+                    msg: format!(
+                        "fault-injection knob `{knob}` reachable from non-test code \
+                         (audited sites carry `// nemesis-ok: <reason>`)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
 // tests: every rule must fire on a minimal fixture violation and stay
 // quiet on the corresponding clean fixture
 // ---------------------------------------------------------------------
@@ -769,6 +841,38 @@ mod tests {
         assert_eq!(rules_of(&vs), ["exporter-coverage"]);
     }
 
+    // --- rule 7 ---
+
+    #[test]
+    fn nemesis_fires_on_unaudited_knob() {
+        let src = "fn sabotage(w: &mut World) {\n    w.net_partition(&a, &b, 0, 10, false);\n}\n";
+        let vs = lint_nemesis_reach("coordinator/mod.rs", src);
+        assert_eq!(rules_of(&vs), ["nemesis-reach"]);
+        assert_eq!(vs[0].line, 2);
+        let disk = "fn f(s: &mut MemWal) { s.arm_fault(WalFault::Torn, 5_000); }\n";
+        assert_eq!(rules_of(&lint_nemesis_reach("f", disk)), ["nemesis-reach"]);
+    }
+
+    #[test]
+    fn nemesis_accepts_marker_tests_and_comments() {
+        // audited site: marker on the line above
+        let marked =
+            "// nemesis-ok: recovery drill, gated behind an operator flag\nw.disk_fault_at(p, 0, WalFault::Torn, 1);\n";
+        assert!(lint_nemesis_reach("f", marked).is_empty());
+        // inline marker
+        let inline = "w.clock_skew(p, 0, 5); // nemesis-ok: calibration shim\n";
+        assert!(lint_nemesis_reach("f", inline).is_empty());
+        // test modules are exempt
+        let test_mod = "#[cfg(test)]\nmod tests {\n    fn f(w: &mut World) { w.gray_slow(Pid(0), 0, 9, 7); }\n}\n";
+        assert!(lint_nemesis_reach("f", test_mod).is_empty());
+        // knob names inside comments/strings are blanked by the code view
+        let comment = "// clock_skew is applied when the timer is armed\nlet s = \"link_dup\";\n";
+        assert!(lint_nemesis_reach("f", comment).is_empty());
+        // longer identifiers sharing a prefix don't trip the word match
+        let substr = "let link_jitter_docs = 1;\nfn net_partition_count() {}\n";
+        assert!(lint_nemesis_reach("f", substr).is_empty());
+    }
+
     // --- the gate passes on the real tree (the binary's own acceptance) ---
 
     #[test]
@@ -814,6 +918,12 @@ mod tests {
                 ("rust/src/storage/mod.rs", "StorageStats", storage_src.as_str()),
             ],
         ));
+        for rel in rs_files_under(&root, "rust/src") {
+            if rel.starts_with("rust/src/sim/") {
+                continue;
+            }
+            vs.extend(lint_nemesis_reach(&rel, &read(&rel)));
+        }
         assert!(vs.is_empty(), "clean-tree violations: {vs:#?}");
     }
 }

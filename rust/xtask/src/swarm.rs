@@ -1,0 +1,168 @@
+//! `cargo xtask swarm` — the deterministic nemesis campaign CLI.
+//!
+//! Thin argv/artifact shell around [`wbam::sim::swarm`]: generation,
+//! execution, checking and minimization all live in the library (shared
+//! with `rust/tests/swarm.rs`), so the CLI and the test entry point can
+//! never drift apart.
+//!
+//! ```text
+//! cargo xtask swarm --schedules 1000 --seed 1 [--out target/swarm]
+//! cargo xtask swarm --repro failure-17.json
+//! ```
+//!
+//! Campaign mode runs `--schedules` generated schedules under the
+//! strict invariant suite and prints a deterministic summary hash (two
+//! identical invocations print identical hashes — the acceptance pin).
+//! Every failure is saved under `--out`: the schedule as JSON, the
+//! flight-recorder tail, and the ddmin-minimized schedule. With
+//! `WBAM_SMOKE=1` the schedule count is capped at 32 (the PR-gate
+//! smoke). Repro mode replays a saved JSON schedule, reports whether
+//! the failure reproduces, and writes `<file>.min.json`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+use wbam::sim::nemesis::NemesisSchedule;
+use wbam::sim::swarm::{campaign_with, minimize, run as run_schedule, Failure};
+
+pub fn run(args: &[String]) -> ExitCode {
+    let mut schedules: u64 = 1000;
+    let mut seed: u64 = 1;
+    let mut repro: Option<PathBuf> = None;
+    let mut out_dir = PathBuf::from("target/swarm");
+
+    let mut i = 0;
+    while i < args.len() {
+        let need = |what: &str| -> Result<&String, String> {
+            args.get(i + 1).ok_or_else(|| format!("{what} needs a value"))
+        };
+        let r = match args[i].as_str() {
+            "--schedules" => need("--schedules").and_then(|v| {
+                v.parse().map(|n| schedules = n).map_err(|e| format!("--schedules: {e}"))
+            }),
+            "--seed" => need("--seed")
+                .and_then(|v| v.parse().map(|n| seed = n).map_err(|e| format!("--seed: {e}"))),
+            "--repro" => need("--repro").map(|v| repro = Some(PathBuf::from(v))),
+            "--out" => need("--out").map(|v| out_dir = PathBuf::from(v)),
+            other => Err(format!("unknown flag {other:?}")),
+        };
+        if let Err(e) = r {
+            eprintln!("xtask swarm: {e}");
+            eprintln!(
+                "usage: cargo xtask swarm [--schedules N] [--seed S] [--out DIR] | --repro FILE"
+            );
+            return ExitCode::FAILURE;
+        }
+        i += 2;
+    }
+
+    if let Some(path) = repro {
+        return repro_mode(&path);
+    }
+
+    // PR-gate smoke: same env convention as the bench smokes
+    if std::env::var("WBAM_SMOKE").is_ok() {
+        schedules = schedules.min(32);
+    }
+    campaign_mode(schedules, seed, &out_dir)
+}
+
+fn campaign_mode(schedules: u64, seed: u64, out_dir: &Path) -> ExitCode {
+    println!("swarm: running {schedules} schedules from seed {seed}");
+    let progress_every = (schedules / 10).max(1);
+    let c = campaign_with(schedules, seed, |i, o| {
+        if (i + 1) % progress_every == 0 {
+            println!("swarm: {}/{} schedules", i + 1, schedules);
+        }
+        if o.failed() {
+            eprintln!("swarm: schedule {i} FAILED: {}", o.violations.join("; "));
+        }
+    });
+
+    for f in &c.failures {
+        if let Err(e) = save_failure(out_dir, f) {
+            eprintln!("swarm: could not save failure artifacts: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+
+    println!(
+        "swarm: {} schedules, {} failures, summary-hash 0x{:016x}",
+        c.schedules,
+        c.failures.len(),
+        c.summary
+    );
+    if c.failures.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("swarm: failing schedules + flight dumps + minimized reproducers in {out_dir:?}");
+        ExitCode::FAILURE
+    }
+}
+
+/// Save one failure's artifact set: the schedule, its flight tail, and
+/// the minimized reproducer.
+fn save_failure(out_dir: &Path, f: &Failure) -> std::io::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let stem = out_dir.join(format!("failure-{}", f.index));
+    std::fs::write(stem.with_extension("json"), f.schedule.to_json())?;
+    std::fs::write(
+        stem.with_extension("flight.txt"),
+        format!("{}\n\n{}", f.outcome.violations.join("\n"), f.outcome.flight),
+    )?;
+    let min = minimize(&f.schedule);
+    std::fs::write(stem.with_extension("min.json"), min.to_json())?;
+    eprintln!(
+        "swarm: schedule {} minimized {} -> {} events ({:?})",
+        f.index,
+        f.schedule.events.len(),
+        min.events.len(),
+        stem.with_extension("min.json")
+    );
+    Ok(())
+}
+
+fn repro_mode(path: &Path) -> ExitCode {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("xtask swarm: read {path:?}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let sched = match NemesisSchedule::from_json(&src) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("xtask swarm: parse {path:?}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "swarm: replaying {path:?} (seed {}, {} events)",
+        sched.seed,
+        sched.events.len()
+    );
+    let o = run_schedule(&sched);
+    if !o.failed() {
+        eprintln!("swarm: schedule did NOT reproduce a failure");
+        return ExitCode::FAILURE;
+    }
+    println!("swarm: reproduced {} violation(s):", o.violations.len());
+    for v in &o.violations {
+        println!("  {v}");
+    }
+    if !o.flight.is_empty() {
+        println!("--- flight recorder tail ---\n{}", o.flight);
+    }
+    let min = minimize(&sched);
+    let min_path = path.with_extension("min.json");
+    if let Err(e) = std::fs::write(&min_path, min.to_json()) {
+        eprintln!("xtask swarm: write {min_path:?}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "swarm: minimized {} -> {} events, saved to {min_path:?}",
+        sched.events.len(),
+        min.events.len()
+    );
+    ExitCode::SUCCESS
+}
